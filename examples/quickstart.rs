@@ -1,0 +1,73 @@
+//! Quickstart: build a small FaTRQ system, serve a few queries, print
+//! recall and the per-stage breakdown.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use fatrq::config::{DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig};
+use fatrq::coordinator::{build_system, Pipeline};
+use fatrq::index::FlatIndex;
+use fatrq::metrics::recall_at_k;
+
+fn main() -> anyhow::Result<()> {
+    // A laptop-scale corpus: 20k x 128-D clustered embeddings.
+    let cfg = SystemConfig {
+        dataset: DatasetConfig {
+            dim: 128,
+            count: 20_000,
+            clusters: 128,
+            noise: 0.35,
+            query_noise: 1.0,
+            queries: 64,
+            seed: 42,
+        },
+        quant: QuantConfig { pq_m: 32, pq_nbits: 8, kmeans_iters: 8, train_sample: 8192 },
+        index: IndexConfig {
+            kind: IndexKind::Ivf,
+            nlist: 128,
+            nprobe: 16,
+            ..Default::default()
+        },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 100,
+            k: 10,
+            filter_ratio: 0.25,
+            calib_sample: 0.01,
+        },
+        ..Default::default()
+    };
+
+    println!("building system ({} x {}D)...", cfg.dataset.count, cfg.dataset.dim);
+    let t0 = std::time::Instant::now();
+    let sys = build_system(&cfg)?;
+    println!("built in {:.1}s", t0.elapsed().as_secs_f64());
+    println!(
+        "  far-memory record: {} B ({} packed + 8 scalar)",
+        sys.trq.record_bytes(),
+        sys.trq.record_bytes() - 8
+    );
+
+    // Exact ground truth for recall measurement.
+    let flat = FlatIndex::new(sys.dataset.base.clone(), sys.dataset.dim);
+
+    let pipeline = Pipeline::new(&sys);
+    let mut recall = 0.0;
+    let nq = sys.dataset.num_queries();
+    for q in 0..nq {
+        let query = sys.dataset.query(q);
+        let out = pipeline.query(query);
+        let truth = flat.search_exact(query, 10);
+        recall += recall_at_k(&out.topk, &truth, 10);
+        if q == 0 {
+            let bd = out.breakdown;
+            println!("\nfirst query breakdown:");
+            println!("  traversal : {:>9.1} us", bd.traversal_ns / 1e3);
+            println!("  far memory: {:>9.1} us ({} reads)", bd.far_ns / 1e3, bd.far_reads);
+            println!("  refine    : {:>9.1} us", bd.refine_compute_ns / 1e3);
+            println!("  ssd       : {:>9.1} us ({} reads)", bd.ssd_ns / 1e3, bd.ssd_reads);
+            println!("  rerank    : {:>9.1} us", bd.rerank_ns / 1e3);
+        }
+    }
+    println!("\nrecall@10 over {nq} queries: {:.4}", recall / nq as f64);
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! End-to-end RAG serving driver (the repo's mandated E2E validation).
+//!
+//! Proves all three layers compose on a real small workload:
+//!   L1/L2 — the AOT Pallas/JAX artifacts (`artifacts/*.hlo.txt`) execute
+//!           the exact rerank via PJRT from rust;
+//!   L3    — the rust coordinator builds a 100k x 768-D corpus, serves
+//!           2048 batched queries through the full tiered pipeline in all
+//!           three refinement modes, and reports recall / latency / QPS.
+//!
+//! Run with: `make artifacts && cargo run --release --example rag_serving`
+//! (falls back to native rerank if artifacts are missing).
+//!
+//! Results recorded in EXPERIMENTS.md §End-to-end.
+
+use fatrq::config::{
+    DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
+};
+use fatrq::coordinator::{build_system, ground_truth, run_batch, Pipeline};
+use fatrq::runtime::XlaRuntime;
+use fatrq::util::l2_sq;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let scale: usize = std::env::var("RAG_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let queries: usize = std::env::var("RAG_QUERIES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2048);
+
+    let cfg = SystemConfig {
+        dataset: DatasetConfig {
+            dim: 768,
+            count: scale,
+            clusters: 512,
+            noise: 0.35,
+            query_noise: 1.0,
+            queries,
+            seed: 2026,
+        },
+        quant: QuantConfig { pq_m: 96, pq_nbits: 8, kmeans_iters: 6, train_sample: 8192 },
+        index: IndexConfig {
+            kind: IndexKind::Ivf,
+            nlist: 256,
+            nprobe: 16,
+            ..Default::default()
+        },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 320, // paper §V-B: IVF refines ~320/query at 90% recall
+            k: 10,
+            filter_ratio: 0.1,
+            calib_sample: 0.003, // the paper's 0.3%
+        },
+        ..Default::default()
+    };
+
+    println!("=== FaTRQ end-to-end RAG serving driver ===");
+    println!("corpus: {} x {}D, {} queries", scale, cfg.dataset.dim, queries);
+    let t0 = std::time::Instant::now();
+    let sys = build_system(&cfg)?;
+    println!("system built in {:.1}s", t0.elapsed().as_secs_f64());
+    println!(
+        "  fast {:.1} MiB | far {:.1} MiB | storage {:.1} MiB",
+        sys.scorer.fast_bytes() as f64 / (1 << 20) as f64,
+        sys.trq.far_bytes() as f64 / (1 << 20) as f64,
+        (scale * 768 * 4) as f64 / (1 << 20) as f64
+    );
+
+    // --- L1/L2 composition proof: PJRT rerank vs native on real data ---
+    let artifacts = Path::new("artifacts");
+    match XlaRuntime::load(artifacts) {
+        Ok(rt) => {
+            let q = sys.dataset.query(0);
+            let ids: Vec<usize> = (0..32).collect();
+            let mut vectors = vec![0f32; ids.len() * 768];
+            for (j, &i) in ids.iter().enumerate() {
+                vectors[j * 768..(j + 1) * 768].copy_from_slice(sys.dataset.vector(i));
+            }
+            let xla_d = rt.rerank_block(q, &vectors)?;
+            let mut max_err = 0f32;
+            for (j, &i) in ids.iter().enumerate() {
+                let native = l2_sq(q, sys.dataset.vector(i));
+                max_err = max_err.max((xla_d[j] - native).abs() / native.max(1e-6));
+            }
+            println!("PJRT rerank vs native: max rel err {max_err:.2e} (AOT path live)");
+
+            // And the TRQ refinement executable against the host estimator.
+            let pipeline = Pipeline::new(&sys);
+            let cands = sys.index.as_ann().search(q, 64);
+            let d0: Vec<f32> = cands.iter().map(|c| c.dist).collect();
+            let mut packed = Vec::new();
+            let mut scale_v = Vec::new();
+            let mut cross = Vec::new();
+            let mut dn = Vec::new();
+            for c in &cands {
+                let id = c.id as usize;
+                packed.extend_from_slice(sys.trq.packed_row(id));
+                scale_v.push(sys.trq.scale[id]);
+                cross.push(sys.trq.cross[id]);
+                dn.push(sys.trq.dnorm_sq[id]);
+            }
+            let xla_est = rt.refine_block(q, &sys.cal.w, &d0, &packed, &scale_v, &cross, &dn)?;
+            let est = fatrq::refine::ProgressiveEstimator::new(&sys.trq, sys.cal.clone());
+            let mut max_err = 0f32;
+            for (j, c) in cands.iter().enumerate() {
+                let native = est.estimate(q, c.id as usize, c.dist);
+                max_err = max_err.max((xla_est[j] - native).abs());
+            }
+            println!("PJRT trq_refine vs host estimator: max abs err {max_err:.2e}");
+            let _ = pipeline;
+        }
+        Err(e) => println!("(artifacts not available, native-only run: {e})"),
+    }
+
+    // --- Serve the full query load in each mode ---
+    println!("\ncomputing exact ground truth...");
+    let truth = ground_truth(&sys, 10);
+    let threads = fatrq::util::threadpool::default_threads();
+    println!(
+        "\n{:>10} {:>9} {:>11} {:>11} {:>11} {:>9} {:>9}",
+        "mode", "recall@10", "p50(us)", "p99(us)", "mean(us)", "qps", "ssd/q"
+    );
+    let mut base_lat = 0.0;
+    for mode in [RefineMode::Baseline, RefineMode::FatrqSw, RefineMode::FatrqHw] {
+        let rep = run_batch(&sys, mode, &truth, threads);
+        if mode == RefineMode::Baseline {
+            base_lat = rep.mean_latency_ns;
+        }
+        println!(
+            "{:>10} {:>9.4} {:>11.1} {:>11.1} {:>11.1} {:>9.0} {:>9}   ({:.2}x)",
+            rep.mode,
+            rep.mean_recall,
+            rep.p50_ns / 1e3,
+            rep.p99_ns / 1e3,
+            rep.mean_latency_ns / 1e3,
+            rep.qps,
+            rep.breakdown.ssd_reads,
+            base_lat / rep.mean_latency_ns
+        );
+    }
+    println!("\ndone.");
+    Ok(())
+}

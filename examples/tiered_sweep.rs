@@ -1,0 +1,97 @@
+//! Tiered-memory design-space sweep: how the filter ratio (Fig 8's knob)
+//! and the far-memory device parameters trade SSD traffic, latency, and
+//! recall. This is the workload a systems engineer would run before
+//! provisioning a CXL tier.
+//!
+//! Run with: `cargo run --release --example tiered_sweep`
+
+use fatrq::config::{
+    DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
+};
+use fatrq::coordinator::{build_system, ground_truth, Pipeline};
+use fatrq::metrics::recall_at_k;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SystemConfig {
+        dataset: DatasetConfig {
+            dim: 256,
+            count: 30_000,
+            clusters: 128,
+            noise: 0.35,
+            query_noise: 1.0,
+            queries: 128,
+            seed: 7,
+        },
+        quant: QuantConfig { pq_m: 32, pq_nbits: 8, kmeans_iters: 8, train_sample: 8192 },
+        index: IndexConfig { kind: IndexKind::Ivf, nlist: 128, nprobe: 16, ..Default::default() },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 200,
+            k: 10,
+            filter_ratio: 0.25,
+            calib_sample: 0.01,
+        },
+        ..Default::default()
+    };
+    println!("building 30k x 256D system...");
+    let sys = build_system(&cfg)?;
+    let truth = ground_truth(&sys, 10);
+    let nq = sys.dataset.num_queries();
+
+    // --- Sweep 1: filter ratio (SSD traffic vs recall) ---
+    println!("\nfilter-ratio sweep (FaTRQ-HW, 200 candidates):");
+    println!("{:>8} {:>10} {:>10} {:>12}", "ratio", "recall@10", "ssd/query", "latency(us)");
+    for ratio in [0.02, 0.05, 0.10, 0.20, 0.35, 0.50, 1.00] {
+        let mut p = Pipeline::new(&sys);
+        p.filter_ratio = ratio;
+        let mut recall = 0.0;
+        let mut ssd = 0usize;
+        let mut lat = 0.0;
+        for q in 0..nq {
+            let out = p.query(sys.dataset.query(q));
+            recall += recall_at_k(&out.topk, &truth[q], 10);
+            ssd += out.breakdown.ssd_reads;
+            lat += out.breakdown.total_ns();
+        }
+        println!(
+            "{:>8.2} {:>10.4} {:>10.1} {:>12.1}",
+            ratio,
+            recall / nq as f64,
+            ssd as f64 / nq as f64,
+            lat / nq as f64 / 1e3
+        );
+    }
+
+    // --- Sweep 2: CXL link latency (how far can far memory be?) ---
+    println!("\nCXL-latency sweep (filter 0.25, SW mode — link on the critical path):");
+    println!("{:>12} {:>12}", "link(ns)", "latency(us)");
+    for link_ns in [150.0, 271.0, 400.0, 600.0, 1000.0] {
+        let mut sim = cfg.sim.clone();
+        sim.cxl_latency_ns = link_ns;
+        let mut dev = fatrq::simulator::FarMemoryDevice::new(&sim);
+        let done = dev.stream_records(0, sys.trq.record_bytes(), 200, 0.0, false);
+        println!("{:>12.0} {:>12.2}", link_ns, done / 1e3);
+    }
+
+    // --- Sweep 3: candidates (front-stage depth vs recall) ---
+    println!("\ncandidate-depth sweep (FaTRQ-HW, filter 0.25):");
+    println!("{:>8} {:>10} {:>10}", "cands", "recall@10", "ssd/query");
+    for cands in [50usize, 100, 200, 400] {
+        let mut p = Pipeline::new(&sys);
+        p.candidates = cands;
+        let mut recall = 0.0;
+        let mut ssd = 0usize;
+        for q in 0..nq {
+            let out = p.query(sys.dataset.query(q));
+            recall += recall_at_k(&out.topk, &truth[q], 10);
+            ssd += out.breakdown.ssd_reads;
+        }
+        println!(
+            "{:>8} {:>10.4} {:>10.1}",
+            cands,
+            recall / nq as f64,
+            ssd as f64 / nq as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: exact squared-L2 rerank.
+
+The final stage: the few SSD-fetched survivors are scored exactly. Query
+resident in VMEM, full-precision vectors streamed per block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 64
+
+
+def _l2_kernel(q_ref, v_ref, o_ref):
+    q = q_ref[...]  # [dim]
+    v = v_ref[...]  # [block, dim]
+    diff = v - q[None, :]
+    o_ref[...] = jnp.sum(diff * diff, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def exact_l2(query, vectors, *, interpret=True):
+    """Exact squared distances.
+
+    query:   [dim] float32
+    vectors: [n, dim] float32 (n a multiple of min(BLOCK_N, n))
+    returns  [n] float32
+    """
+    n, dim = vectors.shape
+    block = min(BLOCK_N, n)
+    assert n % block == 0, f"n={n} must be a multiple of {block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _l2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(query.shape, lambda i: (0,)),
+            pl.BlockSpec((block, dim), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(query, vectors)

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: PQ asymmetric-distance (ADC) scan.
+
+The front-stage hot loop: for every candidate code row, sum the per-
+subspace LUT entries. On the paper's GPU this is the table-lookup kernel
+cuVS/FAISS run in VRAM; the TPU adaptation (DESIGN.md §2) keeps the whole
+[m, ksub] LUT resident in VMEM (96x256 f32 = 96 KiB « 16 MiB VMEM) and
+streams candidate code blocks HBM→VMEM via BlockSpec, so each block's
+scan is arithmetic-only.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidate rows per grid step. 256 rows x 96 subspaces x 4 B codes is a
+# 96 KiB VMEM tile for the codes + the resident LUT; comfortably on-chip.
+BLOCK_N = 256
+
+
+def _adc_kernel(lut_ref, codes_ref, o_ref):
+    """One block: gather-sum LUT rows for BLOCK_N candidates."""
+    lut = lut_ref[...]  # [m, ksub] resident
+    codes = codes_ref[...]  # [block, m] int32
+    m = lut.shape[0]
+    # Per-subspace gather. On a real TPU this lowers to a one-hot matmul
+    # feeding the MXU; under interpret it is a plain vectorized gather.
+    sub = jnp.arange(m)
+    vals = lut[sub[None, :], codes]  # [block, m]
+    o_ref[...] = jnp.sum(vals, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pq_adc(lut, codes, *, interpret=True):
+    """ADC distances for a padded candidate block.
+
+    lut:   [m, ksub] float32 — per-query subspace distance table
+    codes: [n, m] int32 — PQ codes (n must be a multiple of BLOCK_N, or
+           n < BLOCK_N for a single-block call)
+    returns [n] float32
+    """
+    n, m = codes.shape
+    block = min(BLOCK_N, n)
+    assert n % block == 0, f"n={n} must be a multiple of {block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _adc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(lut.shape, lambda i: (0, 0)),  # LUT resident
+            pl.BlockSpec((block, m), lambda i: (i, 0)),  # stream codes
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(lut, codes)

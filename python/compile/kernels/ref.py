@@ -1,0 +1,89 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything here is straight-line jax.numpy with no pallas — the ground
+truth the kernels (and, transitively, the AOT artifacts executed from
+rust) are tested against.
+
+Conventions (shared with the rust side, see rust/src/quant/):
+  - PQ codes:   uint8 [n, m], LUT float32 [m, ksub]
+  - TRQ codes:  packed uint8 [n, pbytes] (5 base-3 trits per byte)
+  - metadata:   float32 scale[n] (= ||delta||*alignment), cross[n],
+                dnorm_sq[n]
+  - calibration: float32 [5] for [d0, d_ip, dnorm_sq, cross, 1]
+"""
+
+import jax.numpy as jnp
+
+TRITS_PER_BYTE = 5
+
+
+def packed_len(dim: int) -> int:
+    """Packed byte length for `dim` trits."""
+    return -(-dim // TRITS_PER_BYTE)
+
+
+def pq_adc_ref(lut, codes):
+    """ADC distances: sum LUT[sub, codes[i, sub]] over subspaces.
+
+    lut:   [m, ksub] float32
+    codes: [n, m] uint8 (or int32)
+    returns [n] float32
+    """
+    m = lut.shape[0]
+    sub_idx = jnp.arange(m)
+    # gather per row: lut[sub, code] for each (row, sub)
+    return jnp.sum(lut[sub_idx[None, :], codes.astype(jnp.int32)], axis=1)
+
+
+def unpack_ternary_ref(packed, dim: int):
+    """Unpack base-3 bytes to trits in {-1, 0, 1}.
+
+    packed: [n, pbytes] uint8
+    returns [n, dim] int8
+    """
+    n, pbytes = packed.shape
+    assert pbytes == packed_len(dim)
+    # positions 0..4 within each byte: value // 3^i % 3 - 1
+    powers = jnp.array([1, 3, 9, 27, 81], dtype=jnp.int32)
+    digits = (packed[:, :, None].astype(jnp.int32) // powers[None, None, :]) % 3 - 1
+    trits = digits.reshape(n, pbytes * TRITS_PER_BYTE)
+    return trits[:, :dim].astype(jnp.int8)
+
+
+def trq_qdot_ref(query, packed, scale, dim: int):
+    """FaTRQ residual inner-product estimate ⟨q, δ⟩ per record.
+
+    query:  [dim] float32
+    packed: [n, pbytes] uint8
+    scale:  [n] float32 (= ||delta|| * alignment)
+    returns [n] float32
+    """
+    trits = unpack_ternary_ref(packed, dim).astype(jnp.float32)
+    acc = trits @ query  # [n]
+    k = jnp.sum(jnp.abs(trits), axis=1)  # nonzero count
+    safe_k = jnp.maximum(k, 1.0)
+    return jnp.where(k > 0, acc * scale / jnp.sqrt(safe_k), 0.0)
+
+
+def trq_refine_ref(query, d0, packed, scale, cross, dnorm_sq, weights, dim: int):
+    """Full refined distance estimate (paper §III-E).
+
+    Features A = [d0, -2*qdot, dnorm_sq, cross, 1]; returns A @ weights.
+
+    query: [dim], d0: [n], packed: [n, pbytes], scale/cross/dnorm_sq: [n],
+    weights: [5]. Returns [n] float32.
+    """
+    qdot = trq_qdot_ref(query, packed, scale, dim)
+    feats = jnp.stack(
+        [d0, -2.0 * qdot, dnorm_sq, cross, jnp.ones_like(d0)], axis=1
+    )  # [n, 5]
+    return feats @ weights
+
+
+def exact_l2_ref(query, vectors):
+    """Exact squared-L2 rerank distances.
+
+    query: [dim], vectors: [n, dim]. Returns [n] float32.
+    """
+    diff = vectors - query[None, :]
+    return jnp.sum(diff * diff, axis=1)

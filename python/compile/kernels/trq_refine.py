@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: FaTRQ progressive refinement (the paper's §III-E hot
+spot).
+
+Per candidate: unpack the base-3 packed ternary residual code (the
+accelerator's 256-entry LUT becomes arithmetic digit extraction here),
+accumulate the query inner product (adds/subs only — the trits are
+{-1,0,1}), rescale by the record's alignment-folded norm, and emit the
+calibrated 5-feature dot product.
+
+TPU adaptation (DESIGN.md §2): the query vector and calibration weights
+are VMEM-resident; candidate records (packed codes + 3 scalars) stream
+through in blocks. Per 768-D candidate a block row is 154 packed bytes —
+the same 162-B record the CXL device streams, so the BlockSpec expresses
+exactly the paper's far-memory access pattern.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 256
+TRITS_PER_BYTE = 5
+_POWERS = (1, 3, 9, 27, 81)
+
+
+def _refine_kernel(q_ref, w_ref, d0_ref, packed_ref, scale_ref, cross_ref,
+                   dnorm_ref, o_ref, *, dim):
+    q = q_ref[...]  # [dim]
+    w = w_ref[...]  # [5]
+    d0 = d0_ref[...]  # [block]
+    packed = packed_ref[...]  # [block, pbytes] int32
+    scale = scale_ref[...]
+    cross = cross_ref[...]
+    dnorm_sq = dnorm_ref[...]
+
+    block, pbytes = packed.shape
+    # Unpack base-3 digits -> trits in {-1,0,1}. Scalar constants only:
+    # pallas kernels may not capture constant arrays, and the unrolled
+    # divide/mod chain is exactly what the accelerator's decode LUT does.
+    cols = []
+    x = packed
+    for _ in range(TRITS_PER_BYTE):
+        cols.append(x % 3 - 1)
+        x = x // 3
+    digits = jnp.stack(cols, axis=-1)  # [block, pbytes, 5]
+    trits = digits.reshape(block, pbytes * TRITS_PER_BYTE)[:, :dim]
+    tf = trits.astype(jnp.float32)
+    # Multiplication-free inner product (adds/subs in hardware).
+    acc = tf @ q  # [block]
+    k = jnp.sum(jnp.abs(tf), axis=1)  # nonzero count = k*
+    qdot = jnp.where(k > 0, acc * scale / jnp.sqrt(jnp.maximum(k, 1.0)), 0.0)
+    # Calibrated estimate: A @ W with A = [d0, -2*qdot, dnorm_sq, cross, 1].
+    o_ref[...] = (
+        d0 * w[0]
+        - 2.0 * qdot * w[1]
+        + dnorm_sq * w[2]
+        + cross * w[3]
+        + w[4]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "interpret"))
+def trq_refine(query, weights, d0, packed, scale, cross, dnorm_sq, *,
+               dim, interpret=True):
+    """Refined distance estimates for a padded candidate block.
+
+    query:    [dim] float32
+    weights:  [5] float32 calibration (use [1,1,1,2,0] for the analytic
+              decomposition)
+    d0:       [n] float32 coarse ADC distances
+    packed:   [n, pbytes] int32 base-3 packed ternary codes
+    scale:    [n] float32 — ||delta|| * alignment
+    cross:    [n] float32 — <x_c, delta>
+    dnorm_sq: [n] float32 — ||delta||^2
+    returns   [n] float32 refined estimates
+    """
+    n, pbytes = packed.shape
+    block = min(BLOCK_N, n)
+    assert n % block == 0, f"n={n} must be a multiple of {block}"
+    grid = (n // block,)
+    kernel = functools.partial(_refine_kernel, dim=dim)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(query.shape, lambda i: (0,)),  # query resident
+            pl.BlockSpec(weights.shape, lambda i: (0,)),  # weights resident
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, pbytes), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(query, weights, d0, packed, scale, cross, dnorm_sq)

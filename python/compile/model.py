@@ -1,0 +1,35 @@
+"""L2: the JAX compute graphs AOT-compiled for the rust coordinator.
+
+Three entry points, each calling its L1 Pallas kernel so the kernel
+lowers into the same HLO module:
+
+  - coarse_scan:    per-query ADC over a candidate code block
+  - refine_block:   FaTRQ progressive refinement of a candidate block
+  - rerank_block:   exact L2 over SSD-fetched survivors
+
+Shapes are fixed at AOT time (PJRT executables are static); the rust
+runtime pads batches to the compiled block size (see
+rust/src/runtime/executor.rs).
+"""
+
+from compile.kernels.exact_l2 import exact_l2
+from compile.kernels.pq_adc import pq_adc
+from compile.kernels.trq_refine import trq_refine
+
+
+def coarse_scan(lut, codes):
+    """Front-stage ADC scan. lut [m, ksub] f32, codes [n, m] i32 -> [n]."""
+    return (pq_adc(lut, codes),)
+
+
+def refine_block(query, weights, d0, packed, scale, cross, dnorm_sq):
+    """FaTRQ refinement. See kernels.trq_refine for shapes. -> [n]."""
+    dim = query.shape[0]
+    return (
+        trq_refine(query, weights, d0, packed, scale, cross, dnorm_sq, dim=dim),
+    )
+
+
+def rerank_block(query, vectors):
+    """Exact rerank. query [dim], vectors [n, dim] -> [n]."""
+    return (exact_l2(query, vectors),)

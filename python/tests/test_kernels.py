@@ -1,0 +1,153 @@
+"""Kernel-vs-reference correctness: every Pallas kernel against its
+pure-jnp oracle, plus numpy cross-checks of the oracles themselves."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.exact_l2 import exact_l2
+from compile.kernels.pq_adc import pq_adc
+from compile.kernels.trq_refine import trq_refine
+
+RNG = np.random.default_rng(42)
+
+
+def random_packed(n, dim):
+    """Random base-3 packed codes [n, pbytes] plus their trits [n, dim]."""
+    pbytes = ref.packed_len(dim)
+    trits = RNG.integers(-1, 2, size=(n, pbytes * ref.TRITS_PER_BYTE))
+    trits[:, dim:] = 0
+    powers = np.array([1, 3, 9, 27, 81])
+    packed = ((trits.reshape(n, pbytes, 5) + 1) * powers).sum(axis=2)
+    return packed.astype(np.int32), trits[:, :dim].astype(np.int8)
+
+
+class TestOracles:
+    """The jnp references against straight numpy."""
+
+    def test_pq_adc_ref_vs_numpy(self):
+        m, ksub, n = 8, 16, 32
+        lut = RNG.standard_normal((m, ksub)).astype(np.float32)
+        codes = RNG.integers(0, ksub, size=(n, m)).astype(np.int32)
+        got = np.asarray(ref.pq_adc_ref(jnp.array(lut), jnp.array(codes)))
+        want = np.array(
+            [sum(lut[j, codes[i, j]] for j in range(m)) for i in range(n)]
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_unpack_ternary_ref_roundtrip(self):
+        for dim in [5, 7, 64, 768]:
+            packed, trits = random_packed(10, dim)
+            got = np.asarray(ref.unpack_ternary_ref(jnp.array(packed), dim))
+            np.testing.assert_array_equal(got, trits)
+
+    def test_trq_qdot_ref_vs_numpy(self):
+        dim, n = 64, 16
+        packed, trits = random_packed(n, dim)
+        q = RNG.standard_normal(dim).astype(np.float32)
+        scale = RNG.uniform(0.1, 2.0, n).astype(np.float32)
+        got = np.asarray(
+            ref.trq_qdot_ref(jnp.array(q), jnp.array(packed), jnp.array(scale), dim)
+        )
+        k = np.abs(trits).sum(axis=1)
+        want = np.where(
+            k > 0, (trits @ q) * scale / np.sqrt(np.maximum(k, 1)), 0.0
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_exact_l2_ref(self):
+        q = RNG.standard_normal(32).astype(np.float32)
+        v = RNG.standard_normal((10, 32)).astype(np.float32)
+        got = np.asarray(ref.exact_l2_ref(jnp.array(q), jnp.array(v)))
+        want = ((v - q) ** 2).sum(axis=1)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+class TestPqAdcKernel:
+    @pytest.mark.parametrize("n,m,ksub", [(256, 96, 256), (512, 8, 16), (64, 4, 4)])
+    def test_matches_ref(self, n, m, ksub):
+        lut = jnp.array(RNG.standard_normal((m, ksub)), dtype=jnp.float32)
+        codes = jnp.array(RNG.integers(0, ksub, size=(n, m)), dtype=jnp.int32)
+        got = pq_adc(lut, codes)
+        want = ref.pq_adc_ref(lut, codes)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_multiblock_grid(self):
+        # n > BLOCK_N exercises the grid/BlockSpec streaming path.
+        n, m, ksub = 1024, 16, 32
+        lut = jnp.array(RNG.standard_normal((m, ksub)), dtype=jnp.float32)
+        codes = jnp.array(RNG.integers(0, ksub, size=(n, m)), dtype=jnp.int32)
+        got = pq_adc(lut, codes)
+        want = ref.pq_adc_ref(lut, codes)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+class TestTrqRefineKernel:
+    def _inputs(self, n, dim):
+        packed, _ = random_packed(n, dim)
+        return dict(
+            query=jnp.array(RNG.standard_normal(dim), dtype=jnp.float32),
+            weights=jnp.array(RNG.standard_normal(5), dtype=jnp.float32),
+            d0=jnp.array(RNG.uniform(0, 4, n), dtype=jnp.float32),
+            packed=jnp.array(packed),
+            scale=jnp.array(RNG.uniform(0.05, 1.0, n), dtype=jnp.float32),
+            cross=jnp.array(RNG.standard_normal(n) * 0.1, dtype=jnp.float32),
+            dnorm_sq=jnp.array(RNG.uniform(0, 1, n), dtype=jnp.float32),
+        )
+
+    @pytest.mark.parametrize("n,dim", [(256, 768), (512, 768), (64, 60), (128, 33)])
+    def test_matches_ref(self, n, dim):
+        kw = self._inputs(n, dim)
+        got = trq_refine(dim=dim, **kw)
+        want = ref.trq_refine_ref(
+            kw["query"], kw["d0"], kw["packed"], kw["scale"], kw["cross"],
+            kw["dnorm_sq"], kw["weights"], dim,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+        )
+
+    def test_analytic_weights_reproduce_decomposition(self):
+        # With W = [1,1,1,2,0] the kernel must equal
+        # d0 + (-2 qdot) + ||δ||² + 2<x_c, δ>.
+        n, dim = 256, 64
+        kw = self._inputs(n, dim)
+        kw["weights"] = jnp.array([1.0, 1.0, 1.0, 2.0, 0.0])
+        got = np.asarray(trq_refine(dim=dim, **kw))
+        qdot = np.asarray(
+            ref.trq_qdot_ref(kw["query"], kw["packed"], kw["scale"], dim)
+        )
+        want = (
+            np.asarray(kw["d0"]) - 2 * qdot + np.asarray(kw["dnorm_sq"])
+            + 2 * np.asarray(kw["cross"])
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_zero_code_contributes_nothing(self):
+        n, dim = 256, 40
+        kw = self._inputs(n, dim)
+        kw["packed"] = jnp.array(
+            np.full((n, ref.packed_len(dim)), 121, dtype=np.int32)
+        )  # 121 = all-zero trits (1+3+9+27+81)
+        kw["weights"] = jnp.array([0.0, 1.0, 0.0, 0.0, 0.0])
+        got = np.asarray(trq_refine(dim=dim, **kw))
+        np.testing.assert_allclose(got, np.zeros(n), atol=1e-7)
+
+
+class TestExactL2Kernel:
+    @pytest.mark.parametrize("n,dim", [(64, 768), (128, 768), (32, 17)])
+    def test_matches_ref(self, n, dim):
+        q = jnp.array(RNG.standard_normal(dim), dtype=jnp.float32)
+        v = jnp.array(RNG.standard_normal((n, dim)), dtype=jnp.float32)
+        got = exact_l2(q, v)
+        want = ref.exact_l2_ref(q, v)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+        )
+
+    def test_zero_distance_to_self(self):
+        q = jnp.array(RNG.standard_normal(64), dtype=jnp.float32)
+        v = jnp.tile(q[None, :], (64, 1))
+        got = np.asarray(exact_l2(q, v))
+        np.testing.assert_allclose(got, np.zeros(64), atol=1e-5)

@@ -1,0 +1,144 @@
+"""Hypothesis sweeps over kernel shapes/values: the Pallas kernels must
+match their jnp oracles for arbitrary valid inputs, and the oracles must
+satisfy algebraic invariants of the paper's estimator."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.exact_l2 import exact_l2
+from compile.kernels.pq_adc import pq_adc
+from compile.kernels.trq_refine import trq_refine
+
+# Keep each case fast: interpret-mode pallas is numpy-speed.
+FAST = settings(max_examples=25, deadline=None)
+
+
+def np_rng(seed):
+    return np.random.default_rng(seed)
+
+
+@st.composite
+def adc_case(draw):
+    m = draw(st.sampled_from([2, 4, 8, 16]))
+    ksub = draw(st.sampled_from([2, 4, 16, 64]))
+    n = draw(st.sampled_from([32, 64, 256, 512]))
+    seed = draw(st.integers(0, 2**32 - 1))
+    rng = np_rng(seed)
+    lut = rng.standard_normal((m, ksub)).astype(np.float32)
+    codes = rng.integers(0, ksub, size=(n, m)).astype(np.int32)
+    return lut, codes
+
+
+@FAST
+@given(adc_case())
+def test_pq_adc_matches_ref_any_shape(case):
+    lut, codes = case
+    got = np.asarray(pq_adc(jnp.array(lut), jnp.array(codes)))
+    want = np.asarray(ref.pq_adc_ref(jnp.array(lut), jnp.array(codes)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@st.composite
+def refine_case(draw):
+    dim = draw(st.sampled_from([5, 16, 33, 64, 160, 768]))
+    n = draw(st.sampled_from([32, 64, 256]))
+    seed = draw(st.integers(0, 2**32 - 1))
+    rng = np_rng(seed)
+    pbytes = ref.packed_len(dim)
+    trits = rng.integers(-1, 2, size=(n, pbytes * 5))
+    trits[:, dim:] = 0
+    powers = np.array([1, 3, 9, 27, 81])
+    packed = ((trits.reshape(n, pbytes, 5) + 1) * powers).sum(axis=2).astype(np.int32)
+    return dict(
+        dim=dim,
+        query=rng.standard_normal(dim).astype(np.float32),
+        weights=rng.standard_normal(5).astype(np.float32),
+        d0=rng.uniform(0, 4, n).astype(np.float32),
+        packed=packed,
+        scale=rng.uniform(0.01, 1.0, n).astype(np.float32),
+        cross=(rng.standard_normal(n) * 0.1).astype(np.float32),
+        dnorm_sq=rng.uniform(0, 1, n).astype(np.float32),
+    )
+
+
+@FAST
+@given(refine_case())
+def test_trq_refine_matches_ref_any_shape(kw):
+    dim = kw.pop("dim")
+    args = {k: jnp.array(v) for k, v in kw.items()}
+    got = np.asarray(trq_refine(dim=dim, **args))
+    want = np.asarray(
+        ref.trq_refine_ref(
+            args["query"], args["d0"], args["packed"], args["scale"],
+            args["cross"], args["dnorm_sq"], args["weights"], dim,
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@FAST
+@given(refine_case())
+def test_refine_linear_in_weights(kw):
+    """The estimator is linear in W: f(aW1 + bW2) = a f(W1) + b f(W2)."""
+    dim = kw.pop("dim")
+    args = {k: jnp.array(v) for k, v in kw.items()}
+    w1 = args["weights"]
+    w2 = jnp.flip(w1)
+    run = lambda w: np.asarray(
+        ref.trq_refine_ref(
+            args["query"], args["d0"], args["packed"], args["scale"],
+            args["cross"], args["dnorm_sq"], w, dim,
+        )
+    )
+    lhs = run(0.3 * w1 + 0.7 * w2)
+    rhs = 0.3 * run(w1) + 0.7 * run(w2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+@FAST
+@given(st.integers(0, 2**32 - 1), st.sampled_from([16, 64, 768]),
+       st.sampled_from([32, 64]))
+def test_exact_l2_matches_ref(seed, dim, n):
+    rng = np_rng(seed)
+    q = jnp.array(rng.standard_normal(dim), dtype=jnp.float32)
+    v = jnp.array(rng.standard_normal((n, dim)), dtype=jnp.float32)
+    got = np.asarray(exact_l2(q, v))
+    want = np.asarray(ref.exact_l2_ref(q, v))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@FAST
+@given(st.integers(0, 2**32 - 1), st.sampled_from([7, 40, 768]))
+def test_unpack_is_left_inverse_of_pack(seed, dim):
+    rng = np_rng(seed)
+    pbytes = ref.packed_len(dim)
+    trits = rng.integers(-1, 2, size=(8, pbytes * 5))
+    trits[:, dim:] = 0
+    powers = np.array([1, 3, 9, 27, 81])
+    packed = ((trits.reshape(8, pbytes, 5) + 1) * powers).sum(axis=2)
+    got = np.asarray(ref.unpack_ternary_ref(jnp.array(packed.astype(np.int32)), dim))
+    np.testing.assert_array_equal(got, trits[:, :dim])
+
+
+@FAST
+@given(st.integers(0, 2**32 - 1))
+def test_qdot_scale_equivariance(seed):
+    """⟨q, δ⟩ estimate scales linearly with both query and record scale."""
+    rng = np_rng(seed)
+    dim, n = 30, 16
+    pbytes = ref.packed_len(dim)
+    trits = rng.integers(-1, 2, size=(n, pbytes * 5))
+    trits[:, dim:] = 0
+    powers = np.array([1, 3, 9, 27, 81])
+    packed = jnp.array(
+        ((trits.reshape(n, pbytes, 5) + 1) * powers).sum(axis=2).astype(np.int32)
+    )
+    q = jnp.array(rng.standard_normal(dim), dtype=jnp.float32)
+    scale = jnp.array(rng.uniform(0.1, 1.0, n), dtype=jnp.float32)
+    base = np.asarray(ref.trq_qdot_ref(q, packed, scale, dim))
+    doubled_q = np.asarray(ref.trq_qdot_ref(2.0 * q, packed, scale, dim))
+    doubled_s = np.asarray(ref.trq_qdot_ref(q, packed, 2.0 * scale, dim))
+    np.testing.assert_allclose(doubled_q, 2 * base, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(doubled_s, 2 * base, rtol=1e-4, atol=1e-6)

@@ -1,0 +1,144 @@
+//! Hot-path microbenchmarks — the §Perf evidence base (EXPERIMENTS.md).
+//!
+//! Measures the operations the pipeline executes per candidate/query:
+//! ternary encode, packed qdot, ADC scoring, full refinement, engine
+//! cycle throughput. Wall-clock medians over repeated runs.
+
+use fatrq::accel::RefineEngine;
+use fatrq::quant::pack::{pack_ternary, packed_len, unpack_ternary};
+use fatrq::quant::trq::{qdot_packed, ternary_encode, TrqStore};
+use fatrq::quant::ProductQuantizer;
+use fatrq::refine::{Calibration, ProgressiveEstimator};
+use fatrq::util::rng::Rng;
+use fatrq::util::topk::Scored;
+use std::hint::black_box;
+use std::time::Instant;
+
+fn time_median<F: FnMut()>(mut f: F, iters: usize, reps: usize) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[reps / 2]
+}
+
+fn main() {
+    println!("# hot-path microbenchmarks (ns/op, median of 7 reps)\n");
+    let mut rng = Rng::new(123);
+    let dim = 768usize;
+
+    // Fixtures.
+    let delta: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32() * 0.1).collect();
+    let query: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+    let code = ternary_encode(&delta);
+    let mut packed = vec![0u8; packed_len(dim)];
+    pack_ternary(&code.trits, &mut packed);
+
+    println!("| op | ns/op | notes |");
+    println!("|---|---|---|");
+
+    let t = time_median(|| { black_box(ternary_encode(black_box(&delta))); }, 200, 7);
+    println!("| ternary_encode (768-D) | {t:.0} | O(D log D) encode, offline path |");
+
+    let t = time_median(
+        || {
+            black_box(qdot_packed(black_box(&query), black_box(&packed), dim));
+        },
+        2000,
+        7,
+    );
+    println!("| qdot_packed (768-D, 154 B) | {t:.0} | per-candidate refinement core |");
+
+    let t = time_median(
+        || {
+            let mut out = vec![0i8; dim];
+            unpack_ternary(black_box(&packed), dim, &mut out);
+            black_box(out);
+        },
+        1000,
+        7,
+    );
+    println!("| unpack_ternary (768-D) | {t:.0} | decode-LUT equivalent |");
+
+    // ADC scoring.
+    let n = 4000usize;
+    let mut data = vec![0f32; n * dim];
+    rng.fill_gaussian(&mut data);
+    let pq = ProductQuantizer::train(&data[..500 * dim], dim, 96, 8, 4, 0, 9);
+    let codes = pq.encode(&data[..500 * dim]);
+    let lut = pq.adc_table(&query);
+    let t = time_median(
+        || {
+            let mut acc = 0f32;
+            for i in 0..500 {
+                acc += pq.adc_distance(black_box(&lut), &codes[i * 96..(i + 1) * 96]);
+            }
+            black_box(acc);
+        },
+        20,
+        7,
+    );
+    println!("| pq_adc_distance (96 subq) | {:.0} | per-candidate coarse score |", t / 500.0);
+
+    let t = time_median(|| { black_box(pq.adc_table(black_box(&query))); }, 50, 7);
+    println!("| adc_table build (96x256) | {t:.0} | once per query |");
+
+    // Full refinement of a 320-candidate list (the §V-B depth).
+    let n_small = 2000usize;
+    let small: Vec<f32> = data[..n_small * dim].to_vec();
+    let mut recon = vec![0f32; n_small * dim];
+    let codes2 = pq.encode(&small);
+    for i in 0..n_small {
+        pq.decode_one(&codes2[i * 96..(i + 1) * 96], &mut recon[i * dim..(i + 1) * dim]);
+    }
+    let store = TrqStore::build(&small, &recon, dim);
+    let est = ProgressiveEstimator::new(&store, Calibration::analytic());
+    let cands: Vec<Scored> = (0..320)
+        .map(|i| Scored::new(i as f32, (i * 5 % n_small) as u64))
+        .collect();
+    let t = time_median(|| { black_box(est.refine_list(black_box(&query), black_box(&cands))); }, 50, 7);
+    println!("| refine_list (320 cands, 768-D) | {t:.0} | SW-mode per-query refinement |");
+
+    // HW engine: cycles + functional.
+    let engine = RefineEngine::new(&store, Calibration::analytic());
+    let (_, timing) = engine.refine(&query, &cands, 320);
+    println!(
+        "| HW engine refine (320 cands) | {} cycles = {:.0} ns @1 GHz | device model |",
+        timing.cycles, timing.ns
+    );
+
+    let t = time_median(
+        || {
+            let mut out = vec![0u8; packed_len(dim)];
+            pack_ternary(black_box(&code.trits), &mut out);
+            black_box(out);
+        },
+        1000,
+        7,
+    );
+    println!("| pack_ternary (768-D) | {t:.0} | offline encode path |");
+
+    // Throughput summary.
+    let qdot_ns = time_median(
+        || {
+            black_box(qdot_packed(black_box(&query), black_box(&packed), dim));
+        },
+        2000,
+        7,
+    );
+    println!(
+        "\nSW refinement throughput: {:.1} M candidates/s/core ({:.0} ns each)",
+        1e3 / qdot_ns,
+        qdot_ns
+    );
+    println!(
+        "HW engine throughput: {:.1} M candidates/s ({} cycles/cand @1 GHz)",
+        1e3 / (timing.ns / 320.0),
+        timing.cycles / 320
+    );
+}

@@ -1,0 +1,63 @@
+//! §V-E — accelerator overhead analysis.
+//!
+//! Paper claims: the CXL Type-2 refinement unit adds 0.729 mm² / 897 mW
+//! (ASAP7 @ 1 GHz); the distance estimator is 29% area / 27% power, the
+//! priority queues 6% / 8%; versus a 16-core Neoverse-V2 CXL memory
+//! controller the overhead is under 1.8% area and 4% power.
+
+use fatrq::accel::{AccelCostModel, ComponentCost};
+use fatrq::bench_support as bs;
+
+fn pct(x: f64, total: f64) -> String {
+    format!("{:.1}%", 100.0 * x / total)
+}
+
+fn main() {
+    println!("# §V-E — accelerator area/power overhead\n");
+    let m = AccelCostModel::default();
+    let total = m.total();
+    let est = m.estimator();
+    let q = m.queues();
+    let infra = m.infrastructure();
+
+    bs::header(&["component", "area (mm²)", "area %", "power (mW)", "power %"]);
+    for (name, c) in [
+        ("distance estimator", est),
+        ("priority queues (2x1024)", q),
+        ("decode LUT / buffers / CXL ctrl", infra),
+        ("TOTAL", total),
+    ] {
+        bs::row(&[
+            name.to_string(),
+            format!("{:.3}", c.area_mm2),
+            pct(c.area_mm2, total.area_mm2),
+            format!("{:.0}", c.power_mw),
+            pct(c.power_mw, total.power_mw),
+        ]);
+    }
+
+    println!("\npaper: total 0.729 mm² / 897 mW; estimator 29%/27%; queues 6%/8%.");
+
+    let (area_frac, power_frac) = m.overhead_vs_controller(16);
+    println!(
+        "\nvs 16x Neoverse-V2 controller (2.5 mm² / 1.4 W per core):\n  area overhead  {:.2}%  (paper: <1.8%)\n  power overhead {:.2}%  (paper: 4%)",
+        area_frac * 100.0,
+        power_frac * 100.0
+    );
+
+    // Scaling study: how the overhead moves with the design knobs.
+    println!("\nscaling (queue entries x decode lanes):");
+    bs::header(&["queues", "lanes", "area (mm²)", "power (mW)"]);
+    for entries in [256usize, 512, 1024] {
+        for lanes in [4usize, 8, 16] {
+            let c = AccelCostModel { queue_entries: entries, decode_lanes: lanes, mac_width: 5 };
+            let ComponentCost { area_mm2, power_mw } = c.total();
+            bs::row(&[
+                entries.to_string(),
+                lanes.to_string(),
+                format!("{area_mm2:.3}"),
+                format!("{power_mw:.0}"),
+            ]);
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Table I — device-simulator validation.
+//!
+//! Confirms each simulator reproduces its configured Table I parameters:
+//! DDR5-4800 34-34-34 timing, CXL 271 ns / 22 GB/s, SSD 45 µs / 1200K
+//! IOPS — the numbers every pipeline latency in this repo is built on.
+
+use fatrq::bench_support as bs;
+use fatrq::config::SimConfig;
+use fatrq::simulator::{CxlLink, DramSim, FarMemoryDevice, SsdSim};
+
+fn main() {
+    println!("# Table I — simulator validation\n");
+    let cfg = SimConfig::default();
+    bs::header(&["device", "metric", "configured", "measured", "ok"]);
+
+    // --- DRAM ---
+    let clock_ns = 1000.0 / cfg.dram_clock_mhz;
+    let mut dram = DramSim::new(&cfg);
+    let (done, _) = dram.read(0, 64, 0.0); // miss: tRCD + tCAS
+    let miss_expect = (cfg.t_rcd + cfg.t_cas) as f64 * clock_ns;
+    bs::row(&[
+        "DDR5-4800".into(),
+        "row-miss latency (ns)".into(),
+        format!("{miss_expect:.1}+xfer"),
+        format!("{done:.1}"),
+        (done >= miss_expect && done < miss_expect + 10.0).to_string(),
+    ]);
+    let t0 = dram.now;
+    let (done2, _) = dram.read(64, 64, t0); // hit: tCAS
+    let hit_expect = cfg.t_cas as f64 * clock_ns;
+    bs::row(&[
+        "DDR5-4800".into(),
+        "row-hit latency (ns)".into(),
+        format!("{hit_expect:.1}+xfer"),
+        format!("{:.1}", done2 - t0),
+        (done2 - t0 >= hit_expect && done2 - t0 < hit_expect + 10.0).to_string(),
+    ]);
+    // Streaming bandwidth toward the peak.
+    let mut dram2 = DramSim::new(&cfg);
+    let elapsed = dram2.stream(0, 8192, 8192, 4096, 0.0);
+    let gbps = (4096usize * 8192) as f64 / elapsed;
+    bs::row(&[
+        "DDR5-4800".into(),
+        "stream bandwidth (GB/s)".into(),
+        format!("<= {:.0} peak", dram2.peak_bandwidth_bpns()),
+        format!("{gbps:.1}"),
+        (gbps > 0.3 * dram2.peak_bandwidth_bpns() && gbps <= dram2.peak_bandwidth_bpns() * 1.01)
+            .to_string(),
+    ]);
+
+    // --- CXL ---
+    let link = CxlLink::new(&cfg);
+    let idle = link.idle_latency_ns();
+    bs::row(&[
+        "CXL link".into(),
+        "idle latency (ns)".into(),
+        format!("{:.0}", cfg.cxl_latency_ns),
+        format!("{idle:.1}"),
+        ((idle - cfg.cxl_latency_ns).abs() < 15.0).to_string(),
+    ]);
+    let mut link2 = CxlLink::new(&cfg);
+    let mut done = 0.0;
+    for _ in 0..20_000 {
+        done = link2.transfer(4096, 0.0);
+    }
+    let link_gbps = (20_000usize * 4096) as f64 / done;
+    bs::row(&[
+        "CXL link".into(),
+        "sustained BW (GB/s)".into(),
+        format!("{:.0}", cfg.cxl_bandwidth_gbps),
+        format!("{link_gbps:.1}"),
+        ((link_gbps - cfg.cxl_bandwidth_gbps).abs() < 1.0).to_string(),
+    ]);
+
+    // --- SSD ---
+    let mut ssd = SsdSim::new(&cfg);
+    let lat = ssd.read(3072, 0.0);
+    bs::row(&[
+        "NVMe SSD".into(),
+        "read latency (us)".into(),
+        format!("{:.0}", cfg.ssd_latency_us),
+        format!("{:.1}", lat / 1e3),
+        ((lat / 1e3 - cfg.ssd_latency_us).abs() < 1.0).to_string(),
+    ]);
+    let mut ssd2 = SsdSim::new(&cfg);
+    let n = 200_000;
+    let mut sdone = 0.0;
+    for _ in 0..n {
+        sdone = ssd2.read(4096, 0.0);
+    }
+    let kiops = n as f64 / (sdone / 1e9) / 1e3;
+    bs::row(&[
+        "NVMe SSD".into(),
+        "sustained KIOPS".into(),
+        format!("{:.0}", cfg.ssd_kiops),
+        format!("{kiops:.0}"),
+        ((kiops - cfg.ssd_kiops).abs() / cfg.ssd_kiops < 0.05).to_string(),
+    ]);
+
+    // --- Composed far-memory device: the tier ordering premise ---
+    println!("\ntier latency ordering for one 162-B TRQ record:");
+    let mut dev = FarMemoryDevice::new(&cfg);
+    let local = dev.local_read(0, 162, 0.0);
+    dev.reset();
+    let host = dev.host_read(0, 162, 0.0);
+    let ssd_one = SsdSim::new(&cfg).idle_latency_ns();
+    bs::header(&["path", "latency (ns)"]);
+    bs::row(&["on-device DRAM (HW mode)".into(), format!("{local:.0}")]);
+    bs::row(&["host via CXL (SW mode)".into(), format!("{host:.0}")]);
+    bs::row(&["SSD full-vector fetch".into(), format!("{ssd_one:.0}")]);
+    assert!(local < host && host < ssd_one / 10.0);
+    println!("\nordering holds: device < link < 0.1x SSD — the paper's tiering premise.");
+}

@@ -1,0 +1,24 @@
+//! CXL Type-2 refinement accelerator model (paper §IV, Fig 5, §V-E).
+//!
+//! The paper synthesizes a small refinement engine (ASAP7, 1 GHz) into a
+//! CXL memory expander: a 256-entry ternary-decode LUT, an add/sub tree
+//! for the multiplication-free inner product, a small MAC array for the
+//! calibration dot, and two 1024-entry hardware priority queues (one for
+//! FaTRQ-estimated ranks, one for final full-precision ranks). We rebuild
+//! that device as:
+//!
+//! - [`pqueue`] — the register/comparator priority-queue model,
+//! - [`engine`] — the cycle-level refinement datapath model,
+//! - [`cost`] — the analytical area/power model used for §V-E.
+//!
+//! The *functional* behaviour matches the host implementation bit-for-bit
+//! (same estimator code); what this module adds is hardware **timing**
+//! (cycles @ 1 GHz) and **cost** (mm², mW).
+
+pub mod cost;
+pub mod engine;
+pub mod pqueue;
+
+pub use cost::{AccelCostModel, ComponentCost};
+pub use engine::{RefineEngine, RefineTiming};
+pub use pqueue::HwPriorityQueue;

@@ -1,0 +1,128 @@
+//! Hardware priority queue model (paper §IV): a register array with a
+//! pipeline of comparators. New candidates are inserted by comparing
+//! against the current worst and bubbling smaller values forward one
+//! stage per cycle; because stages overlap, the queue accepts one insert
+//! per cycle with a fixed pipeline depth.
+//!
+//! Functionally it is a bounded max-queue over (distance, pointer) pairs,
+//! exactly mirroring [`crate::util::topk::TopK`]; the addition is the
+//! cycle accounting used by the engine model.
+
+use crate::util::topk::{Scored, TopK};
+
+/// Maximum entries supported by the paper's design.
+pub const HW_QUEUE_CAPACITY: usize = 1024;
+
+/// Cycle-accounted hardware priority queue.
+pub struct HwPriorityQueue {
+    inner: TopK,
+    capacity: usize,
+    /// Total inserts offered.
+    pub inserts: u64,
+    /// Inserts admitted past the head comparator.
+    pub admitted: u64,
+    /// Cycles consumed (1 issue/cycle; drain adds pipeline flush).
+    pub cycles: u64,
+}
+
+impl HwPriorityQueue {
+    /// `capacity` must not exceed [`HW_QUEUE_CAPACITY`].
+    pub fn new(capacity: usize) -> Self {
+        assert!(
+            (1..=HW_QUEUE_CAPACITY).contains(&capacity),
+            "hw queue supports 1..={HW_QUEUE_CAPACITY} entries"
+        );
+        HwPriorityQueue {
+            inner: TopK::new(capacity),
+            capacity,
+            inserts: 0,
+            admitted: 0,
+            cycles: 0,
+        }
+    }
+
+    /// Offer one candidate; one cycle per offer (pipelined comparators).
+    pub fn insert(&mut self, dist: f32, id: u64) -> bool {
+        self.inserts += 1;
+        self.cycles += 1;
+        let admitted = self.inner.push(dist, id);
+        if admitted {
+            self.admitted += 1;
+        }
+        admitted
+    }
+
+    /// Admission threshold (worst kept distance).
+    pub fn threshold(&self) -> f32 {
+        self.inner.threshold()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Drain sorted ascending; costs `len + pipeline depth` cycles
+    /// (shift-out one entry per cycle after the flush).
+    pub fn drain_sorted(mut self) -> (Vec<Scored>, u64) {
+        let depth = (self.capacity as f64).log2().ceil() as u64;
+        self.cycles += self.inner.len() as u64 + depth;
+        let cycles = self.cycles;
+        (self.inner.into_sorted(), cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_software_topk() {
+        let mut rng = Rng::new(4);
+        let mut hw = HwPriorityQueue::new(16);
+        let mut sw = TopK::new(16);
+        for i in 0..500u64 {
+            let d = rng.f32() * 10.0;
+            hw.insert(d, i);
+            sw.push(d, i);
+        }
+        let (hw_out, _) = hw.drain_sorted();
+        assert_eq!(hw_out, sw.into_sorted());
+    }
+
+    #[test]
+    fn cycle_accounting() {
+        let mut hw = HwPriorityQueue::new(8);
+        for i in 0..100u64 {
+            hw.insert(i as f32, i);
+        }
+        assert_eq!(hw.inserts, 100);
+        assert_eq!(hw.cycles, 100);
+        let (out, cycles) = hw.drain_sorted();
+        assert_eq!(out.len(), 8);
+        assert_eq!(cycles, 100 + 8 + 3); // inserts + shift-out + log2(8) flush
+    }
+
+    #[test]
+    fn capacity_limit_enforced() {
+        let result = std::panic::catch_unwind(|| HwPriorityQueue::new(HW_QUEUE_CAPACITY + 1));
+        assert!(result.is_err());
+        let _ok = HwPriorityQueue::new(HW_QUEUE_CAPACITY);
+    }
+
+    #[test]
+    fn admission_counted() {
+        let mut hw = HwPriorityQueue::new(2);
+        hw.insert(5.0, 0);
+        hw.insert(1.0, 1);
+        hw.insert(9.0, 2); // rejected
+        hw.insert(0.5, 3); // admitted, evicts 5.0
+        assert_eq!(hw.inserts, 4);
+        assert_eq!(hw.admitted, 3);
+        assert_eq!(hw.threshold(), 1.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Shared infrastructure for the benchmark harnesses (`rust/benches/`).
+//!
+//! Each bench is a `harness = false` binary (criterion is not in the
+//! offline vendor set) that regenerates one of the paper's tables or
+//! figures; this module provides the standard corpora, tuning helpers,
+//! and table printing they share. Scale with `FATRQ_BENCH_SCALE`
+//! (default 1; 2 doubles the corpus, etc.).
+
+use crate::config::{
+    DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
+};
+use crate::coordinator::{build_system_with, ground_truth, run_batch, BuiltSystem};
+use crate::util::topk::Scored;
+use crate::vecstore::{synthesize, Dataset};
+
+/// Benchmark scale factor from the environment.
+pub fn scale() -> usize {
+    std::env::var("FATRQ_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// The standard bench corpus: clustered 256-D embeddings (a CI-scale
+/// stand-in for Wiki/LAION; DESIGN.md §2 documents the substitution).
+pub fn bench_dataset_config() -> DatasetConfig {
+    DatasetConfig {
+        dim: 256,
+        count: 30_000 * scale(),
+        clusters: 128 * scale(),
+        noise: 0.35,
+            query_noise: 2.0,
+        queries: 128,
+        seed: 20_26,
+    }
+}
+
+/// Base system config on the bench corpus.
+pub fn bench_config(kind: IndexKind) -> SystemConfig {
+    SystemConfig {
+        dataset: bench_dataset_config(),
+        quant: QuantConfig { pq_m: 16, pq_nbits: 8, kmeans_iters: 8, train_sample: 8192 },
+        index: IndexConfig {
+            kind,
+            nlist: 128,
+            nprobe: 16,
+            graph_degree: 24,
+            ef_search: 128,
+            ef_construction: 128,
+        },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 200,
+            k: 10,
+            filter_ratio: 0.25,
+            calib_sample: 0.01,
+        },
+        ..Default::default()
+    }
+}
+
+/// Build the bench system, reusing a pre-synthesized dataset.
+pub fn build_bench_system(kind: IndexKind, dataset: Dataset) -> BuiltSystem {
+    build_system_with(&bench_config(kind), dataset).expect("bench system build")
+}
+
+/// Synthesize the shared bench dataset once.
+pub fn bench_dataset() -> Dataset {
+    synthesize(&bench_dataset_config())
+}
+
+/// One row of a Fig 6-style run: tune front-stage depth until the
+/// pipeline reaches `target_recall`, then report the operating point.
+pub struct OperatingPoint {
+    pub candidates: usize,
+    pub nprobe_or_ef: usize,
+    pub recall: f64,
+    pub report: crate::coordinator::BatchReport,
+}
+
+/// Find the cheapest (candidates) setting reaching `target` recall@k for
+/// `mode`, by sweeping the candidate-list depth (the paper tunes via grid
+/// search [13]). Returns None if the target is unreachable at the maximum
+/// depth.
+pub fn tune_to_recall(
+    sys: &BuiltSystem,
+    mode: RefineMode,
+    truth: &[Vec<Scored>],
+    target: f64,
+    threads: usize,
+) -> Option<OperatingPoint> {
+    for &cands in &[40usize, 80, 120, 200, 320, 480, 640] {
+        let mut sys_view = Pipelined { sys, candidates: cands };
+        let report = sys_view.run(mode, truth, threads);
+        if report.mean_recall >= target {
+            return Some(OperatingPoint {
+                candidates: cands,
+                nprobe_or_ef: match sys.cfg.index.kind {
+                    IndexKind::Ivf => sys.cfg.index.nprobe,
+                    _ => sys.cfg.index.ef_search,
+                },
+                recall: report.mean_recall,
+                report,
+            });
+        }
+    }
+    None
+}
+
+/// Helper running a batch with an overridden candidate depth.
+struct Pipelined<'a> {
+    sys: &'a BuiltSystem,
+    candidates: usize,
+}
+
+impl Pipelined<'_> {
+    fn run(
+        &mut self,
+        mode: RefineMode,
+        truth: &[Vec<Scored>],
+        threads: usize,
+    ) -> crate::coordinator::BatchReport {
+        // run_batch reads candidates from cfg; clone a system view is
+        // heavy, so temporarily run through Pipeline directly.
+        use crate::coordinator::Pipeline;
+        use crate::metrics::{recall_at_k, LatencyStats};
+        let sys = self.sys;
+        let nq = sys.dataset.num_queries();
+        let k = sys.cfg.refine.k;
+        let mut lat = LatencyStats::default();
+        let mut recall = 0.0;
+        let mut agg = crate::coordinator::Breakdown::default();
+        let mut p = Pipeline::new(sys).with_mode(mode);
+        p.candidates = self.candidates;
+        for q in 0..nq {
+            let out = p.query(sys.dataset.query(q));
+            recall += recall_at_k(&out.topk, &truth[q], k);
+            lat.record(out.breakdown.total_ns());
+            agg.traversal_ns += out.breakdown.traversal_ns;
+            agg.far_ns += out.breakdown.far_ns;
+            agg.refine_compute_ns += out.breakdown.refine_compute_ns;
+            agg.ssd_ns += out.breakdown.ssd_ns;
+            agg.rerank_ns += out.breakdown.rerank_ns;
+            agg.ssd_reads += out.breakdown.ssd_reads;
+            agg.far_reads += out.breakdown.far_reads;
+            agg.candidates += out.breakdown.candidates;
+        }
+        let n = nq.max(1) as f64;
+        agg.traversal_ns /= n;
+        agg.far_ns /= n;
+        agg.refine_compute_ns /= n;
+        agg.ssd_ns /= n;
+        agg.rerank_ns /= n;
+        agg.ssd_reads = (agg.ssd_reads as f64 / n) as usize;
+        agg.far_reads = (agg.far_reads as f64 / n) as usize;
+        agg.candidates = (agg.candidates as f64 / n) as usize;
+        crate::coordinator::BatchReport {
+            queries: nq,
+            mean_recall: recall / n,
+            mean_latency_ns: lat.mean(),
+            p50_ns: lat.p50(),
+            p99_ns: lat.p99(),
+            qps: if lat.mean() > 0.0 { threads as f64 * 1e9 / lat.mean() } else { 0.0 },
+            breakdown: agg,
+            mode: mode.name(),
+        }
+    }
+}
+
+/// Convenience: batch run at the config's defaults.
+pub fn default_batch(
+    sys: &BuiltSystem,
+    mode: RefineMode,
+    truth: &[Vec<Scored>],
+    threads: usize,
+) -> crate::coordinator::BatchReport {
+    run_batch(sys, mode, truth, threads)
+}
+
+/// Ground truth shared across bench modes.
+pub fn bench_truth(sys: &BuiltSystem) -> Vec<Vec<Scored>> {
+    ground_truth(sys, sys.cfg.refine.k)
+}
+
+/// Print a markdown-style table row.
+pub fn row(cells: &[String]) {
+    println!("| {} |", cells.join(" | "));
+}
+
+/// Print a header + separator.
+pub fn header(cells: &[&str]) {
+    println!("| {} |", cells.join(" | "));
+    println!("|{}|", cells.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_defaults_to_one() {
+        // (environment-dependent, but in the test environment the var is
+        // unset)
+        if std::env::var("FATRQ_BENCH_SCALE").is_err() {
+            assert_eq!(scale(), 1);
+        }
+    }
+
+    #[test]
+    fn bench_config_is_valid() {
+        bench_config(IndexKind::Ivf).validate().unwrap();
+        bench_config(IndexKind::Graph).validate().unwrap();
+    }
+}

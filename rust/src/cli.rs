@@ -1,0 +1,122 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline vendor set).
+//!
+//! Grammar: `fatrq <command> [--flag value]... [--bool-flag]...`
+
+use crate::Result;
+use anyhow::bail;
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    /// Flags that appeared without a value.
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument `{arg}`");
+            };
+            if name.is_empty() {
+                bail!("empty flag");
+            }
+            // `--key=value` or `--key value` or bare switch.
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                switches.push(name.to_string());
+            }
+        }
+        Ok(Args { command, flags, switches })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Error on flags the command does not understand.
+    pub fn expect_only(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} for `{}`", self.command);
+            }
+        }
+        for s in &self.switches {
+            if !known.contains(&s.as_str()) {
+                bail!("unknown switch --{s} for `{}`", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse("query --config cfg.toml --k 10 --verbose");
+        assert_eq!(a.command, "query");
+        assert_eq!(a.get("config"), Some("cfg.toml"));
+        assert_eq!(a.get_usize("k", 0).unwrap(), 10);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --mode=fatrq-hw --ratio=0.25");
+        assert_eq!(a.get("mode"), Some("fatrq-hw"));
+        assert_eq!(a.get_f64("ratio", 0.0).unwrap(), 0.25);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("serve");
+        assert_eq!(a.get_usize("threads", 8).unwrap(), 8);
+        assert!(Args::parse(vec!["x".into(), "stray".into()]).is_err());
+        let a = parse("run --k 10");
+        assert!(a.expect_only(&["k"]).is_ok());
+        assert!(a.expect_only(&["other"]).is_err());
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

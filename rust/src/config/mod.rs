@@ -1,0 +1,523 @@
+//! System configuration: a TOML-subset parser ([`toml`]) plus the typed
+//! config structs every subsystem consumes.
+
+pub mod toml;
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::Path;
+use toml::Value;
+
+/// Synthetic dataset parameters (substitute for Wiki-88M / LAION-100M; see
+/// DESIGN.md §2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetConfig {
+    /// Embedding dimensionality (the paper evaluates 768-D SBERT/CLIP).
+    pub dim: usize,
+    /// Number of database vectors.
+    pub count: usize,
+    /// Number of Gaussian mixture clusters in the generator.
+    pub clusters: usize,
+    /// Residual noise scale relative to cluster-center norm.
+    pub noise: f32,
+    /// Query perturbation scale (multiplier on `noise`): queries are
+    /// database draws re-noised by `query_noise * noise`. Higher values
+    /// make recall genuinely depend on candidate depth (Fig 6 operating
+    /// points).
+    pub query_noise: f32,
+    /// Number of held-out queries.
+    pub queries: usize,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        DatasetConfig {
+            dim: 768,
+            count: 20_000,
+            clusters: 256,
+            noise: 0.35,
+            query_noise: 1.0,
+            queries: 256,
+            seed: 42,
+        }
+    }
+}
+
+/// Quantization parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantConfig {
+    /// PQ subquantizer count (must divide dim).
+    pub pq_m: usize,
+    /// Bits per PQ code (8 -> 256 centroids per subspace).
+    pub pq_nbits: usize,
+    /// k-means iterations for codebook training.
+    pub kmeans_iters: usize,
+    /// Training sample size (0 = all).
+    pub train_sample: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig { pq_m: 96, pq_nbits: 8, kmeans_iters: 12, train_sample: 16_384 }
+    }
+}
+
+/// Front-stage index selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexKind {
+    Ivf,
+    Graph,
+    Flat,
+}
+
+impl IndexKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "ivf" => IndexKind::Ivf,
+            "graph" => IndexKind::Graph,
+            "flat" => IndexKind::Flat,
+            other => bail!("unknown index kind `{other}` (ivf|graph|flat)"),
+        })
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            IndexKind::Ivf => "ivf",
+            IndexKind::Graph => "graph",
+            IndexKind::Flat => "flat",
+        }
+    }
+}
+
+/// Index parameters (IVF + graph).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IndexConfig {
+    pub kind: IndexKind,
+    /// IVF inverted lists.
+    pub nlist: usize,
+    /// IVF probes at query time.
+    pub nprobe: usize,
+    /// Graph out-degree.
+    pub graph_degree: usize,
+    /// Graph beam width at query time.
+    pub ef_search: usize,
+    /// Graph construction beam width.
+    pub ef_construction: usize,
+}
+
+impl Default for IndexConfig {
+    fn default() -> Self {
+        IndexConfig {
+            kind: IndexKind::Ivf,
+            nlist: 256,
+            nprobe: 16,
+            graph_degree: 24,
+            ef_search: 96,
+            ef_construction: 128,
+        }
+    }
+}
+
+/// Refinement mode (§IV): baseline SSD rerank, FaTRQ in software on the
+/// host, or FaTRQ offloaded to the CXL Type-2 accelerator model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefineMode {
+    /// Fetch every candidate's full vector from SSD (SoTA pipelines).
+    Baseline,
+    /// TRQ codes in far memory, filtering on host CPU.
+    FatrqSw,
+    /// TRQ codes + filtering inside the CXL Type-2 device.
+    FatrqHw,
+}
+
+impl RefineMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "baseline" => RefineMode::Baseline,
+            "fatrq-sw" => RefineMode::FatrqSw,
+            "fatrq-hw" => RefineMode::FatrqHw,
+            other => bail!("unknown refine mode `{other}` (baseline|fatrq-sw|fatrq-hw)"),
+        })
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            RefineMode::Baseline => "baseline",
+            RefineMode::FatrqSw => "fatrq-sw",
+            RefineMode::FatrqHw => "fatrq-hw",
+        }
+    }
+}
+
+/// Refinement stage parameters (§III-E, §IV).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RefineConfig {
+    pub mode: RefineMode,
+    /// Candidate list length produced by the front stage.
+    pub candidates: usize,
+    /// Final top-k.
+    pub k: usize,
+    /// Fraction of the FaTRQ-ranked queue fetched from SSD (Fig 8's
+    /// filtering rate).
+    pub filter_ratio: f64,
+    /// Fraction of the database sampled for calibration (paper: 0.003).
+    pub calib_sample: f64,
+}
+
+impl Default for RefineConfig {
+    fn default() -> Self {
+        RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 100,
+            k: 10,
+            filter_ratio: 0.25,
+            calib_sample: 0.003,
+        }
+    }
+}
+
+/// Table I device parameters for the far-memory / storage simulators.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    // DDR5-4800 far-memory DIMM behind CXL.
+    pub dram_channels: usize,
+    pub dram_ranks_per_channel: usize,
+    pub dram_banks_per_rank: usize,
+    /// tRCD in DRAM clock cycles (DDR5-4800: 34).
+    pub t_rcd: u64,
+    /// CAS latency in cycles (34).
+    pub t_cas: u64,
+    /// tRP in cycles (34).
+    pub t_rp: u64,
+    /// DRAM bus clock in MHz (DDR5-4800 -> 2400 MHz).
+    pub dram_clock_mhz: f64,
+    /// Row-buffer size in bytes.
+    pub row_size: usize,
+    // CXL link (Table I: 271 ns, 22 GB/s).
+    pub cxl_latency_ns: f64,
+    pub cxl_bandwidth_gbps: f64,
+    // SSD (990 Pro-class: 45 us, 1200K IOPS).
+    pub ssd_latency_us: f64,
+    pub ssd_kiops: f64,
+    /// SSD read granularity (bytes per IO).
+    pub ssd_page_bytes: usize,
+    /// Host DRAM latency for fast-memory accesses, ns.
+    pub host_dram_latency_ns: f64,
+    /// Host DRAM bandwidth GB/s.
+    pub host_dram_bandwidth_gbps: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            dram_channels: 8,
+            dram_ranks_per_channel: 8,
+            dram_banks_per_rank: 32,
+            t_rcd: 34,
+            t_cas: 34,
+            t_rp: 34,
+            dram_clock_mhz: 2400.0,
+            row_size: 8192, // 8Gb x16 DDR5: 8 KiB row
+            cxl_latency_ns: 271.0,
+            cxl_bandwidth_gbps: 22.0,
+            ssd_latency_us: 45.0,
+            ssd_kiops: 1200.0,
+            ssd_page_bytes: 4096,
+            host_dram_latency_ns: 90.0,
+            host_dram_bandwidth_gbps: 80.0,
+        }
+    }
+}
+
+/// Coordinator / serving parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineConfig {
+    /// Query batch size for the front stage.
+    pub batch: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Directory holding AOT artifacts (`*.hlo.txt`).
+    pub artifacts_dir: String,
+    /// Use the PJRT/XLA executables for batch compute when available
+    /// (falls back to native rust when false or artifacts missing).
+    pub use_xla: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            batch: 32,
+            threads: 0,
+            artifacts_dir: "artifacts".to_string(),
+            use_xla: false,
+        }
+    }
+}
+
+/// Top-level system configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SystemConfig {
+    pub dataset: DatasetConfig,
+    pub quant: QuantConfig,
+    pub index: IndexConfig,
+    pub refine: RefineConfig,
+    pub sim: SimConfig,
+    pub pipeline: PipelineConfig,
+}
+
+impl SystemConfig {
+    /// Parse from TOML text; unknown keys are rejected to catch typos.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let root = toml::parse(text)?;
+        let mut cfg = SystemConfig::default();
+        let table = root.as_table().context("root must be a table")?;
+        for (section, value) in table {
+            let sub = value
+                .as_table()
+                .with_context(|| format!("[{section}] must be a table"))?;
+            match section.as_str() {
+                "dataset" => apply_dataset(&mut cfg.dataset, sub)?,
+                "quant" => apply_quant(&mut cfg.quant, sub)?,
+                "index" => apply_index(&mut cfg.index, sub)?,
+                "refine" => apply_refine(&mut cfg.refine, sub)?,
+                "sim" => apply_sim(&mut cfg.sim, sub)?,
+                "pipeline" => apply_pipeline(&mut cfg.pipeline, sub)?,
+                other => bail!("unknown config section [{other}]"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Cross-field sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        let d = &self.dataset;
+        if d.dim == 0 || d.count == 0 {
+            bail!("dataset dim/count must be positive");
+        }
+        if self.quant.pq_m == 0 || d.dim % self.quant.pq_m != 0 {
+            bail!("pq_m ({}) must divide dim ({})", self.quant.pq_m, d.dim);
+        }
+        if !(1..=8).contains(&self.quant.pq_nbits) {
+            bail!("pq_nbits must be in 1..=8");
+        }
+        if self.index.nprobe > self.index.nlist {
+            bail!("nprobe ({}) > nlist ({})", self.index.nprobe, self.index.nlist);
+        }
+        if self.refine.k == 0 || self.refine.k > self.refine.candidates {
+            bail!(
+                "k ({}) must be in 1..=candidates ({})",
+                self.refine.k,
+                self.refine.candidates
+            );
+        }
+        if !(0.0..=1.0).contains(&self.refine.filter_ratio) {
+            bail!("filter_ratio must be in [0,1]");
+        }
+        if !(0.0..=1.0).contains(&self.refine.calib_sample) {
+            bail!("calib_sample must be in [0,1]");
+        }
+        Ok(())
+    }
+}
+
+type Table = std::collections::BTreeMap<String, Value>;
+
+fn need_usize(v: &Value, key: &str) -> Result<usize> {
+    let i = v.as_int().with_context(|| format!("{key} must be an integer"))?;
+    if i < 0 {
+        bail!("{key} must be non-negative");
+    }
+    Ok(i as usize)
+}
+
+fn need_f64(v: &Value, key: &str) -> Result<f64> {
+    v.as_float().with_context(|| format!("{key} must be a number"))
+}
+
+fn apply_dataset(c: &mut DatasetConfig, t: &Table) -> Result<()> {
+    for (k, v) in t {
+        match k.as_str() {
+            "dim" => c.dim = need_usize(v, k)?,
+            "count" => c.count = need_usize(v, k)?,
+            "clusters" => c.clusters = need_usize(v, k)?,
+            "noise" => c.noise = need_f64(v, k)? as f32,
+            "query_noise" => c.query_noise = need_f64(v, k)? as f32,
+            "queries" => c.queries = need_usize(v, k)?,
+            "seed" => c.seed = need_usize(v, k)? as u64,
+            other => bail!("unknown key dataset.{other}"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_quant(c: &mut QuantConfig, t: &Table) -> Result<()> {
+    for (k, v) in t {
+        match k.as_str() {
+            "pq_m" => c.pq_m = need_usize(v, k)?,
+            "pq_nbits" => c.pq_nbits = need_usize(v, k)?,
+            "kmeans_iters" => c.kmeans_iters = need_usize(v, k)?,
+            "train_sample" => c.train_sample = need_usize(v, k)?,
+            other => bail!("unknown key quant.{other}"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_index(c: &mut IndexConfig, t: &Table) -> Result<()> {
+    for (k, v) in t {
+        match k.as_str() {
+            "kind" => {
+                c.kind =
+                    IndexKind::parse(v.as_str().context("index.kind must be a string")?)?
+            }
+            "nlist" => c.nlist = need_usize(v, k)?,
+            "nprobe" => c.nprobe = need_usize(v, k)?,
+            "graph_degree" => c.graph_degree = need_usize(v, k)?,
+            "ef_search" => c.ef_search = need_usize(v, k)?,
+            "ef_construction" => c.ef_construction = need_usize(v, k)?,
+            other => bail!("unknown key index.{other}"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_refine(c: &mut RefineConfig, t: &Table) -> Result<()> {
+    for (k, v) in t {
+        match k.as_str() {
+            "mode" => {
+                c.mode =
+                    RefineMode::parse(v.as_str().context("refine.mode must be a string")?)?
+            }
+            "candidates" => c.candidates = need_usize(v, k)?,
+            "k" => c.k = need_usize(v, k)?,
+            "filter_ratio" => c.filter_ratio = need_f64(v, k)?,
+            "calib_sample" => c.calib_sample = need_f64(v, k)?,
+            other => bail!("unknown key refine.{other}"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_sim(c: &mut SimConfig, t: &Table) -> Result<()> {
+    for (k, v) in t {
+        match k.as_str() {
+            "dram_channels" => c.dram_channels = need_usize(v, k)?,
+            "dram_ranks_per_channel" => c.dram_ranks_per_channel = need_usize(v, k)?,
+            "dram_banks_per_rank" => c.dram_banks_per_rank = need_usize(v, k)?,
+            "t_rcd" => c.t_rcd = need_usize(v, k)? as u64,
+            "t_cas" => c.t_cas = need_usize(v, k)? as u64,
+            "t_rp" => c.t_rp = need_usize(v, k)? as u64,
+            "dram_clock_mhz" => c.dram_clock_mhz = need_f64(v, k)?,
+            "row_size" => c.row_size = need_usize(v, k)?,
+            "cxl_latency_ns" => c.cxl_latency_ns = need_f64(v, k)?,
+            "cxl_bandwidth_gbps" => c.cxl_bandwidth_gbps = need_f64(v, k)?,
+            "ssd_latency_us" => c.ssd_latency_us = need_f64(v, k)?,
+            "ssd_kiops" => c.ssd_kiops = need_f64(v, k)?,
+            "ssd_page_bytes" => c.ssd_page_bytes = need_usize(v, k)?,
+            "host_dram_latency_ns" => c.host_dram_latency_ns = need_f64(v, k)?,
+            "host_dram_bandwidth_gbps" => c.host_dram_bandwidth_gbps = need_f64(v, k)?,
+            other => bail!("unknown key sim.{other}"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_pipeline(c: &mut PipelineConfig, t: &Table) -> Result<()> {
+    for (k, v) in t {
+        match k.as_str() {
+            "batch" => c.batch = need_usize(v, k)?,
+            "threads" => c.threads = need_usize(v, k)?,
+            "artifacts_dir" => {
+                c.artifacts_dir = v
+                    .as_str()
+                    .context("pipeline.artifacts_dir must be a string")?
+                    .to_string()
+            }
+            "use_xla" => c.use_xla = v.as_bool().context("pipeline.use_xla must be a bool")?,
+            other => bail!("unknown key pipeline.{other}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        SystemConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_roundtrip_from_toml() {
+        let doc = r#"
+            [dataset]
+            dim = 128
+            count = 5000
+            clusters = 64
+            noise = 0.4
+            queries = 100
+            seed = 7
+
+            [quant]
+            pq_m = 16
+            pq_nbits = 8
+
+            [index]
+            kind = "graph"
+            nlist = 128
+            nprobe = 8
+
+            [refine]
+            mode = "fatrq-sw"
+            candidates = 200
+            k = 10
+            filter_ratio = 0.3
+
+            [sim]
+            cxl_latency_ns = 271
+            ssd_latency_us = 45.0
+
+            [pipeline]
+            batch = 16
+            use_xla = true
+        "#;
+        let cfg = SystemConfig::from_toml(doc).unwrap();
+        assert_eq!(cfg.dataset.dim, 128);
+        assert_eq!(cfg.index.kind, IndexKind::Graph);
+        assert_eq!(cfg.refine.mode, RefineMode::FatrqSw);
+        assert_eq!(cfg.sim.cxl_latency_ns, 271.0);
+        assert!(cfg.pipeline.use_xla);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(SystemConfig::from_toml("[dataset]\nbogus = 1").is_err());
+        assert!(SystemConfig::from_toml("[nosuch]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn invalid_cross_fields_rejected() {
+        let bad = "[dataset]\ndim = 100\n[quant]\npq_m = 96";
+        assert!(SystemConfig::from_toml(bad).is_err());
+        let bad2 = "[index]\nnlist = 4\nnprobe = 8";
+        assert!(SystemConfig::from_toml(bad2).is_err());
+        let bad3 = "[refine]\ncandidates = 5\nk = 10";
+        assert!(SystemConfig::from_toml(bad3).is_err());
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert!(RefineMode::parse("fatrq-hw").is_ok());
+        assert!(RefineMode::parse("wat").is_err());
+        assert_eq!(RefineMode::FatrqHw.name(), "fatrq-hw");
+    }
+}

@@ -1,0 +1,326 @@
+//! A TOML-subset parser (no `toml` crate in the offline vendor set).
+//!
+//! Supported: `[table]` and `[table.sub]` headers, `key = value` with
+//! strings, integers, floats, booleans, and flat arrays; `#` comments.
+//! Unsupported (rejected loudly): inline tables, arrays-of-tables,
+//! multi-line strings, datetimes. That subset covers every config this
+//! repo ships.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (common in hand-written configs).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+    /// Dotted-path lookup, e.g. `get("index.ivf.nlist")`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse a TOML-subset document into a root table.
+pub fn parse(text: &str) -> Result<Value> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            if rest.starts_with('[') {
+                bail!("line {}: arrays of tables are not supported", lineno + 1);
+            }
+            let inner = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated table header", lineno + 1))?;
+            current_path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if current_path.iter().any(|p| p.is_empty()) {
+                bail!("line {}: empty table-name segment", lineno + 1);
+            }
+            // Materialize the table path.
+            ensure_table(&mut root, &current_path, lineno + 1)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        let table = navigate(&mut root, &current_path, lineno + 1)?;
+        if table.insert(key.to_string(), val).is_some() {
+            bail!("line {}: duplicate key `{key}`", lineno + 1);
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table(
+    root: &mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<()> {
+    navigate(root, path, lineno).map(|_| ())
+}
+
+fn navigate<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Value>> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            _ => bail!("line {lineno}: `{part}` is not a table"),
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        // Find the closing quote, honoring backslash escapes.
+        let mut end = None;
+        let mut escaped = false;
+        for (i, c) in stripped.char_indices() {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                end = Some(i);
+                break;
+            }
+        }
+        let end = end.context("unterminated string")?;
+        let body = &stripped[..end];
+        if !stripped[end + 1..].trim().is_empty() {
+            bail!("trailing characters after string");
+        }
+        return Ok(Value::Str(unescape(body)?));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .unwrap()
+            .strip_suffix(']')
+            .context("unterminated array")?;
+        let mut items = Vec::new();
+        for piece in split_top_level(inner) {
+            let piece = piece.trim();
+            if !piece.is_empty() {
+                items.push(parse_value(piece)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if s.starts_with('{') {
+        bail!("inline tables are not supported");
+    }
+    // Numbers: underscores allowed.
+    let clean: String = s.chars().filter(|&c| c != '_').collect();
+    if clean.contains('.') || clean.contains('e') || clean.contains('E') {
+        if let Ok(f) = clean.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s:?}")
+}
+
+/// Split on commas not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('\\') => out.push('\\'),
+                Some('"') => out.push('"'),
+                other => bail!("bad escape: \\{other:?}"),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = r#"
+            # top comment
+            name = "fatrq"   # trailing comment
+            threads = 8
+            ratio = 0.25
+            verbose = true
+
+            [index]
+            kind = "ivf"
+
+            [index.ivf]
+            nlist = 1_024
+        "#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("fatrq"));
+        assert_eq!(v.get("threads").unwrap().as_int(), Some(8));
+        assert_eq!(v.get("ratio").unwrap().as_float(), Some(0.25));
+        assert_eq!(v.get("verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("index.kind").unwrap().as_str(), Some("ivf"));
+        assert_eq!(v.get("index.ivf.nlist").unwrap().as_int(), Some(1024));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse("recalls = [0.85, 0.90, 0.95]\nnames = [\"a\", \"b\"]").unwrap();
+        let arr = v.get("recalls").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_float(), Some(0.90));
+        let names = v.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[0].as_str(), Some("a"));
+    }
+
+    #[test]
+    fn int_accepted_as_float() {
+        let v = parse("x = 3").unwrap();
+        assert_eq!(v.get("x").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let v = parse("s = \"a#b\"").unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("a =").is_err());
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("x = {inline = 1}").is_err());
+        assert!(parse("[[aot]]").is_err());
+    }
+
+    #[test]
+    fn table_then_key_collision_rejected() {
+        assert!(parse("[a]\nx = 1\n[a.x]\ny = 2").is_err());
+    }
+
+    #[test]
+    fn escapes() {
+        let v = parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a\nb\t\"c\""));
+    }
+}

@@ -1,0 +1,174 @@
+//! Batched query driving: runs a query set through a pipeline across
+//! worker threads and aggregates latency/recall/throughput — the engine
+//! behind the Fig 6 harness and the serving example.
+
+use crate::config::RefineMode;
+use crate::coordinator::builder::BuiltSystem;
+use crate::coordinator::pipeline::{Breakdown, Pipeline};
+use crate::index::FlatIndex;
+use crate::metrics::{recall_at_k, LatencyStats};
+use crate::util::topk::Scored;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Aggregated serving results.
+#[derive(Clone, Debug, Default)]
+pub struct BatchReport {
+    pub queries: usize,
+    pub mean_recall: f64,
+    /// Mean simulated+measured latency per query, ns.
+    pub mean_latency_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Throughput implied by mean latency with `parallelism` lanes.
+    pub qps: f64,
+    /// Mean per-stage breakdown.
+    pub breakdown: Breakdown,
+    pub mode: &'static str,
+}
+
+/// Run every dataset query through the pipeline in `mode`, on `threads`
+/// worker threads, scoring recall@k against `truth` (one list per query).
+pub fn run_batch(
+    sys: &BuiltSystem,
+    mode: RefineMode,
+    truth: &[Vec<Scored>],
+    threads: usize,
+) -> BatchReport {
+    let nq = sys.dataset.num_queries();
+    assert_eq!(truth.len(), nq);
+    let k = sys.cfg.refine.k;
+    let results: Vec<Mutex<Option<(f64, Breakdown, f64)>>> =
+        (0..nq).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let threads = threads.max(1).min(nq.max(1));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let pipeline = Pipeline::new(sys).with_mode(mode);
+                loop {
+                    let q = next.fetch_add(1, Ordering::Relaxed);
+                    if q >= nq {
+                        break;
+                    }
+                    let out = pipeline.query(sys.dataset.query(q));
+                    let rec = recall_at_k(&out.topk, &truth[q], k);
+                    *results[q].lock().unwrap() =
+                        Some((rec, out.breakdown, out.breakdown.total_ns()));
+                }
+            });
+        }
+    });
+
+    let mut lat = LatencyStats::default();
+    let mut recall_sum = 0.0;
+    let mut agg = Breakdown::default();
+    for r in &results {
+        let (rec, bd, total) = r.lock().unwrap().expect("query completed");
+        recall_sum += rec;
+        lat.record(total);
+        agg.traversal_ns += bd.traversal_ns;
+        agg.far_ns += bd.far_ns;
+        agg.refine_compute_ns += bd.refine_compute_ns;
+        agg.ssd_ns += bd.ssd_ns;
+        agg.rerank_ns += bd.rerank_ns;
+        agg.candidates += bd.candidates;
+        agg.far_reads += bd.far_reads;
+        agg.ssd_reads += bd.ssd_reads;
+    }
+    let n = nq.max(1) as f64;
+    agg.traversal_ns /= n;
+    agg.far_ns /= n;
+    agg.refine_compute_ns /= n;
+    agg.ssd_ns /= n;
+    agg.rerank_ns /= n;
+    agg.candidates = (agg.candidates as f64 / n) as usize;
+    agg.far_reads = (agg.far_reads as f64 / n) as usize;
+    agg.ssd_reads = (agg.ssd_reads as f64 / n) as usize;
+
+    let mean_latency_ns = lat.mean();
+    BatchReport {
+        queries: nq,
+        mean_recall: recall_sum / n,
+        mean_latency_ns,
+        p50_ns: lat.p50(),
+        p99_ns: lat.p99(),
+        qps: if mean_latency_ns > 0.0 {
+            threads as f64 * 1e9 / mean_latency_ns
+        } else {
+            0.0
+        },
+        breakdown: agg,
+        mode: mode.name(),
+    }
+}
+
+/// Exact ground truth for every dataset query (shared across mode runs).
+pub fn ground_truth(sys: &BuiltSystem, k: usize) -> Vec<Vec<Scored>> {
+    let flat = FlatIndex::new(sys.dataset.base.clone(), sys.dataset.dim);
+    flat.search_batch(&sys.dataset.queries, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, SystemConfig};
+    use crate::coordinator::builder::build_system;
+
+    fn sys() -> BuiltSystem {
+        let cfg = SystemConfig {
+            dataset: DatasetConfig {
+                dim: 48,
+                count: 2500,
+                clusters: 20,
+                noise: 0.35,
+            query_noise: 1.0,
+                queries: 16,
+                seed: 9,
+            },
+            quant: QuantConfig { pq_m: 12, pq_nbits: 5, kmeans_iters: 5, train_sample: 1500 },
+            index: IndexConfig { kind: IndexKind::Ivf, nlist: 32, nprobe: 8, ..Default::default() },
+            refine: RefineConfig {
+                candidates: 80,
+                k: 10,
+                filter_ratio: 0.3,
+                calib_sample: 0.01,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        build_system(&cfg).unwrap()
+    }
+
+    #[test]
+    fn batch_report_sane() {
+        let sys = sys();
+        let truth = ground_truth(&sys, 10);
+        let rep = run_batch(&sys, RefineMode::FatrqHw, &truth, 4);
+        assert_eq!(rep.queries, 16);
+        assert!(rep.mean_recall > 0.3, "recall {}", rep.mean_recall);
+        assert!(rep.mean_latency_ns > 0.0);
+        assert!(rep.p99_ns >= rep.p50_ns);
+        assert!(rep.qps > 0.0);
+        assert_eq!(rep.mode, "fatrq-hw");
+    }
+
+    #[test]
+    fn modes_ranked_by_ssd_traffic() {
+        let sys = sys();
+        let truth = ground_truth(&sys, 10);
+        let base = run_batch(&sys, RefineMode::Baseline, &truth, 2);
+        let hw = run_batch(&sys, RefineMode::FatrqHw, &truth, 2);
+        assert!(hw.breakdown.ssd_reads < base.breakdown.ssd_reads);
+        assert!(hw.mean_latency_ns < base.mean_latency_ns);
+    }
+
+    #[test]
+    fn single_thread_matches_multi_thread_recall() {
+        let sys = sys();
+        let truth = ground_truth(&sys, 10);
+        let a = run_batch(&sys, RefineMode::FatrqSw, &truth, 1);
+        let b = run_batch(&sys, RefineMode::FatrqSw, &truth, 4);
+        assert!((a.mean_recall - b.mean_recall).abs() < 1e-9);
+    }
+}

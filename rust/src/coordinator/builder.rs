@@ -1,0 +1,242 @@
+//! System construction: dataset → PQ codebooks → coarse codes → front-
+//! stage index → TRQ far-memory store → calibration model.
+
+use crate::config::{IndexKind, SystemConfig};
+use crate::index::scorer::PqScorer;
+use crate::index::{AnnIndex, FlatIndex, GraphIndex, IvfIndex};
+use crate::quant::trq::TrqStore;
+use crate::quant::ProductQuantizer;
+use crate::refine::calib::NUM_FEATURES;
+use crate::refine::{filter::margin_from_residuals, Calibration, ProgressiveEstimator};
+use crate::util::{l2_sq, rng::Rng};
+use crate::vecstore::Dataset;
+use crate::Result;
+use std::sync::Arc;
+
+/// The front-stage index, behind one enum (object-safe and sized).
+pub enum FrontIndex {
+    Ivf(IvfIndex),
+    Graph(GraphIndex),
+    Flat(FlatIndex),
+}
+
+impl FrontIndex {
+    pub fn as_ann(&self) -> &dyn AnnIndex {
+        match self {
+            FrontIndex::Ivf(i) => i,
+            FrontIndex::Graph(g) => g,
+            FrontIndex::Flat(f) => f,
+        }
+    }
+}
+
+/// Everything the pipeline needs, fully built.
+pub struct BuiltSystem {
+    pub cfg: SystemConfig,
+    pub dataset: Dataset,
+    pub pq: Arc<ProductQuantizer>,
+    pub codes: Arc<Vec<u8>>,
+    pub scorer: PqScorer,
+    pub index: FrontIndex,
+    /// Coarse reconstructions x_c (kept for tests; not on the query path).
+    pub recon: Vec<f32>,
+    pub trq: TrqStore,
+    pub cal: Calibration,
+    /// 95th-percentile |estimate − truth| over calibration pairs — the
+    /// provable-cutoff margin.
+    pub margin: f32,
+}
+
+/// Build the full system from a config (synthesizes the dataset too).
+pub fn build_system(cfg: &SystemConfig) -> Result<BuiltSystem> {
+    let dataset = crate::vecstore::synthesize(&cfg.dataset);
+    build_system_with(cfg, dataset)
+}
+
+/// Build from an existing dataset (used by benches that share one corpus
+/// across configurations).
+pub fn build_system_with(cfg: &SystemConfig, dataset: Dataset) -> Result<BuiltSystem> {
+    let dim = dataset.dim;
+    let n = dataset.count();
+
+    // 1. Coarse quantizer (fast memory).
+    let pq = Arc::new(ProductQuantizer::train(
+        &dataset.base,
+        dim,
+        cfg.quant.pq_m,
+        cfg.quant.pq_nbits,
+        cfg.quant.kmeans_iters,
+        cfg.quant.train_sample,
+        cfg.dataset.seed ^ 0x9A,
+    ));
+    let codes = Arc::new(pq.encode(&dataset.base));
+    let scorer = PqScorer::new(Arc::clone(&pq), Arc::clone(&codes));
+
+    // 2. Front-stage index.
+    let index = match cfg.index.kind {
+        IndexKind::Ivf => FrontIndex::Ivf(IvfIndex::build(
+            &dataset.base,
+            dim,
+            cfg.index.nlist,
+            cfg.index.nprobe,
+            cfg.quant.kmeans_iters,
+            scorer.clone(),
+            cfg.dataset.seed ^ 0x1F,
+        )),
+        IndexKind::Graph => FrontIndex::Graph(GraphIndex::build(
+            &dataset.base,
+            dim,
+            cfg.index.graph_degree,
+            cfg.index.ef_construction,
+            cfg.index.ef_search,
+            scorer.clone(),
+        )),
+        IndexKind::Flat => FrontIndex::Flat(FlatIndex::new(dataset.base.clone(), dim)),
+    };
+
+    // 3. TRQ residual store (far memory).
+    let mut recon = vec![0f32; n * dim];
+    for i in 0..n {
+        pq.decode_one(
+            &codes[i * pq.m..(i + 1) * pq.m],
+            &mut recon[i * dim..(i + 1) * dim],
+        );
+    }
+    let trq = TrqStore::build(&dataset.base, &recon, dim);
+
+    // 4. Calibration (paper §III-E): sample ~calib_sample of the corpus,
+    // harvest neighbors from the existing index, fit OLS on the refined-
+    // feature rows against true distances.
+    let (cal, margin) = train_calibration(cfg, &dataset, &scorer, &index, &trq)?;
+
+    Ok(BuiltSystem {
+        cfg: cfg.clone(),
+        dataset,
+        pq,
+        codes,
+        scorer,
+        index,
+        recon,
+        trq,
+        cal,
+        margin,
+    })
+}
+
+fn train_calibration(
+    cfg: &SystemConfig,
+    dataset: &Dataset,
+    scorer: &PqScorer,
+    index: &FrontIndex,
+    trq: &TrqStore,
+) -> Result<(Calibration, f32)> {
+    let n = dataset.count();
+    let samples = ((n as f64 * cfg.refine.calib_sample).ceil() as usize)
+        .clamp(24, 2048)
+        .min(n);
+    let neighbors_per_sample = 16usize;
+    let mut rng = Rng::new(cfg.dataset.seed ^ 0xCA11B);
+    let ids = rng.sample_indices(n, samples);
+
+    // Analytic estimator provides the features; OLS learns the reweighting.
+    let est = ProgressiveEstimator::new(trq, Calibration::analytic());
+    let mut a = Vec::with_capacity(samples * neighbors_per_sample * NUM_FEATURES);
+    let mut d = Vec::with_capacity(samples * neighbors_per_sample);
+    for &i in &ids {
+        let x = dataset.vector(i);
+        // "Leverage the existing index to identify approximate neighbors":
+        // search with the sample itself as the query.
+        let neigh = index.as_ann().search(x, neighbors_per_sample);
+        let qs = scorer.for_query(x);
+        for cand in neigh {
+            let id = cand.id as usize;
+            let d0 = qs.score(id);
+            let f = est.features(x, id, d0);
+            a.extend_from_slice(&f);
+            d.push(l2_sq(x, dataset.vector(id)));
+        }
+    }
+    let cal = Calibration::fit(&a, &d)?;
+    // Margin: 95th percentile absolute residual of the *fitted* model.
+    let mut resid: Vec<f32> = (0..d.len())
+        .map(|r| {
+            let f: crate::refine::Features =
+                a[r * NUM_FEATURES..(r + 1) * NUM_FEATURES].try_into().unwrap();
+            (cal.predict(&f) - d[r]).abs()
+        })
+        .collect();
+    let margin = margin_from_residuals(&mut resid, 0.95);
+    Ok((cal, margin))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, IndexConfig, QuantConfig};
+
+    fn small_cfg(kind: IndexKind) -> SystemConfig {
+        SystemConfig {
+            dataset: DatasetConfig {
+                dim: 64,
+                count: 3000,
+                clusters: 24,
+                noise: 0.35,
+            query_noise: 1.0,
+                queries: 8,
+                seed: 3,
+            },
+            quant: QuantConfig { pq_m: 16, pq_nbits: 6, kmeans_iters: 6, train_sample: 2000 },
+            index: IndexConfig {
+                kind,
+                nlist: 32,
+                nprobe: 8,
+                graph_degree: 16,
+                ef_search: 64,
+                ef_construction: 64,
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builds_ivf_system_end_to_end() {
+        let sys = build_system(&small_cfg(IndexKind::Ivf)).unwrap();
+        assert_eq!(sys.trq.count, 3000);
+        assert_eq!(sys.codes.len(), 3000 * 16);
+        assert!(sys.cal.pairs > 100);
+        assert!(sys.margin > 0.0);
+        assert!(sys.cal.rmse.is_finite());
+    }
+
+    #[test]
+    fn builds_graph_system_end_to_end() {
+        let sys = build_system(&small_cfg(IndexKind::Graph)).unwrap();
+        assert_eq!(sys.index.as_ann().name(), "graph");
+        assert!(sys.cal.pairs > 100);
+    }
+
+    #[test]
+    fn calibration_improves_over_analytic() {
+        // On held-out (query, candidate) pairs the fitted model's MSE must
+        // beat the raw analytic decomposition (that is its whole job).
+        let sys = build_system(&small_cfg(IndexKind::Ivf)).unwrap();
+        let ds = &sys.dataset;
+        let est_ana = ProgressiveEstimator::new(&sys.trq, Calibration::analytic());
+        let est_cal = ProgressiveEstimator::new(&sys.trq, sys.cal.clone());
+        let mut ana = 0f64;
+        let mut cal = 0f64;
+        for q in 0..ds.num_queries() {
+            let query = ds.query(q);
+            let qs = sys.scorer.for_query(query);
+            let cands = sys.index.as_ann().search(query, 50);
+            for c in cands {
+                let id = c.id as usize;
+                let d0 = qs.score(id);
+                let truth = l2_sq(query, ds.vector(id));
+                ana += ((est_ana.estimate(query, id, d0) - truth) as f64).powi(2);
+                cal += ((est_cal.estimate(query, id, d0) - truth) as f64).powi(2);
+            }
+        }
+        assert!(cal <= ana * 1.05, "calibrated {cal:.5} vs analytic {ana:.5}");
+    }
+}

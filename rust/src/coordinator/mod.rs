@@ -1,0 +1,17 @@
+//! The L3 coordinator: builds the full FaTRQ system from a config and
+//! serves queries through the tiered pipeline (paper Fig 5).
+//!
+//! - [`builder`] — trains PQ, encodes codes, builds the front-stage index,
+//!   the TRQ far-memory store, and the calibration model.
+//! - [`pipeline`] — the per-query dataflow: front-stage traversal → far-
+//!   memory progressive refinement (SW on host / HW on the CXL device) →
+//!   SSD fetch of survivors → exact rerank. Produces per-stage breakdowns.
+//! - [`batcher`] — multi-threaded query driving for throughput runs.
+
+pub mod batcher;
+pub mod builder;
+pub mod pipeline;
+
+pub use batcher::{ground_truth, run_batch, BatchReport};
+pub use builder::{build_system, build_system_with, BuiltSystem};
+pub use pipeline::{Breakdown, Pipeline, QueryOutcome};

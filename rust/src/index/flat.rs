@@ -1,0 +1,111 @@
+//! Exact exhaustive index — ground truth oracle for recall measurement and
+//! the distortion experiments (Fig 7 uses top-100 exact neighbors).
+
+use crate::index::{AnnIndex, CandidateList};
+use crate::util::{l2_sq, parallel_for, threadpool::default_threads, topk::TopK};
+use std::sync::Mutex;
+
+/// Brute-force L2 index over an owned row-major matrix.
+pub struct FlatIndex {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl FlatIndex {
+    pub fn new(data: Vec<f32>, dim: usize) -> Self {
+        assert!(dim > 0 && data.len() % dim == 0);
+        FlatIndex { dim, data }
+    }
+
+    #[inline]
+    pub fn vector(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Exact top-n ids + distances for one query.
+    pub fn search_exact(&self, query: &[f32], n: usize) -> CandidateList {
+        let count = self.len();
+        let mut top = TopK::new(n.min(count).max(1));
+        for i in 0..count {
+            top.push(l2_sq(query, self.vector(i)), i as u64);
+        }
+        top.into_sorted()
+    }
+
+    /// Exact top-n for a batch of queries, parallel across queries.
+    /// Returns one candidate list per query.
+    pub fn search_batch(&self, queries: &[f32], n: usize) -> Vec<CandidateList> {
+        let nq = queries.len() / self.dim;
+        let results: Vec<Mutex<CandidateList>> =
+            (0..nq).map(|_| Mutex::new(Vec::new())).collect();
+        parallel_for(nq, default_threads(), |q| {
+            let list = self.search_exact(&queries[q * self.dim..(q + 1) * self.dim], n);
+            *results[q].lock().unwrap() = list;
+        });
+        results.into_iter().map(|m| m.into_inner().unwrap()).collect()
+    }
+}
+
+impl AnnIndex for FlatIndex {
+    fn search(&self, query: &[f32], n: usize) -> CandidateList {
+        self.search_exact(query, n)
+    }
+
+    fn len(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.data.len() / self.dim
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "flat"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn finds_exact_nearest() {
+        // Grid of points; query next to a known one.
+        let dim = 2;
+        let mut data = Vec::new();
+        for x in 0..10 {
+            for y in 0..10 {
+                data.push(x as f32);
+                data.push(y as f32);
+            }
+        }
+        let idx = FlatIndex::new(data, dim);
+        let res = idx.search_exact(&[3.1, 4.1], 3);
+        assert_eq!(res[0].id, 34); // (3,4) is row 3*10+4
+        assert!(res[0].dist < res[1].dist + 1e-9);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(1);
+        let dim = 16;
+        let mut data = vec![0f32; 500 * dim];
+        rng.fill_gaussian(&mut data);
+        let mut queries = vec![0f32; 8 * dim];
+        rng.fill_gaussian(&mut queries);
+        let idx = FlatIndex::new(data, dim);
+        let batch = idx.search_batch(&queries, 10);
+        for q in 0..8 {
+            let single = idx.search_exact(&queries[q * dim..(q + 1) * dim], 10);
+            assert_eq!(batch[q], single);
+        }
+    }
+
+    #[test]
+    fn n_larger_than_corpus() {
+        let idx = FlatIndex::new(vec![0.0, 1.0, 2.0, 3.0], 2);
+        let res = idx.search_exact(&[0.0, 0.0], 10);
+        assert_eq!(res.len(), 2);
+    }
+}

@@ -1,0 +1,358 @@
+//! Degree-bounded navigable-graph index with greedy beam search — the
+//! CAGRA-cuVS stand-in. Flat single-layer design (the hierarchy adds
+//! little for high-dimensional embeddings — paper §II-C citing [27]),
+//! incremental construction with HNSW-style neighbor-diversity pruning,
+//! exact distances at build time, PQ-ADC coarse scores at query time.
+
+use crate::index::scorer::PqScorer;
+use crate::index::{AnnIndex, CandidateList};
+use crate::util::{l2_sq, topk::Scored, topk::TopK};
+use std::collections::HashSet;
+
+/// Navigable graph over the corpus.
+pub struct GraphIndex {
+    /// `count x degree` adjacency (u32::MAX = empty slot).
+    adjacency: Vec<u32>,
+    pub degree: usize,
+    /// Query-time beam width.
+    pub ef_search: usize,
+    /// Entry point (medoid-like: the first inserted node).
+    entry: u32,
+    /// Fast-memory coarse scorer.
+    pub scorer: PqScorer,
+    count: usize,
+}
+
+const EMPTY: u32 = u32::MAX;
+
+impl GraphIndex {
+    /// Incremental construction on exact vectors.
+    pub fn build(
+        data: &[f32],
+        dim: usize,
+        degree: usize,
+        ef_construction: usize,
+        ef_search: usize,
+        scorer: PqScorer,
+    ) -> Self {
+        let n = data.len() / dim;
+        assert!(n > 0 && degree >= 2);
+        assert_eq!(scorer.count(), n);
+        let mut g = GraphIndex {
+            adjacency: vec![EMPTY; n * degree],
+            degree,
+            ef_search,
+            entry: 0,
+            scorer,
+            count: n,
+        };
+        let row = |i: usize| &data[i * dim..(i + 1) * dim];
+        for i in 1..n {
+            // Beam-search current graph (exact distances) for neighbors.
+            let beam = g.beam_search_exact(data, dim, row(i), ef_construction, i);
+            let selected = g.select_diverse(data, dim, &beam, degree);
+            for &nb in &selected {
+                g.add_edge(i as u32, nb);
+                g.add_edge_pruned(data, dim, nb, i as u32);
+            }
+        }
+        g
+    }
+
+    #[inline]
+    fn neighbors(&self, v: u32) -> &[u32] {
+        &self.adjacency[v as usize * self.degree..(v as usize + 1) * self.degree]
+    }
+
+    fn add_edge(&mut self, from: u32, to: u32) {
+        let base = from as usize * self.degree;
+        for slot in self.adjacency[base..base + self.degree].iter_mut() {
+            if *slot == EMPTY {
+                *slot = to;
+                return;
+            }
+            if *slot == to {
+                return;
+            }
+        }
+        // Full: caller is responsible for pruning (see add_edge_pruned).
+    }
+
+    /// Add a reverse edge; if `from`'s list is full, re-select `degree`
+    /// edges from (existing + new) with the *diversity* heuristic. Pruning
+    /// by pure distance instead would fill every hub node's list with its
+    /// own cluster and disconnect the graph's long-range links.
+    fn add_edge_pruned(&mut self, data: &[f32], dim: usize, from: u32, to: u32) {
+        let base = from as usize * self.degree;
+        let list = &self.adjacency[base..base + self.degree];
+        if list.contains(&to) {
+            return;
+        }
+        if let Some(free) = list.iter().position(|&s| s == EMPTY) {
+            self.adjacency[base + free] = to;
+            return;
+        }
+        let fv = &data[from as usize * dim..(from as usize + 1) * dim];
+        let mut cands: Vec<Scored> = list
+            .iter()
+            .chain(std::iter::once(&to))
+            .map(|&id| {
+                let v = &data[id as usize * dim..(id as usize + 1) * dim];
+                Scored::new(l2_sq(fv, v), id as u64)
+            })
+            .collect();
+        cands.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
+        let selected = self.select_diverse(data, dim, &cands, self.degree);
+        for (i, slot) in self.adjacency[base..base + self.degree].iter_mut().enumerate() {
+            *slot = selected.get(i).copied().unwrap_or(EMPTY);
+        }
+    }
+
+    /// Greedy beam search with exact distances (construction path).
+    /// `limit` restricts traversal to nodes < limit (already inserted).
+    fn beam_search_exact(
+        &self,
+        data: &[f32],
+        dim: usize,
+        query: &[f32],
+        ef: usize,
+        limit: usize,
+    ) -> Vec<Scored> {
+        let entry = self.entry.min(limit.saturating_sub(1) as u32);
+        let dist = |id: u32| {
+            l2_sq(query, &data[id as usize * dim..(id as usize + 1) * dim])
+        };
+        self.beam_generic(entry, ef, limit, dist)
+    }
+
+    /// Core beam search over the graph with a pluggable distance.
+    fn beam_generic<F: Fn(u32) -> f32>(
+        &self,
+        entry: u32,
+        ef: usize,
+        limit: usize,
+        dist: F,
+    ) -> Vec<Scored> {
+        let mut visited = HashSet::with_capacity(ef * 4);
+        let mut best = TopK::new(ef.max(1)); // results (max-heap on dist)
+        // Frontier: min-heap via sorted Vec (small ef, fine).
+        let mut frontier: Vec<Scored> = Vec::with_capacity(ef * 2);
+        let d0 = dist(entry);
+        visited.insert(entry);
+        best.push(d0, entry as u64);
+        frontier.push(Scored::new(d0, entry as u64));
+        while let Some(pos) = frontier
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.dist.partial_cmp(&b.1.dist).unwrap())
+            .map(|(i, _)| i)
+        {
+            let cur = frontier.swap_remove(pos);
+            if cur.dist > best.threshold() {
+                break; // nothing in the frontier can improve the result set
+            }
+            for &nb in self.neighbors(cur.id as u32) {
+                if nb == EMPTY || nb as usize >= limit || !visited.insert(nb) {
+                    continue;
+                }
+                let d = dist(nb);
+                if d < best.threshold() || !best.is_full() {
+                    best.push(d, nb as u64);
+                    frontier.push(Scored::new(d, nb as u64));
+                }
+            }
+        }
+        best.into_sorted()
+    }
+
+    /// HNSW-style diversity heuristic: keep a candidate only if it is
+    /// closer to the query point than to every already-selected neighbor.
+    fn select_diverse(
+        &self,
+        data: &[f32],
+        dim: usize,
+        beam: &[Scored],
+        degree: usize,
+    ) -> Vec<u32> {
+        let mut selected: Vec<u32> = Vec::with_capacity(degree);
+        for cand in beam {
+            if selected.len() >= degree {
+                break;
+            }
+            let cv = &data[cand.id as usize * dim..(cand.id as usize + 1) * dim];
+            let diverse = selected.iter().all(|&s| {
+                let sv = &data[s as usize * dim..(s as usize + 1) * dim];
+                l2_sq(cv, sv) >= cand.dist
+            });
+            if diverse {
+                selected.push(cand.id as u32);
+            }
+        }
+        // Backfill with nearest non-diverse if underfull.
+        if selected.len() < degree {
+            for cand in beam {
+                if selected.len() >= degree {
+                    break;
+                }
+                if !selected.contains(&(cand.id as u32)) {
+                    selected.push(cand.id as u32);
+                }
+            }
+        }
+        selected
+    }
+
+    /// Query-time beam search using coarse PQ-ADC scores (what the GPU does
+    /// in the paper's pipeline).
+    pub fn search_coarse(&self, query: &[f32], n: usize) -> CandidateList {
+        let qs = self.scorer.for_query(query);
+        let ef = self.ef_search.max(n);
+        let mut out = self.beam_generic(self.entry, ef, self.count, |id| {
+            qs.score(id as usize)
+        });
+        out.truncate(n);
+        out
+    }
+
+    /// Edges per node actually used (diagnostics).
+    pub fn avg_degree(&self) -> f64 {
+        let used = self.adjacency.iter().filter(|&&e| e != EMPTY).count();
+        used as f64 / self.count as f64
+    }
+}
+
+impl AnnIndex for GraphIndex {
+    fn search(&self, query: &[f32], n: usize) -> CandidateList {
+        self.search_coarse(query, n)
+    }
+
+    fn len(&self) -> usize {
+        self.count
+    }
+
+    fn name(&self) -> &'static str {
+        "graph"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetConfig;
+    use crate::index::FlatIndex;
+    use crate::quant::ProductQuantizer;
+    use crate::vecstore::synthesize;
+    use std::sync::Arc;
+
+    fn build_small() -> (crate::vecstore::Dataset, GraphIndex) {
+        let cfg = DatasetConfig {
+            dim: 32,
+            count: 2000,
+            clusters: 20,
+            noise: 0.3,
+            query_noise: 1.0,
+            queries: 16,
+            seed: 21,
+        };
+        let ds = synthesize(&cfg);
+        let pq = Arc::new(ProductQuantizer::train(&ds.base, ds.dim, 8, 6, 8, 1500, 1));
+        let codes = Arc::new(pq.encode(&ds.base));
+        let scorer = PqScorer::new(pq, codes);
+        let idx = GraphIndex::build(&ds.base, ds.dim, 16, 64, 64, scorer);
+        (ds, idx)
+    }
+
+    #[test]
+    fn graph_is_connected_enough() {
+        let (_, idx) = build_small();
+        assert!(idx.avg_degree() > 4.0, "avg degree {}", idx.avg_degree());
+        // BFS from entry reaches nearly everything.
+        let mut seen = vec![false; idx.len()];
+        let mut stack = vec![idx.entry];
+        seen[idx.entry as usize] = true;
+        let mut reached = 1usize;
+        while let Some(v) = stack.pop() {
+            for &nb in idx.neighbors(v) {
+                if nb != EMPTY && !seen[nb as usize] {
+                    seen[nb as usize] = true;
+                    reached += 1;
+                    stack.push(nb);
+                }
+            }
+        }
+        assert!(
+            reached as f64 > 0.95 * idx.len() as f64,
+            "only {reached}/{} reachable",
+            idx.len()
+        );
+    }
+
+    #[test]
+    fn candidate_recall_reasonable() {
+        let (ds, idx) = build_small();
+        let flat = FlatIndex::new(ds.base.clone(), ds.dim);
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for q in 0..ds.num_queries() {
+            let truth = flat.search_exact(ds.query(q), 10);
+            let ids: std::collections::HashSet<u64> =
+                idx.search(ds.query(q), 100).iter().map(|s| s.id).collect();
+            hit += truth.iter().filter(|s| ids.contains(&s.id)).count();
+            total += truth.len();
+        }
+        let recall = hit as f64 / total as f64;
+        assert!(recall > 0.5, "candidate recall {recall}");
+    }
+
+    #[test]
+    fn results_sorted_and_unique() {
+        let (ds, idx) = build_small();
+        let res = idx.search(ds.query(3), 50);
+        for w in res.windows(2) {
+            assert!(w[0].dist <= w[1].dist);
+        }
+        let ids: std::collections::HashSet<u64> = res.iter().map(|s| s.id).collect();
+        assert_eq!(ids.len(), res.len());
+    }
+
+    #[test]
+    fn larger_ef_no_worse() {
+        let (ds, mut idx) = build_small();
+        let flat = FlatIndex::new(ds.base.clone(), ds.dim);
+        let recall = |idx: &GraphIndex| {
+            let mut hit = 0;
+            for q in 0..ds.num_queries() {
+                let truth = flat.search_exact(ds.query(q), 10);
+                let ids: std::collections::HashSet<u64> =
+                    idx.search(ds.query(q), 100).iter().map(|s| s.id).collect();
+                hit += truth.iter().filter(|s| ids.contains(&s.id)).count();
+            }
+            hit
+        };
+        idx.ef_search = 16;
+        let low = recall(&idx);
+        idx.ef_search = 128;
+        let high = recall(&idx);
+        assert!(high >= low, "ef128 {high} < ef16 {low}");
+    }
+
+    #[test]
+    fn single_node_graph() {
+        let data = vec![1.0f32, 2.0];
+        let pq = Arc::new(ProductQuantizer::train(
+            &vec![0.0f32; 8 * 2],
+            2,
+            1,
+            1,
+            2,
+            0,
+            1,
+        ));
+        let codes = Arc::new(pq.encode(&data));
+        let scorer = PqScorer::new(pq, codes);
+        let idx = GraphIndex::build(&data, 2, 2, 4, 4, scorer);
+        let res = idx.search(&[1.0, 2.0], 5);
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].id, 0);
+    }
+}

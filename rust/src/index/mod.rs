@@ -1,0 +1,40 @@
+//! Front-stage ANNS indexes. The index prunes the search space; distances
+//! during traversal come from PQ codes in fast memory (paper §II-A).
+//!
+//! - [`flat`] — exact exhaustive scan (ground truth + small corpora).
+//! - [`ivf`] — inverted-file index over a coarse k-means partition
+//!   (FAISS-IVF stand-in).
+//! - [`graph`] — degree-bounded navigable graph with greedy beam search
+//!   (CAGRA/HNSW-class stand-in; flat single-layer graph per [27]).
+
+pub mod flat;
+pub mod graph;
+pub mod ivf;
+pub mod scorer;
+
+pub use flat::FlatIndex;
+pub use graph::GraphIndex;
+pub use ivf::IvfIndex;
+
+use crate::util::topk::Scored;
+
+/// A front-stage candidate list: ids with their *coarse* (quantized)
+/// distances, ascending. Only 4 bytes/candidate (the coarse distance)
+/// travel to the refinement device (paper §IV).
+pub type CandidateList = Vec<Scored>;
+
+/// Common search interface over the front-stage indexes.
+pub trait AnnIndex: Send + Sync {
+    /// Return up to `n` candidates for `query`, scored with coarse codes.
+    fn search(&self, query: &[f32], n: usize) -> CandidateList;
+
+    /// Number of indexed vectors.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+}

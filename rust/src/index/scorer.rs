@@ -1,0 +1,83 @@
+//! Coarse scoring shared by the front-stage indexes: PQ codes live in fast
+//! memory, and every traversal distance is an ADC lookup-table sum
+//! (paper Fig 3 — "coarse PQ codes + codebook in fast memory").
+
+use crate::quant::ProductQuantizer;
+use std::sync::Arc;
+
+/// PQ codes for the whole corpus plus the shared codebook.
+#[derive(Clone)]
+pub struct PqScorer {
+    pub pq: Arc<ProductQuantizer>,
+    /// `count x m` codes, row-major by vector id.
+    pub codes: Arc<Vec<u8>>,
+}
+
+/// A per-query scoring context (owns the ADC table).
+pub struct QueryScorer<'a> {
+    scorer: &'a PqScorer,
+    lut: Vec<f32>,
+}
+
+impl PqScorer {
+    pub fn new(pq: Arc<ProductQuantizer>, codes: Arc<Vec<u8>>) -> Self {
+        assert_eq!(codes.len() % pq.m, 0);
+        PqScorer { pq, codes }
+    }
+
+    pub fn count(&self) -> usize {
+        self.codes.len() / self.pq.m
+    }
+
+    /// Build the per-query ADC context.
+    pub fn for_query<'a>(&'a self, query: &[f32]) -> QueryScorer<'a> {
+        QueryScorer { scorer: self, lut: self.pq.adc_table(query) }
+    }
+
+    /// Fast-memory bytes held by the coarse codes.
+    pub fn fast_bytes(&self) -> usize {
+        self.codes.len() + self.pq.codebooks.len() * 4
+    }
+}
+
+impl QueryScorer<'_> {
+    /// Coarse (ADC) distance of vector `id` to the query.
+    #[inline]
+    pub fn score(&self, id: usize) -> f32 {
+        let m = self.scorer.pq.m;
+        self.scorer
+            .pq
+            .adc_distance(&self.lut, &self.scorer.codes[id * m..(id + 1) * m])
+    }
+
+    /// Borrow the ADC table (the XLA scan path feeds it to the `pq_adc`
+    /// executable instead of scoring natively).
+    pub fn lut(&self) -> &[f32] {
+        &self.lut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scorer_matches_direct_adc() {
+        let mut rng = Rng::new(2);
+        let dim = 16;
+        let mut data = vec![0f32; 200 * dim];
+        rng.fill_gaussian(&mut data);
+        let pq = Arc::new(ProductQuantizer::train(&data, dim, 4, 4, 8, 0, 3));
+        let codes = Arc::new(pq.encode(&data));
+        let scorer = PqScorer::new(Arc::clone(&pq), Arc::clone(&codes));
+        assert_eq!(scorer.count(), 200);
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let qs = scorer.for_query(&q);
+        let lut = pq.adc_table(&q);
+        for id in [0usize, 7, 113, 199] {
+            let expect = pq.adc_distance(&lut, &codes[id * 4..(id + 1) * 4]);
+            assert_eq!(qs.score(id), expect);
+        }
+    }
+}

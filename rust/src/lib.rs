@@ -1,0 +1,49 @@
+//! # FaTRQ — Far-memory-aware Tiered Residual Quantization for ANNS
+//!
+//! Reproduction of *"FaTRQ: Tiered Residual Quantization for LLM Vector
+//! Search in Far-Memory-Aware ANNS Systems"* (Zhang, Ponzina, Rosing 2026).
+//!
+//! FaTRQ eliminates most SSD traffic in the second-pass refinement stage of
+//! high-accuracy ANNS: coarse PQ codes stay in fast memory, compact ternary
+//! residual codes are streamed from far memory (CXL), and a progressive
+//! distance estimator prunes candidates before any full-precision vector is
+//! fetched from storage.
+//!
+//! ## Crate layout (L3 of the three-layer stack)
+//!
+//! - [`util`] — rng, thread pool, top-k heaps, mini property-testing, binary IO
+//! - [`config`] — TOML-subset parser and typed system configuration
+//! - [`vecstore`] — synthetic embedding generation and on-disk vector store
+//! - [`quant`] — k-means, PQ, scalar quantizers, TRQ ternary residual codec
+//! - [`index`] — IVF, graph (CAGRA-style stand-in), and flat exact indexes
+//! - [`refine`] — L2 decomposition, progressive estimator, OLS calibration
+//! - [`tiering`] — fast/far/storage placement and access accounting
+//! - [`simulator`] — DDR5 DRAM timing, CXL link, SSD queue models (Table I)
+//! - [`accel`] — CXL Type-2 refinement accelerator cycle/area/power model
+//! - [`runtime`] — PJRT client wrapper; loads `artifacts/*.hlo.txt` (L2/L1)
+//! - [`coordinator`] — query batching and the end-to-end tiered pipeline
+//! - [`metrics`] — recall, distortion, latency histograms, throughput
+//! - [`cli`] — hand-rolled argument parsing for the `fatrq` binary
+//!
+//! The compute hot paths (PQ-ADC scan, TRQ refinement, exact rerank) exist
+//! twice: as native rust (baselines + arbitrary shapes) and as AOT-compiled
+//! XLA executables authored in JAX/Pallas (`python/compile/`), loaded via
+//! [`runtime`]. Python never runs on the request path.
+
+pub mod accel;
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod index;
+pub mod metrics;
+pub mod quant;
+pub mod refine;
+pub mod runtime;
+pub mod simulator;
+pub mod tiering;
+pub mod util;
+pub mod vecstore;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,184 @@
+//! `fatrq` — leader binary for the FaTRQ ANNS system.
+//!
+//! Commands:
+//!   build   — synthesize the dataset and build the full system, report sizes
+//!   query   — serve the held-out query set, print recall + latency
+//!   bench   — compare baseline / fatrq-sw / fatrq-hw on one corpus
+//!   xla     — smoke-test the AOT artifacts against native compute
+//!   help
+
+use fatrq::cli::Args;
+use fatrq::config::{RefineMode, SystemConfig};
+use fatrq::coordinator::{build_system, ground_truth, run_batch};
+use fatrq::runtime::XlaRuntime;
+use fatrq::util::rng::Rng;
+use std::path::Path;
+
+const HELP: &str = "\
+fatrq — tiered residual quantization for far-memory-aware ANNS
+
+USAGE: fatrq <command> [flags]
+
+COMMANDS:
+  build   --config <toml>            build the system, print an inventory
+  query   --config <toml> [--mode baseline|fatrq-sw|fatrq-hw]
+  bench   --config <toml> [--threads N]
+  xla     --artifacts <dir>          verify AOT artifacts vs native compute
+  help
+";
+
+fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
+    match args.get("config") {
+        Some(path) => SystemConfig::from_file(Path::new(path)),
+        None => Ok(SystemConfig::default()),
+    }
+}
+
+fn cmd_build(args: &Args) -> anyhow::Result<()> {
+    args.expect_only(&["config"])?;
+    let cfg = load_config(args)?;
+    let t0 = std::time::Instant::now();
+    let sys = build_system(&cfg)?;
+    println!("built in {:.1}s", t0.elapsed().as_secs_f64());
+    println!("  vectors          : {} x {}D", sys.dataset.count(), sys.dataset.dim);
+    println!("  index            : {}", sys.index.as_ann().name());
+    println!(
+        "  fast memory      : {:.1} MiB (PQ codes + codebooks)",
+        sys.scorer.fast_bytes() as f64 / (1 << 20) as f64
+    );
+    println!(
+        "  far memory       : {:.1} MiB ({} B/record TRQ)",
+        sys.trq.far_bytes() as f64 / (1 << 20) as f64,
+        sys.trq.record_bytes()
+    );
+    println!(
+        "  storage          : {:.1} MiB (full precision)",
+        (sys.dataset.count() * sys.dataset.dim * 4) as f64 / (1 << 20) as f64
+    );
+    println!(
+        "  calibration      : {} pairs, rmse {:.4}, margin {:.4}",
+        sys.cal.pairs, sys.cal.rmse, sys.margin
+    );
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> anyhow::Result<()> {
+    args.expect_only(&["config", "mode", "threads"])?;
+    let cfg = load_config(args)?;
+    let mode = match args.get("mode") {
+        Some(m) => RefineMode::parse(m)?,
+        None => cfg.refine.mode,
+    };
+    let threads = args.get_usize("threads", 4)?;
+    let sys = build_system(&cfg)?;
+    let truth = ground_truth(&sys, cfg.refine.k);
+    let rep = run_batch(&sys, mode, &truth, threads);
+    println!(
+        "mode={} queries={} recall@{}={:.4}",
+        rep.mode, rep.queries, cfg.refine.k, rep.mean_recall
+    );
+    println!(
+        "latency: mean {:.1} us  p50 {:.1} us  p99 {:.1} us  ({:.0} qps @{} threads)",
+        rep.mean_latency_ns / 1e3,
+        rep.p50_ns / 1e3,
+        rep.p99_ns / 1e3,
+        rep.qps,
+        threads
+    );
+    let bd = rep.breakdown;
+    println!(
+        "breakdown (us): traversal {:.1} | far {:.1} | refine {:.1} | ssd {:.1} | rerank {:.1}",
+        bd.traversal_ns / 1e3,
+        bd.far_ns / 1e3,
+        bd.refine_compute_ns / 1e3,
+        bd.ssd_ns / 1e3,
+        bd.rerank_ns / 1e3
+    );
+    println!(
+        "io: {} candidates, {} far reads, {} ssd reads per query",
+        bd.candidates, bd.far_reads, bd.ssd_reads
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    args.expect_only(&["config", "threads"])?;
+    let cfg = load_config(args)?;
+    let threads = args.get_usize("threads", 4)?;
+    let sys = build_system(&cfg)?;
+    let truth = ground_truth(&sys, cfg.refine.k);
+    println!(
+        "{:>10} {:>9} {:>12} {:>10} {:>10}",
+        "mode", "recall", "latency(us)", "ssd/query", "speedup"
+    );
+    let base = run_batch(&sys, RefineMode::Baseline, &truth, threads);
+    for (mode, rep) in [
+        (RefineMode::Baseline, base.clone()),
+        (RefineMode::FatrqSw, run_batch(&sys, RefineMode::FatrqSw, &truth, threads)),
+        (RefineMode::FatrqHw, run_batch(&sys, RefineMode::FatrqHw, &truth, threads)),
+    ] {
+        println!(
+            "{:>10} {:>9.4} {:>12.1} {:>10} {:>9.2}x",
+            mode.name(),
+            rep.mean_recall,
+            rep.mean_latency_ns / 1e3,
+            rep.breakdown.ssd_reads,
+            base.mean_latency_ns / rep.mean_latency_ns
+        );
+    }
+    Ok(())
+}
+
+fn cmd_xla(args: &Args) -> anyhow::Result<()> {
+    args.expect_only(&["artifacts"])?;
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let rt = XlaRuntime::load(Path::new(dir))?;
+    let m = rt.manifest;
+    println!("loaded artifacts from {dir}: dim={} refine_n={}", m.dim, m.refine_n);
+
+    // Smoke: rerank a random block and compare against native distances.
+    let mut rng = Rng::new(7);
+    let mut query = vec![0f32; m.dim];
+    rng.fill_gaussian(&mut query);
+    let n = 10usize;
+    let mut vectors = vec![0f32; n * m.dim];
+    rng.fill_gaussian(&mut vectors);
+    let got = rt.rerank_block(&query, &vectors)?;
+    let mut max_err = 0f32;
+    for i in 0..n {
+        let native = fatrq::util::l2_sq(&query, &vectors[i * m.dim..(i + 1) * m.dim]);
+        max_err = max_err.max((got[i] - native).abs() / native.max(1.0));
+    }
+    println!("rerank_block: max rel err vs native = {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-3, "XLA/native mismatch");
+    println!("xla OK ({} executions)", rt.executions.get());
+    Ok(())
+}
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "build" => cmd_build(&args),
+        "query" => cmd_query(&args),
+        "bench" => cmd_bench(&args),
+        "xla" => cmd_xla(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

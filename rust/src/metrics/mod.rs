@@ -1,0 +1,164 @@
+//! Evaluation metrics: recall@k, distance-distortion MSE, latency
+//! histograms, and throughput accounting for the benchmark harnesses.
+
+use crate::util::topk::Scored;
+use std::collections::HashSet;
+
+/// recall@k of `result` against ground-truth `truth` (both sorted lists;
+/// only the first k of each are considered).
+pub fn recall_at_k(result: &[Scored], truth: &[Scored], k: usize) -> f64 {
+    let truth_ids: HashSet<u64> = truth.iter().take(k).map(|s| s.id).collect();
+    if truth_ids.is_empty() {
+        return 1.0;
+    }
+    let hits = result
+        .iter()
+        .take(k)
+        .filter(|s| truth_ids.contains(&s.id))
+        .count();
+    hits as f64 / truth_ids.len() as f64
+}
+
+/// Mean recall@k over query batches.
+pub fn mean_recall(results: &[Vec<Scored>], truths: &[Vec<Scored>], k: usize) -> f64 {
+    assert_eq!(results.len(), truths.len());
+    if results.is_empty() {
+        return 1.0;
+    }
+    results
+        .iter()
+        .zip(truths)
+        .map(|(r, t)| recall_at_k(r, t, k))
+        .sum::<f64>()
+        / results.len() as f64
+}
+
+/// Mean squared error between estimated and true distances.
+pub fn distance_mse(estimates: &[f32], truths: &[f32]) -> f64 {
+    assert_eq!(estimates.len(), truths.len());
+    if estimates.is_empty() {
+        return 0.0;
+    }
+    estimates
+        .iter()
+        .zip(truths)
+        .map(|(&e, &t)| ((e - t) as f64).powi(2))
+        .sum::<f64>()
+        / estimates.len() as f64
+}
+
+/// Streaming latency statistics (nanoseconds).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, ns: f64) {
+        self.samples.push(ns);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Quantile in [0,1] by nearest-rank on a sorted copy.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).floor() as usize;
+        sorted[idx]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Queries/sec if samples were serialized.
+    pub fn throughput_qps(&self) -> f64 {
+        let total_ns: f64 = self.samples.iter().sum();
+        if total_ns <= 0.0 {
+            return 0.0;
+        }
+        self.samples.len() as f64 / (total_ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(ids: &[u64]) -> Vec<Scored> {
+        ids.iter()
+            .enumerate()
+            .map(|(i, &id)| Scored::new(i as f32, id))
+            .collect()
+    }
+
+    #[test]
+    fn recall_basic() {
+        let truth = mk(&[1, 2, 3, 4, 5]);
+        let perfect = mk(&[1, 2, 3, 4, 5]);
+        let half = mk(&[1, 2, 9, 10, 11]);
+        assert_eq!(recall_at_k(&perfect, &truth, 5), 1.0);
+        assert_eq!(recall_at_k(&half, &truth, 5), 0.4);
+        // order within top-k does not matter
+        let shuffled = mk(&[5, 4, 3, 2, 1]);
+        assert_eq!(recall_at_k(&shuffled, &truth, 5), 1.0);
+    }
+
+    #[test]
+    fn recall_k_smaller_than_lists() {
+        let truth = mk(&[1, 2, 3, 4, 5]);
+        let result = mk(&[1, 9, 9, 9, 9]);
+        assert_eq!(recall_at_k(&result, &truth, 1), 1.0);
+        assert_eq!(recall_at_k(&result, &truth, 2), 0.5);
+    }
+
+    #[test]
+    fn mse_zero_for_exact() {
+        assert_eq!(distance_mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((distance_mse(&[1.0, 3.0], &[1.0, 2.0]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_quantiles() {
+        let mut l = LatencyStats::default();
+        for i in 1..=100 {
+            l.record(i as f64);
+        }
+        assert_eq!(l.len(), 100);
+        assert!((l.mean() - 50.5).abs() < 1e-9);
+        assert_eq!(l.p50(), 50.0);
+        assert_eq!(l.p99(), 99.0); // floor(99*0.99)=98 -> sample 99
+        assert_eq!(l.quantile(1.0), 100.0);
+    }
+
+    #[test]
+    fn throughput() {
+        let mut l = LatencyStats::default();
+        l.record(1e6); // 1 ms
+        l.record(1e6);
+        assert!((l.throughput_qps() - 1000.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,255 @@
+//! Lloyd's k-means with k-means++ seeding — the training substrate for the
+//! IVF coarse quantizer and every PQ sub-codebook.
+
+use crate::util::{l2_sq, parallel_for, rng::Rng, threadpool::default_threads};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+/// Result of a k-means run.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub k: usize,
+    pub dim: usize,
+    /// `k x dim` row-major centroids.
+    pub centroids: Vec<f32>,
+    /// Final mean squared distance to assigned centroid.
+    pub inertia: f64,
+}
+
+impl KMeans {
+    #[inline]
+    pub fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.dim..(c + 1) * self.dim]
+    }
+
+    /// Index of the nearest centroid to `v`.
+    pub fn assign(&self, v: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..self.k {
+            let d = l2_sq(v, self.centroid(c));
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Nearest centroid index and its squared distance.
+    pub fn assign_with_dist(&self, v: &[f32]) -> (usize, f32) {
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..self.k {
+            let d = l2_sq(v, self.centroid(c));
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        (best, best_d)
+    }
+}
+
+/// Train k-means on `data` (`n x dim` row-major).
+///
+/// `iters` Lloyd iterations after k-means++ seeding. Empty clusters are
+/// re-seeded from the point furthest from its centroid, so all `k`
+/// centroids stay live.
+pub fn train(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> KMeans {
+    assert!(dim > 0 && data.len() % dim == 0);
+    let n = data.len() / dim;
+    assert!(n >= k, "need at least k={k} points, got {n}");
+    let mut rng = Rng::new(seed);
+    let row = |i: usize| &data[i * dim..(i + 1) * dim];
+
+    // --- k-means++ seeding ---
+    let mut centroids = vec![0f32; k * dim];
+    let first = rng.below(n);
+    centroids[..dim].copy_from_slice(row(first));
+    let mut min_d: Vec<f32> = (0..n).map(|i| l2_sq(row(i), &centroids[..dim])).collect();
+    for c in 1..k {
+        let total: f64 = min_d.iter().map(|&d| d as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let target = rng.f64() * total;
+            let mut acc = 0.0f64;
+            let mut idx = n - 1;
+            for (i, &d) in min_d.iter().enumerate() {
+                acc += d as f64;
+                if acc >= target {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        let dst = &mut centroids[c * dim..(c + 1) * dim];
+        dst.copy_from_slice(row(pick));
+        // update min distances
+        for i in 0..n {
+            let d = l2_sq(row(i), &centroids[c * dim..(c + 1) * dim]);
+            if d < min_d[i] {
+                min_d[i] = d;
+            }
+        }
+    }
+
+    // --- Lloyd iterations ---
+    let threads = default_threads();
+    let mut assign: Vec<u32> = vec![0; n];
+    let mut inertia = f64::INFINITY;
+    for _it in 0..iters {
+        // Assignment step (parallel).
+        let assign_atomic: Vec<AtomicU32> =
+            assign.iter().map(|&a| AtomicU32::new(a)).collect();
+        let cent_ref = &centroids;
+        parallel_for(n, threads, |i| {
+            let v = row(i);
+            let mut best = 0u32;
+            let mut best_d = f32::INFINITY;
+            for c in 0..k {
+                let d = l2_sq(v, &cent_ref[c * dim..(c + 1) * dim]);
+                if d < best_d {
+                    best_d = d;
+                    best = c as u32;
+                }
+            }
+            assign_atomic[i].store(best, Ordering::Relaxed);
+        });
+        for (a, at) in assign.iter_mut().zip(&assign_atomic) {
+            *a = at.load(Ordering::Relaxed);
+        }
+
+        // Update step: per-thread partial sums merged under a lock.
+        let sums = Mutex::new(vec![0f64; k * dim]);
+        let counts = Mutex::new(vec![0u64; k]);
+        let chunk = (n / (threads * 4)).max(256);
+        let nchunks = n.div_ceil(chunk);
+        parallel_for(nchunks, threads, |ci| {
+            let start = ci * chunk;
+            let end = ((ci + 1) * chunk).min(n);
+            let mut local_sum = vec![0f64; k * dim];
+            let mut local_cnt = vec![0u64; k];
+            for i in start..end {
+                let c = assign[i] as usize;
+                local_cnt[c] += 1;
+                let v = row(i);
+                for d in 0..dim {
+                    local_sum[c * dim + d] += v[d] as f64;
+                }
+            }
+            let mut g = sums.lock().unwrap();
+            for (gs, ls) in g.iter_mut().zip(&local_sum) {
+                *gs += ls;
+            }
+            drop(g);
+            let mut gc = counts.lock().unwrap();
+            for (gcn, lcn) in gc.iter_mut().zip(&local_cnt) {
+                *gcn += lcn;
+            }
+        });
+        let sums = sums.into_inner().unwrap();
+        let counts = counts.into_inner().unwrap();
+
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed empty cluster from the worst-fit point.
+                let mut worst = 0usize;
+                let mut worst_d = -1.0f32;
+                for i in 0..n {
+                    let d = l2_sq(row(i), &centroids[assign[i] as usize * dim..][..dim]);
+                    if d > worst_d {
+                        worst_d = d;
+                        worst = i;
+                    }
+                }
+                centroids[c * dim..(c + 1) * dim].copy_from_slice(row(worst));
+            } else {
+                let inv = 1.0 / counts[c] as f64;
+                for d in 0..dim {
+                    centroids[c * dim + d] = (sums[c * dim + d] * inv) as f32;
+                }
+            }
+        }
+
+        // Inertia for convergence tracking.
+        let new_inertia: f64 = (0..n)
+            .map(|i| l2_sq(row(i), &centroids[assign[i] as usize * dim..][..dim]) as f64)
+            .sum::<f64>()
+            / n as f64;
+        if (inertia - new_inertia).abs() < 1e-9 * inertia.max(1.0) {
+            inertia = new_inertia;
+            break;
+        }
+        inertia = new_inertia;
+    }
+
+    KMeans { k, dim, centroids, inertia }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated blobs in 2-D.
+    fn blobs(seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let centers = [(0.0f32, 0.0f32), (10.0, 0.0), (0.0, 10.0)];
+        let mut data = Vec::new();
+        for _ in 0..300 {
+            let (cx, cy) = centers[rng.below(3)];
+            data.push(cx + 0.3 * rng.gaussian_f32());
+            data.push(cy + 0.3 * rng.gaussian_f32());
+        }
+        data
+    }
+
+    #[test]
+    fn recovers_blob_centers() {
+        let data = blobs(1);
+        let km = train(&data, 2, 3, 25, 2);
+        // Every learned centroid should be within 0.5 of a true center.
+        let truth = [(0.0f32, 0.0f32), (10.0, 0.0), (0.0, 10.0)];
+        for c in 0..3 {
+            let cent = km.centroid(c);
+            let ok = truth
+                .iter()
+                .any(|&(x, y)| ((cent[0] - x).powi(2) + (cent[1] - y).powi(2)).sqrt() < 0.5);
+            assert!(ok, "centroid {c} = {cent:?} not near any blob center");
+        }
+        assert!(km.inertia < 1.0, "inertia {}", km.inertia);
+    }
+
+    #[test]
+    fn assign_consistent_with_centroids() {
+        let data = blobs(3);
+        let km = train(&data, 2, 3, 15, 4);
+        for i in 0..10 {
+            let v = &data[i * 2..i * 2 + 2];
+            let a = km.assign(v);
+            let (a2, d2) = km.assign_with_dist(v);
+            assert_eq!(a, a2);
+            assert!((l2_sq(v, km.centroid(a)) - d2).abs() < 1e-6);
+            for c in 0..3 {
+                assert!(l2_sq(v, km.centroid(c)) >= d2 - 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_clusters() {
+        let data = blobs(5);
+        let km2 = train(&data, 2, 2, 20, 6);
+        let km8 = train(&data, 2, 8, 20, 6);
+        assert!(km8.inertia <= km2.inertia);
+    }
+
+    #[test]
+    fn k_equals_n_degenerate() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect(); // 6 points in 2D
+        let km = train(&data, 2, 6, 5, 0);
+        assert!(km.inertia < 1e-9);
+    }
+}

@@ -1,0 +1,16 @@
+//! Vector quantization: k-means, product quantization (coarse codes, fast
+//! memory), scalar-quantized residual baselines, and the paper's TRQ
+//! ternary residual codec (far memory).
+
+pub mod kmeans;
+pub mod pack;
+pub mod pq;
+pub mod sq;
+pub mod trq;
+pub mod trq_multi;
+
+pub use pack::{pack_ternary, packed_len, unpack_ternary};
+pub use pq::ProductQuantizer;
+pub use sq::ScalarQuantizer;
+pub use trq::{TernaryCode, TrqRecord, TrqStore};
+pub use trq_multi::MultiTrqStore;

@@ -1,0 +1,127 @@
+//! Base-3 packing of ternary codes (paper §III-D).
+//!
+//! Each residual element is a trit in {-1, 0, +1}. Five trits pack into one
+//! byte via `y = Σ 3^i (x_i + 1)` (max 242 < 256), i.e. 1.6 bits per
+//! dimension versus the log2(3) ≈ 1.585-bit entropy bound. The far-memory
+//! accelerator unpacks with a 256-entry lookup table ([`crate::accel`]).
+
+/// Trits per packed byte.
+pub const TRITS_PER_BYTE: usize = 5;
+
+/// Packed byte length for `dim` trits.
+#[inline]
+pub const fn packed_len(dim: usize) -> usize {
+    dim.div_ceil(TRITS_PER_BYTE)
+}
+
+/// Pack a ternary slice (values in {-1,0,1}) into base-3 bytes.
+/// Trailing positions of the last byte are packed as 0.
+pub fn pack_ternary(trits: &[i8], out: &mut [u8]) {
+    assert_eq!(out.len(), packed_len(trits.len()));
+    for (bi, chunk) in trits.chunks(TRITS_PER_BYTE).enumerate() {
+        let mut y: u16 = 0;
+        let mut pow: u16 = 1;
+        for &t in chunk {
+            debug_assert!((-1..=1).contains(&t), "trit out of range: {t}");
+            y += pow * (t + 1) as u16;
+            pow *= 3;
+        }
+        out[bi] = y as u8;
+    }
+}
+
+/// Unpack base-3 bytes into `dim` trits.
+pub fn unpack_ternary(packed: &[u8], dim: usize, out: &mut [i8]) {
+    assert_eq!(out.len(), dim);
+    assert_eq!(packed.len(), packed_len(dim));
+    for (bi, &byte) in packed.iter().enumerate() {
+        let mut y = byte as u16;
+        let start = bi * TRITS_PER_BYTE;
+        let end = (start + TRITS_PER_BYTE).min(dim);
+        for slot in out.iter_mut().take(end).skip(start) {
+            *slot = (y % 3) as i8 - 1;
+            y /= 3;
+        }
+    }
+}
+
+/// Decode table: byte -> 5 trits. Mirrors the accelerator's 256-entry
+/// ternary-decoder LUT (paper §IV); also used by the hot unpack path.
+pub fn decode_table() -> Vec<[i8; TRITS_PER_BYTE]> {
+    (0u16..256)
+        .map(|byte| {
+            let mut y = byte;
+            let mut trits = [0i8; TRITS_PER_BYTE];
+            for t in trits.iter_mut() {
+                *t = (y % 3) as i8 - 1;
+                y /= 3;
+            }
+            trits
+        })
+        .collect()
+}
+
+/// Storage cost in bits per dimension for the packed format.
+pub fn bits_per_dim(dim: usize) -> f64 {
+    packed_len(dim) as f64 * 8.0 / dim as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_exact_multiples() {
+        let trits: Vec<i8> = vec![-1, 0, 1, 1, -1, 0, 0, 1, -1, -1];
+        let mut packed = vec![0u8; packed_len(10)];
+        pack_ternary(&trits, &mut packed);
+        let mut back = vec![0i8; 10];
+        unpack_ternary(&packed, 10, &mut back);
+        assert_eq!(back, trits);
+    }
+
+    #[test]
+    fn roundtrip_ragged_tail() {
+        for dim in [1usize, 3, 4, 6, 7, 768, 769] {
+            let mut rng = Rng::new(dim as u64);
+            let trits: Vec<i8> = (0..dim).map(|_| rng.below(3) as i8 - 1).collect();
+            let mut packed = vec![0u8; packed_len(dim)];
+            pack_ternary(&trits, &mut packed);
+            let mut back = vec![0i8; dim];
+            unpack_ternary(&packed, dim, &mut back);
+            assert_eq!(back, trits, "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn packed_byte_range_valid() {
+        // All-ones gives the max byte value: 2*(1+3+9+27+81) = 242.
+        let trits = vec![1i8; 5];
+        let mut packed = vec![0u8; 1];
+        pack_ternary(&trits, &mut packed);
+        assert_eq!(packed[0], 242);
+        let trits = vec![-1i8; 5];
+        pack_ternary(&trits, &mut packed);
+        assert_eq!(packed[0], 0);
+    }
+
+    #[test]
+    fn decode_table_matches_unpack() {
+        let table = decode_table();
+        for byte in 0u16..243 {
+            let packed = [byte as u8];
+            let mut out = vec![0i8; 5];
+            unpack_ternary(&packed, 5, &mut out);
+            assert_eq!(out.as_slice(), &table[byte as usize]);
+        }
+    }
+
+    #[test]
+    fn storage_cost_768d() {
+        // Paper §V-C: 768/5 -> 154 bytes (packing five ternary values/byte).
+        assert_eq!(packed_len(768), 154);
+        let bits = bits_per_dim(768);
+        assert!((bits - 1.604).abs() < 0.01, "bits/dim {bits}");
+    }
+}

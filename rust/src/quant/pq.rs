@@ -1,0 +1,277 @@
+//! Product quantization (PQ) — the coarse quantizer that stays in fast
+//! memory (paper §II-B, Fig 3).
+//!
+//! A `dim`-dimensional vector is split into `m` contiguous subspaces of
+//! `dim/m` dims; each subspace is vector-quantized against its own
+//! `2^nbits`-entry codebook. Query-time scoring uses asymmetric distance
+//! computation (ADC): per-query lookup tables of subspace distances,
+//! summed per code — the exact computation the L1 Pallas `pq_adc` kernel
+//! implements for the XLA path.
+
+use crate::quant::kmeans;
+use crate::util::{dot, l2_sq, parallel_for, threadpool::default_threads};
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// A trained product quantizer.
+#[derive(Clone, Debug)]
+pub struct ProductQuantizer {
+    pub dim: usize,
+    /// Subquantizer count.
+    pub m: usize,
+    /// Centroids per subspace (= 2^nbits, <= 256 so codes are u8).
+    pub ksub: usize,
+    /// Subspace dimensionality (dim / m).
+    pub dsub: usize,
+    /// `m x ksub x dsub` codebooks, row-major.
+    pub codebooks: Vec<f32>,
+    /// `m x ksub` precomputed ‖c‖² per centroid — turns the per-query ADC
+    /// table build into `‖q_s‖² − 2⟨q_s,c⟩ + ‖c‖²` (half the flops of the
+    /// naive subtract-square loop; see EXPERIMENTS.md §Perf).
+    pub centroid_sq_norms: Vec<f32>,
+}
+
+impl ProductQuantizer {
+    /// Train on `data` (`n x dim`), sampling at most `train_sample` rows
+    /// (0 = use all).
+    pub fn train(
+        data: &[f32],
+        dim: usize,
+        m: usize,
+        nbits: usize,
+        iters: usize,
+        train_sample: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(dim % m == 0, "m must divide dim");
+        assert!((1..=8).contains(&nbits));
+        let n = data.len() / dim;
+        let ksub = 1usize << nbits;
+        let dsub = dim / m;
+
+        // Optional subsample for training.
+        let (train_data, tn): (Vec<f32>, usize) =
+            if train_sample > 0 && train_sample < n {
+                let mut rng = Rng::new(seed ^ 0x7121);
+                let idx = rng.sample_indices(n, train_sample);
+                let mut buf = vec![0f32; train_sample * dim];
+                for (j, &i) in idx.iter().enumerate() {
+                    buf[j * dim..(j + 1) * dim].copy_from_slice(&data[i * dim..(i + 1) * dim]);
+                }
+                (buf, train_sample)
+            } else {
+                (data.to_vec(), n)
+            };
+        assert!(tn >= ksub, "not enough training points ({tn}) for ksub={ksub}");
+
+        let mut codebooks = vec![0f32; m * ksub * dsub];
+        // Train each subspace independently (they are independent k-means
+        // problems; parallelism lives inside kmeans::train).
+        for sub in 0..m {
+            let mut subdata = vec![0f32; tn * dsub];
+            for i in 0..tn {
+                subdata[i * dsub..(i + 1) * dsub]
+                    .copy_from_slice(&train_data[i * dim + sub * dsub..i * dim + (sub + 1) * dsub]);
+            }
+            let km = kmeans::train(&subdata, dsub, ksub, iters, seed.wrapping_add(sub as u64));
+            codebooks[sub * ksub * dsub..(sub + 1) * ksub * dsub]
+                .copy_from_slice(&km.centroids);
+        }
+        let centroid_sq_norms = (0..m * ksub)
+            .map(|i| crate::util::dot(&codebooks[i * dsub..(i + 1) * dsub], &codebooks[i * dsub..(i + 1) * dsub]))
+            .collect();
+        ProductQuantizer { dim, m, ksub, dsub, codebooks, centroid_sq_norms }
+    }
+
+    /// Codebook row for (subspace, code).
+    #[inline]
+    pub fn centroid(&self, sub: usize, code: usize) -> &[f32] {
+        let base = (sub * self.ksub + code) * self.dsub;
+        &self.codebooks[base..base + self.dsub]
+    }
+
+    /// Encode one vector into `m` bytes.
+    pub fn encode_one(&self, v: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(v.len(), self.dim);
+        debug_assert_eq!(out.len(), self.m);
+        for sub in 0..self.m {
+            let sv = &v[sub * self.dsub..(sub + 1) * self.dsub];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..self.ksub {
+                let d = l2_sq(sv, self.centroid(sub, c));
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            out[sub] = best as u8;
+        }
+    }
+
+    /// Encode a batch (`n x dim`) in parallel; returns `n x m` codes.
+    pub fn encode(&self, data: &[f32]) -> Vec<u8> {
+        let n = data.len() / self.dim;
+        let codes: Vec<AtomicU8> = (0..n * self.m).map(|_| AtomicU8::new(0)).collect();
+        parallel_for(n, default_threads(), |i| {
+            let mut row = vec![0u8; self.m];
+            self.encode_one(&data[i * self.dim..(i + 1) * self.dim], &mut row);
+            for (sub, &c) in row.iter().enumerate() {
+                codes[i * self.m + sub].store(c, Ordering::Relaxed);
+            }
+        });
+        codes.into_iter().map(|a| a.into_inner()).collect()
+    }
+
+    /// Reconstruct the coarse approximation `x_c` from a code.
+    pub fn decode_one(&self, code: &[u8], out: &mut [f32]) {
+        debug_assert_eq!(code.len(), self.m);
+        debug_assert_eq!(out.len(), self.dim);
+        for sub in 0..self.m {
+            out[sub * self.dsub..(sub + 1) * self.dsub]
+                .copy_from_slice(self.centroid(sub, code[sub] as usize));
+        }
+    }
+
+    /// Build the per-query ADC lookup table: `m x ksub` squared distances
+    /// between each query subvector and each subspace centroid, via the
+    /// expansion `‖q_s − c‖² = ‖q_s‖² − 2⟨q_s, c⟩ + ‖c‖²` with ‖c‖²
+    /// precomputed at train time (front-stage per-query hot path).
+    pub fn adc_table(&self, q: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(q.len(), self.dim);
+        let mut lut = vec![0f32; self.m * self.ksub];
+        let dsub = self.dsub;
+        for sub in 0..self.m {
+            let qs = &q[sub * dsub..(sub + 1) * dsub];
+            let q_sq = dot(qs, qs);
+            let cb = &self.codebooks[sub * self.ksub * dsub..(sub + 1) * self.ksub * dsub];
+            let norms = &self.centroid_sq_norms[sub * self.ksub..(sub + 1) * self.ksub];
+            let out = &mut lut[sub * self.ksub..(sub + 1) * self.ksub];
+            for c in 0..self.ksub {
+                let ip = dot(qs, &cb[c * dsub..(c + 1) * dsub]);
+                out[c] = q_sq - 2.0 * ip + norms[c];
+            }
+        }
+        lut
+    }
+
+    /// ADC distance of one code against a prebuilt table.
+    #[inline]
+    pub fn adc_distance(&self, lut: &[f32], code: &[u8]) -> f32 {
+        debug_assert_eq!(code.len(), self.m);
+        let mut acc = 0f32;
+        for sub in 0..self.m {
+            acc += lut[sub * self.ksub + code[sub] as usize];
+        }
+        acc
+    }
+
+    /// ADC scan over a contiguous code block (`n x m`), writing distances.
+    pub fn adc_scan(&self, lut: &[f32], codes: &[u8], out: &mut [f32]) {
+        let n = out.len();
+        debug_assert_eq!(codes.len(), n * self.m);
+        for i in 0..n {
+            out[i] = self.adc_distance(lut, &codes[i * self.m..(i + 1) * self.m]);
+        }
+    }
+
+    /// Bytes per encoded vector.
+    pub fn code_bytes(&self) -> usize {
+        self.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_data(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0f32; n * dim];
+        rng.fill_gaussian(&mut v);
+        v
+    }
+
+    #[test]
+    fn encode_decode_reduces_error_vs_random() {
+        let dim = 32;
+        let data = random_data(600, dim, 1);
+        let pq = ProductQuantizer::train(&data, dim, 8, 4, 10, 0, 2);
+        let mut code = vec![0u8; 8];
+        let mut recon = vec![0f32; dim];
+        let mut err = 0.0f64;
+        let mut base = 0.0f64;
+        for i in 0..100 {
+            let v = &data[i * dim..(i + 1) * dim];
+            pq.encode_one(v, &mut code);
+            pq.decode_one(&code, &mut recon);
+            err += l2_sq(v, &recon) as f64;
+            base += l2_sq(v, &vec![0.0; dim]) as f64;
+        }
+        assert!(err < 0.8 * base, "PQ err {err} vs norm {base}");
+    }
+
+    #[test]
+    fn adc_matches_reconstructed_distance() {
+        // ADC(q, code) must equal ||q - decode(code)||^2 exactly
+        // (term-by-term identical decomposition).
+        let dim = 24;
+        let data = random_data(400, dim, 3);
+        let pq = ProductQuantizer::train(&data, dim, 6, 4, 8, 0, 4);
+        let q = &random_data(1, dim, 5)[..];
+        let lut = pq.adc_table(q);
+        let mut code = vec![0u8; 6];
+        let mut recon = vec![0f32; dim];
+        for i in 0..50 {
+            let v = &data[i * dim..(i + 1) * dim];
+            pq.encode_one(v, &mut code);
+            pq.decode_one(&code, &mut recon);
+            let adc = pq.adc_distance(&lut, &code);
+            let direct = l2_sq(q, &recon);
+            assert!(
+                (adc - direct).abs() < 1e-3 * direct.max(1.0),
+                "adc {adc} direct {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_encode_matches_single() {
+        let dim = 16;
+        let data = random_data(300, dim, 7);
+        let pq = ProductQuantizer::train(&data, dim, 4, 4, 8, 128, 8);
+        let codes = pq.encode(&data);
+        let mut single = vec![0u8; 4];
+        for i in (0..300).step_by(37) {
+            pq.encode_one(&data[i * dim..(i + 1) * dim], &mut single);
+            assert_eq!(&codes[i * 4..(i + 1) * 4], &single[..]);
+        }
+    }
+
+    #[test]
+    fn adc_scan_matches_pointwise() {
+        let dim = 16;
+        let data = random_data(100, dim, 9);
+        let pq = ProductQuantizer::train(&data, dim, 4, 3, 6, 0, 10);
+        let codes = pq.encode(&data);
+        let q = &random_data(1, dim, 11)[..];
+        let lut = pq.adc_table(q);
+        let mut out = vec![0f32; 100];
+        pq.adc_scan(&lut, &codes, &mut out);
+        for i in 0..100 {
+            let d = pq.adc_distance(&lut, &codes[i * 4..(i + 1) * 4]);
+            assert_eq!(out[i], d);
+        }
+    }
+
+    #[test]
+    fn code_bytes_is_m() {
+        let dim = 16;
+        let data = random_data(64, dim, 13);
+        let pq = ProductQuantizer::train(&data, dim, 8, 3, 4, 0, 14);
+        assert_eq!(pq.code_bytes(), 8);
+        assert_eq!(pq.dsub, 2);
+        assert_eq!(pq.ksub, 8);
+    }
+}

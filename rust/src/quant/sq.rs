@@ -1,0 +1,336 @@
+//! Scalar quantization baselines (paper Fig 7):
+//!
+//! - **INT8 "w/o RQ"**: global symmetric int8 over the full vector — the
+//!   no-residual baseline.
+//! - **b-bit SQ residual** (3-bit and 4-bit): per-dimension uniform
+//!   quantization of the residual δ with a per-record min/scale, the
+//!   reconstruct-then-score refinement used by SoTA pipelines [12].
+//!
+//! Both reconstruct vectors (unlike TRQ, which estimates distances
+//! directly), so they pay full decode bandwidth.
+
+use crate::util::parallel_for;
+use crate::util::threadpool::default_threads;
+use std::sync::Mutex;
+
+/// Per-dimension uniform scalar quantizer with per-record range metadata.
+#[derive(Clone, Debug)]
+pub struct ScalarQuantizer {
+    /// Bits per dimension (1..=8).
+    pub bits: usize,
+}
+
+/// One SQ-encoded record: codes + per-record (min, step).
+#[derive(Clone, Debug)]
+pub struct SqRecord {
+    pub codes: Vec<u8>,
+    pub min: f32,
+    pub step: f32,
+}
+
+impl ScalarQuantizer {
+    pub fn new(bits: usize) -> Self {
+        assert!((1..=8).contains(&bits));
+        ScalarQuantizer { bits }
+    }
+
+    /// Number of quantization levels.
+    pub fn levels(&self) -> usize {
+        1 << self.bits
+    }
+
+    /// Encode one vector.
+    pub fn encode_one(&self, v: &[f32]) -> SqRecord {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in v {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if !lo.is_finite() || !hi.is_finite() {
+            return SqRecord { codes: vec![0; v.len()], min: 0.0, step: 0.0 };
+        }
+        if hi <= lo {
+            // Constant vector: all codes 0, decode to `min` exactly.
+            return SqRecord { codes: vec![0; v.len()], min: lo, step: 0.0 };
+        }
+        let step = (hi - lo) / (self.levels() - 1) as f32;
+        let inv = 1.0 / step;
+        let codes = v
+            .iter()
+            .map(|&x| {
+                let q = ((x - lo) * inv).round();
+                q.clamp(0.0, (self.levels() - 1) as f32) as u8
+            })
+            .collect();
+        SqRecord { codes, min: lo, step }
+    }
+
+    /// Decode into `out`.
+    pub fn decode_one(&self, rec: &SqRecord, out: &mut [f32]) {
+        debug_assert_eq!(rec.codes.len(), out.len());
+        for (o, &c) in out.iter_mut().zip(&rec.codes) {
+            *o = rec.min + c as f32 * rec.step;
+        }
+    }
+
+    /// Storage bytes per record of dimension `dim`: bit-packed codes plus
+    /// 8 metadata bytes (min, step as f32). 4-bit @768-D → 384 + 8.
+    pub fn record_bytes(&self, dim: usize) -> usize {
+        (dim * self.bits).div_ceil(8) + 8
+    }
+}
+
+/// Columnar batch of SQ-encoded residuals.
+#[derive(Clone, Debug)]
+pub struct SqStore {
+    pub dim: usize,
+    pub count: usize,
+    pub bits: usize,
+    pub codes: Vec<u8>, // count x dim, one byte per dim (unpacked in memory)
+    pub mins: Vec<f32>,
+    pub steps: Vec<f32>,
+}
+
+impl SqStore {
+    /// Encode every row of `deltas` (`n x dim`).
+    pub fn build(deltas: &[f32], dim: usize, bits: usize) -> SqStore {
+        let sq = ScalarQuantizer::new(bits);
+        let n = deltas.len() / dim;
+        let codes = Mutex::new(vec![0u8; n * dim]);
+        let mins = Mutex::new(vec![0f32; n]);
+        let steps = Mutex::new(vec![0f32; n]);
+        parallel_for(n, default_threads(), |i| {
+            let rec = sq.encode_one(&deltas[i * dim..(i + 1) * dim]);
+            codes.lock().unwrap()[i * dim..(i + 1) * dim].copy_from_slice(&rec.codes);
+            mins.lock().unwrap()[i] = rec.min;
+            steps.lock().unwrap()[i] = rec.step;
+        });
+        SqStore {
+            dim,
+            count: n,
+            bits,
+            codes: codes.into_inner().unwrap(),
+            mins: mins.into_inner().unwrap(),
+            steps: steps.into_inner().unwrap(),
+        }
+    }
+
+    /// Decode record `i` into `out`.
+    pub fn decode(&self, i: usize, out: &mut [f32]) {
+        let (min, step) = (self.mins[i], self.steps[i]);
+        for (o, &c) in out.iter_mut().zip(&self.codes[i * self.dim..(i + 1) * self.dim]) {
+            *o = min + c as f32 * step;
+        }
+    }
+}
+
+/// Globally-scaled symmetric b-bit quantizer — the residual codec of
+/// GPU refinement pipelines [12], which keep one uniform scale for the
+/// whole dataset (per-record ranges would add metadata and divergent
+/// decode paths on GPU). With heavy-tailed residuals the global range is
+/// set by outliers, which is precisely why 3-bit SQ degrades in the
+/// paper's Fig 7 while FaTRQ's ternary top-k* codes do not.
+#[derive(Clone, Debug)]
+pub struct GlobalSq {
+    pub bits: usize,
+    /// Symmetric range: values quantized over [-range, range].
+    pub range: f32,
+}
+
+impl GlobalSq {
+    /// Fit the range to the max |x| over (a sample of) the residuals.
+    pub fn fit(data: &[f32], bits: usize) -> Self {
+        assert!((1..=8).contains(&bits));
+        let range = data.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-12);
+        GlobalSq { bits, range }
+    }
+
+    #[inline]
+    fn step(&self) -> f32 {
+        2.0 * self.range / ((1usize << self.bits) - 1) as f32
+    }
+
+    pub fn encode_one(&self, v: &[f32], out: &mut [u8]) {
+        let inv = 1.0 / self.step();
+        let max_code = ((1usize << self.bits) - 1) as f32;
+        for (o, &x) in out.iter_mut().zip(v) {
+            let q = ((x + self.range) * inv).round().clamp(0.0, max_code);
+            *o = q as u8;
+        }
+    }
+
+    pub fn decode_one(&self, codes: &[u8], out: &mut [f32]) {
+        let step = self.step();
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = c as f32 * step - self.range;
+        }
+    }
+
+    /// Code bytes per record (bit-packed) — no per-record metadata.
+    pub fn record_bytes(&self, dim: usize) -> usize {
+        (dim * self.bits).div_ceil(8)
+    }
+}
+
+/// Global symmetric INT8 quantizer (the "w/o RQ" Fig 7 baseline).
+#[derive(Clone, Debug)]
+pub struct Int8Quantizer {
+    /// Global scale: x ≈ code * scale.
+    pub scale: f32,
+}
+
+impl Int8Quantizer {
+    /// Fit the scale to the data's max |x|.
+    pub fn fit(data: &[f32]) -> Self {
+        let max = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        Int8Quantizer { scale: if max > 0.0 { max / 127.0 } else { 1.0 } }
+    }
+
+    pub fn encode_one(&self, v: &[f32], out: &mut [i8]) {
+        let inv = 1.0 / self.scale;
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+
+    pub fn decode_one(&self, codes: &[i8], out: &mut [f32]) {
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = c as f32 * self.scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{l2_sq, rng::Rng};
+
+    #[test]
+    fn sq_roundtrip_error_bounded_by_step() {
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..64).map(|_| rng.gaussian_f32()).collect();
+        for bits in [3usize, 4, 8] {
+            let sq = ScalarQuantizer::new(bits);
+            let rec = sq.encode_one(&v);
+            let mut back = vec![0f32; 64];
+            sq.decode_one(&rec, &mut back);
+            for (a, b) in v.iter().zip(&back) {
+                assert!(
+                    (a - b).abs() <= rec.step / 2.0 + 1e-6,
+                    "bits={bits}: |{a} - {b}| > step/2 = {}",
+                    rec.step / 2.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(2);
+        let v: Vec<f32> = (0..128).map(|_| rng.gaussian_f32()).collect();
+        let mut errs = Vec::new();
+        for bits in [2usize, 4, 6, 8] {
+            let sq = ScalarQuantizer::new(bits);
+            let rec = sq.encode_one(&v);
+            let mut back = vec![0f32; 128];
+            sq.decode_one(&rec, &mut back);
+            errs.push(l2_sq(&v, &back));
+        }
+        for w in errs.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn constant_vector_zero_step() {
+        let sq = ScalarQuantizer::new(4);
+        let v = vec![2.5f32; 10];
+        let rec = sq.encode_one(&v);
+        assert_eq!(rec.step, 0.0);
+        let mut back = vec![0f32; 10];
+        sq.decode_one(&rec, &mut back);
+        assert_eq!(back, vec![2.5f32; 10]);
+    }
+
+    #[test]
+    fn record_bytes_matches_paper_claim() {
+        // §V-C: 768-D 4-bit SQ needs 768*4/8 = 384 code bytes.
+        let sq = ScalarQuantizer::new(4);
+        assert_eq!(sq.record_bytes(768), 384 + 8);
+        let sq3 = ScalarQuantizer::new(3);
+        assert_eq!(sq3.record_bytes(768), 288 + 8);
+    }
+
+    #[test]
+    fn sq_store_matches_single() {
+        let mut rng = Rng::new(3);
+        let dim = 32;
+        let deltas: Vec<f32> = (0..10 * dim).map(|_| rng.gaussian_f32()).collect();
+        let store = SqStore::build(&deltas, dim, 3);
+        let sq = ScalarQuantizer::new(3);
+        for i in 0..10 {
+            let rec = sq.encode_one(&deltas[i * dim..(i + 1) * dim]);
+            let mut a = vec![0f32; dim];
+            let mut b = vec![0f32; dim];
+            store.decode(i, &mut a);
+            sq.decode_one(&rec, &mut b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn global_sq_roundtrip_bounded() {
+        let mut rng = Rng::new(6);
+        let v: Vec<f32> = (0..128).map(|_| rng.gaussian_f32()).collect();
+        for bits in [3usize, 4, 8] {
+            let q = GlobalSq::fit(&v, bits);
+            let mut codes = vec![0u8; 128];
+            q.encode_one(&v, &mut codes);
+            let mut back = vec![0f32; 128];
+            q.decode_one(&codes, &mut back);
+            let step = 2.0 * q.range / ((1usize << bits) - 1) as f32;
+            for (a, b) in v.iter().zip(&back) {
+                assert!((a - b).abs() <= step / 2.0 + 1e-5, "bits {bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn global_sq_outlier_sensitivity() {
+        // One outlier blows the range and crushes the small values —
+        // the failure mode FaTRQ's ternary codes avoid (Fig 7's story).
+        let mut v = vec![0.01f32; 100];
+        v[0] = 1.0;
+        let q = GlobalSq::fit(&v, 3);
+        let mut codes = vec![0u8; 100];
+        q.encode_one(&v, &mut codes);
+        let mut back = vec![0f32; 100];
+        q.decode_one(&codes, &mut back);
+        // The small entries decode to the nearest level, ~0.14 away.
+        let err: f32 = v[1..].iter().zip(&back[1..]).map(|(a, b)| (a - b).abs()).sum::<f32>() / 99.0;
+        assert!(err > 0.05, "expected outlier-dominated error, got {err}");
+    }
+
+    #[test]
+    fn global_sq_no_metadata_bytes() {
+        let q = GlobalSq::fit(&[1.0], 4);
+        assert_eq!(q.record_bytes(768), 384); // the paper's SQ4 number
+        let q3 = GlobalSq::fit(&[1.0], 3);
+        assert_eq!(q3.record_bytes(768), 288);
+    }
+
+    #[test]
+    fn int8_roundtrip() {
+        let mut rng = Rng::new(4);
+        let v: Vec<f32> = (0..256).map(|_| rng.gaussian_f32()).collect();
+        let q = Int8Quantizer::fit(&v);
+        let mut codes = vec![0i8; 256];
+        q.encode_one(&v, &mut codes);
+        let mut back = vec![0f32; 256];
+        q.decode_one(&codes, &mut back);
+        for (a, b) in v.iter().zip(&back) {
+            assert!((a - b).abs() <= q.scale / 2.0 + 1e-6);
+        }
+    }
+}

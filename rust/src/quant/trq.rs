@@ -1,0 +1,419 @@
+//! Tiered Residual Quantization (TRQ) — the paper's core codec (§III).
+//!
+//! For each database vector `x` with coarse reconstruction `x_c`, the
+//! residual `δ = x − x_c` is encoded as:
+//!
+//! - a **ternary direction code** `ē ∈ {−1,0,1}^D`: the *exact* optimum of
+//!   `max_{c} ⟨c/‖c‖, e_δ⟩` found in O(D log D) by sorting |e_δ|, taking
+//!   prefix sums S_k, and maximizing S_k/√k (§III-C);
+//! - two f32 scalars (§III-D): `cross = ⟨x_c, δ⟩` and
+//!   `scale = ‖δ‖·⟨e_δc, e_δ⟩` — the residual norm with the code/residual
+//!   alignment folded in, so the query-time estimate of ⟨q,δ⟩ needs no
+//!   per-record division or global constants:
+//!
+//!   `⟨q,δ⟩ ≈ ⟨q, ē⟩ · scale / √k*`  (unbiased per §III-B; the orthogonal
+//!   remainder has zero expectation for isotropic residuals).
+//!
+//! Packed size for 768-D: 154 code bytes + 8 scalar bytes = **162 B**,
+//! the paper's §V-C storage claim. `k*` is not stored — it is recovered by
+//! counting nonzero trits during decode (the accelerator gets it for free
+//! from its unpack LUT).
+
+use crate::quant::pack::{pack_ternary, packed_len};
+use crate::util::{dot, norm, parallel_for, threadpool::default_threads};
+use std::sync::Mutex;
+
+/// A ternary direction code before packing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TernaryCode {
+    /// Values in {-1, 0, +1}.
+    pub trits: Vec<i8>,
+    /// Number of nonzero entries (k*).
+    pub k: usize,
+    /// Alignment ⟨e_δc, e_δ⟩ = S_{k*}/√k* ∈ (0, 1]; 0 for a zero residual.
+    pub alignment: f32,
+}
+
+/// One encoded record as stored in far memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrqRecord {
+    /// Base-3 packed ternary direction (`packed_len(dim)` bytes).
+    pub packed: Vec<u8>,
+    /// ⟨x_c, δ⟩ — coarse/residual cross term.
+    pub cross: f32,
+    /// ‖δ‖ · ⟨e_δc, e_δ⟩ — alignment-folded residual norm.
+    pub scale: f32,
+}
+
+/// Encode the *direction* of `delta` as the optimal ternary code (§III-C).
+///
+/// Returns an all-zero code for a (near-)zero residual.
+pub fn ternary_encode(delta: &[f32]) -> TernaryCode {
+    let d = delta.len();
+    let dnorm = norm(delta);
+    if dnorm <= f32::MIN_POSITIVE {
+        return TernaryCode { trits: vec![0; d], k: 0, alignment: 0.0 };
+    }
+    // Sort by |e_δ| descending. e_δ = delta / dnorm, but the argmax over k
+    // is scale-invariant, so we sort |delta| directly and normalize the
+    // objective at the end. |f32|.to_bits() is order-preserving for
+    // non-negative floats, so packing (bits << 32 | idx) into u64 keys
+    // gives a branch-free integer sort — ~3x faster than an indirect
+    // float-comparator sort (EXPERIMENTS.md §Perf).
+    let mut keys: Vec<u64> = delta
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| ((v.abs().to_bits() as u64) << 32) | i as u64)
+        .collect();
+    keys.sort_unstable_by(|a, b| b.cmp(a));
+    // Prefix sums of sorted magnitudes; best k maximizes S_k / sqrt(k).
+    let mut best_k = 1usize;
+    let mut best_obj = f64::MIN;
+    let mut prefix = 0.0f64;
+    for (i, &key) in keys.iter().enumerate() {
+        prefix += f32::from_bits((key >> 32) as u32) as f64;
+        let obj = prefix / ((i + 1) as f64).sqrt();
+        if obj > best_obj {
+            best_obj = obj;
+            best_k = i + 1;
+        }
+    }
+    let mut trits = vec![0i8; d];
+    for &key in &keys[..best_k] {
+        let idx = (key & 0xFFFF_FFFF) as usize;
+        trits[idx] = if delta[idx] >= 0.0 { 1 } else { -1 };
+    }
+    // alignment = ⟨e_δ, ē/√k*⟩ = S_{k*} / (√k* · ‖δ‖)
+    let alignment = (best_obj / dnorm as f64) as f32;
+    TernaryCode { trits, k: best_k, alignment }
+}
+
+/// Encode a full record: residual of `x` against its coarse reconstruction
+/// `xc`.
+pub fn encode_record(x: &[f32], xc: &[f32]) -> TrqRecord {
+    debug_assert_eq!(x.len(), xc.len());
+    let delta: Vec<f32> = x.iter().zip(xc).map(|(a, b)| a - b).collect();
+    let code = ternary_encode(&delta);
+    let dnorm = norm(&delta);
+    let cross = dot(xc, &delta);
+    let mut packed = vec![0u8; packed_len(x.len())];
+    pack_ternary(&code.trits, &mut packed);
+    TrqRecord { packed, cross, scale: dnorm * code.alignment }
+}
+
+/// 256-entry decode tables — the software twin of the accelerator's
+/// ternary-decoder LUT (§IV). `DECODE_F32[b]` holds the 5 trits of byte
+/// `b` as f32, `KCOUNT[b]` the nonzero count.
+struct DecodeTables {
+    trits: Vec<[f32; 5]>,
+    kcount: [u8; 256],
+}
+
+static DECODE: std::sync::OnceLock<DecodeTables> = std::sync::OnceLock::new();
+
+fn decode_tables() -> &'static DecodeTables {
+    DECODE.get_or_init(|| {
+        let mut trits = vec![[0f32; 5]; 256];
+        let mut kcount = [0u8; 256];
+        for (byte, row) in trits.iter_mut().enumerate() {
+            let mut y = byte;
+            for slot in row.iter_mut() {
+                let t = (y % 3) as i8 - 1;
+                y /= 3;
+                *slot = t as f32;
+            }
+            kcount[byte] = row.iter().filter(|&&t| t != 0.0).count() as u8;
+        }
+        DecodeTables { trits, kcount }
+    })
+}
+
+/// Inner product of a query with a packed ternary code: `⟨q, ē⟩` — in
+/// hardware this is adds/subs only (§III-C); here each packed byte decodes
+/// through the 256-entry LUT and contributes 5 (±1/0)·q lanes, which the
+/// compiler vectorizes. Also returns the nonzero count `k*`.
+pub fn qdot_packed(q: &[f32], packed: &[u8], dim: usize) -> (f32, usize) {
+    debug_assert_eq!(packed.len(), packed_len(dim));
+    let tables = decode_tables();
+    let full_bytes = dim / 5;
+    let mut k = 0usize;
+    let mut d = 0usize;
+    let mut acc = 0.0f32;
+    // (A manually 2-way-unrolled variant was tried and measured *slower*
+    // — the extra slice bounds work beat the FMA-latency win; see the
+    // EXPERIMENTS.md §Perf iteration log.)
+    for &byte in &packed[..full_bytes] {
+        let t = &tables.trits[byte as usize];
+        let qs = &q[d..d + 5];
+        acc += t[0] * qs[0] + t[1] * qs[1] + t[2] * qs[2] + t[3] * qs[3] + t[4] * qs[4];
+        k += tables.kcount[byte as usize] as usize;
+        d += 5;
+    }
+    if d < dim {
+        // Ragged tail byte: only the first dim-d trits are live (the
+        // encoder packs trailing slots as 0, but stay defensive).
+        let t = &tables.trits[packed[full_bytes] as usize];
+        for (j, &qv) in q[d..dim].iter().enumerate() {
+            acc += t[j] * qv;
+            k += (t[j] != 0.0) as usize;
+        }
+    }
+    (acc, k)
+}
+
+/// Estimate `⟨q, δ⟩` from a record (§III-B).
+#[inline]
+pub fn estimate_qdot(q: &[f32], rec: &TrqRecord, dim: usize) -> f32 {
+    let (acc, k) = qdot_packed(q, &rec.packed, dim);
+    if k == 0 {
+        0.0
+    } else {
+        acc * rec.scale / (k as f32).sqrt()
+    }
+}
+
+/// Columnar far-memory arena of TRQ records — the layout Fig 3 shows:
+/// packed codes contiguous (streamed), scalars contiguous.
+#[derive(Clone, Debug, Default)]
+pub struct TrqStore {
+    pub dim: usize,
+    pub count: usize,
+    /// `count * packed_len(dim)` bytes.
+    pub packed: Vec<u8>,
+    /// `count` cross terms ⟨x_c, δ⟩.
+    pub cross: Vec<f32>,
+    /// `count` alignment-folded norms ‖δ‖·α.
+    pub scale: Vec<f32>,
+    /// `count` residual norms ‖δ‖² (derived at encode time; used as the
+    /// calibration feature — NOT counted in far-memory bytes because a
+    /// deployment recovers it as `scale²/ᾱ²`; see DESIGN.md §7).
+    pub dnorm_sq: Vec<f32>,
+    /// Mean code/residual alignment ᾱ over the store.
+    pub mean_alignment: f32,
+}
+
+impl TrqStore {
+    /// Encode every row of `data` (`n x dim`) against its reconstruction in
+    /// `recon` (`n x dim`), in parallel.
+    pub fn build(data: &[f32], recon: &[f32], dim: usize) -> TrqStore {
+        assert_eq!(data.len(), recon.len());
+        let n = data.len() / dim;
+        let plen = packed_len(dim);
+        let packed = Mutex::new(vec![0u8; n * plen]);
+        let cross = Mutex::new(vec![0f32; n]);
+        let scale = Mutex::new(vec![0f32; n]);
+        let dnorm_sq = Mutex::new(vec![0f32; n]);
+        let align_sum = Mutex::new(0.0f64);
+        let threads = default_threads();
+        let chunk = (n / (threads * 4)).max(64);
+        let nchunks = n.div_ceil(chunk);
+        parallel_for(nchunks, threads, |ci| {
+            let start = ci * chunk;
+            let end = ((ci + 1) * chunk).min(n);
+            let mut lp = vec![0u8; (end - start) * plen];
+            let mut lc = vec![0f32; end - start];
+            let mut ls = vec![0f32; end - start];
+            let mut ld = vec![0f32; end - start];
+            let mut la = 0.0f64;
+            let mut delta = vec![0f32; dim];
+            for (j, i) in (start..end).enumerate() {
+                let x = &data[i * dim..(i + 1) * dim];
+                let xc = &recon[i * dim..(i + 1) * dim];
+                for d in 0..dim {
+                    delta[d] = x[d] - xc[d];
+                }
+                let code = ternary_encode(&delta);
+                pack_ternary(&code.trits, &mut lp[j * plen..(j + 1) * plen]);
+                let dn = norm(&delta);
+                lc[j] = dot(xc, &delta);
+                ls[j] = dn * code.alignment;
+                ld[j] = dn * dn;
+                la += code.alignment as f64;
+            }
+            packed.lock().unwrap()[start * plen..end * plen].copy_from_slice(&lp);
+            cross.lock().unwrap()[start..end].copy_from_slice(&lc);
+            scale.lock().unwrap()[start..end].copy_from_slice(&ls);
+            dnorm_sq.lock().unwrap()[start..end].copy_from_slice(&ld);
+            *align_sum.lock().unwrap() += la;
+        });
+        let mean_alignment = (align_sum.into_inner().unwrap() / n.max(1) as f64) as f32;
+        TrqStore {
+            dim,
+            count: n,
+            packed: packed.into_inner().unwrap(),
+            cross: cross.into_inner().unwrap(),
+            scale: scale.into_inner().unwrap(),
+            dnorm_sq: dnorm_sq.into_inner().unwrap(),
+            mean_alignment,
+        }
+    }
+
+    #[inline]
+    pub fn packed_row(&self, i: usize) -> &[u8] {
+        let plen = packed_len(self.dim);
+        &self.packed[i * plen..(i + 1) * plen]
+    }
+
+    pub fn record(&self, i: usize) -> TrqRecord {
+        TrqRecord {
+            packed: self.packed_row(i).to_vec(),
+            cross: self.cross[i],
+            scale: self.scale[i],
+        }
+    }
+
+    /// Far-memory bytes per record: packed code + two f32 scalars
+    /// (768-D → 154 + 8 = 162, the §V-C number).
+    pub fn record_bytes(&self) -> usize {
+        packed_len(self.dim) + 8
+    }
+
+    /// Total far-memory footprint in bytes.
+    pub fn far_bytes(&self) -> usize {
+        self.count * self.record_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::unpack_ternary;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ternary_optimality_exhaustive_small_d() {
+        // Brute-force all 3^D codes for D<=8 and compare objectives.
+        let mut rng = Rng::new(42);
+        for d in [2usize, 4, 6, 8] {
+            for _case in 0..20 {
+                let delta: Vec<f32> = (0..d).map(|_| rng.gaussian_f32()).collect();
+                let n = norm(&delta);
+                if n < 1e-6 {
+                    continue;
+                }
+                let e: Vec<f32> = delta.iter().map(|x| x / n).collect();
+                let code = ternary_encode(&delta);
+                let got = code.alignment as f64;
+                // brute force
+                let mut best = f64::MIN;
+                for mask in 0..3usize.pow(d as u32) {
+                    let mut m = mask;
+                    let mut c = vec![0i8; d];
+                    for slot in c.iter_mut() {
+                        *slot = (m % 3) as i8 - 1;
+                        m /= 3;
+                    }
+                    let k: f64 = c.iter().filter(|&&t| t != 0).count() as f64;
+                    if k == 0.0 {
+                        continue;
+                    }
+                    let ip: f64 = c
+                        .iter()
+                        .zip(&e)
+                        .map(|(&t, &x)| t as f64 * x as f64)
+                        .sum::<f64>()
+                        / k.sqrt();
+                    best = best.max(ip);
+                }
+                assert!(
+                    (got - best).abs() < 1e-5,
+                    "d={d}: got {got}, brute {best}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encode_sets_signs_of_top_magnitudes() {
+        let delta = vec![0.9f32, -0.05, 0.02, -0.8, 0.01, 0.0];
+        let code = ternary_encode(&delta);
+        assert_eq!(code.trits[0], 1);
+        assert_eq!(code.trits[3], -1);
+        assert!(code.k >= 2);
+        assert!(code.alignment > 0.9);
+    }
+
+    #[test]
+    fn zero_residual_gives_zero_code() {
+        let code = ternary_encode(&vec![0.0f32; 16]);
+        assert_eq!(code.k, 0);
+        assert_eq!(code.alignment, 0.0);
+        assert!(code.trits.iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn qdot_packed_matches_unpacked() {
+        let mut rng = Rng::new(9);
+        for dim in [5usize, 17, 64, 768] {
+            let delta: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            let code = ternary_encode(&delta);
+            let mut packed = vec![0u8; packed_len(dim)];
+            pack_ternary(&code.trits, &mut packed);
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            let (acc, k) = qdot_packed(&q, &packed, dim);
+            let expect: f32 = q
+                .iter()
+                .zip(&code.trits)
+                .map(|(&qi, &t)| qi * t as f32)
+                .sum();
+            assert!((acc - expect).abs() < 1e-3, "dim {dim}");
+            assert_eq!(k, code.k);
+            // And unpack roundtrip agrees.
+            let mut back = vec![0i8; dim];
+            unpack_ternary(&packed, dim, &mut back);
+            assert_eq!(back, code.trits);
+        }
+    }
+
+    #[test]
+    fn estimator_is_accurate_for_isotropic_residuals() {
+        // E[ (⟨q,δ⟩_est - ⟨q,δ⟩)² ] should be far below E[⟨q,δ⟩²].
+        let mut rng = Rng::new(77);
+        let dim = 256;
+        let mut err = 0.0f64;
+        let mut sig = 0.0f64;
+        for _ in 0..200 {
+            let delta: Vec<f32> = (0..dim).map(|_| 0.1 * rng.gaussian_f32()).collect();
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            let xc = vec![0f32; dim];
+            let x: Vec<f32> = delta.clone();
+            let rec = encode_record(&x, &xc);
+            let est = estimate_qdot(&q, &rec, dim);
+            let truth = dot(&q, &delta);
+            err += ((est - truth) as f64).powi(2);
+            sig += (truth as f64).powi(2);
+        }
+        assert!(
+            err < 0.5 * sig,
+            "estimator MSE {err:.4} vs signal power {sig:.4}"
+        );
+    }
+
+    #[test]
+    fn store_build_matches_single_records() {
+        let mut rng = Rng::new(5);
+        let (n, dim) = (300usize, 48usize);
+        let mut data = vec![0f32; n * dim];
+        rng.fill_gaussian(&mut data);
+        let mut recon = vec![0f32; n * dim];
+        for (r, d) in recon.iter_mut().zip(&data) {
+            *r = d * 0.9; // fake coarse reconstruction
+        }
+        let store = TrqStore::build(&data, &recon, dim);
+        assert_eq!(store.count, n);
+        for i in (0..n).step_by(41) {
+            let single =
+                encode_record(&data[i * dim..(i + 1) * dim], &recon[i * dim..(i + 1) * dim]);
+            assert_eq!(store.packed_row(i), &single.packed[..]);
+            assert!((store.cross[i] - single.cross).abs() < 1e-5);
+            assert!((store.scale[i] - single.scale).abs() < 1e-5);
+        }
+        assert!(store.mean_alignment > 0.0 && store.mean_alignment <= 1.0);
+    }
+
+    #[test]
+    fn storage_footprint_matches_paper() {
+        let store = TrqStore::build(&vec![1.0f32; 2 * 768], &vec![0.9f32; 2 * 768], 768);
+        assert_eq!(store.record_bytes(), 162);
+    }
+}

@@ -1,0 +1,211 @@
+//! Multi-level (stacked) TRQ — the paper's §III-A extension:
+//!
+//! > "Since residual quantization is naturally stackable, distance
+//! > estimates can be progressively refined. For example, we can first
+//! > encode the residual on top of the coarse code, and then refine it
+//! > further by encoding finer residuals on the remaining error, enabling
+//! > progressively tighter distance estimates."
+//!
+//! Level 1 encodes δ₁ = x − x_c; its ternary reconstruction
+//! δ̂₁ = scale₁·ē₁/√k₁ leaves the error δ₂ = δ₁ − δ̂₁, which level 2
+//! encodes, and so on. At query time `⟨q, δ⟩ ≈ Σ_l ⟨q, ē_l⟩·scale_l/√k_l`
+//! and a deployment can stop after any prefix of levels — deeper levels
+//! live in colder far-memory regions and are only streamed for candidates
+//! that survive the coarser estimate (tier-aware by construction).
+
+use crate::quant::pack::{pack_ternary, packed_len};
+use crate::quant::trq::{qdot_packed, ternary_encode};
+use crate::util::{dot, norm, parallel_for, threadpool::default_threads};
+use std::sync::Mutex;
+
+/// Stacked ternary residual codes, columnar per level.
+#[derive(Clone, Debug)]
+pub struct MultiTrqStore {
+    pub dim: usize,
+    pub count: usize,
+    pub levels: usize,
+    /// Per level: `count * packed_len(dim)` bytes.
+    pub packed: Vec<Vec<u8>>,
+    /// Per level: `count` alignment-folded norms ‖δ_l‖·α_l.
+    pub scale: Vec<Vec<f32>>,
+    /// ⟨x_c, δ₁⟩ cross terms (level 1 only — deeper levels refine the
+    /// same ⟨q,δ⟩ term).
+    pub cross: Vec<f32>,
+    /// ‖δ₁‖² (calibration feature, as in the single-level store).
+    pub dnorm_sq: Vec<f32>,
+}
+
+impl MultiTrqStore {
+    /// Encode `levels` stacked ternary codes per row.
+    pub fn build(data: &[f32], recon: &[f32], dim: usize, levels: usize) -> MultiTrqStore {
+        assert!(levels >= 1);
+        assert_eq!(data.len(), recon.len());
+        let n = data.len() / dim;
+        let plen = packed_len(dim);
+        let packed: Vec<Mutex<Vec<u8>>> =
+            (0..levels).map(|_| Mutex::new(vec![0u8; n * plen])).collect();
+        let scale: Vec<Mutex<Vec<f32>>> =
+            (0..levels).map(|_| Mutex::new(vec![0f32; n])).collect();
+        let cross = Mutex::new(vec![0f32; n]);
+        let dnorm_sq = Mutex::new(vec![0f32; n]);
+        let threads = default_threads();
+        let chunk = (n / (threads * 4)).max(64);
+        let nchunks = n.div_ceil(chunk);
+        parallel_for(nchunks, threads, |ci| {
+            let start = ci * chunk;
+            let end = ((ci + 1) * chunk).min(n);
+            let mut delta = vec![0f32; dim];
+            let mut lp = vec![vec![0u8; (end - start) * plen]; levels];
+            let mut ls = vec![vec![0f32; end - start]; levels];
+            let mut lc = vec![0f32; end - start];
+            let mut ld = vec![0f32; end - start];
+            for (j, i) in (start..end).enumerate() {
+                let x = &data[i * dim..(i + 1) * dim];
+                let xc = &recon[i * dim..(i + 1) * dim];
+                for d in 0..dim {
+                    delta[d] = x[d] - xc[d];
+                }
+                lc[j] = dot(xc, &delta);
+                let dn1 = norm(&delta);
+                ld[j] = dn1 * dn1;
+                for l in 0..levels {
+                    let code = ternary_encode(&delta);
+                    pack_ternary(&code.trits, &mut lp[l][j * plen..(j + 1) * plen]);
+                    let dn = norm(&delta);
+                    let s = dn * code.alignment;
+                    ls[l][j] = s;
+                    if l + 1 < levels && code.k > 0 {
+                        // Subtract the reconstruction: δ ← δ − s·ē/√k.
+                        let coef = s / (code.k as f32).sqrt();
+                        for d in 0..dim {
+                            delta[d] -= coef * code.trits[d] as f32;
+                        }
+                    }
+                }
+            }
+            for l in 0..levels {
+                packed[l].lock().unwrap()[start * plen..end * plen].copy_from_slice(&lp[l]);
+                scale[l].lock().unwrap()[start..end].copy_from_slice(&ls[l]);
+            }
+            cross.lock().unwrap()[start..end].copy_from_slice(&lc);
+            dnorm_sq.lock().unwrap()[start..end].copy_from_slice(&ld);
+        });
+        MultiTrqStore {
+            dim,
+            count: n,
+            levels,
+            packed: packed.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+            scale: scale.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+            cross: cross.into_inner().unwrap(),
+            dnorm_sq: dnorm_sq.into_inner().unwrap(),
+        }
+    }
+
+    /// Estimate ⟨q, δ⟩ using the first `upto` levels (1..=levels).
+    pub fn estimate_qdot_upto(&self, q: &[f32], id: usize, upto: usize) -> f32 {
+        let upto = upto.clamp(1, self.levels);
+        let plen = packed_len(self.dim);
+        let mut acc = 0.0f32;
+        for l in 0..upto {
+            let packed = &self.packed[l][id * plen..(id + 1) * plen];
+            let (ip, k) = qdot_packed(q, packed, self.dim);
+            if k > 0 {
+                acc += ip * self.scale[l][id] / (k as f32).sqrt();
+            }
+        }
+        acc
+    }
+
+    /// Far-memory bytes per record at `upto` levels (each level adds a
+    /// packed code + one f32 scale; cross is shared).
+    pub fn record_bytes_upto(&self, upto: usize) -> usize {
+        let upto = upto.clamp(1, self.levels);
+        packed_len(self.dim) * upto + 4 * upto + 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fixture(n: usize, dim: usize, levels: usize) -> (Vec<f32>, Vec<f32>, MultiTrqStore) {
+        let mut rng = Rng::new(41);
+        let mut data = vec![0f32; n * dim];
+        rng.fill_gaussian(&mut data);
+        let recon: Vec<f32> = data.iter().map(|x| x * 0.85).collect();
+        let store = MultiTrqStore::build(&data, &recon, dim, levels);
+        (data, recon, store)
+    }
+
+    #[test]
+    fn level1_matches_single_level_store() {
+        let (data, recon, multi) = fixture(200, 64, 3);
+        let single = crate::quant::trq::TrqStore::build(&data, &recon, 64);
+        assert_eq!(&multi.packed[0], &single.packed);
+        for i in 0..200 {
+            assert!((multi.scale[0][i] - single.scale[i]).abs() < 1e-5);
+            assert!((multi.cross[i] - single.cross[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn deeper_levels_tighten_the_estimate() {
+        let (data, recon, store) = fixture(300, 96, 3);
+        let dim = 96;
+        let mut rng = Rng::new(43);
+        let mut errs = vec![0.0f64; 3];
+        for i in 0..300 {
+            let delta: Vec<f32> = (0..dim)
+                .map(|d| data[i * dim + d] - recon[i * dim + d])
+                .collect();
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            let truth = crate::util::dot(&q, &delta);
+            for (l, err) in errs.iter_mut().enumerate() {
+                let est = store.estimate_qdot_upto(&q, i, l + 1);
+                *err += ((est - truth) as f64).powi(2);
+            }
+        }
+        assert!(
+            errs[1] < 0.7 * errs[0],
+            "level 2 {:.4} !< level 1 {:.4}",
+            errs[1],
+            errs[0]
+        );
+        assert!(
+            errs[2] < 0.8 * errs[1],
+            "level 3 {:.4} !< level 2 {:.4}",
+            errs[2],
+            errs[1]
+        );
+    }
+
+    #[test]
+    fn residual_energy_decays_per_level() {
+        // The stored scales bound the per-level residual norms, which must
+        // shrink as levels peel energy off.
+        let (_, _, store) = fixture(200, 64, 3);
+        let mean = |l: usize| -> f64 {
+            store.scale[l].iter().map(|&s| s as f64).sum::<f64>() / store.count as f64
+        };
+        assert!(mean(1) < mean(0));
+        assert!(mean(2) < mean(1));
+    }
+
+    #[test]
+    fn record_bytes_scale_with_levels() {
+        let (_, _, store) = fixture(10, 768, 2);
+        assert_eq!(store.record_bytes_upto(1), 162); // the §V-C number
+        assert_eq!(store.record_bytes_upto(2), 154 * 2 + 12);
+    }
+
+    #[test]
+    fn upto_is_clamped() {
+        let (_, _, store) = fixture(10, 32, 2);
+        let q = vec![1.0f32; 32];
+        assert_eq!(
+            store.estimate_qdot_upto(&q, 0, 99),
+            store.estimate_qdot_upto(&q, 0, 2)
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Lightweight linear calibration (paper §III-E).
+//!
+//! Recall depends on ranking accuracy near the top-k boundary, not global
+//! distance MSE — so FaTRQ fits, offline, an ordinary-least-squares model
+//! `D ≈ A·W` over feature rows `A = [d̂₀, d̂_ip, ‖δ‖², ⟨x_c,δ⟩, 1]` built
+//! from sample–neighbor pairs harvested from the existing index structure
+//! (IVF list-mates / graph neighbors — points dense near the boundary).
+//! At query time refinement is a 5-term dot product.
+
+use anyhow::{bail, Result};
+
+/// Number of features including the intercept column.
+pub const NUM_FEATURES: usize = 5;
+
+/// A fitted linear calibration model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibration {
+    /// Weights for [d0, d_ip, dnorm_sq, cross, 1].
+    pub w: [f32; NUM_FEATURES],
+    /// Training RMSE (diagnostics).
+    pub rmse: f64,
+    /// Number of training pairs.
+    pub pairs: usize,
+}
+
+impl Calibration {
+    /// The uncalibrated analytical estimator (§III-A): weights follow the
+    /// exact L2 decomposition `d = d̂₀ + ‖δ‖² + 2⟨x_c,δ⟩ + d̂_ip`
+    /// (d̂_ip already carries its −2 factor).
+    pub fn analytic() -> Self {
+        Calibration { w: [1.0, 1.0, 1.0, 2.0, 0.0], rmse: f64::NAN, pairs: 0 }
+    }
+
+    /// Apply to one feature row.
+    #[inline]
+    pub fn predict(&self, f: &[f32; NUM_FEATURES]) -> f32 {
+        let w = &self.w;
+        f[0] * w[0] + f[1] * w[1] + f[2] * w[2] + f[3] * w[3] + f[4] * w[4]
+    }
+
+    /// Fit by OLS on rows `a` (n x NUM_FEATURES, flattened) and targets `d`.
+    ///
+    /// Solves the normal equations `(AᵀA) w = Aᵀd` with Gaussian
+    /// elimination + partial pivoting and a small ridge term for numerical
+    /// safety (features are correlated by construction).
+    pub fn fit(a: &[f32], d: &[f32]) -> Result<Self> {
+        let n = d.len();
+        if n < NUM_FEATURES {
+            bail!("need at least {NUM_FEATURES} pairs, got {n}");
+        }
+        if a.len() != n * NUM_FEATURES {
+            bail!("feature matrix shape mismatch");
+        }
+        // Accumulate AtA (5x5) and Atd (5) in f64.
+        let mut ata = [[0f64; NUM_FEATURES]; NUM_FEATURES];
+        let mut atd = [0f64; NUM_FEATURES];
+        for i in 0..n {
+            let row = &a[i * NUM_FEATURES..(i + 1) * NUM_FEATURES];
+            for r in 0..NUM_FEATURES {
+                atd[r] += row[r] as f64 * d[i] as f64;
+                for c in r..NUM_FEATURES {
+                    ata[r][c] += row[r] as f64 * row[c] as f64;
+                }
+            }
+        }
+        for r in 1..NUM_FEATURES {
+            for c in 0..r {
+                ata[r][c] = ata[c][r];
+            }
+        }
+        // Ridge: eps relative to the diagonal scale.
+        let diag_scale: f64 =
+            ata.iter().enumerate().map(|(i, r)| r[i]).sum::<f64>() / NUM_FEATURES as f64;
+        let eps = 1e-8 * diag_scale.max(1e-12);
+        for (i, row) in ata.iter_mut().enumerate() {
+            row[i] += eps;
+        }
+        let w64 = solve5(ata, atd)?;
+        let mut w = [0f32; NUM_FEATURES];
+        for (wi, &v) in w.iter_mut().zip(&w64) {
+            *wi = v as f32;
+        }
+        // Training RMSE.
+        let mut se = 0f64;
+        for i in 0..n {
+            let row = &a[i * NUM_FEATURES..(i + 1) * NUM_FEATURES];
+            let pred: f64 = row
+                .iter()
+                .zip(&w64)
+                .map(|(&x, &wv)| x as f64 * wv)
+                .sum();
+            se += (pred - d[i] as f64).powi(2);
+        }
+        Ok(Calibration { w, rmse: (se / n as f64).sqrt(), pairs: n })
+    }
+}
+
+/// Solve a 5x5 linear system by Gaussian elimination with partial pivoting.
+fn solve5(mut m: [[f64; NUM_FEATURES]; NUM_FEATURES], mut b: [f64; NUM_FEATURES]) -> Result<[f64; NUM_FEATURES]> {
+    let n = NUM_FEATURES;
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if m[r][col].abs() > m[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if m[piv][col].abs() < 1e-300 {
+            bail!("singular normal equations");
+        }
+        m.swap(col, piv);
+        b.swap(col, piv);
+        // Eliminate below.
+        for r in (col + 1)..n {
+            let f = m[r][col] / m[col][col];
+            for c in col..n {
+                m[r][c] -= f * m[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // Back substitution.
+    let mut x = [0f64; NUM_FEATURES];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for c in (col + 1)..n {
+            acc -= m[col][c] * x[c];
+        }
+        x[col] = acc / m[col][col];
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_known_linear_model() {
+        let truth = [0.9f32, -2.1, 1.3, 0.4, 5.0];
+        let mut rng = Rng::new(1);
+        let n = 500;
+        let mut a = vec![0f32; n * NUM_FEATURES];
+        let mut d = vec![0f32; n];
+        for i in 0..n {
+            let row = &mut a[i * NUM_FEATURES..(i + 1) * NUM_FEATURES];
+            for r in row.iter_mut().take(4) {
+                *r = rng.gaussian_f32();
+            }
+            row[4] = 1.0;
+            d[i] = row
+                .iter()
+                .zip(&truth)
+                .map(|(&x, &w)| x * w)
+                .sum::<f32>();
+        }
+        let cal = Calibration::fit(&a, &d).unwrap();
+        for (got, want) in cal.w.iter().zip(&truth) {
+            assert!((got - want).abs() < 1e-3, "got {got} want {want}");
+        }
+        assert!(cal.rmse < 1e-3);
+    }
+
+    #[test]
+    fn noisy_fit_beats_analytic_when_biased() {
+        // Target = analytic prediction + systematic bias; OLS must learn it.
+        let mut rng = Rng::new(2);
+        let n = 400;
+        let analytic = Calibration::analytic();
+        let mut a = vec![0f32; n * NUM_FEATURES];
+        let mut d = vec![0f32; n];
+        for i in 0..n {
+            let row = &mut a[i * NUM_FEATURES..(i + 1) * NUM_FEATURES];
+            for r in row.iter_mut().take(4) {
+                *r = rng.f32() * 2.0;
+            }
+            row[4] = 1.0;
+            let f: [f32; NUM_FEATURES] = row.try_into().unwrap();
+            d[i] = 0.8 * analytic.predict(&f) + 0.7 + 0.01 * rng.gaussian_f32();
+        }
+        let cal = Calibration::fit(&a, &d).unwrap();
+        let mut an_se = 0f64;
+        let mut cal_se = 0f64;
+        for i in 0..n {
+            let f: [f32; NUM_FEATURES] =
+                a[i * NUM_FEATURES..(i + 1) * NUM_FEATURES].try_into().unwrap();
+            an_se += ((analytic.predict(&f) - d[i]) as f64).powi(2);
+            cal_se += ((cal.predict(&f) - d[i]) as f64).powi(2);
+        }
+        assert!(cal_se < 0.1 * an_se, "calibrated {cal_se} vs analytic {an_se}");
+    }
+
+    #[test]
+    fn rejects_underdetermined() {
+        assert!(Calibration::fit(&[1.0; NUM_FEATURES * 2], &[1.0, 2.0]).is_err());
+        assert!(Calibration::fit(&[1.0; 7], &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn analytic_matches_decomposition() {
+        let f = [2.0f32, -0.5, 0.3, 0.1, 1.0];
+        // d0 + d_ip + dnorm_sq + 2*cross
+        let expect = 2.0 - 0.5 + 0.3 + 0.2;
+        assert!((Calibration::analytic().predict(&f) - expect).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,101 @@
+//! Candidate filtering policies (paper §IV, Fig 8).
+//!
+//! After FaTRQ re-ranks the candidate queue, only a slice of it is fetched
+//! from SSD for exact rerank:
+//!
+//! - [`filter_top_ratio`] — the Fig 8 policy: keep the top X% of the
+//!   FaTRQ-ranked queue (never fewer than k).
+//! - [`provable_cutoff`] — early-stop: a candidate provably outside the
+//!   top-k (its refined lower bound exceeds the current k-th upper bound
+//!   by the estimator's error margin) is dropped.
+
+use crate::util::topk::Scored;
+
+/// Keep the top `ratio` fraction of `refined` (sorted ascending), but never
+/// fewer than `k` entries (the final top-k must be recoverable).
+pub fn filter_top_ratio(refined: &[Scored], ratio: f64, k: usize) -> Vec<Scored> {
+    let keep = ((refined.len() as f64 * ratio).ceil() as usize)
+        .max(k)
+        .min(refined.len());
+    refined[..keep].to_vec()
+}
+
+/// Provable-outside-top-k cutoff (paper §I: "refinement stops early once a
+/// candidate is provably outside the top-k").
+///
+/// `refined` must be sorted ascending. With an estimator error bound
+/// `margin` (an absolute bound on |d̂ − d|), any candidate whose refined
+/// estimate minus `margin` exceeds the k-th refined estimate plus `margin`
+/// cannot enter the true top-k; everything before that point is kept.
+pub fn provable_cutoff(refined: &[Scored], k: usize, margin: f32) -> Vec<Scored> {
+    if refined.len() <= k {
+        return refined.to_vec();
+    }
+    let kth_upper = refined[k - 1].dist + margin;
+    let cut = refined
+        .iter()
+        .position(|s| s.dist - margin > kth_upper)
+        .unwrap_or(refined.len());
+    refined[..cut.max(k)].to_vec()
+}
+
+/// Estimate an error margin for [`provable_cutoff`] from calibration
+/// residuals: a high quantile of |d̂ − d| over the calibration pairs.
+pub fn margin_from_residuals(abs_residuals: &mut [f32], quantile: f64) -> f32 {
+    if abs_residuals.is_empty() {
+        return 0.0;
+    }
+    abs_residuals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((abs_residuals.len() - 1) as f64 * quantile.clamp(0.0, 1.0)).round() as usize;
+    abs_residuals[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(dists: &[f32]) -> Vec<Scored> {
+        dists
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| Scored::new(d, i as u64))
+            .collect()
+    }
+
+    #[test]
+    fn top_ratio_keeps_at_least_k() {
+        let refined = mk(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]);
+        assert_eq!(filter_top_ratio(&refined, 0.2, 1).len(), 2);
+        assert_eq!(filter_top_ratio(&refined, 0.0, 3).len(), 3);
+        assert_eq!(filter_top_ratio(&refined, 1.0, 1).len(), 10);
+        assert_eq!(filter_top_ratio(&refined, 0.05, 5).len(), 5);
+    }
+
+    #[test]
+    fn provable_cutoff_drops_far_tail() {
+        // k=2, margin 0.5: kth=2.0, upper=2.5; first d with d-0.5>2.5 is 4.0.
+        let refined = mk(&[1.0, 2.0, 2.8, 4.0, 9.0]);
+        let kept = provable_cutoff(&refined, 2, 0.5);
+        assert_eq!(kept.len(), 3);
+        // Zero margin: cut right after candidates tied with kth.
+        let kept0 = provable_cutoff(&refined, 2, 0.0);
+        assert_eq!(kept0.len(), 2);
+        // Huge margin keeps everything.
+        let kept_all = provable_cutoff(&refined, 2, 100.0);
+        assert_eq!(kept_all.len(), 5);
+    }
+
+    #[test]
+    fn provable_cutoff_small_list() {
+        let refined = mk(&[1.0, 2.0]);
+        assert_eq!(provable_cutoff(&refined, 5, 0.1).len(), 2);
+    }
+
+    #[test]
+    fn margin_quantile() {
+        let mut r = vec![0.1f32, 0.2, 0.3, 0.4, 1.0];
+        assert_eq!(margin_from_residuals(&mut r.clone(), 1.0), 1.0);
+        assert_eq!(margin_from_residuals(&mut r, 0.5), 0.3);
+        assert_eq!(margin_from_residuals(&mut [], 0.9), 0.0);
+    }
+}

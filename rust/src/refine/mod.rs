@@ -1,0 +1,11 @@
+//! Progressive refinement (paper §III-E, §IV): combine the coarse ADC
+//! distance with TRQ residual terms and a learned linear calibration to
+//! re-rank candidates *before* any SSD fetch.
+
+pub mod calib;
+pub mod estimator;
+pub mod filter;
+
+pub use calib::Calibration;
+pub use estimator::{Features, ProgressiveEstimator};
+pub use filter::{filter_top_ratio, provable_cutoff};

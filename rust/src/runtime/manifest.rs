@@ -1,0 +1,94 @@
+//! Artifact manifest: the shapes the HLO executables were compiled for
+//! (written by `python/compile/aot.py`, validated here before execution —
+//! PJRT executables are fixed-shape, so a mismatch must fail loudly).
+
+use crate::config::toml;
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+/// Compiled shapes of the AOT artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub dim: usize,
+    pub pq_m: usize,
+    pub pq_ksub: usize,
+    pub scan_n: usize,
+    pub refine_n: usize,
+    pub rerank_n: usize,
+    pub packed_bytes: usize,
+    pub num_features: usize,
+}
+
+impl Manifest {
+    /// Parse `manifest.toml` from the artifacts directory.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = toml::parse(text)?;
+        let need = |key: &str| -> Result<usize> {
+            root.get(&format!("shapes.{key}"))
+                .and_then(|v| v.as_int())
+                .map(|i| i as usize)
+                .with_context(|| format!("manifest missing shapes.{key}"))
+        };
+        let m = Manifest {
+            dim: need("dim")?,
+            pq_m: need("pq_m")?,
+            pq_ksub: need("pq_ksub")?,
+            scan_n: need("scan_n")?,
+            refine_n: need("refine_n")?,
+            rerank_n: need("rerank_n")?,
+            packed_bytes: need("packed_bytes")?,
+            num_features: need("num_features")?,
+        };
+        anyhow::ensure!(
+            m.packed_bytes == m.dim.div_ceil(5),
+            "manifest packed_bytes {} inconsistent with dim {}",
+            m.packed_bytes,
+            m.dim
+        );
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+[shapes]
+dim = 768
+pq_m = 96
+pq_ksub = 256
+scan_n = 4096
+refine_n = 512
+rerank_n = 64
+packed_bytes = 154
+num_features = 5
+";
+
+    #[test]
+    fn parses_generated_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.dim, 768);
+        assert_eq!(m.refine_n, 512);
+        assert_eq!(m.packed_bytes, 154);
+    }
+
+    #[test]
+    fn rejects_inconsistent_packing() {
+        let bad = SAMPLE.replace("packed_bytes = 154", "packed_bytes = 150");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        assert!(Manifest::parse("[shapes]\ndim = 768").is_err());
+    }
+}

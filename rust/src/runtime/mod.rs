@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts` from the JAX/Pallas compile path) and executes
+//! them on the request path. Python never runs here.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::XlaRuntime;
+pub use manifest::Manifest;

@@ -1,0 +1,30 @@
+//! Device timing simulators (paper Table I).
+//!
+//! The paper evaluates FaTRQ on a simulated CXL Type-2 far-memory device
+//! (Ramulator-modeled DDR5-4800 DIMMs behind a CXL link) against SSD-bound
+//! baselines. None of that hardware exists here, so this module rebuilds
+//! the models:
+//!
+//! - [`dram`] — ramulator-lite: bank/rank/channel state machine with
+//!   tRCD-tCAS-tRP timing and row-buffer hits/misses/conflicts.
+//! - [`cxl`] — fixed link latency + bandwidth queue (271 ns / 22 GB/s).
+//! - [`ssd`] — latency + IOPS-bounded queue (45 µs / 1200K IOPS).
+//! - [`device`] — the composed far-memory device: CXL link in front of the
+//!   DRAM backend, as the accelerator sees it.
+//!
+//! All simulators are *latency accounting* models driven by access streams;
+//! they return simulated nanoseconds and keep queue state so sustained
+//! throughput saturates realistically.
+
+pub mod cxl;
+pub mod device;
+pub mod dram;
+pub mod ssd;
+
+pub use cxl::CxlLink;
+pub use device::FarMemoryDevice;
+pub use dram::DramSim;
+pub use ssd::SsdSim;
+
+/// Simulated time in nanoseconds.
+pub type SimNs = f64;

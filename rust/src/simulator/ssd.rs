@@ -1,0 +1,122 @@
+//! SSD model (Table I: 45 µs read latency, 1200K IOPS — Samsung 990
+//! Pro-class NVMe).
+//!
+//! Random reads pay the device latency; sustained load is bounded by the
+//! IOPS budget, modeled as a token-rate server: the i-th request cannot
+//! start before `i / IOPS`. Reads are page-granular — a 3 KB full-precision
+//! vector costs one 4 KB page read (or more for larger vectors), which is
+//! exactly the refinement I/O the paper eliminates.
+
+use crate::config::SimConfig;
+use crate::simulator::SimNs;
+
+/// IOPS-limited SSD.
+pub struct SsdSim {
+    latency_ns: f64,
+    /// Minimum spacing between request starts (ns) = 1/IOPS.
+    service_ns: f64,
+    page_bytes: usize,
+    next_slot: SimNs,
+    pub reads: u64,
+    pub pages: u64,
+    pub bytes: u64,
+}
+
+impl SsdSim {
+    pub fn new(cfg: &SimConfig) -> Self {
+        SsdSim {
+            latency_ns: cfg.ssd_latency_us * 1000.0,
+            service_ns: 1e9 / (cfg.ssd_kiops * 1000.0),
+            page_bytes: cfg.ssd_page_bytes,
+            next_slot: 0.0,
+            reads: 0,
+            pages: 0,
+            bytes: 0,
+        }
+    }
+
+    /// Pages needed for a read of `bytes`.
+    pub fn pages_for(&self, bytes: usize) -> usize {
+        bytes.div_ceil(self.page_bytes).max(1)
+    }
+
+    /// Issue a random read of `bytes` at (or after) `at`; returns
+    /// completion time.
+    pub fn read(&mut self, bytes: usize, at: SimNs) -> SimNs {
+        let pages = self.pages_for(bytes);
+        let mut start = at.max(self.next_slot);
+        let mut done = start;
+        for _ in 0..pages {
+            start = start.max(self.next_slot);
+            self.next_slot = start + self.service_ns;
+            done = start + self.latency_ns;
+        }
+        self.reads += 1;
+        self.pages += pages as u64;
+        self.bytes += bytes as u64;
+        done
+    }
+
+    /// Idle (queue-empty) latency for one page.
+    pub fn idle_latency_ns(&self) -> f64 {
+        self.latency_ns
+    }
+
+    /// Max random-read throughput in IOPS.
+    pub fn peak_iops(&self) -> f64 {
+        1e9 / self.service_ns
+    }
+
+    pub fn reset(&mut self) {
+        self.next_slot = 0.0;
+        self.reads = 0;
+        self.pages = 0;
+        self.bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_latency_is_45us() {
+        let s = SsdSim::new(&SimConfig::default());
+        assert!((s.idle_latency_ns() - 45_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn iops_limit_enforced() {
+        let mut s = SsdSim::new(&SimConfig::default());
+        let n = 100_000usize;
+        let mut done = 0.0;
+        for _ in 0..n {
+            done = s.read(4096, 0.0);
+        }
+        let iops = n as f64 / (done / 1e9);
+        assert!(
+            (iops - 1_200_000.0).abs() / 1_200_000.0 < 0.05,
+            "sustained {iops} IOPS"
+        );
+    }
+
+    #[test]
+    fn multi_page_reads_cost_multiple_slots() {
+        let mut a = SsdSim::new(&SimConfig::default());
+        let mut b = SsdSim::new(&SimConfig::default());
+        // 6 KB vector (paper intro: 1536-D fp32) = 2 pages.
+        assert_eq!(a.pages_for(6144), 2);
+        for _ in 0..1000 {
+            a.read(6144, 0.0);
+            b.read(3072, 0.0);
+        }
+        assert_eq!(a.pages, 2 * b.pages);
+    }
+
+    #[test]
+    fn single_read_latency_unaffected_by_idle_queue() {
+        let mut s = SsdSim::new(&SimConfig::default());
+        let done = s.read(3072, 1000.0);
+        assert!((done - 1000.0 - 45_000.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,260 @@
+//! Tiered memory manager (paper Fig 3): decides which structure lives in
+//! which tier, enforces capacities, and charges simulated access costs.
+//!
+//! | Tier    | Holds                                   | Model |
+//! |---------|------------------------------------------|-------|
+//! | Fast    | index + PQ codes + codebooks            | host DRAM latency/bandwidth |
+//! | Far     | TRQ residual codes + scalar metadata     | [`crate::simulator::FarMemoryDevice`] |
+//! | Storage | full-precision vectors                   | [`crate::simulator::SsdSim`] |
+
+use crate::config::SimConfig;
+use crate::simulator::{FarMemoryDevice, SimNs, SsdSim};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// The three tiers of the paper's layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    Fast,
+    Far,
+    Storage,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Fast => "fast",
+            Tier::Far => "far",
+            Tier::Storage => "storage",
+        }
+    }
+}
+
+/// A registered data region.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub name: String,
+    pub tier: Tier,
+    pub bytes: u64,
+    /// Base address within its tier's address space (for the DRAM model).
+    pub base: u64,
+}
+
+/// Per-tier capacity limits in bytes (0 = unlimited).
+#[derive(Clone, Debug)]
+pub struct TierCapacities {
+    pub fast: u64,
+    pub far: u64,
+    pub storage: u64,
+}
+
+impl Default for TierCapacities {
+    fn default() -> Self {
+        // Loosely: 24 GB VRAM-class fast tier, 256 GB CXL, unlimited SSD.
+        TierCapacities {
+            fast: 24 << 30,
+            far: 256 << 30,
+            storage: 0,
+        }
+    }
+}
+
+/// Access statistics per tier.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TierStats {
+    pub accesses: u64,
+    pub bytes: u64,
+    /// Total simulated nanoseconds spent (serialized view).
+    pub sim_ns: f64,
+}
+
+/// The tiered memory manager.
+pub struct TieredMemory {
+    cfg: SimConfig,
+    caps: TierCapacities,
+    regions: BTreeMap<String, Region>,
+    used: BTreeMap<Tier, u64>,
+    next_base: BTreeMap<Tier, u64>,
+    pub far_device: FarMemoryDevice,
+    pub ssd: SsdSim,
+    pub stats: BTreeMap<Tier, TierStats>,
+}
+
+impl TieredMemory {
+    pub fn new(cfg: &SimConfig, caps: TierCapacities) -> Self {
+        let mut used = BTreeMap::new();
+        let mut next_base = BTreeMap::new();
+        let mut stats = BTreeMap::new();
+        for t in [Tier::Fast, Tier::Far, Tier::Storage] {
+            used.insert(t, 0);
+            next_base.insert(t, 0);
+            stats.insert(t, TierStats::default());
+        }
+        TieredMemory {
+            cfg: cfg.clone(),
+            caps,
+            regions: BTreeMap::new(),
+            used,
+            next_base,
+            far_device: FarMemoryDevice::new(cfg),
+            ssd: SsdSim::new(cfg),
+            stats,
+        }
+    }
+
+    fn capacity(&self, tier: Tier) -> u64 {
+        match tier {
+            Tier::Fast => self.caps.fast,
+            Tier::Far => self.caps.far,
+            Tier::Storage => self.caps.storage,
+        }
+    }
+
+    /// Register a named region in a tier; fails if the tier would overflow.
+    pub fn place(&mut self, name: &str, tier: Tier, bytes: u64) -> Result<&Region> {
+        if self.regions.contains_key(name) {
+            bail!("region `{name}` already placed");
+        }
+        let cap = self.capacity(tier);
+        let used = self.used[&tier];
+        if cap > 0 && used + bytes > cap {
+            bail!(
+                "tier {} over capacity: {} + {} > {}",
+                tier.name(),
+                used,
+                bytes,
+                cap
+            );
+        }
+        let base = self.next_base[&tier];
+        *self.used.get_mut(&tier).unwrap() += bytes;
+        *self.next_base.get_mut(&tier).unwrap() = base + bytes;
+        let region = Region { name: name.to_string(), tier, bytes, base };
+        self.regions.insert(name.to_string(), region);
+        Ok(&self.regions[name])
+    }
+
+    pub fn region(&self, name: &str) -> Option<&Region> {
+        self.regions.get(name)
+    }
+
+    pub fn used(&self, tier: Tier) -> u64 {
+        self.used[&tier]
+    }
+
+    /// Charge a read of `bytes` at `offset` within region `name`.
+    /// `on_device` selects the accelerator-local path for Far reads.
+    /// Returns the simulated latency in ns.
+    pub fn read(&mut self, name: &str, offset: u64, bytes: usize, on_device: bool) -> Result<SimNs> {
+        let region = match self.regions.get(name) {
+            Some(r) => r.clone(),
+            None => bail!("unknown region `{name}`"),
+        };
+        anyhow::ensure!(
+            offset + bytes as u64 <= region.bytes,
+            "read past end of region `{name}`"
+        );
+        let lat = match region.tier {
+            Tier::Fast => {
+                // Host DRAM: fixed latency + bandwidth serialization.
+                self.cfg.host_dram_latency_ns
+                    + bytes as f64 / self.cfg.host_dram_bandwidth_gbps
+            }
+            Tier::Far => {
+                let addr = region.base + offset;
+                let start = 0.0;
+                let done = if on_device {
+                    self.far_device.local_read(addr, bytes, start)
+                } else {
+                    self.far_device.host_read(addr, bytes, start)
+                };
+                done - start
+            }
+            Tier::Storage => {
+                let done = self.ssd.read(bytes, 0.0);
+                done
+            }
+        };
+        let st = self.stats.get_mut(&region.tier).unwrap();
+        st.accesses += 1;
+        st.bytes += bytes as u64;
+        st.sim_ns += lat;
+        Ok(lat)
+    }
+
+    /// Reset access stats and device queues (placements stay).
+    pub fn reset_stats(&mut self) {
+        for st in self.stats.values_mut() {
+            *st = TierStats::default();
+        }
+        self.far_device.reset();
+        self.ssd.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> TieredMemory {
+        TieredMemory::new(&SimConfig::default(), TierCapacities::default())
+    }
+
+    #[test]
+    fn placement_and_capacity() {
+        let mut tm = TieredMemory::new(
+            &SimConfig::default(),
+            TierCapacities { fast: 1000, far: 2000, storage: 0 },
+        );
+        tm.place("codes", Tier::Fast, 800).unwrap();
+        assert!(tm.place("more", Tier::Fast, 300).is_err());
+        tm.place("trq", Tier::Far, 1500).unwrap();
+        tm.place("vectors", Tier::Storage, 1 << 40).unwrap(); // unlimited
+        assert_eq!(tm.used(Tier::Fast), 800);
+        assert!(tm.place("codes", Tier::Far, 1).is_err()); // duplicate
+    }
+
+    #[test]
+    fn tier_latency_ordering() {
+        let mut tm = mk();
+        tm.place("fastbuf", Tier::Fast, 1 << 20).unwrap();
+        tm.place("farbuf", Tier::Far, 1 << 20).unwrap();
+        tm.place("ssdbuf", Tier::Storage, 1 << 20).unwrap();
+        let fast = tm.read("fastbuf", 0, 162, false).unwrap();
+        let far = tm.read("farbuf", 0, 162, false).unwrap();
+        let ssd = tm.read("ssdbuf", 0, 3072, false).unwrap();
+        assert!(fast < far, "fast {fast} !< far {far}");
+        assert!(far < ssd / 10.0, "far {far} !<< ssd {ssd}");
+    }
+
+    #[test]
+    fn on_device_far_read_cheaper() {
+        let mut tm = mk();
+        tm.place("trq", Tier::Far, 1 << 20).unwrap();
+        let sw = tm.read("trq", 0, 162, false).unwrap();
+        tm.reset_stats();
+        let hw = tm.read("trq", 0, 162, true).unwrap();
+        assert!(sw > hw + 200.0, "sw {sw} vs hw {hw}");
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut tm = mk();
+        tm.place("small", Tier::Fast, 100).unwrap();
+        assert!(tm.read("small", 90, 20, false).is_err());
+        assert!(tm.read("nosuch", 0, 1, false).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut tm = mk();
+        tm.place("farbuf", Tier::Far, 1 << 20).unwrap();
+        for i in 0..10 {
+            tm.read("farbuf", i * 162, 162, true).unwrap();
+        }
+        let st = tm.stats[&Tier::Far];
+        assert_eq!(st.accesses, 10);
+        assert_eq!(st.bytes, 1620);
+        assert!(st.sim_ns > 0.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Little-endian binary (de)serialization for vector datasets and codes.
+//!
+//! File format (`.fvbin`): magic "FVB1", u32 count, u32 dim, then
+//! `count * dim` f32 values. Simple, seekable (fixed stride), and
+//! byte-compatible across the python and rust sides of the repo.
+
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"FVB1";
+
+/// Write a row-major `count x dim` f32 matrix to `path`.
+pub fn write_fvbin(path: &Path, data: &[f32], dim: usize) -> Result<()> {
+    assert!(dim > 0 && data.len() % dim == 0);
+    let count = data.len() / dim;
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(count as u32).to_le_bytes())?;
+    w.write_all(&(dim as u32).to_le_bytes())?;
+    // Bulk-write the payload as bytes.
+    let bytes = f32_slice_as_bytes(data);
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read an entire `.fvbin` file. Returns (data, dim).
+pub fn read_fvbin(path: &Path) -> Result<(Vec<f32>, usize)> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let (count, dim) = read_header(&mut r)?;
+    let mut data = vec![0f32; count * dim];
+    read_f32_exact(&mut r, &mut data)?;
+    Ok((data, dim))
+}
+
+/// Random access reader over an `.fvbin` file — the "SSD" in this repo.
+/// Every `read_row` is one storage access; the tiering simulator charges
+/// latency per call.
+pub struct FvbinReader {
+    file: File,
+    pub count: usize,
+    pub dim: usize,
+    header_len: u64,
+}
+
+impl FvbinReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let (count, dim) = read_header(&mut file)?;
+        Ok(FvbinReader { file, count, dim, header_len: 12 })
+    }
+
+    /// Read row `i` into `out` (len == dim).
+    pub fn read_row(&mut self, i: usize, out: &mut [f32]) -> Result<()> {
+        if i >= self.count {
+            bail!("row {i} out of range ({} rows)", self.count);
+        }
+        assert_eq!(out.len(), self.dim);
+        let offset = self.header_len + (i * self.dim * 4) as u64;
+        self.file.seek(SeekFrom::Start(offset))?;
+        read_f32_exact(&mut self.file, out)?;
+        Ok(())
+    }
+}
+
+fn read_header<R: Read>(r: &mut R) -> Result<(usize, usize)> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic: {magic:?}");
+    }
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    let count = u32::from_le_bytes(b) as usize;
+    r.read_exact(&mut b)?;
+    let dim = u32::from_le_bytes(b) as usize;
+    if dim == 0 {
+        bail!("zero dim");
+    }
+    Ok((count, dim))
+}
+
+fn read_f32_exact<R: Read>(r: &mut R, out: &mut [f32]) -> Result<()> {
+    // Safety: f32 has no invalid bit patterns; alignment of Vec<f32> is fine.
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
+    };
+    r.read_exact(bytes)?;
+    if cfg!(target_endian = "big") {
+        for v in out.iter_mut() {
+            *v = f32::from_le_bytes(v.to_ne_bytes());
+        }
+    }
+    Ok(())
+}
+
+fn f32_slice_as_bytes(data: &[f32]) -> &[u8] {
+    assert!(cfg!(target_endian = "little"), "big-endian write path not needed");
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+/// Write raw bytes with a length prefix (for packed code blobs).
+pub fn write_blob(path: &Path, bytes: &[u8]) -> Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&(bytes.len() as u64).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a length-prefixed blob.
+pub fn read_blob(path: &Path) -> Result<Vec<u8>> {
+    let mut f = File::open(path)?;
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let len = u64::from_le_bytes(len8) as usize;
+    let mut out = vec![0u8; len];
+    f.read_exact(&mut out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fatrq-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn fvbin_roundtrip() {
+        let p = tmp("rt.fvbin");
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 1.5).collect();
+        write_fvbin(&p, &data, 6).unwrap();
+        let (back, dim) = read_fvbin(&p).unwrap();
+        assert_eq!(dim, 6);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn fvbin_random_row_access() {
+        let p = tmp("rows.fvbin");
+        let data: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        write_fvbin(&p, &data, 10).unwrap();
+        let mut r = FvbinReader::open(&p).unwrap();
+        assert_eq!((r.count, r.dim), (10, 10));
+        let mut row = vec![0f32; 10];
+        r.read_row(7, &mut row).unwrap();
+        assert_eq!(row, (70..80).map(|i| i as f32).collect::<Vec<_>>());
+        r.read_row(0, &mut row).unwrap();
+        assert_eq!(row[0], 0.0);
+        assert!(r.read_row(10, &mut row).is_err());
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let p = tmp("blob.bin");
+        let bytes: Vec<u8> = (0..255).collect();
+        write_blob(&p, &bytes).unwrap();
+        assert_eq!(read_blob(&p).unwrap(), bytes);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.fvbin");
+        std::fs::write(&p, b"NOPE00000000").unwrap();
+        assert!(read_fvbin(&p).is_err());
+    }
+}

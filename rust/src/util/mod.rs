@@ -1,0 +1,124 @@
+//! Foundation utilities built from scratch (the offline vendor set has no
+//! rand/rayon/proptest), shared by every other module.
+
+pub mod io;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod topk;
+
+pub use rng::Rng;
+pub use threadpool::{parallel_for, ThreadPool};
+pub use topk::TopK;
+
+/// Squared Euclidean distance between two equal-length slices.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    // 4-wide manual unroll; the compiler vectorizes this reliably.
+    let chunks = a.len() / 4 * 4;
+    let mut i = 0;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    while i < chunks {
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+        i += 4;
+    }
+    acc += (s0 + s1) + (s2 + s3);
+    while i < a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+        i += 1;
+    }
+    acc
+}
+
+/// Inner product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut i = 0;
+    let chunks = a.len() / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    while i < chunks {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    while i < a.len() {
+        acc += a[i] * b[i];
+        i += 1;
+    }
+    acc
+}
+
+/// L2 norm of a slice.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Normalize a vector in place; returns the original norm. Zero vectors are
+/// left untouched and report a norm of 0.
+pub fn normalize_mut(a: &mut [f32]) -> f32 {
+    let n = norm(a);
+    if n > 0.0 {
+        let inv = 1.0 / n;
+        for v in a.iter_mut() {
+            *v *= inv;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_sq_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..37).map(|i| 10.0 - i as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!((l2_sq(&a, &b) - naive).abs() < 1e-3 * naive.max(1.0));
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..41).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..41).map(|i| (i as f32).cos()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        let mut v = vec![3.0f32, 4.0];
+        let n = normalize_mut(&mut v);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((norm(&v) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_zero_vector_noop() {
+        let mut v = vec![0.0f32; 8];
+        assert_eq!(normalize_mut(&mut v), 0.0);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn l2_sq_zero_for_identical() {
+        let a: Vec<f32> = (0..768).map(|i| (i as f32).sqrt()).collect();
+        assert_eq!(l2_sq(&a, &a), 0.0);
+    }
+}

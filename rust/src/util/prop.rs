@@ -1,0 +1,126 @@
+//! Miniature property-based testing harness.
+//!
+//! `proptest` is not in the offline vendor set, so invariant tests use this
+//! instead: seeded generators + a `forall` runner that, on failure, retries
+//! with progressively "smaller" cases drawn from the same generator family
+//! and reports the smallest failing case it found (poor-man's shrinking).
+
+use crate::util::rng::Rng;
+
+/// A seeded test-case generator: given an rng and a size hint, produce a case.
+pub trait Gen {
+    type Item;
+    fn generate(&self, rng: &mut Rng, size: usize) -> Self::Item;
+}
+
+impl<T, F: Fn(&mut Rng, usize) -> T> Gen for F {
+    type Item = T;
+    fn generate(&self, rng: &mut Rng, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, seed: 0xFA7_0, max_size: 64 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with the smallest
+/// failing case's debug representation on the first failure.
+pub fn forall<G, P>(cfg: Config, gen: G, prop: P)
+where
+    G: Gen,
+    G::Item: std::fmt::Debug,
+    P: Fn(&G::Item) -> bool,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        // Grow sizes over the run so early failures are small.
+        let size = 1 + (cfg.max_size * case_idx) / cfg.cases.max(1);
+        let input = gen.generate(&mut rng, size);
+        if !prop(&input) {
+            // Shrink attempt: re-generate at smaller sizes from fresh
+            // streams, keep the smallest failure found.
+            let mut smallest: Option<(usize, G::Item)> = None;
+            for s in 1..=size {
+                let mut r2 = Rng::new(cfg.seed ^ (s as u64).wrapping_mul(0x5bd1e995));
+                for _ in 0..8 {
+                    let cand = gen.generate(&mut r2, s);
+                    if !prop(&cand) {
+                        smallest = Some((s, cand));
+                        break;
+                    }
+                }
+                if smallest.is_some() {
+                    break;
+                }
+            }
+            match smallest {
+                Some((s, cand)) => panic!(
+                    "property failed (case {case_idx}, size {size}); \
+                     shrunk to size {s}: {cand:?}"
+                ),
+                None => panic!("property failed (case {case_idx}, size {size}): {input:?}"),
+            }
+        }
+    }
+}
+
+/// Generator: `f32` vector of length `size` with entries in [-scale, scale).
+pub fn vec_f32(scale: f32) -> impl Gen<Item = Vec<f32>> {
+    move |rng: &mut Rng, size: usize| {
+        (0..size.max(1)).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+    }
+}
+
+/// Generator: Gaussian `f32` vector of a fixed dimension.
+pub fn vec_gauss(dim: usize) -> impl Gen<Item = Vec<f32>> {
+    move |rng: &mut Rng, _size: usize| (0..dim).map(|_| rng.gaussian_f32()).collect()
+}
+
+/// Generator: pair of independently generated items.
+pub fn pair<A: Gen, B: Gen>(a: A, b: B) -> impl Gen<Item = (A::Item, B::Item)> {
+    move |rng: &mut Rng, size: usize| (a.generate(rng, size), b.generate(rng, size))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(Config::default(), vec_f32(1.0), |v| !v.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(Config::default(), vec_f32(1.0), |v| v.len() < 10);
+    }
+
+    #[test]
+    fn generators_respect_size() {
+        let mut rng = Rng::new(1);
+        let g = vec_f32(2.0);
+        let v = g.generate(&mut rng, 17);
+        assert_eq!(v.len(), 17);
+        assert!(v.iter().all(|x| x.abs() <= 2.0));
+    }
+
+    #[test]
+    fn pair_generator() {
+        let mut rng = Rng::new(2);
+        let g = pair(vec_f32(1.0), vec_gauss(8));
+        let (a, b) = g.generate(&mut rng, 5);
+        assert_eq!(a.len(), 5);
+        assert_eq!(b.len(), 8);
+    }
+}

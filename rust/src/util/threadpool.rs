@@ -1,0 +1,199 @@
+//! A small owned thread pool plus a scoped `parallel_for` helper.
+//!
+//! tokio/rayon are not in the offline vendor set; the coordinator needs
+//! worker threads for query serving and the build path needs data-parallel
+//! loops (k-means, encoding). `std::thread::scope` gives us both safely.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool of worker threads consuming a shared job queue.
+///
+/// Used by the coordinator for request handling; build-time data parallel
+/// loops should prefer [`parallel_for`], which has no queue overhead.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                thread::Builder::new()
+                    .name(format!("fatrq-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                pending.fetch_sub(1, Ordering::Release);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.pending.fetch_add(1, Ordering::Acquire);
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("worker alive");
+    }
+
+    /// Busy-wait (with yield) until all submitted jobs completed.
+    pub fn wait_idle(&self) {
+        while self.pending.load(Ordering::Acquire) != 0 {
+            thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Default parallelism: available cores, capped to keep CI-scale runs sane.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Run `f(i)` for every `i in 0..n` across `threads` scoped workers.
+///
+/// Work is divided into contiguous chunks (good cache behaviour for the
+/// vector workloads here). `f` only needs to live for the scope, so it can
+/// borrow from the caller — this is what makes k-means/encode loops easy.
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    // Chunked dynamic scheduling: grab a slice of ~n/(8*threads) at a time.
+    let chunk = (n / (threads * 8)).max(1);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<Mutex<&mut T>> = out.iter_mut().map(Mutex::new).collect();
+        parallel_for(n, threads, |i| {
+            let mut slot = slots[i].lock().unwrap();
+            **slot = f(i);
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool);
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(1000, 8, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_zero_and_one() {
+        parallel_for(0, 4, |_| panic!("must not run"));
+        let ran = AtomicUsize::new(0);
+        parallel_for(1, 4, |_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(64, 4, |i| i * i);
+        let expect: Vec<usize> = (0..64).map(|i| i * i).collect();
+        assert_eq!(out, expect);
+    }
+}

@@ -1,0 +1,194 @@
+//! Bounded top-k selection over (distance, id) pairs.
+//!
+//! ANNS code selects "k smallest distances" constantly — during IVF probe,
+//! graph beam search, refinement, and final rerank. `TopK` is a bounded
+//! max-heap: the root is the *worst* of the current best-k, so a candidate
+//! prunes in O(1) when it cannot enter.
+
+/// A (distance, id) scored candidate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scored {
+    pub dist: f32,
+    pub id: u64,
+}
+
+impl Scored {
+    pub fn new(dist: f32, id: u64) -> Self {
+        Scored { dist, id }
+    }
+}
+
+/// Bounded max-heap keeping the `k` smallest-distance entries seen.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    heap: Vec<Scored>, // max-heap on dist
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        TopK { k, heap: Vec::with_capacity(k + 1) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.heap.len() == self.k
+    }
+
+    /// Current worst (largest) distance among the kept entries, or
+    /// `f32::INFINITY` while not yet full — i.e. the admission threshold.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.is_full() {
+            self.heap[0].dist
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    /// Offer a candidate; returns true if it was admitted.
+    #[inline]
+    pub fn push(&mut self, dist: f32, id: u64) -> bool {
+        if self.heap.len() < self.k {
+            self.heap.push(Scored::new(dist, id));
+            self.sift_up(self.heap.len() - 1);
+            true
+        } else if dist < self.heap[0].dist {
+            self.heap[0] = Scored::new(dist, id);
+            self.sift_down(0);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].dist > self.heap[parent].dist {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < n && self.heap[l].dist > self.heap[largest].dist {
+                largest = l;
+            }
+            if r < n && self.heap[r].dist > self.heap[largest].dist {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+
+    /// Consume into entries sorted ascending by distance (ties by id for
+    /// determinism).
+    pub fn into_sorted(mut self) -> Vec<Scored> {
+        self.heap.sort_by(|a, b| {
+            a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id))
+        });
+        self.heap
+    }
+
+    /// Sorted ids only.
+    pub fn into_ids(self) -> Vec<u64> {
+        self.into_sorted().into_iter().map(|s| s.id).collect()
+    }
+}
+
+/// Select the indices of the `k` smallest values in `dists` (ascending).
+pub fn argmin_k(dists: &[f32], k: usize) -> Vec<usize> {
+    let mut top = TopK::new(k.min(dists.len()).max(1));
+    for (i, &d) in dists.iter().enumerate() {
+        top.push(d, i as u64);
+    }
+    top.into_sorted().into_iter().map(|s| s.id as usize).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut t = TopK::new(3);
+        for (i, d) in [5.0, 1.0, 4.0, 2.0, 3.0, 0.5].iter().enumerate() {
+            t.push(*d, i as u64);
+        }
+        let out = t.into_sorted();
+        let dists: Vec<f32> = out.iter().map(|s| s.dist).collect();
+        assert_eq!(dists, vec![0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn threshold_tracks_worst_kept() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), f32::INFINITY);
+        t.push(3.0, 0);
+        assert_eq!(t.threshold(), f32::INFINITY);
+        t.push(1.0, 1);
+        assert_eq!(t.threshold(), 3.0);
+        t.push(2.0, 2);
+        assert_eq!(t.threshold(), 2.0);
+        assert!(!t.push(9.0, 3));
+    }
+
+    #[test]
+    fn matches_full_sort_randomized() {
+        let mut rng = Rng::new(123);
+        for _ in 0..50 {
+            let n = rng.range(1, 300);
+            let k = rng.range(1, n + 1);
+            let dists: Vec<f32> = (0..n).map(|_| rng.f32() * 100.0).collect();
+            let mut t = TopK::new(k);
+            for (i, &d) in dists.iter().enumerate() {
+                t.push(d, i as u64);
+            }
+            let got: Vec<f32> = t.into_sorted().iter().map(|s| s.dist).collect();
+            let mut expect = dists.clone();
+            expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            expect.truncate(k);
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn argmin_k_basic() {
+        let d = vec![4.0f32, 0.0, 3.0, 1.0, 2.0];
+        assert_eq!(argmin_k(&d, 3), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn fewer_entries_than_k() {
+        let mut t = TopK::new(10);
+        t.push(2.0, 0);
+        t.push(1.0, 1);
+        let out = t.into_sorted();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].id, 1);
+    }
+}

@@ -1,0 +1,8 @@
+//! Vector datasets: synthetic embedding generation and the storage-backed
+//! vector store used as the "SSD tier" of the pipeline.
+
+pub mod store;
+pub mod synth;
+
+pub use store::{AccessCounter, VectorStore};
+pub use synth::{synthesize, Dataset};

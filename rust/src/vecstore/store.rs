@@ -1,0 +1,172 @@
+//! Full-precision vector store with access accounting.
+//!
+//! In the paper, full-precision vectors live on SSD and every refinement
+//! fetch is a random read. Here the store keeps vectors in host memory (so
+//! results are exact) but *accounts* every access; the tiering layer charges
+//! simulated SSD latency per fetch. A file-backed mode does real file IO
+//! through [`crate::util::io::FvbinReader`] for integration tests.
+
+use crate::util::io::{write_fvbin, FvbinReader};
+use crate::Result;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Counts accesses (reads and bytes) against a storage device.
+#[derive(Debug, Default)]
+pub struct AccessCounter {
+    pub reads: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+impl AccessCounter {
+    pub fn record(&self, bytes: usize) {
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+    pub fn reads(&self) -> u64 {
+        self.reads.load(Ordering::Relaxed)
+    }
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+    pub fn reset(&self) {
+        self.reads.store(0, Ordering::Relaxed);
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+enum Backing {
+    Memory(Vec<f32>),
+    File(Mutex<FvbinReader>),
+}
+
+/// The "SSD tier": full-precision vectors, random-access by row id.
+pub struct VectorStore {
+    dim: usize,
+    count: usize,
+    backing: Backing,
+    pub counter: AccessCounter,
+}
+
+impl VectorStore {
+    /// In-memory store (accounting only — the default for benches, where
+    /// latency comes from the simulator, not the host filesystem).
+    pub fn in_memory(data: Vec<f32>, dim: usize) -> Self {
+        assert!(dim > 0 && data.len() % dim == 0);
+        let count = data.len() / dim;
+        VectorStore {
+            dim,
+            count,
+            backing: Backing::Memory(data),
+            counter: AccessCounter::default(),
+        }
+    }
+
+    /// Write `data` to `path` and open it file-backed (real seeks + reads).
+    pub fn file_backed(path: &Path, data: &[f32], dim: usize) -> Result<Self> {
+        write_fvbin(path, data, dim)?;
+        Self::open(path)
+    }
+
+    /// Open an existing `.fvbin` file.
+    pub fn open(path: &Path) -> Result<Self> {
+        let reader = FvbinReader::open(path)?;
+        let (dim, count) = (reader.dim, reader.count);
+        Ok(VectorStore {
+            dim,
+            count,
+            backing: Backing::File(Mutex::new(reader)),
+            counter: AccessCounter::default(),
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Bytes per stored vector (full precision f32).
+    pub fn row_bytes(&self) -> usize {
+        self.dim * 4
+    }
+
+    /// Fetch row `i` into `out`, counting the access.
+    pub fn fetch(&self, i: usize, out: &mut [f32]) -> Result<()> {
+        assert_eq!(out.len(), self.dim);
+        anyhow::ensure!(i < self.count, "row {i} out of range ({})", self.count);
+        self.counter.record(self.row_bytes());
+        match &self.backing {
+            Backing::Memory(data) => {
+                out.copy_from_slice(&data[i * self.dim..(i + 1) * self.dim]);
+                Ok(())
+            }
+            Backing::File(reader) => reader.lock().unwrap().read_row(i, out),
+        }
+    }
+
+    /// Fetch without accounting (index build time, not query path).
+    pub fn fetch_unaccounted(&self, i: usize, out: &mut [f32]) -> Result<()> {
+        match &self.backing {
+            Backing::Memory(data) => {
+                out.copy_from_slice(&data[i * self.dim..(i + 1) * self.dim]);
+                Ok(())
+            }
+            Backing::File(reader) => reader.lock().unwrap().read_row(i, out),
+        }
+    }
+
+    /// Borrow the whole matrix when memory-backed (build-time fast path).
+    pub fn as_slice(&self) -> Option<&[f32]> {
+        match &self.backing {
+            Backing::Memory(d) => Some(d),
+            Backing::File(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_fetch_and_accounting() {
+        let data: Vec<f32> = (0..40).map(|i| i as f32).collect();
+        let store = VectorStore::in_memory(data, 8);
+        assert_eq!(store.count(), 5);
+        let mut row = vec![0f32; 8];
+        store.fetch(2, &mut row).unwrap();
+        assert_eq!(row[0], 16.0);
+        store.fetch(0, &mut row).unwrap();
+        assert_eq!(store.counter.reads(), 2);
+        assert_eq!(store.counter.bytes(), 2 * 32);
+        store.counter.reset();
+        store.fetch_unaccounted(1, &mut row).unwrap();
+        assert_eq!(store.counter.reads(), 0);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let store = VectorStore::in_memory(vec![0.0; 16], 4);
+        let mut row = vec![0f32; 4];
+        assert!(store.fetch(4, &mut row).is_err());
+    }
+
+    #[test]
+    fn file_backed_roundtrip() {
+        let dir = std::env::temp_dir().join("fatrq-store-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("fb-{}.fvbin", std::process::id()));
+        let data: Vec<f32> = (0..60).map(|i| (i as f32).sin()).collect();
+        let store = VectorStore::file_backed(&path, &data, 6).unwrap();
+        assert_eq!(store.count(), 10);
+        assert!(store.as_slice().is_none());
+        let mut row = vec![0f32; 6];
+        store.fetch(7, &mut row).unwrap();
+        assert_eq!(row, data[42..48].to_vec());
+        assert_eq!(store.counter.reads(), 1);
+    }
+}

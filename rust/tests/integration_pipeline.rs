@@ -1,0 +1,158 @@
+//! Integration: full system build + all three refinement modes, on both
+//! front-stage indexes, checking the paper's qualitative claims hold
+//! end-to-end (fewer SSD reads, lower latency, preserved recall).
+
+use fatrq::config::{
+    DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
+};
+use fatrq::coordinator::{build_system, ground_truth, run_batch, Pipeline};
+use fatrq::index::FlatIndex;
+use fatrq::metrics::recall_at_k;
+
+fn cfg(kind: IndexKind) -> SystemConfig {
+    SystemConfig {
+        dataset: DatasetConfig {
+            dim: 96,
+            count: 6000,
+            clusters: 48,
+            noise: 0.35,
+            query_noise: 1.0,
+            queries: 32,
+            seed: 77,
+        },
+        quant: QuantConfig { pq_m: 24, pq_nbits: 6, kmeans_iters: 6, train_sample: 4000 },
+        index: IndexConfig {
+            kind,
+            nlist: 64,
+            nprobe: 16,
+            graph_degree: 20,
+            ef_search: 96,
+            ef_construction: 96,
+        },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 120,
+            k: 10,
+            filter_ratio: 0.25,
+            calib_sample: 0.01,
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn ivf_pipeline_reproduces_paper_claims() {
+    let sys = build_system(&cfg(IndexKind::Ivf)).unwrap();
+    let truth = ground_truth(&sys, 10);
+    let base = run_batch(&sys, RefineMode::Baseline, &truth, 4);
+    let sw = run_batch(&sys, RefineMode::FatrqSw, &truth, 4);
+    let hw = run_batch(&sys, RefineMode::FatrqHw, &truth, 4);
+
+    // SSD traffic: FaTRQ cuts it several-fold (paper: 320 -> 28).
+    assert!(
+        (hw.breakdown.ssd_reads as f64) < 0.45 * base.breakdown.ssd_reads as f64,
+        "hw ssd {} vs baseline {}",
+        hw.breakdown.ssd_reads,
+        base.breakdown.ssd_reads
+    );
+    // Latency: the deterministic (simulated-device) component must beat
+    // the baseline outright; the full mean (which includes measured host
+    // time subject to test-harness CPU contention) gets 15% slack.
+    let sim_ns = |r: &fatrq::coordinator::BatchReport| r.breakdown.ssd_ns + r.breakdown.far_ns;
+    assert!(sim_ns(&hw) < sim_ns(&base), "hw sim {} !< base sim {}", sim_ns(&hw), sim_ns(&base));
+    assert!(sim_ns(&sw) < sim_ns(&base), "sw sim {} !< base sim {}", sim_ns(&sw), sim_ns(&base));
+    // (wall-clock means include measured host time; debug builds and
+    // parallel test execution add noise, hence the slack — the simulated
+    // components above are the strict, deterministic claim.)
+    // Wall-clock latency claims are only meaningful in release builds —
+    // debug-mode host compute is ~10-30x slower and the parallel test
+    // harness adds contention; the simulated-device assertions above are
+    // the strict invariant in every build.
+    if !cfg!(debug_assertions) {
+        assert!(hw.mean_latency_ns < 1.15 * base.mean_latency_ns);
+        assert!(sw.mean_latency_ns < 1.25 * base.mean_latency_ns);
+    }
+    assert!(hw.breakdown.far_ns < sw.breakdown.far_ns);
+    // Recall stays close to the all-SSD baseline.
+    assert!(
+        hw.mean_recall > base.mean_recall - 0.08,
+        "recall dropped: {} vs {}",
+        hw.mean_recall,
+        base.mean_recall
+    );
+}
+
+#[test]
+fn graph_pipeline_reproduces_paper_claims() {
+    let sys = build_system(&cfg(IndexKind::Graph)).unwrap();
+    let truth = ground_truth(&sys, 10);
+    let base = run_batch(&sys, RefineMode::Baseline, &truth, 4);
+    let hw = run_batch(&sys, RefineMode::FatrqHw, &truth, 4);
+    assert!(hw.breakdown.ssd_reads < base.breakdown.ssd_reads);
+    // Deterministic device time must win outright; wall-clock gets slack
+    // (see the IVF test's note).
+    assert!(
+        hw.breakdown.ssd_ns + hw.breakdown.far_ns
+            < base.breakdown.ssd_ns + base.breakdown.far_ns
+    );
+    if !cfg!(debug_assertions) {
+        assert!(hw.mean_latency_ns < 1.15 * base.mean_latency_ns);
+    }
+    assert!(hw.mean_recall > base.mean_recall - 0.10);
+}
+
+#[test]
+fn deeper_filtering_recovers_recall() {
+    // Fig 8's mechanism: raising the filter ratio converges to baseline
+    // recall.
+    let sys = build_system(&cfg(IndexKind::Ivf)).unwrap();
+    let flat = FlatIndex::new(sys.dataset.base.clone(), sys.dataset.dim);
+    let nq = sys.dataset.num_queries();
+    let mut recalls = Vec::new();
+    for ratio in [0.05, 0.25, 1.0] {
+        let mut p = Pipeline::new(&sys);
+        p.filter_ratio = ratio;
+        let mut r = 0.0;
+        for q in 0..nq {
+            let query = sys.dataset.query(q);
+            let out = p.query(query);
+            r += recall_at_k(&out.topk, &flat.search_exact(query, 10), 10);
+        }
+        recalls.push(r / nq as f64);
+    }
+    assert!(
+        recalls[2] >= recalls[0] - 1e-9,
+        "full refinement {} < tight filter {}",
+        recalls[2],
+        recalls[0]
+    );
+    // Full-ratio FaTRQ == baseline refinement (every candidate fetched).
+    let base = Pipeline::new(&sys).with_mode(RefineMode::Baseline);
+    let mut r_base = 0.0;
+    for q in 0..nq {
+        let query = sys.dataset.query(q);
+        r_base += recall_at_k(&base.query(query).topk, &flat.search_exact(query, 10), 10);
+    }
+    assert!((recalls[2] - r_base / nq as f64).abs() < 1e-9);
+}
+
+#[test]
+fn breakdown_totals_are_consistent() {
+    let sys = build_system(&cfg(IndexKind::Ivf)).unwrap();
+    let p = Pipeline::new(&sys);
+    let out = p.query(sys.dataset.query(0));
+    let bd = out.breakdown;
+    let sum = bd.traversal_ns + bd.far_ns + bd.refine_compute_ns + bd.ssd_ns + bd.rerank_ns;
+    assert!((sum - bd.total_ns()).abs() < 1e-6);
+    assert!(bd.refine_share() > 0.0 && bd.refine_share() < 1.0);
+    assert_eq!(bd.candidates, 120);
+}
+
+#[test]
+fn results_deterministic_across_runs() {
+    let sys = build_system(&cfg(IndexKind::Ivf)).unwrap();
+    let p = Pipeline::new(&sys);
+    let a = p.query(sys.dataset.query(3));
+    let b = p.query(sys.dataset.query(3));
+    assert_eq!(a.topk, b.topk);
+}

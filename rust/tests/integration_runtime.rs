@@ -1,0 +1,136 @@
+//! Integration: the XLA/PJRT runtime against native rust compute —
+//! differential testing of all three AOT executables on real system data.
+//!
+//! Requires `make artifacts` (skips with a notice when absent, so plain
+//! `cargo test` stays green in a fresh checkout).
+
+use fatrq::config::{
+    DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, SystemConfig,
+};
+use fatrq::coordinator::build_system;
+use fatrq::refine::ProgressiveEstimator;
+use fatrq::runtime::XlaRuntime;
+use fatrq::util::l2_sq;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.toml").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime integration tests: run `make artifacts` first");
+        None
+    }
+}
+
+/// A 768-D system matching the compiled artifact shapes.
+fn sys_768() -> fatrq::coordinator::BuiltSystem {
+    let cfg = SystemConfig {
+        dataset: DatasetConfig {
+            dim: 768,
+            count: 2000,
+            clusters: 16,
+            noise: 0.35,
+            query_noise: 1.0,
+            queries: 4,
+            seed: 99,
+        },
+        quant: QuantConfig { pq_m: 96, pq_nbits: 8, kmeans_iters: 3, train_sample: 1024 },
+        index: IndexConfig { kind: IndexKind::Ivf, nlist: 16, nprobe: 8, ..Default::default() },
+        refine: RefineConfig { candidates: 64, k: 10, calib_sample: 0.02, ..Default::default() },
+        ..Default::default()
+    };
+    build_system(&cfg).unwrap()
+}
+
+#[test]
+fn rerank_block_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::load(dir).unwrap();
+    let sys = sys_768();
+    let q = sys.dataset.query(0);
+    // 100 vectors exercises the padding path (rerank_n = 64 -> 2 blocks).
+    let n = 100usize;
+    let mut vectors = vec![0f32; n * 768];
+    for i in 0..n {
+        vectors[i * 768..(i + 1) * 768].copy_from_slice(sys.dataset.vector(i));
+    }
+    let got = rt.rerank_block(q, &vectors).unwrap();
+    assert_eq!(got.len(), n);
+    for i in 0..n {
+        let native = l2_sq(q, sys.dataset.vector(i));
+        assert!(
+            (got[i] - native).abs() < 1e-3 * native.max(1.0),
+            "row {i}: xla {} native {native}",
+            got[i]
+        );
+    }
+}
+
+#[test]
+fn refine_block_matches_host_estimator() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::load(dir).unwrap();
+    let sys = sys_768();
+    let est = ProgressiveEstimator::new(&sys.trq, sys.cal.clone());
+    let q = sys.dataset.query(1);
+    let cands = sys.index.as_ann().search(q, 64);
+    let d0: Vec<f32> = cands.iter().map(|c| c.dist).collect();
+    let mut packed = Vec::new();
+    let (mut scale, mut cross, mut dn) = (Vec::new(), Vec::new(), Vec::new());
+    for c in &cands {
+        let id = c.id as usize;
+        packed.extend_from_slice(sys.trq.packed_row(id));
+        scale.push(sys.trq.scale[id]);
+        cross.push(sys.trq.cross[id]);
+        dn.push(sys.trq.dnorm_sq[id]);
+    }
+    let got = rt
+        .refine_block(q, &sys.cal.w, &d0, &packed, &scale, &cross, &dn)
+        .unwrap();
+    assert_eq!(got.len(), cands.len());
+    for (j, c) in cands.iter().enumerate() {
+        let native = est.estimate(q, c.id as usize, c.dist);
+        assert!(
+            (got[j] - native).abs() < 1e-2 + 1e-3 * native.abs(),
+            "cand {j}: xla {} native {native}",
+            got[j]
+        );
+    }
+}
+
+#[test]
+fn coarse_scan_matches_native_adc() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::load(dir).unwrap();
+    let sys = sys_768();
+    let q = sys.dataset.query(2);
+    let lut = sys.pq.adc_table(q);
+    // Scan the first 500 codes (exercises tail padding, scan_n = 4096).
+    let n = 500usize;
+    let codes = &sys.codes[..n * sys.pq.m];
+    let got = rt.coarse_scan(&lut, codes).unwrap();
+    assert_eq!(got.len(), n);
+    let mut native = vec![0f32; n];
+    sys.pq.adc_scan(&lut, codes, &mut native);
+    for i in 0..n {
+        assert!(
+            (got[i] - native[i]).abs() < 1e-2 + 1e-3 * native[i].abs(),
+            "code {i}: xla {} native {}",
+            got[i],
+            native[i]
+        );
+    }
+}
+
+#[test]
+fn manifest_validates_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::load(dir).unwrap();
+    let m = rt.manifest;
+    assert_eq!(m.dim, 768);
+    assert_eq!(m.packed_bytes, 154);
+    // Wrong-shape inputs must be rejected, not silently mis-executed.
+    assert!(rt.rerank_block(&vec![0f32; 100], &vec![0f32; 768]).is_err());
+    assert!(rt.coarse_scan(&vec![0f32; 7], &[0u8; 96]).is_err());
+}

@@ -1,0 +1,104 @@
+//! Integration: the tiered memory manager + device simulators composing
+//! the paper's Fig 3 layout, with capacity pressure and access accounting.
+
+use fatrq::config::SimConfig;
+use fatrq::simulator::{FarMemoryDevice, SsdSim};
+use fatrq::tiering::{Tier, TierCapacities, TieredMemory};
+
+/// Place the paper's layout for a 1M x 768-D corpus and verify tier math.
+#[test]
+fn paper_layout_fits_and_accounts() {
+    let sim = SimConfig::default();
+    let mut tm = TieredMemory::new(&sim, TierCapacities::default());
+    let n: u64 = 1_000_000;
+    // Fast: PQ codes (96 B) + codebooks.
+    tm.place("pq_codes", Tier::Fast, n * 96).unwrap();
+    tm.place("pq_codebooks", Tier::Fast, 96 * 256 * 8 * 4).unwrap();
+    // Far: TRQ records (162 B each, the §V-C number).
+    tm.place("trq_records", Tier::Far, n * 162).unwrap();
+    // Storage: full vectors (3 KiB each).
+    tm.place("vectors", Tier::Storage, n * 768 * 4).unwrap();
+
+    assert!(tm.used(Tier::Fast) < 200 << 20, "fast tier should be ~96 MB");
+    assert_eq!(tm.used(Tier::Far), 162_000_000);
+    // The paper's storage-efficiency claim: TRQ far-memory footprint is
+    // 2.4x smaller than 4-bit SQ residuals (384+8 B) would need.
+    let sq4 = n * (384 + 8);
+    assert!(
+        sq4 as f64 / tm.used(Tier::Far) as f64 > 2.3,
+        "storage efficiency {}",
+        sq4 as f64 / tm.used(Tier::Far) as f64
+    );
+}
+
+#[test]
+fn capacity_pressure_rejects_overflow() {
+    let sim = SimConfig::default();
+    // A deliberately tiny far tier: 100 MB.
+    let caps = TierCapacities { fast: 1 << 30, far: 100 << 20, storage: 0 };
+    let mut tm = TieredMemory::new(&sim, caps);
+    // 1M records of 162 B = 162 MB does NOT fit.
+    assert!(tm.place("trq", Tier::Far, 162_000_000).is_err());
+    // 500k records do.
+    tm.place("trq", Tier::Far, 81_000_000).unwrap();
+}
+
+#[test]
+fn query_access_pattern_cost_ordering() {
+    // One refinement round: 320 far reads (162 B) must be far cheaper than
+    // 320 SSD reads (3 KB) — the core premise of the paper.
+    let sim = SimConfig::default();
+    let mut far = FarMemoryDevice::new(&sim);
+    let mut far_done = 0.0f64;
+    for i in 0..320u64 {
+        far_done = far_done.max(far.host_read(i * 162, 162, 0.0));
+    }
+    let mut ssd = SsdSim::new(&sim);
+    let mut ssd_done = 0.0f64;
+    for _ in 0..320 {
+        ssd_done = ssd_done.max(ssd.read(3072, 0.0));
+    }
+    assert!(
+        far_done * 5.0 < ssd_done,
+        "far {far_done:.0} ns !<< ssd {ssd_done:.0} ns"
+    );
+}
+
+#[test]
+fn tier_stats_track_reads() {
+    let sim = SimConfig::default();
+    let mut tm = TieredMemory::new(&sim, TierCapacities::default());
+    tm.place("trq", Tier::Far, 1 << 20).unwrap();
+    tm.place("vec", Tier::Storage, 1 << 30).unwrap();
+    for i in 0..100u64 {
+        tm.read("trq", i * 162, 162, true).unwrap();
+    }
+    for _ in 0..10 {
+        tm.read("vec", 0, 3072, false).unwrap();
+    }
+    assert_eq!(tm.stats[&Tier::Far].accesses, 100);
+    assert_eq!(tm.stats[&Tier::Far].bytes, 16_200);
+    assert_eq!(tm.stats[&Tier::Storage].accesses, 10);
+    tm.reset_stats();
+    assert_eq!(tm.stats[&Tier::Far].accesses, 0);
+}
+
+#[test]
+fn sequential_trq_layout_beats_random() {
+    // The columnar TRQ arena (Fig 3) gives row-buffer locality; random
+    // placement of the same records would hit DRAM conflicts.
+    let sim = SimConfig::default();
+    let mut dev = FarMemoryDevice::new(&sim);
+    let seq = dev.stream_records(0, 162, 2000, 0.0, true);
+    dev.reset();
+    let mut rng = fatrq::util::rng::Rng::new(5);
+    let mut rand_done = 0.0f64;
+    for _ in 0..2000 {
+        let addr = (rng.next_u64() % (1 << 31)) / 162 * 162;
+        rand_done = rand_done.max(dev.local_read(addr, 162, 0.0));
+    }
+    assert!(
+        seq < rand_done,
+        "sequential {seq:.0} ns !< random {rand_done:.0} ns"
+    );
+}

@@ -1,0 +1,234 @@
+//! Property-based invariants over the coordinator's core state machines
+//! (routing, ranking, filtering, codecs), via the in-repo mini property
+//! harness (`fatrq::util::prop` — no proptest crate offline).
+
+use fatrq::quant::pack::{pack_ternary, packed_len, unpack_ternary};
+use fatrq::quant::trq::{encode_record, estimate_qdot, qdot_packed, ternary_encode};
+use fatrq::refine::filter::{filter_top_ratio, provable_cutoff};
+use fatrq::util::prop::{forall, vec_gauss, Config};
+use fatrq::util::rng::Rng;
+use fatrq::util::topk::{Scored, TopK};
+use fatrq::util::{dot, norm};
+
+#[test]
+fn prop_topk_matches_full_sort() {
+    forall(
+        Config { cases: 200, seed: 1, max_size: 400 },
+        |rng: &mut Rng, size: usize| -> Vec<f32> {
+            (0..size.max(1)).map(|_| rng.f32() * 100.0).collect()
+        },
+        |dists| {
+            let k = (dists.len() / 3).max(1);
+            let mut t = TopK::new(k);
+            for (i, &d) in dists.iter().enumerate() {
+                t.push(d, i as u64);
+            }
+            let got: Vec<f32> = t.into_sorted().iter().map(|s| s.dist).collect();
+            let mut want = dists.clone();
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            want.truncate(k);
+            got == want
+        },
+    );
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    forall(
+        Config { cases: 150, seed: 2, max_size: 800 },
+        |rng: &mut Rng, size: usize| -> Vec<i8> {
+            (0..size.max(1)).map(|_| rng.below(3) as i8 - 1).collect()
+        },
+        |trits| {
+            let mut packed = vec![0u8; packed_len(trits.len())];
+            pack_ternary(trits, &mut packed);
+            let mut back = vec![0i8; trits.len()];
+            unpack_ternary(&packed, trits.len(), &mut back);
+            back == *trits
+        },
+    );
+}
+
+#[test]
+fn prop_ternary_alignment_bounds() {
+    // Alignment must be in (0, 1] for nonzero residuals, and the encoded
+    // inner product must equal alignment * ||delta||.
+    forall(
+        Config { cases: 120, seed: 3, max_size: 256 },
+        vec_gauss(64),
+        |delta| {
+            let code = ternary_encode(delta);
+            let n = norm(delta);
+            if n < 1e-6 {
+                return code.k == 0;
+            }
+            if !(code.alignment > 0.0 && code.alignment <= 1.0 + 1e-6) {
+                return false;
+            }
+            // <e_delta, e_code> recomputed from the trits:
+            let ip: f32 = delta
+                .iter()
+                .zip(&code.trits)
+                .map(|(&d, &t)| d * t as f32)
+                .sum();
+            let recomputed = ip / ((code.k as f32).sqrt() * n);
+            (recomputed - code.alignment).abs() < 1e-4
+        },
+    );
+}
+
+#[test]
+fn prop_ternary_code_is_argmax_over_neighbors() {
+    // Local optimality: flipping any single trit to another value cannot
+    // improve the normalized inner product (necessary condition of the
+    // global optimum the O(D log D) algorithm claims).
+    forall(
+        Config { cases: 60, seed: 4, max_size: 64 },
+        vec_gauss(12),
+        |delta| {
+            let n = norm(delta);
+            if n < 1e-6 {
+                return true;
+            }
+            let e: Vec<f32> = delta.iter().map(|x| x / n).collect();
+            let code = ternary_encode(delta);
+            let obj = |trits: &[i8]| -> f32 {
+                let k: f32 = trits.iter().filter(|&&t| t != 0).count() as f32;
+                if k == 0.0 {
+                    return f32::MIN;
+                }
+                trits
+                    .iter()
+                    .zip(&e)
+                    .map(|(&t, &x)| t as f32 * x)
+                    .sum::<f32>()
+                    / k.sqrt()
+            };
+            let best = obj(&code.trits);
+            for i in 0..code.trits.len() {
+                for v in [-1i8, 0, 1] {
+                    if v == code.trits[i] {
+                        continue;
+                    }
+                    let mut alt = code.trits.clone();
+                    alt[i] = v;
+                    if obj(&alt) > best + 1e-5 {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_qdot_estimate_scales_with_query() {
+    forall(
+        Config { cases: 80, seed: 5, max_size: 128 },
+        vec_gauss(40),
+        |delta| {
+            let mut rng = Rng::new(dot(delta, delta).to_bits() as u64);
+            let q: Vec<f32> = (0..delta.len()).map(|_| rng.gaussian_f32()).collect();
+            let rec = encode_record(delta, &vec![0.0; delta.len()]);
+            let base = estimate_qdot(&q, &rec, delta.len());
+            let q2: Vec<f32> = q.iter().map(|x| 3.0 * x).collect();
+            let scaled = estimate_qdot(&q2, &rec, delta.len());
+            (scaled - 3.0 * base).abs() < 1e-3 * base.abs().max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_qdot_packed_counts_nonzeros() {
+    forall(
+        Config { cases: 80, seed: 6, max_size: 256 },
+        vec_gauss(50),
+        |delta| {
+            let code = ternary_encode(delta);
+            let mut packed = vec![0u8; packed_len(delta.len())];
+            pack_ternary(&code.trits, &mut packed);
+            let q = vec![1.0f32; delta.len()];
+            let (_, k) = qdot_packed(&q, &packed, delta.len());
+            k == code.k
+        },
+    );
+}
+
+#[test]
+fn prop_filter_invariants() {
+    // filter_top_ratio: keeps a prefix, at least k, at most all; the kept
+    // prefix is exactly the lowest-scored candidates.
+    forall(
+        Config { cases: 150, seed: 7, max_size: 300 },
+        |rng: &mut Rng, size: usize| -> (Vec<f32>, f64, usize) {
+            let n = size.max(2);
+            let mut d: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (d, rng.f64(), 1 + rng.below(n))
+        },
+        |(dists, ratio, k)| {
+            let refined: Vec<Scored> = dists
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| Scored::new(d, i as u64))
+                .collect();
+            let kept = filter_top_ratio(&refined, *ratio, *k);
+            kept.len() >= (*k).min(refined.len())
+                && kept.len() <= refined.len()
+                && kept == refined[..kept.len()]
+        },
+    );
+}
+
+#[test]
+fn prop_provable_cutoff_never_drops_topk() {
+    forall(
+        Config { cases: 150, seed: 8, max_size: 300 },
+        |rng: &mut Rng, size: usize| -> (Vec<f32>, f32) {
+            let n = size.max(2);
+            let mut d: Vec<f32> = (0..n).map(|_| rng.f32() * 10.0).collect();
+            d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (d, rng.f32())
+        },
+        |(dists, margin)| {
+            let refined: Vec<Scored> = dists
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| Scored::new(d, i as u64))
+                .collect();
+            let k = (dists.len() / 4).max(1);
+            let kept = provable_cutoff(&refined, k, *margin);
+            // Must keep at least k, keep a prefix, and with zero margin the
+            // kth candidate must still be present.
+            kept.len() >= k.min(refined.len()) && kept == refined[..kept.len()]
+        },
+    );
+}
+
+#[test]
+fn prop_estimator_unbiased_on_isotropic_residuals() {
+    // Statistical: over random isotropic residuals, the mean signed error
+    // of the qdot estimator is near zero relative to its scale (§III-B's
+    // zero-expectation orthogonal-term claim).
+    let dim = 96;
+    let mut rng = Rng::new(99);
+    let mut err_sum = 0.0f64;
+    let mut mag_sum = 0.0f64;
+    let trials = 600;
+    for _ in 0..trials {
+        let delta: Vec<f32> = (0..dim).map(|_| 0.2 * rng.gaussian_f32()).collect();
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let rec = encode_record(&delta, &vec![0.0; dim]);
+        let est = estimate_qdot(&q, &rec, dim);
+        let truth = dot(&q, &delta);
+        err_sum += (est - truth) as f64;
+        mag_sum += (truth as f64).abs();
+    }
+    let bias = err_sum / trials as f64;
+    let scale = mag_sum / trials as f64;
+    assert!(
+        bias.abs() < 0.1 * scale,
+        "bias {bias:.5} vs mean |signal| {scale:.5}"
+    );
+}
