@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
             k: 10,
             filter_ratio: 0.2,
             calib_sample: 0.003,
+            ..Default::default()
         },
         ..Default::default()
     };

@@ -15,10 +15,12 @@
 use fatrq::config::{
     DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
 };
-use fatrq::coordinator::{build_system, ground_truth, run_batch, Pipeline};
+use fatrq::coordinator::{build_system, ground_truth, Pipeline, QueryEngine};
+use fatrq::metrics::{recall_at_k, LatencyStats};
 use fatrq::runtime::XlaRuntime;
 use fatrq::util::l2_sq;
 use std::path::Path;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let scale: usize = std::env::var("RAG_SCALE")
@@ -53,6 +55,7 @@ fn main() -> anyhow::Result<()> {
             k: 10,
             filter_ratio: 0.1,
             calib_sample: 0.003, // the paper's 0.3%
+            ..Default::default()
         },
         ..Default::default()
     };
@@ -115,30 +118,54 @@ fn main() -> anyhow::Result<()> {
         Err(e) => println!("(artifacts not available, native-only run: {e})"),
     }
 
-    // --- Serve the full query load in each mode ---
+    // --- Serve the full query load in each mode, through the persistent
+    // engine: one thread pool + per-worker scratch for all runs ---
     println!("\ncomputing exact ground truth...");
     let truth = ground_truth(&sys, 10);
     let threads = fatrq::util::threadpool::default_threads();
+    let sys = Arc::new(sys);
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), threads);
     println!(
-        "\n{:>10} {:>9} {:>11} {:>11} {:>11} {:>9} {:>9}",
-        "mode", "recall@10", "p50(us)", "p99(us)", "mean(us)", "qps", "ssd/q"
+        "\n{:>12} {:>9} {:>11} {:>11} {:>11} {:>9} {:>9} {:>7} {:>7}",
+        "mode", "recall@10", "p50(us)", "p99(us)", "mean(us)", "model-qps", "wall-qps", "far/q", "ssd/q"
     );
     let mut base_lat = 0.0;
-    for mode in [RefineMode::Baseline, RefineMode::FatrqSw, RefineMode::FatrqHw] {
-        let rep = run_batch(&sys, mode, &truth, threads);
+    for (label, mode, early_exit) in [
+        ("baseline", RefineMode::Baseline, false),
+        ("fatrq-sw", RefineMode::FatrqSw, false),
+        ("fatrq-hw", RefineMode::FatrqHw, false),
+        ("fatrq-hw+ee", RefineMode::FatrqHw, true),
+    ] {
+        let params = engine.params().with_mode(mode).with_early_exit(early_exit);
+        let wall0 = std::time::Instant::now();
+        let outs = engine.run_with(&params, &sys.dataset.queries);
+        let wall_s = wall0.elapsed().as_secs_f64();
+        let nq = outs.len();
+        let mut lat = LatencyStats::default();
+        let mut recall = 0.0;
+        let (mut far_q, mut ssd_q) = (0usize, 0usize);
+        for (q, out) in outs.iter().enumerate() {
+            recall += recall_at_k(&out.topk, &truth[q], 10);
+            lat.record(out.breakdown.total_ns());
+            far_q += out.breakdown.far_reads;
+            ssd_q += out.breakdown.ssd_reads;
+        }
+        let mean = lat.mean();
         if mode == RefineMode::Baseline {
-            base_lat = rep.mean_latency_ns;
+            base_lat = mean;
         }
         println!(
-            "{:>10} {:>9.4} {:>11.1} {:>11.1} {:>11.1} {:>9.0} {:>9}   ({:.2}x)",
-            rep.mode,
-            rep.mean_recall,
-            rep.p50_ns / 1e3,
-            rep.p99_ns / 1e3,
-            rep.mean_latency_ns / 1e3,
-            rep.qps,
-            rep.breakdown.ssd_reads,
-            base_lat / rep.mean_latency_ns
+            "{:>12} {:>9.4} {:>11.1} {:>11.1} {:>11.1} {:>9.0} {:>9.0} {:>7} {:>7}   ({:.2}x)",
+            label,
+            recall / nq as f64,
+            lat.p50() / 1e3,
+            lat.p99() / 1e3,
+            mean / 1e3,
+            threads as f64 * 1e9 / mean.max(1e-9),
+            nq as f64 / wall_s.max(1e-12),
+            far_q / nq,
+            ssd_q / nq,
+            base_lat / mean.max(1e-9)
         );
     }
     println!("\ndone.");

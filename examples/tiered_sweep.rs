@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
             k: 10,
             filter_ratio: 0.25,
             calib_sample: 0.01,
+            ..Default::default()
         },
         ..Default::default()
     };

@@ -60,15 +60,22 @@ fn main() {
             "mode",
             "achieved recall",
             "cands",
+            "far/query",
             "ssd/query",
             "latency (us)",
             "qps (pipelined)",
+            "qps (wall, 1 core)",
             "norm throughput",
         ]);
         for target in [0.85, 0.90, 0.95] {
             let mut base_qps = None;
-            for mode in [RefineMode::Baseline, RefineMode::FatrqSw, RefineMode::FatrqHw] {
-                match bs::tune_to_recall(&sys, mode, &truth, target, threads) {
+            for (mode, early_exit, label) in [
+                (RefineMode::Baseline, false, "baseline".to_string()),
+                (RefineMode::FatrqSw, false, "fatrq-sw".to_string()),
+                (RefineMode::FatrqHw, false, "fatrq-hw".to_string()),
+                (RefineMode::FatrqHw, true, "fatrq-hw+ee".to_string()),
+            ] {
+                match bs::tune_to_recall_opts(&sys, mode, &truth, target, threads, early_exit) {
                     Some(op) => {
                         let qps = pipeline_qps(&op.report, &sys.cfg.sim, mode, threads);
                         if mode == RefineMode::Baseline {
@@ -77,20 +84,24 @@ fn main() {
                         let norm = base_qps.map(|b| qps / b).unwrap_or(1.0);
                         bs::row(&[
                             format!("{:.0}%", target * 100.0),
-                            mode.name().to_string(),
+                            label,
                             format!("{:.3}", op.recall),
                             op.candidates.to_string(),
+                            op.report.breakdown.far_reads.to_string(),
                             op.report.breakdown.ssd_reads.to_string(),
                             format!("{:.1}", op.report.mean_latency_ns / 1e3),
                             format!("{qps:.0}"),
+                            format!("{:.0}", op.report.wall_qps),
                             format!("{norm:.2}x"),
                         ]);
                     }
                     None => {
                         bs::row(&[
                             format!("{:.0}%", target * 100.0),
-                            mode.name().to_string(),
+                            label,
                             "unreachable".into(),
+                            "-".into(),
+                            "-".into(),
                             "-".into(),
                             "-".into(),
                             "-".into(),

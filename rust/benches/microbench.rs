@@ -5,6 +5,10 @@
 //! cycle throughput. Wall-clock medians over repeated runs.
 
 use fatrq::accel::RefineEngine;
+use fatrq::config::{
+    DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
+};
+use fatrq::coordinator::{build_system, Pipeline, QueryEngine};
 use fatrq::quant::pack::{pack_ternary, packed_len, unpack_ternary};
 use fatrq::quant::trq::{qdot_packed, ternary_encode, TrqStore};
 use fatrq::quant::ProductQuantizer;
@@ -12,6 +16,7 @@ use fatrq::refine::{Calibration, ProgressiveEstimator};
 use fatrq::util::rng::Rng;
 use fatrq::util::topk::Scored;
 use std::hint::black_box;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn time_median<F: FnMut()>(mut f: F, iters: usize, reps: usize) -> f64 {
@@ -140,5 +145,65 @@ fn main() {
         "HW engine throughput: {:.1} M candidates/s ({} cycles/cand @1 GHz)",
         1e3 / (timing.ns / 320.0),
         timing.cycles / 320
+    );
+
+    // --- scratch-reusing engine vs the old per-query-allocation path ---
+    // Pipeline::query rebuilds SsdSim/FarMemoryDevice (2k+ bank states) and
+    // all working buffers on every call; the persistent engine resets one
+    // per-worker scratch instead. Same functional path, same mode.
+    println!("\n# serving path: per-query allocation vs reused scratch\n");
+    let cfg = SystemConfig {
+        dataset: DatasetConfig {
+            dim: 64,
+            count: 4000,
+            clusters: 32,
+            noise: 0.35,
+            query_noise: 1.0,
+            queries: 32,
+            seed: 12,
+        },
+        quant: QuantConfig { pq_m: 16, pq_nbits: 6, kmeans_iters: 6, train_sample: 2048 },
+        index: IndexConfig { kind: IndexKind::Ivf, nlist: 48, nprobe: 12, ..Default::default() },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqSw,
+            candidates: 100,
+            k: 10,
+            filter_ratio: 0.3,
+            calib_sample: 0.01,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let sys = Arc::new(build_system(&cfg).expect("microbench system"));
+    let nq = sys.dataset.num_queries();
+    let pipeline = Pipeline::new(&sys);
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 1);
+    let mut scratch = engine.scratch();
+
+    let legacy_ns = time_median(
+        || {
+            for q in 0..nq {
+                black_box(pipeline.query(sys.dataset.query(q)));
+            }
+        },
+        1,
+        9,
+    ) / nq as f64;
+    let reused_ns = time_median(
+        || {
+            for q in 0..nq {
+                black_box(engine.query_with_scratch(sys.dataset.query(q), &mut scratch));
+            }
+        },
+        1,
+        9,
+    ) / nq as f64;
+    println!("| path | ns/query | notes |");
+    println!("|---|---|---|");
+    println!("| Pipeline::query (fresh scratch/query) | {legacy_ns:.0} | old serving path |");
+    println!("| QueryEngine scratch reuse | {reused_ns:.0} | persistent engine hot path |");
+    println!(
+        "\nscratch reuse speedup on the refine/serve path: {:.2}x",
+        legacy_ns / reused_ns.max(1e-9)
     );
 }

@@ -17,8 +17,8 @@
 use crate::accel::pqueue::HwPriorityQueue;
 use crate::quant::pack::packed_len;
 use crate::quant::trq::TrqStore;
-use crate::refine::{Calibration, ProgressiveEstimator};
-use crate::util::topk::Scored;
+use crate::refine::{Calibration, FirstOrderCand, ProgressiveEstimator, ProgressiveOutcome};
+use crate::util::topk::{Scored, TopK};
 
 /// Decode LUT lanes: packed bytes processed per cycle.
 pub const DECODE_LANES: usize = 8;
@@ -34,6 +34,21 @@ pub struct RefineTiming {
     /// them with the memory simulator via max(compute, memory) overlap).
     pub cycles: u64,
     pub candidates: u64,
+    /// Nanoseconds at the device clock.
+    pub ns: f64,
+}
+
+/// Timing of a progressive early-exit batch: the engine only pays the
+/// unpack/accumulate stream for candidates it actually pulls from device
+/// DRAM; skipped candidates cost one bound-comparator cycle each at the
+/// queue front (paper §IV's early-stop datapath).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProgressiveRefineTiming {
+    pub cycles: u64,
+    /// Candidates whose first-order bound was checked.
+    pub considered: u64,
+    /// Candidates streamed + refined (== far-memory record reads).
+    pub streamed: u64,
     /// Nanoseconds at the device clock.
     pub ns: f64,
 }
@@ -96,6 +111,56 @@ impl<'a> RefineEngine<'a> {
         };
         (sorted, timing)
     }
+
+    /// Progressive early-exit refinement on-device (paper §I/§IV).
+    ///
+    /// `ordered` must be ascending by the first-order estimate `d1`; the
+    /// functional walk is shared bit-for-bit with the host estimator
+    /// ([`ProgressiveEstimator::refine_progressive_into`]), this method
+    /// adds the cycle accounting. Refined estimates of the streamed prefix
+    /// land in `out` (streaming order; callers sort), the running k-th
+    /// bound lives in `bound` — both reusable scratch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refine_progressive(
+        &self,
+        query: &[f32],
+        ordered: &[FirstOrderCand],
+        k: usize,
+        margin_first: f32,
+        margin_refined: f32,
+        bound: &mut TopK,
+        out: &mut Vec<Scored>,
+    ) -> (ProgressiveOutcome, ProgressiveRefineTiming) {
+        let stats = self.est.refine_progressive_into(
+            query,
+            ordered,
+            k,
+            margin_first,
+            margin_refined,
+            bound,
+            out,
+        );
+        let dim = self.est.store.dim;
+        let stream_cycles = self.cycles_per_candidate(dim);
+        // Streamed candidates pipeline exactly as in `refine` (the MAC dot
+        // and queue offer hide behind the next unpack stream); every
+        // considered candidate pays one bound-comparator cycle; the tail
+        // drains the pipeline once.
+        let mut cycles = stats.considered as u64
+            + stats.streamed as u64 * (stream_cycles - MAC_CYCLES - 1);
+        cycles += MAC_CYCLES + 1;
+        // Drain the refined prefix out of the queue: shift-out one entry
+        // per cycle after the comparator flush (mirrors HwPriorityQueue).
+        let depth = (k.max(2) as f64).log2().ceil() as u64;
+        cycles += stats.streamed as u64 + depth;
+        let timing = ProgressiveRefineTiming {
+            cycles,
+            considered: stats.considered as u64,
+            streamed: stats.streamed as u64,
+            ns: cycles as f64 / CLOCK_GHZ,
+        };
+        (stats, timing)
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +216,51 @@ mod tests {
         assert!(t200.cycles < 3 * t100.cycles);
         // 768-D unpack stream dominates: per-candidate cycles ~ 154/8.
         assert_eq!(engine.cycles_per_candidate(768), 20 + MAC_CYCLES + 1);
+    }
+
+    #[test]
+    fn progressive_cheaper_than_full_when_exiting_early() {
+        let (data, recon, store) = fixture();
+        let dim = store.dim;
+        let engine = RefineEngine::new(&store, Calibration::analytic());
+        let host = ProgressiveEstimator::new(&store, Calibration::analytic());
+        let q = &data[0..dim];
+        let cands: Vec<Scored> = (0..200)
+            .map(|i| Scored::new(l2_sq(q, &recon[i * dim..(i + 1) * dim]), i as u64))
+            .collect();
+        let mut ordered: Vec<FirstOrderCand> = cands
+            .iter()
+            .map(|c| FirstOrderCand {
+                id: c.id,
+                d0: c.dist,
+                d1: host.estimate_first_order(c.id as usize, c.dist),
+            })
+            .collect();
+        ordered.sort_by(|a, b| a.d1.partial_cmp(&b.d1).unwrap().then(a.id.cmp(&b.id)));
+
+        let mut bound = TopK::new(10);
+        let mut out = Vec::new();
+        let (stats, t_prog) =
+            engine.refine_progressive(q, &ordered, 10, 0.05, 0.05, &mut bound, &mut out);
+        let (_, t_full) = engine.refine(q, &cands, 200);
+        assert_eq!(stats.streamed as u64, t_prog.streamed);
+        assert_eq!(out.len(), stats.streamed);
+        if stats.streamed < cands.len() {
+            assert!(
+                t_prog.cycles < t_full.cycles,
+                "early exit {} cycles !< full {}",
+                t_prog.cycles,
+                t_full.cycles
+            );
+        }
+        // Functional parity with the host walk.
+        let mut host_out = Vec::new();
+        let mut host_bound = TopK::new(10);
+        let host_stats = host.refine_progressive_into(
+            q, &ordered, 10, 0.05, 0.05, &mut host_bound, &mut host_out,
+        );
+        assert_eq!(host_stats.streamed, stats.streamed);
+        assert_eq!(host_out, out);
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub fn bench_dataset_config() -> DatasetConfig {
         count: 30_000 * scale(),
         clusters: 128 * scale(),
         noise: 0.35,
-            query_noise: 2.0,
+        query_noise: 2.0,
         queries: 128,
         seed: 20_26,
     }
@@ -55,6 +55,7 @@ pub fn bench_config(kind: IndexKind) -> SystemConfig {
             k: 10,
             filter_ratio: 0.25,
             calib_sample: 0.01,
+            ..Default::default()
         },
         ..Default::default()
     }
@@ -90,8 +91,20 @@ pub fn tune_to_recall(
     target: f64,
     threads: usize,
 ) -> Option<OperatingPoint> {
+    tune_to_recall_opts(sys, mode, truth, target, threads, false)
+}
+
+/// [`tune_to_recall`] with the progressive early-exit refinement toggled.
+pub fn tune_to_recall_opts(
+    sys: &BuiltSystem,
+    mode: RefineMode,
+    truth: &[Vec<Scored>],
+    target: f64,
+    threads: usize,
+    early_exit: bool,
+) -> Option<OperatingPoint> {
     for &cands in &[40usize, 80, 120, 200, 320, 480, 640] {
-        let mut sys_view = Pipelined { sys, candidates: cands };
+        let mut sys_view = Pipelined { sys, candidates: cands, early_exit };
         let report = sys_view.run(mode, truth, threads);
         if report.mean_recall >= target {
             return Some(OperatingPoint {
@@ -112,6 +125,7 @@ pub fn tune_to_recall(
 struct Pipelined<'a> {
     sys: &'a BuiltSystem,
     candidates: usize,
+    early_exit: bool,
 }
 
 impl Pipelined<'_> {
@@ -121,8 +135,12 @@ impl Pipelined<'_> {
         truth: &[Vec<Scored>],
         threads: usize,
     ) -> crate::coordinator::BatchReport {
-        // run_batch reads candidates from cfg; clone a system view is
-        // heavy, so temporarily run through Pipeline directly.
+        // run_batch reads candidates from cfg and cloning a system view is
+        // heavy, so run through the pipeline façade directly — with one
+        // reused scratch, like the engine's workers. NOTE: this loop is
+        // sequential, so the report's `wall_qps` is single-core — NOT
+        // comparable to run_batch's multi-threaded wall_qps (fig6 labels
+        // its column accordingly). `qps` still models `threads` lanes.
         use crate::coordinator::Pipeline;
         use crate::metrics::{recall_at_k, LatencyStats};
         let sys = self.sys;
@@ -131,10 +149,12 @@ impl Pipelined<'_> {
         let mut lat = LatencyStats::default();
         let mut recall = 0.0;
         let mut agg = crate::coordinator::Breakdown::default();
-        let mut p = Pipeline::new(sys).with_mode(mode);
+        let mut p = Pipeline::new(sys).with_mode(mode).with_early_exit(self.early_exit);
         p.candidates = self.candidates;
+        let mut scratch = p.scratch();
+        let wall0 = std::time::Instant::now();
         for q in 0..nq {
-            let out = p.query(sys.dataset.query(q));
+            let out = p.query_with_scratch(sys.dataset.query(q), &mut scratch);
             recall += recall_at_k(&out.topk, &truth[q], k);
             lat.record(out.breakdown.total_ns());
             agg.traversal_ns += out.breakdown.traversal_ns;
@@ -146,6 +166,7 @@ impl Pipelined<'_> {
             agg.far_reads += out.breakdown.far_reads;
             agg.candidates += out.breakdown.candidates;
         }
+        let wall_ns = wall0.elapsed().as_nanos() as f64;
         let n = nq.max(1) as f64;
         agg.traversal_ns /= n;
         agg.far_ns /= n;
@@ -162,6 +183,8 @@ impl Pipelined<'_> {
             p50_ns: lat.p50(),
             p99_ns: lat.p99(),
             qps: if lat.mean() > 0.0 { threads as f64 * 1e9 / lat.mean() } else { 0.0 },
+            wall_qps: if wall_ns > 0.0 { nq as f64 * 1e9 / wall_ns } else { 0.0 },
+            wall_ns,
             breakdown: agg,
             mode: mode.name(),
         }

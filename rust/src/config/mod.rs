@@ -158,10 +158,20 @@ pub struct RefineConfig {
     /// Final top-k.
     pub k: usize,
     /// Fraction of the FaTRQ-ranked queue fetched from SSD (Fig 8's
-    /// filtering rate).
+    /// filtering rate). Ignored when `early_exit` is on.
     pub filter_ratio: f64,
     /// Fraction of the database sampled for calibration (paper: 0.003).
     pub calib_sample: f64,
+    /// True progressive refinement (paper §I/§IV): rank candidates by the
+    /// fast-memory first-order estimate, then stream TRQ codes from far
+    /// memory only until every remaining candidate is provably outside the
+    /// top-k. Survivors are chosen by `provable_cutoff` instead of
+    /// `filter_ratio`, so `far_reads < candidates` becomes observable.
+    pub early_exit: bool,
+    /// Quantile of |estimate − truth| over the calibration pairs used as
+    /// the provable-cutoff error margin (for both the first-order and the
+    /// refined estimator). Higher = safer, less pruning.
+    pub margin_quantile: f64,
 }
 
 impl Default for RefineConfig {
@@ -172,6 +182,8 @@ impl Default for RefineConfig {
             k: 10,
             filter_ratio: 0.25,
             calib_sample: 0.003,
+            early_exit: false,
+            margin_quantile: 0.95,
         }
     }
 }
@@ -323,6 +335,9 @@ impl SystemConfig {
         if !(0.0..=1.0).contains(&self.refine.calib_sample) {
             bail!("calib_sample must be in [0,1]");
         }
+        if !(0.0..=1.0).contains(&self.refine.margin_quantile) {
+            bail!("margin_quantile must be in [0,1]");
+        }
         Ok(())
     }
 }
@@ -399,6 +414,10 @@ fn apply_refine(c: &mut RefineConfig, t: &Table) -> Result<()> {
             "k" => c.k = need_usize(v, k)?,
             "filter_ratio" => c.filter_ratio = need_f64(v, k)?,
             "calib_sample" => c.calib_sample = need_f64(v, k)?,
+            "early_exit" => {
+                c.early_exit = v.as_bool().context("refine.early_exit must be a bool")?
+            }
+            "margin_quantile" => c.margin_quantile = need_f64(v, k)?,
             other => bail!("unknown key refine.{other}"),
         }
     }
@@ -481,6 +500,8 @@ mod tests {
             candidates = 200
             k = 10
             filter_ratio = 0.3
+            early_exit = true
+            margin_quantile = 0.98
 
             [sim]
             cxl_latency_ns = 271
@@ -494,6 +515,8 @@ mod tests {
         assert_eq!(cfg.dataset.dim, 128);
         assert_eq!(cfg.index.kind, IndexKind::Graph);
         assert_eq!(cfg.refine.mode, RefineMode::FatrqSw);
+        assert!(cfg.refine.early_exit);
+        assert_eq!(cfg.refine.margin_quantile, 0.98);
         assert_eq!(cfg.sim.cxl_latency_ns, 271.0);
         assert!(cfg.pipeline.use_xla);
     }
@@ -512,6 +535,8 @@ mod tests {
         assert!(SystemConfig::from_toml(bad2).is_err());
         let bad3 = "[refine]\ncandidates = 5\nk = 10";
         assert!(SystemConfig::from_toml(bad3).is_err());
+        let bad4 = "[refine]\nmargin_quantile = 1.5";
+        assert!(SystemConfig::from_toml(bad4).is_err());
     }
 
     #[test]

@@ -1,15 +1,21 @@
-//! Batched query driving: runs a query set through a pipeline across
-//! worker threads and aggregates latency/recall/throughput — the engine
-//! behind the Fig 6 harness and the serving example.
+//! Batched query driving: runs a query set through the shared engine core
+//! across pool workers and aggregates latency/recall/throughput — the
+//! driver behind the Fig 6 harness and the serving example.
+//!
+//! Each worker owns one reusable [`QueryScratch`] for the whole batch (no
+//! per-query simulator/buffer construction, no `Mutex<Option<..>>` per
+//! result — the per-query-state problem the engine refactor removed).
 
 use crate::config::RefineMode;
 use crate::coordinator::builder::BuiltSystem;
-use crate::coordinator::pipeline::{Breakdown, Pipeline};
+use crate::coordinator::engine::{run_on_pool, QueryParams, QueryScratch};
+use crate::coordinator::pipeline::Breakdown;
 use crate::index::FlatIndex;
 use crate::metrics::{recall_at_k, LatencyStats};
+use crate::util::threadpool::ThreadPool;
 use crate::util::topk::Scored;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// Aggregated serving results.
 #[derive(Clone, Debug, Default)]
@@ -20,15 +26,21 @@ pub struct BatchReport {
     pub mean_latency_ns: f64,
     pub p50_ns: f64,
     pub p99_ns: f64,
-    /// Throughput implied by mean latency with `parallelism` lanes.
+    /// Throughput implied by mean (simulated+measured) latency with
+    /// `parallelism` lanes — the paper-model number.
     pub qps: f64,
+    /// Measured wall-clock throughput of the serving loop (host compute
+    /// only; simulated device time is accounted, not waited on).
+    pub wall_qps: f64,
+    /// Wall-clock duration of the batch, ns.
+    pub wall_ns: f64,
     /// Mean per-stage breakdown.
     pub breakdown: Breakdown,
     pub mode: &'static str,
 }
 
-/// Run every dataset query through the pipeline in `mode`, on `threads`
-/// worker threads, scoring recall@k against `truth` (one list per query).
+/// Run every dataset query through the engine core in `mode`, on `threads`
+/// pool workers, scoring recall@k against `truth` (one list per query).
 pub fn run_batch(
     sys: &BuiltSystem,
     mode: RefineMode,
@@ -38,35 +50,24 @@ pub fn run_batch(
     let nq = sys.dataset.num_queries();
     assert_eq!(truth.len(), nq);
     let k = sys.cfg.refine.k;
-    let results: Vec<Mutex<Option<(f64, Breakdown, f64)>>> =
-        (0..nq).map(|_| Mutex::new(None)).collect();
-    let next = AtomicUsize::new(0);
     let threads = threads.max(1).min(nq.max(1));
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| {
-                let pipeline = Pipeline::new(sys).with_mode(mode);
-                loop {
-                    let q = next.fetch_add(1, Ordering::Relaxed);
-                    if q >= nq {
-                        break;
-                    }
-                    let out = pipeline.query(sys.dataset.query(q));
-                    let rec = recall_at_k(&out.topk, &truth[q], k);
-                    *results[q].lock().unwrap() =
-                        Some((rec, out.breakdown, out.breakdown.total_ns()));
-                }
-            });
-        }
-    });
+    let params = QueryParams::from_config(&sys.cfg).with_mode(mode);
+
+    let pool = ThreadPool::new(threads);
+    let scratches: Vec<Mutex<QueryScratch>> =
+        (0..threads).map(|_| Mutex::new(QueryScratch::new(&sys.cfg))).collect();
+
+    let wall0 = Instant::now();
+    let outcomes = run_on_pool(sys, &params, &pool, &scratches, &sys.dataset.queries);
+    let wall_ns = wall0.elapsed().as_nanos() as f64;
 
     let mut lat = LatencyStats::default();
     let mut recall_sum = 0.0;
     let mut agg = Breakdown::default();
-    for r in &results {
-        let (rec, bd, total) = r.lock().unwrap().expect("query completed");
-        recall_sum += rec;
-        lat.record(total);
+    for (q, out) in outcomes.iter().enumerate() {
+        recall_sum += recall_at_k(&out.topk, &truth[q], k);
+        lat.record(out.breakdown.total_ns());
+        let bd = &out.breakdown;
         agg.traversal_ns += bd.traversal_ns;
         agg.far_ns += bd.far_ns;
         agg.refine_compute_ns += bd.refine_compute_ns;
@@ -98,6 +99,8 @@ pub fn run_batch(
         } else {
             0.0
         },
+        wall_qps: if wall_ns > 0.0 { nq as f64 * 1e9 / wall_ns } else { 0.0 },
+        wall_ns,
         breakdown: agg,
         mode: mode.name(),
     }
@@ -112,7 +115,9 @@ pub fn ground_truth(sys: &BuiltSystem, k: usize) -> Vec<Vec<Scored>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, SystemConfig};
+    use crate::config::{
+        DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, SystemConfig,
+    };
     use crate::coordinator::builder::build_system;
 
     fn sys() -> BuiltSystem {
@@ -122,7 +127,7 @@ mod tests {
                 count: 2500,
                 clusters: 20,
                 noise: 0.35,
-            query_noise: 1.0,
+                query_noise: 1.0,
                 queries: 16,
                 seed: 9,
             },
@@ -150,6 +155,8 @@ mod tests {
         assert!(rep.mean_latency_ns > 0.0);
         assert!(rep.p99_ns >= rep.p50_ns);
         assert!(rep.qps > 0.0);
+        assert!(rep.wall_qps > 0.0, "wall-clock QPS must be measured");
+        assert!(rep.wall_ns > 0.0);
         assert_eq!(rep.mode, "fatrq-hw");
     }
 

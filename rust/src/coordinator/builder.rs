@@ -42,9 +42,14 @@ pub struct BuiltSystem {
     pub recon: Vec<f32>,
     pub trq: TrqStore,
     pub cal: Calibration,
-    /// 95th-percentile |estimate − truth| over calibration pairs — the
-    /// provable-cutoff margin.
+    /// |refined estimate − truth| at the configured `margin_quantile` over
+    /// calibration pairs — the provable-cutoff margin for the second-order
+    /// (TRQ-refined) estimator.
     pub margin: f32,
+    /// Same quantile for the fast-memory first-order estimator
+    /// `d̂₁ = d̂₀ + ‖δ‖²` — the lower-bound margin the early-exit walk uses
+    /// before any far-memory traffic.
+    pub margin_first: f32,
 }
 
 /// Build the full system from a config (synthesizes the dataset too).
@@ -107,7 +112,7 @@ pub fn build_system_with(cfg: &SystemConfig, dataset: Dataset) -> Result<BuiltSy
     // 4. Calibration (paper §III-E): sample ~calib_sample of the corpus,
     // harvest neighbors from the existing index, fit OLS on the refined-
     // feature rows against true distances.
-    let (cal, margin) = train_calibration(cfg, &dataset, &scorer, &index, &trq)?;
+    let (cal, margin, margin_first) = train_calibration(cfg, &dataset, &scorer, &index, &trq)?;
 
     Ok(BuiltSystem {
         cfg: cfg.clone(),
@@ -120,6 +125,7 @@ pub fn build_system_with(cfg: &SystemConfig, dataset: Dataset) -> Result<BuiltSy
         trq,
         cal,
         margin,
+        margin_first,
     })
 }
 
@@ -129,7 +135,7 @@ fn train_calibration(
     scorer: &PqScorer,
     index: &FrontIndex,
     trq: &TrqStore,
-) -> Result<(Calibration, f32)> {
+) -> Result<(Calibration, f32, f32)> {
     let n = dataset.count();
     let samples = ((n as f64 * cfg.refine.calib_sample).ceil() as usize)
         .clamp(24, 2048)
@@ -142,22 +148,31 @@ fn train_calibration(
     let est = ProgressiveEstimator::new(trq, Calibration::analytic());
     let mut a = Vec::with_capacity(samples * neighbors_per_sample * NUM_FEATURES);
     let mut d = Vec::with_capacity(samples * neighbors_per_sample);
+    let mut rows = Vec::with_capacity(neighbors_per_sample);
+    let mut feats = Vec::with_capacity(neighbors_per_sample * NUM_FEATURES);
     for &i in &ids {
         let x = dataset.vector(i);
         // "Leverage the existing index to identify approximate neighbors":
         // search with the sample itself as the query.
         let neigh = index.as_ann().search(x, neighbors_per_sample);
         let qs = scorer.for_query(x);
-        for cand in neigh {
-            let id = cand.id as usize;
-            let d0 = qs.score(id);
-            let f = est.features(x, id, d0);
-            a.extend_from_slice(&f);
-            d.push(l2_sq(x, dataset.vector(id)));
+        rows.clear();
+        rows.extend(
+            neigh
+                .iter()
+                .map(|cand| crate::util::topk::Scored::new(qs.score(cand.id as usize), cand.id)),
+        );
+        est.features_batch(x, &rows, &mut feats);
+        a.extend_from_slice(&feats);
+        for cand in &rows {
+            d.push(l2_sq(x, dataset.vector(cand.id as usize)));
         }
     }
     let cal = Calibration::fit(&a, &d)?;
-    // Margin: 95th percentile absolute residual of the *fitted* model.
+    // Margins: the configured quantile of |estimate − truth| over the
+    // calibration pairs, for the fitted second-order model and for the
+    // fast-memory first-order estimate d̂₁ = d̂₀ + ‖δ‖² (features [0] + [2]).
+    let q = cfg.refine.margin_quantile;
     let mut resid: Vec<f32> = (0..d.len())
         .map(|r| {
             let f: crate::refine::Features =
@@ -165,8 +180,15 @@ fn train_calibration(
             (cal.predict(&f) - d[r]).abs()
         })
         .collect();
-    let margin = margin_from_residuals(&mut resid, 0.95);
-    Ok((cal, margin))
+    let margin = margin_from_residuals(&mut resid, q);
+    let mut resid_first: Vec<f32> = (0..d.len())
+        .map(|r| {
+            let row = &a[r * NUM_FEATURES..(r + 1) * NUM_FEATURES];
+            (row[0] + row[2] - d[r]).abs()
+        })
+        .collect();
+    let margin_first = margin_from_residuals(&mut resid_first, q);
+    Ok((cal, margin, margin_first))
 }
 
 #[cfg(test)]
@@ -181,7 +203,7 @@ mod tests {
                 count: 3000,
                 clusters: 24,
                 noise: 0.35,
-            query_noise: 1.0,
+                query_noise: 1.0,
                 queries: 8,
                 seed: 3,
             },
@@ -205,6 +227,10 @@ mod tests {
         assert_eq!(sys.codes.len(), 3000 * 16);
         assert!(sys.cal.pairs > 100);
         assert!(sys.margin > 0.0);
+        assert!(sys.margin_first > 0.0);
+        // The refined estimator is strictly more informed than the
+        // first-order one, so its error margin must not be (much) larger.
+        assert!(sys.margin <= sys.margin_first * 1.5);
         assert!(sys.cal.rmse.is_finite());
     }
 

@@ -1,0 +1,537 @@
+//! The persistent serving engine.
+//!
+//! The original `Pipeline::query` rebuilt its device simulators, estimator
+//! and working buffers on every call, and `run_batch` spun up throwaway
+//! scoped threads with a `Mutex<Option<..>>` per result — per-query state
+//! that FusionANNS/COSMOS-class serving systems restructure their hot
+//! paths to avoid. [`QueryEngine`] owns everything long-lived instead:
+//!
+//! - an `Arc<BuiltSystem>` (index, TRQ store, calibration),
+//! - a [`ThreadPool`] of workers,
+//! - one [`QueryScratch`] per worker — resettable `SsdSim` /
+//!   `FarMemoryDevice` models and reusable candidate-ranking/survivor
+//!   buffers plus reusable `TopK`s — so the steady-state refinement path
+//!   performs no heap allocation beyond the returned top-k list. (Two
+//!   remaining per-query allocations are noted where they happen: the
+//!   front-stage `search` result, and the classic-mode HW ranking
+//!   returned by `RefineEngine::refine`.)
+//!
+//! It also hosts the **true progressive early-exit refinement**
+//! (`RefineConfig::early_exit`): phase 1 ranks candidates by the
+//! fast-memory first-order estimate `d̂₀ + ‖δ‖²` (zero far-memory
+//! traffic); phase 2 walks that ranking, streams packed TRQ codes from far
+//! memory only while a candidate's first-order lower bound stays within
+//! the running k-th refined bound (calibration-derived margins), and stops
+//! at the first provable exclusion — making `far_reads < candidates`
+//! observable in [`Breakdown`] for the first time.
+
+use crate::accel::RefineEngine;
+use crate::config::{RefineMode, SystemConfig};
+use crate::coordinator::builder::BuiltSystem;
+use crate::coordinator::pipeline::{Breakdown, QueryOutcome, GPU_SPEEDUP};
+use crate::refine::{
+    filter_top_ratio_len, provable_cutoff_len, FirstOrderCand, ProgressiveEstimator,
+};
+use crate::simulator::{FarMemoryDevice, SsdSim};
+use crate::util::threadpool::{default_threads, ThreadPool};
+use crate::util::topk::{Scored, TopK};
+use crate::util::l2_sq;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-query serving parameters, detached from the config so callers can
+/// sweep modes/depths without rebuilding the system.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QueryParams {
+    pub mode: RefineMode,
+    /// Candidate list length requested from the front stage.
+    pub candidates: usize,
+    /// Final top-k.
+    pub k: usize,
+    /// SSD filtering rate for the non-early-exit FaTRQ path.
+    pub filter_ratio: f64,
+    /// Progressive early-exit refinement (see module docs).
+    pub early_exit: bool,
+}
+
+impl QueryParams {
+    pub fn from_config(cfg: &SystemConfig) -> Self {
+        let r = &cfg.refine;
+        QueryParams {
+            mode: r.mode,
+            candidates: r.candidates,
+            k: r.k,
+            filter_ratio: r.filter_ratio,
+            early_exit: r.early_exit,
+        }
+    }
+
+    pub fn with_mode(mut self, mode: RefineMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_early_exit(mut self, on: bool) -> Self {
+        self.early_exit = on;
+        self
+    }
+}
+
+/// Reusable per-worker state: device models are `reset()` instead of
+/// reconstructed, buffers keep their capacity across queries.
+pub struct QueryScratch {
+    ssd: SsdSim,
+    far: FarMemoryDevice,
+    /// Phase-1 first-order ranking (early-exit path).
+    ordered: Vec<FirstOrderCand>,
+    /// Refined (second-order) estimates, sorted ascending after phase 2.
+    refined: Vec<Scored>,
+    /// Running k-th refined bound for the progressive walk.
+    bound: TopK,
+    /// Final exact top-k accumulator.
+    topk: TopK,
+}
+
+impl QueryScratch {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let cands = cfg.refine.candidates.max(1);
+        QueryScratch {
+            ssd: SsdSim::new(&cfg.sim),
+            far: FarMemoryDevice::new(&cfg.sim),
+            ordered: Vec::with_capacity(cands),
+            refined: Vec::with_capacity(cands),
+            bound: TopK::new(cfg.refine.k.max(1)),
+            topk: TopK::new(cfg.refine.k.max(1)),
+        }
+    }
+}
+
+/// Serve one query against `sys` with reusable `scratch`. This is the one
+/// hot path shared by [`QueryEngine`], the back-compat
+/// [`crate::coordinator::Pipeline`], and `run_batch`.
+pub(crate) fn execute_query(
+    sys: &BuiltSystem,
+    p: &QueryParams,
+    query: &[f32],
+    scratch: &mut QueryScratch,
+) -> QueryOutcome {
+    let mut bd = Breakdown::default();
+
+    // ---- Stage 1: front-stage traversal (the "GPU") ----
+    let t0 = Instant::now();
+    let cands = sys.index.as_ann().search(query, p.candidates);
+    bd.traversal_ns = t0.elapsed().as_nanos() as f64 / GPU_SPEEDUP;
+    bd.candidates = cands.len();
+
+    // ---- Stage 2+3: refinement + rerank ----
+    let topk = match p.mode {
+        RefineMode::Baseline => refine_baseline(sys, p, query, &cands, scratch, &mut bd),
+        RefineMode::FatrqSw => refine_fatrq(sys, p, query, &cands, false, scratch, &mut bd),
+        RefineMode::FatrqHw => refine_fatrq(sys, p, query, &cands, true, scratch, &mut bd),
+    };
+    QueryOutcome { topk, breakdown: bd }
+}
+
+/// Baseline: fetch EVERY candidate's full vector from SSD, exact rerank
+/// (what IVF-FAISS / CAGRA-cuVS do — paper §II-A).
+fn refine_baseline(
+    sys: &BuiltSystem,
+    p: &QueryParams,
+    query: &[f32],
+    cands: &[Scored],
+    s: &mut QueryScratch,
+    bd: &mut Breakdown,
+) -> Vec<Scored> {
+    let dim = sys.dataset.dim;
+    s.ssd.reset();
+    let mut done = 0.0f64;
+    for _ in cands {
+        done = s.ssd.read(dim * 4, 0.0).max(done);
+    }
+    bd.ssd_ns = done;
+    bd.ssd_reads = cands.len();
+
+    let t0 = Instant::now();
+    s.topk.reset(p.k);
+    for c in cands {
+        let d = l2_sq(query, sys.dataset.vector(c.id as usize));
+        s.topk.push(d, c.id);
+    }
+    bd.rerank_ns = t0.elapsed().as_nanos() as f64;
+    s.topk.take_sorted()
+}
+
+/// FaTRQ: refine with TRQ records from far memory, fetch only the
+/// filtered survivors from SSD. Two sub-modes:
+///
+/// - classic (`early_exit = false`): stream every candidate's record, rank
+///   by the refined estimate, keep the top `filter_ratio` slice;
+/// - progressive (`early_exit = true`): rank by the fast-memory
+///   first-order estimate, stream records only until provably outside the
+///   top-k, keep the `provable_cutoff` survivors.
+fn refine_fatrq(
+    sys: &BuiltSystem,
+    p: &QueryParams,
+    query: &[f32],
+    cands: &[Scored],
+    on_device: bool,
+    s: &mut QueryScratch,
+    bd: &mut Breakdown,
+) -> Vec<Scored> {
+    let dim = sys.dataset.dim;
+    let rec_bytes = sys.trq.record_bytes();
+
+    let keep = if p.early_exit {
+        // -- phase 1: first-order ranking, fast memory only --
+        let est = ProgressiveEstimator::new(&sys.trq, sys.cal.clone());
+        s.ordered.clear();
+        s.ordered.extend(cands.iter().map(|c| FirstOrderCand {
+            id: c.id,
+            d0: c.dist,
+            d1: est.estimate_first_order(c.id as usize, c.dist),
+        }));
+        s.ordered
+            .sort_unstable_by(|a, b| a.d1.partial_cmp(&b.d1).unwrap().then(a.id.cmp(&b.id)));
+
+        // -- phase 2: progressive walk, streaming only survivors --
+        let streamed = if on_device {
+            let engine = RefineEngine::new(&sys.trq, sys.cal.clone());
+            let (stats, timing) = engine.refine_progressive(
+                query,
+                &s.ordered,
+                p.k,
+                sys.margin_first,
+                sys.margin,
+                &mut s.bound,
+                &mut s.refined,
+            );
+            bd.refine_compute_ns = timing.ns;
+            stats.streamed
+        } else {
+            let t0 = Instant::now();
+            let stats = est.refine_progressive_into(
+                query,
+                &s.ordered,
+                p.k,
+                sys.margin_first,
+                sys.margin,
+                &mut s.bound,
+                &mut s.refined,
+            );
+            bd.refine_compute_ns = t0.elapsed().as_nanos() as f64;
+            stats.streamed
+        };
+
+        // Far-memory traffic: exactly the streamed prefix.
+        s.far.reset();
+        let mut far_done = 0.0f64;
+        for c in &s.ordered[..streamed] {
+            let addr = c.id * rec_bytes as u64;
+            let d = if on_device {
+                s.far.local_read(addr, rec_bytes, 0.0)
+            } else {
+                s.far.host_read(addr, rec_bytes, 0.0)
+            };
+            far_done = far_done.max(d);
+        }
+        bd.far_ns = far_done;
+        bd.far_reads = streamed;
+
+        s.refined
+            .sort_unstable_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+        provable_cutoff_len(&s.refined, p.k, sys.margin)
+    } else {
+        // -- classic path: stream every record --
+        s.far.reset();
+        let mut far_done = 0.0f64;
+        for c in cands {
+            let addr = c.id * rec_bytes as u64;
+            let d = if on_device {
+                s.far.local_read(addr, rec_bytes, 0.0)
+            } else {
+                s.far.host_read(addr, rec_bytes, 0.0)
+            };
+            far_done = far_done.max(d);
+        }
+        bd.far_ns = far_done;
+        bd.far_reads = cands.len();
+
+        if on_device {
+            // HW: the engine's cycle model provides the time. (refine()
+            // still allocates its queue + ranked Vec internally — the one
+            // classic-mode allocation scratch reuse doesn't yet remove.)
+            let engine = RefineEngine::new(&sys.trq, sys.cal.clone());
+            let (ranked, timing) = engine.refine(
+                query,
+                cands,
+                cands.len().min(crate::accel::pqueue::HW_QUEUE_CAPACITY),
+            );
+            bd.refine_compute_ns = timing.ns;
+            s.refined.clear();
+            s.refined.extend_from_slice(&ranked);
+        } else {
+            // SW: measured host time, refined in place in scratch.
+            let est = ProgressiveEstimator::new(&sys.trq, sys.cal.clone());
+            let t0 = Instant::now();
+            est.refine_into(query, cands, &mut s.refined);
+            bd.refine_compute_ns = t0.elapsed().as_nanos() as f64;
+        }
+        filter_top_ratio_len(s.refined.len(), p.filter_ratio, p.k)
+    };
+
+    // -- SSD fetch of survivors + exact rerank --
+    let survivors = &s.refined[..keep];
+    s.ssd.reset();
+    let mut ssd_done = 0.0f64;
+    for _ in survivors {
+        ssd_done = s.ssd.read(dim * 4, 0.0).max(ssd_done);
+    }
+    bd.ssd_ns = ssd_done;
+    bd.ssd_reads = survivors.len();
+
+    let t0 = Instant::now();
+    s.topk.reset(p.k);
+    for c in survivors {
+        let d = l2_sq(query, sys.dataset.vector(c.id as usize));
+        s.topk.push(d, c.id);
+    }
+    bd.rerank_ns = t0.elapsed().as_nanos() as f64;
+    s.topk.take_sorted()
+}
+
+/// The persistent query engine (see module docs).
+pub struct QueryEngine {
+    sys: Arc<BuiltSystem>,
+    pool: ThreadPool,
+    /// One scratch per pool worker, addressed by dispatch slot. The Mutex
+    /// is uncontended (slots are exclusive among concurrent callbacks);
+    /// it exists to keep the aliasing story safe.
+    scratches: Vec<Mutex<QueryScratch>>,
+    params: QueryParams,
+}
+
+impl QueryEngine {
+    /// Build from a shared system; thread count comes from
+    /// `cfg.pipeline.threads` (0 = auto).
+    pub fn new(sys: Arc<BuiltSystem>) -> Self {
+        let threads = match sys.cfg.pipeline.threads {
+            0 => default_threads(),
+            t => t,
+        };
+        Self::with_threads(sys, threads)
+    }
+
+    /// Build with an explicit worker count.
+    pub fn with_threads(sys: Arc<BuiltSystem>, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let pool = ThreadPool::new(threads);
+        let scratches = (0..threads)
+            .map(|_| Mutex::new(QueryScratch::new(&sys.cfg)))
+            .collect();
+        let params = QueryParams::from_config(&sys.cfg);
+        QueryEngine { sys, pool, scratches, params }
+    }
+
+    /// Override the default per-query parameters.
+    pub fn with_params(mut self, params: QueryParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn params(&self) -> &QueryParams {
+        &self.params
+    }
+
+    pub fn system(&self) -> &BuiltSystem {
+        &self.sys
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// A fresh scratch compatible with this engine (for callers driving
+    /// [`QueryEngine::query_with_scratch`] on their own thread).
+    pub fn scratch(&self) -> QueryScratch {
+        QueryScratch::new(&self.sys.cfg)
+    }
+
+    /// Serve one query on the caller's thread with caller-owned scratch.
+    pub fn query_with_scratch(&self, query: &[f32], scratch: &mut QueryScratch) -> QueryOutcome {
+        execute_query(&self.sys, &self.params, query, scratch)
+    }
+
+    /// Serve one query on the caller's thread (borrows worker 0's scratch).
+    pub fn query(&self, query: &[f32]) -> QueryOutcome {
+        let mut scratch = self.scratches[0].lock().unwrap();
+        execute_query(&self.sys, &self.params, query, &mut scratch)
+    }
+
+    /// Serve a batch: `queries` is `nq * dim` flattened, results come back
+    /// in query order. Queries are claimed dynamically across the pool;
+    /// each worker reuses its own scratch.
+    pub fn run(&self, queries: &[f32]) -> Vec<QueryOutcome> {
+        self.run_with(&self.params, queries)
+    }
+
+    /// [`QueryEngine::run`] with per-call parameter overrides (mode/depth
+    /// sweeps without rebuilding the engine).
+    pub fn run_with(&self, params: &QueryParams, queries: &[f32]) -> Vec<QueryOutcome> {
+        run_on_pool(&self.sys, params, &self.pool, &self.scratches, queries)
+    }
+}
+
+/// The one batch-orchestration core: dispatch `queries` (flattened
+/// `nq * dim`) across `pool`, one reusable scratch per dispatch slot,
+/// results in query order. Shared by [`QueryEngine::run_with`] and
+/// `run_batch` so slot handling, panic behaviour and result collection
+/// cannot drift apart.
+pub(crate) fn run_on_pool(
+    sys: &BuiltSystem,
+    params: &QueryParams,
+    pool: &ThreadPool,
+    scratches: &[Mutex<QueryScratch>],
+    queries: &[f32],
+) -> Vec<QueryOutcome> {
+    let dim = sys.dataset.dim;
+    assert_eq!(queries.len() % dim, 0, "queries must be nq * dim flattened");
+    assert!(scratches.len() >= pool.size().min(queries.len() / dim.max(1)));
+    let nq = queries.len() / dim;
+    let results: Vec<OnceLock<QueryOutcome>> = (0..nq).map(|_| OnceLock::new()).collect();
+    pool.dispatch(nq, |slot, q| {
+        let mut scratch = scratches[slot].lock().unwrap();
+        let out = execute_query(sys, params, &queries[q * dim..(q + 1) * dim], &mut scratch);
+        let _ = results[q].set(out);
+    });
+    results
+        .into_iter()
+        .map(|c| c.into_inner().expect("query completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, SystemConfig,
+    };
+    use crate::coordinator::builder::build_system;
+
+    fn sys(early_exit: bool) -> BuiltSystem {
+        let cfg = SystemConfig {
+            dataset: DatasetConfig {
+                dim: 64,
+                count: 4000,
+                clusters: 32,
+                noise: 0.35,
+                query_noise: 1.0,
+                queries: 24,
+                seed: 5,
+            },
+            quant: QuantConfig { pq_m: 16, pq_nbits: 6, kmeans_iters: 6, train_sample: 2048 },
+            index: IndexConfig {
+                kind: IndexKind::Ivf,
+                nlist: 48,
+                nprobe: 12,
+                ..Default::default()
+            },
+            refine: RefineConfig {
+                mode: RefineMode::FatrqHw,
+                candidates: 100,
+                k: 10,
+                filter_ratio: 0.3,
+                calib_sample: 0.01,
+                early_exit,
+                margin_quantile: 0.98,
+            },
+            ..Default::default()
+        };
+        build_system(&cfg).unwrap()
+    }
+
+    #[test]
+    fn engine_matches_single_query_path() {
+        let sys = Arc::new(sys(false));
+        let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+        let out_engine = engine.query(sys.dataset.query(0));
+        let mut scratch = engine.scratch();
+        let out_scratch = engine.query_with_scratch(sys.dataset.query(0), &mut scratch);
+        assert_eq!(out_engine.topk, out_scratch.topk);
+        assert_eq!(out_engine.breakdown.far_reads, out_scratch.breakdown.far_reads);
+        assert_eq!(out_engine.breakdown.ssd_reads, out_scratch.breakdown.ssd_reads);
+    }
+
+    #[test]
+    fn batch_results_ordered_and_complete() {
+        let sys = Arc::new(sys(false));
+        let engine = QueryEngine::with_threads(Arc::clone(&sys), 4);
+        let outs = engine.run(&sys.dataset.queries);
+        assert_eq!(outs.len(), sys.dataset.num_queries());
+        for (q, out) in outs.iter().enumerate() {
+            let solo = engine.query(sys.dataset.query(q));
+            assert_eq!(out.topk, solo.topk, "query {q}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic_across_thread_counts() {
+        // The determinism contract: identical top-k regardless of worker
+        // count or scratch history.
+        let sys = Arc::new(sys(true));
+        let e1 = QueryEngine::with_threads(Arc::clone(&sys), 1);
+        let e4 = QueryEngine::with_threads(Arc::clone(&sys), 4);
+        let a = e1.run(&sys.dataset.queries);
+        let b = e4.run(&sys.dataset.queries);
+        // Run e4 twice so its scratches have history.
+        let c = e4.run(&sys.dataset.queries);
+        assert_eq!(a.len(), b.len());
+        for q in 0..a.len() {
+            assert_eq!(a[q].topk, b[q].topk, "query {q} (1 vs 4 threads)");
+            assert_eq!(b[q].topk, c[q].topk, "query {q} (fresh vs reused scratch)");
+            assert_eq!(a[q].breakdown.far_reads, b[q].breakdown.far_reads);
+        }
+    }
+
+    #[test]
+    fn early_exit_reduces_far_reads_and_keeps_recall() {
+        use crate::index::FlatIndex;
+        use crate::metrics::recall_at_k;
+
+        let sys = Arc::new(sys(false));
+        let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+        let classic = engine.params().with_early_exit(false);
+        let progressive = engine.params().with_early_exit(true);
+        let outs_classic = engine.run_with(&classic, &sys.dataset.queries);
+        let outs_ee = engine.run_with(&progressive, &sys.dataset.queries);
+
+        let flat = FlatIndex::new(sys.dataset.base.clone(), sys.dataset.dim);
+        let nq = sys.dataset.num_queries();
+        let (mut far_classic, mut far_ee, mut cand_ee) = (0usize, 0usize, 0usize);
+        let (mut r_classic, mut r_ee) = (0.0f64, 0.0f64);
+        for q in 0..nq {
+            let truth = flat.search_exact(sys.dataset.query(q), 10);
+            r_classic += recall_at_k(&outs_classic[q].topk, &truth, 10);
+            r_ee += recall_at_k(&outs_ee[q].topk, &truth, 10);
+            far_classic += outs_classic[q].breakdown.far_reads;
+            far_ee += outs_ee[q].breakdown.far_reads;
+            cand_ee += outs_ee[q].breakdown.candidates;
+        }
+        r_classic /= nq as f64;
+        r_ee /= nq as f64;
+        // The headline observable: refinement stopped early, so far-memory
+        // traffic is strictly below both the candidate count and the
+        // classic stream-everything path.
+        assert!(
+            far_ee < cand_ee,
+            "early exit: far reads {far_ee} !< candidates {cand_ee}"
+        );
+        assert!(
+            far_ee < far_classic,
+            "early exit must stream fewer records ({far_ee} vs {far_classic})"
+        );
+        assert!(
+            r_ee >= r_classic - 0.01,
+            "early-exit recall {r_ee:.4} fell more than 1% below classic {r_classic:.4}"
+        );
+    }
+}

@@ -2,16 +2,23 @@
 //! serves queries through the tiered pipeline (paper Fig 5).
 //!
 //! - [`builder`] — trains PQ, encodes codes, builds the front-stage index,
-//!   the TRQ far-memory store, and the calibration model.
-//! - [`pipeline`] — the per-query dataflow: front-stage traversal → far-
-//!   memory progressive refinement (SW on host / HW on the CXL device) →
-//!   SSD fetch of survivors → exact rerank. Produces per-stage breakdowns.
-//! - [`batcher`] — multi-threaded query driving for throughput runs.
+//!   the TRQ far-memory store, and the calibration model (+ the provable-
+//!   cutoff error margins).
+//! - [`engine`] — the persistent serving engine: owns the thread pool and
+//!   per-worker reusable scratch, hosts the shared per-query dataflow
+//!   (front-stage traversal → far-memory progressive refinement, with
+//!   optional early exit → SSD fetch of survivors → exact rerank).
+//! - [`pipeline`] — the stateless per-call façade over the same dataflow
+//!   (back-compat + ablations). Produces per-stage breakdowns.
+//! - [`batcher`] — batch query driving over the engine core for
+//!   throughput runs; reports measured wall-clock QPS.
 
 pub mod batcher;
 pub mod builder;
+pub mod engine;
 pub mod pipeline;
 
 pub use batcher::{ground_truth, run_batch, BatchReport};
 pub use builder::{build_system, build_system_with, BuiltSystem};
+pub use engine::{QueryEngine, QueryParams, QueryScratch};
 pub use pipeline::{Breakdown, Pipeline, QueryOutcome};

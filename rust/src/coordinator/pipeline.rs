@@ -7,6 +7,7 @@
 //! FaTRQ refinement                              far memory (CXL)
 //!   SW: host reads records through the link; estimates on CPU
 //!   HW: the Type-2 device reads DRAM locally; estimates in the engine
+//!   early-exit: stream only until provably outside the top-k
 //!        │  filtered survivor list
 //!        ▼
 //! SSD fetch + exact rerank                      storage
@@ -18,12 +19,17 @@
 //! **measured** wall time. The front stage plays the role of the paper's
 //! A10 GPU: its measured host time is divided by `gpu_speedup` (the
 //! documented substitution) so the breakdown keeps the paper's shape.
+//!
+//! `Pipeline` is the stateless per-call façade kept for back-compat and
+//! ablations; the actual dataflow lives in [`crate::coordinator::engine`]
+//! (shared with the persistent [`crate::coordinator::QueryEngine`], which
+//! also reuses scratch instead of rebuilding it per query — prefer it on
+//! any serving path).
 
-use crate::accel::RefineEngine;
 use crate::config::RefineMode;
 use crate::coordinator::builder::BuiltSystem;
+use crate::coordinator::engine::{execute_query, QueryParams, QueryScratch};
 use crate::refine::{filter_top_ratio, Calibration, ProgressiveEstimator};
-use crate::simulator::{FarMemoryDevice, SsdSim};
 use crate::util::topk::{Scored, TopK};
 use crate::util::l2_sq;
 use std::time::Instant;
@@ -45,6 +51,9 @@ pub struct Breakdown {
     /// Exact rerank compute (measured host).
     pub rerank_ns: f64,
     pub candidates: usize,
+    /// TRQ records actually streamed from far memory. Equal to
+    /// `candidates` on the classic FaTRQ path; strictly smaller when
+    /// early-exit refinement prunes the stream.
     pub far_reads: usize,
     pub ssd_reads: usize,
 }
@@ -71,10 +80,13 @@ pub struct QueryOutcome {
 pub struct Pipeline<'a> {
     pub sys: &'a BuiltSystem,
     pub mode: RefineMode,
-    /// Filtering rate: fraction of the FaTRQ-ranked queue fetched from SSD.
+    /// Filtering rate: fraction of the FaTRQ-ranked queue fetched from SSD
+    /// (classic path only).
     pub filter_ratio: f64,
     pub k: usize,
     pub candidates: usize,
+    /// Progressive early-exit refinement (see `RefineConfig::early_exit`).
+    pub early_exit: bool,
 }
 
 impl<'a> Pipeline<'a> {
@@ -86,6 +98,7 @@ impl<'a> Pipeline<'a> {
             filter_ratio: r.filter_ratio,
             k: r.k,
             candidates: r.candidates,
+            early_exit: r.early_exit,
         }
     }
 
@@ -94,117 +107,37 @@ impl<'a> Pipeline<'a> {
         self
     }
 
-    /// Serve one query.
+    pub fn with_early_exit(mut self, on: bool) -> Self {
+        self.early_exit = on;
+        self
+    }
+
+    fn params(&self) -> QueryParams {
+        QueryParams {
+            mode: self.mode,
+            candidates: self.candidates,
+            k: self.k,
+            filter_ratio: self.filter_ratio,
+            early_exit: self.early_exit,
+        }
+    }
+
+    /// A scratch compatible with [`Pipeline::query_with_scratch`].
+    pub fn scratch(&self) -> QueryScratch {
+        QueryScratch::new(&self.sys.cfg)
+    }
+
+    /// Serve one query, building fresh scratch (the old per-query-state
+    /// behaviour; hot loops should hold a scratch and use
+    /// [`Pipeline::query_with_scratch`] or the persistent engine).
     pub fn query(&self, query: &[f32]) -> QueryOutcome {
-        let mut bd = Breakdown::default();
-
-        // ---- Stage 1: front-stage traversal (the "GPU") ----
-        let t0 = Instant::now();
-        let cands = self.sys.index.as_ann().search(query, self.candidates);
-        bd.traversal_ns = t0.elapsed().as_nanos() as f64 / GPU_SPEEDUP;
-        bd.candidates = cands.len();
-
-        // ---- Stage 2+3: refinement + rerank ----
-        match self.mode {
-            RefineMode::Baseline => self.refine_baseline(query, &cands, &mut bd),
-            RefineMode::FatrqSw => self.refine_fatrq(query, &cands, false, &mut bd),
-            RefineMode::FatrqHw => self.refine_fatrq(query, &cands, true, &mut bd),
-        }
-        .map(|topk| QueryOutcome { topk, breakdown: bd })
-        .expect("refinement cannot fail on valid ids")
+        let mut scratch = self.scratch();
+        self.query_with_scratch(query, &mut scratch)
     }
 
-    /// Baseline: fetch EVERY candidate's full vector from SSD, exact rerank
-    /// (what IVF-FAISS / CAGRA-cuVS do — paper §II-A).
-    fn refine_baseline(
-        &self,
-        query: &[f32],
-        cands: &[Scored],
-        bd: &mut Breakdown,
-    ) -> crate::Result<Vec<Scored>> {
-        let cfg = &self.sys.cfg;
-        let dim = self.sys.dataset.dim;
-        let mut ssd = SsdSim::new(&cfg.sim);
-        let mut done = 0.0f64;
-        for _ in cands {
-            done = ssd.read(dim * 4, 0.0).max(done);
-        }
-        bd.ssd_ns = done;
-        bd.ssd_reads = cands.len();
-
-        let t0 = Instant::now();
-        let mut top = TopK::new(self.k);
-        for c in cands {
-            let d = l2_sq(query, self.sys.dataset.vector(c.id as usize));
-            top.push(d, c.id);
-        }
-        bd.rerank_ns = t0.elapsed().as_nanos() as f64;
-        Ok(top.into_sorted())
-    }
-
-    /// FaTRQ: stream TRQ records from far memory, re-rank with the
-    /// progressive estimator, fetch only the filtered survivors from SSD.
-    fn refine_fatrq(
-        &self,
-        query: &[f32],
-        cands: &[Scored],
-        on_device: bool,
-        bd: &mut Breakdown,
-    ) -> crate::Result<Vec<Scored>> {
-        let cfg = &self.sys.cfg;
-        let dim = self.sys.dataset.dim;
-        let rec_bytes = self.sys.trq.record_bytes();
-
-        // -- far-memory streaming (simulated) --
-        let mut far = FarMemoryDevice::new(&cfg.sim);
-        let mut far_done = 0.0f64;
-        for c in cands {
-            let addr = c.id * rec_bytes as u64;
-            let d = if on_device {
-                far.local_read(addr, rec_bytes, 0.0)
-            } else {
-                far.host_read(addr, rec_bytes, 0.0)
-            };
-            far_done = far_done.max(d);
-        }
-        bd.far_ns = far_done;
-        bd.far_reads = cands.len();
-
-        // -- refinement compute --
-        let ranked: Vec<Scored> = if on_device {
-            // HW: the engine's cycle model provides the time.
-            let engine = RefineEngine::new(&self.sys.trq, self.sys.cal.clone());
-            let (ranked, timing) =
-                engine.refine(query, cands, cands.len().min(crate::accel::pqueue::HW_QUEUE_CAPACITY));
-            bd.refine_compute_ns = timing.ns;
-            ranked
-        } else {
-            // SW: measured host time.
-            let est = ProgressiveEstimator::new(&self.sys.trq, self.sys.cal.clone());
-            let t0 = Instant::now();
-            let ranked = est.refine_list(query, cands);
-            bd.refine_compute_ns = t0.elapsed().as_nanos() as f64;
-            ranked
-        };
-
-        // -- filter + SSD fetch + exact rerank --
-        let survivors = filter_top_ratio(&ranked, self.filter_ratio, self.k);
-        let mut ssd = SsdSim::new(&cfg.sim);
-        let mut ssd_done = 0.0f64;
-        for _ in &survivors {
-            ssd_done = ssd.read(dim * 4, 0.0).max(ssd_done);
-        }
-        bd.ssd_ns = ssd_done;
-        bd.ssd_reads = survivors.len();
-
-        let t0 = Instant::now();
-        let mut top = TopK::new(self.k);
-        for s in &survivors {
-            let d = l2_sq(query, self.sys.dataset.vector(s.id as usize));
-            top.push(d, s.id);
-        }
-        bd.rerank_ns = t0.elapsed().as_nanos() as f64;
-        Ok(top.into_sorted())
+    /// Serve one query with caller-owned reusable scratch.
+    pub fn query_with_scratch(&self, query: &[f32], scratch: &mut QueryScratch) -> QueryOutcome {
+        execute_query(self.sys, &self.params(), query, scratch)
     }
 
     /// Refine with an explicit calibration override (ablations).
@@ -229,7 +162,9 @@ impl<'a> Pipeline<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, SystemConfig};
+    use crate::config::{
+        DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, SystemConfig,
+    };
     use crate::coordinator::builder::build_system;
     use crate::index::FlatIndex;
     use crate::metrics::recall_at_k;
@@ -241,7 +176,7 @@ mod tests {
                 count: 4000,
                 clusters: 32,
                 noise: 0.35,
-            query_noise: 1.0,
+                query_noise: 1.0,
                 queries: 24,
                 seed: 5,
             },
@@ -258,6 +193,7 @@ mod tests {
                 k: 10,
                 filter_ratio: 0.3,
                 calib_sample: 0.01,
+                ..Default::default()
             },
             ..Default::default()
         };
@@ -342,5 +278,39 @@ mod tests {
             hw_far += hw.query(sys.dataset.query(q)).breakdown.far_ns;
         }
         assert!(hw_far < sw_far, "hw far {hw_far} !< sw far {sw_far}");
+    }
+
+    #[test]
+    fn early_exit_streams_fewer_records_than_classic() {
+        let sys = sys();
+        let classic = Pipeline::new(&sys).with_mode(RefineMode::FatrqHw);
+        let progressive = Pipeline::new(&sys)
+            .with_mode(RefineMode::FatrqHw)
+            .with_early_exit(true);
+        let (mut far_classic, mut far_ee, mut cands_ee) = (0usize, 0usize, 0usize);
+        for q in 0..sys.dataset.num_queries() {
+            let query = sys.dataset.query(q);
+            far_classic += classic.query(query).breakdown.far_reads;
+            let out = progressive.query(query);
+            far_ee += out.breakdown.far_reads;
+            cands_ee += out.breakdown.candidates;
+            assert!(out.topk.len() == 10);
+        }
+        assert!(far_ee < cands_ee, "far {far_ee} !< candidates {cands_ee}");
+        assert!(far_ee < far_classic, "far {far_ee} !< classic {far_classic}");
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        let sys = sys();
+        let p = Pipeline::new(&sys).with_mode(RefineMode::FatrqSw);
+        let mut scratch = p.scratch();
+        for q in 0..6 {
+            let query = sys.dataset.query(q);
+            let reused = p.query_with_scratch(query, &mut scratch);
+            let fresh = p.query(query);
+            assert_eq!(reused.topk, fresh.topk, "query {q}");
+            assert_eq!(reused.breakdown.ssd_reads, fresh.breakdown.ssd_reads);
+        }
     }
 }

@@ -16,12 +16,18 @@
 //! - [`vecstore`] — synthetic embedding generation and on-disk vector store
 //! - [`quant`] — k-means, PQ, scalar quantizers, TRQ ternary residual codec
 //! - [`index`] — IVF, graph (CAGRA-style stand-in), and flat exact indexes
-//! - [`refine`] — L2 decomposition, progressive estimator, OLS calibration
+//! - [`refine`] — L2 decomposition, progressive estimator (+ early-exit
+//!   walk), OLS calibration, filtering/cutoff policies
 //! - [`tiering`] — fast/far/storage placement and access accounting
-//! - [`simulator`] — DDR5 DRAM timing, CXL link, SSD queue models (Table I)
-//! - [`accel`] — CXL Type-2 refinement accelerator cycle/area/power model
-//! - [`runtime`] — PJRT client wrapper; loads `artifacts/*.hlo.txt` (L2/L1)
-//! - [`coordinator`] — query batching and the end-to-end tiered pipeline
+//! - [`simulator`] — DDR5 DRAM timing, CXL link, SSD queue models (Table I),
+//!   all resettable for scratch reuse
+//! - [`accel`] — CXL Type-2 refinement accelerator cycle/area/power model,
+//!   including early-exit cycle accounting
+//! - [`runtime`] — PJRT client wrapper; loads `artifacts/*.hlo.txt` (L2/L1;
+//!   stubbed unless built with the `xla` feature)
+//! - [`coordinator`] — system build, the persistent
+//!   [`coordinator::QueryEngine`] (thread pool + per-worker reusable
+//!   scratch), the per-call `Pipeline` façade, and batch driving
 //! - [`metrics`] — recall, distortion, latency histograms, throughput
 //! - [`cli`] — hand-rolled argument parsing for the `fatrq` binary
 //!

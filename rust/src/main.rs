@@ -22,16 +22,31 @@ USAGE: fatrq <command> [flags]
 COMMANDS:
   build   --config <toml>            build the system, print an inventory
   query   --config <toml> [--mode baseline|fatrq-sw|fatrq-hw]
-  bench   --config <toml> [--threads N]
+          [--early-exit] [--margin-quantile Q] [--threads N]
+  bench   --config <toml> [--threads N] [--early-exit] [--margin-quantile Q]
   xla     --artifacts <dir>          verify AOT artifacts vs native compute
   help
+
+FLAGS:
+  --early-exit          progressive refinement: stream TRQ records from far
+                        memory only until provably outside the top-k
+  --margin-quantile Q   calibration-residual quantile for the provable
+                        cutoff margins (default from config, 0.95)
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
-    match args.get("config") {
-        Some(path) => SystemConfig::from_file(Path::new(path)),
-        None => Ok(SystemConfig::default()),
+    let mut cfg = match args.get("config") {
+        Some(path) => SystemConfig::from_file(Path::new(path))?,
+        None => SystemConfig::default(),
+    };
+    // Refinement overrides shared by query/bench.
+    if args.has("early-exit") {
+        cfg.refine.early_exit = true;
     }
+    cfg.refine.margin_quantile =
+        args.get_f64("margin-quantile", cfg.refine.margin_quantile)?;
+    cfg.validate()?;
+    Ok(cfg)
 }
 
 fn cmd_build(args: &Args) -> anyhow::Result<()> {
@@ -63,7 +78,7 @@ fn cmd_build(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_query(args: &Args) -> anyhow::Result<()> {
-    args.expect_only(&["config", "mode", "threads"])?;
+    args.expect_only(&["config", "mode", "threads", "early-exit", "margin-quantile"])?;
     let cfg = load_config(args)?;
     let mode = match args.get("mode") {
         Some(m) => RefineMode::parse(m)?,
@@ -78,11 +93,12 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         rep.mode, rep.queries, cfg.refine.k, rep.mean_recall
     );
     println!(
-        "latency: mean {:.1} us  p50 {:.1} us  p99 {:.1} us  ({:.0} qps @{} threads)",
+        "latency: mean {:.1} us  p50 {:.1} us  p99 {:.1} us  ({:.0} model qps, {:.0} wall qps @{} threads)",
         rep.mean_latency_ns / 1e3,
         rep.p50_ns / 1e3,
         rep.p99_ns / 1e3,
         rep.qps,
+        rep.wall_qps,
         threads
     );
     let bd = rep.breakdown;
@@ -102,14 +118,14 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
-    args.expect_only(&["config", "threads"])?;
+    args.expect_only(&["config", "threads", "early-exit", "margin-quantile"])?;
     let cfg = load_config(args)?;
     let threads = args.get_usize("threads", 4)?;
     let sys = build_system(&cfg)?;
     let truth = ground_truth(&sys, cfg.refine.k);
     println!(
-        "{:>10} {:>9} {:>12} {:>10} {:>10}",
-        "mode", "recall", "latency(us)", "ssd/query", "speedup"
+        "{:>10} {:>9} {:>12} {:>10} {:>10} {:>10}",
+        "mode", "recall", "latency(us)", "far/query", "ssd/query", "speedup"
     );
     let base = run_batch(&sys, RefineMode::Baseline, &truth, threads);
     for (mode, rep) in [
@@ -118,10 +134,11 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         (RefineMode::FatrqHw, run_batch(&sys, RefineMode::FatrqHw, &truth, threads)),
     ] {
         println!(
-            "{:>10} {:>9.4} {:>12.1} {:>10} {:>9.2}x",
+            "{:>10} {:>9.4} {:>12.1} {:>10} {:>10} {:>9.2}x",
             mode.name(),
             rep.mean_recall,
             rep.mean_latency_ns / 1e3,
+            rep.breakdown.far_reads,
             rep.breakdown.ssd_reads,
             base.mean_latency_ns / rep.mean_latency_ns
         );

@@ -9,10 +9,35 @@
 
 use crate::quant::trq::{qdot_packed, TrqStore};
 use crate::refine::calib::{Calibration, NUM_FEATURES};
-use crate::util::topk::Scored;
+use crate::util::topk::{Scored, TopK};
 
 /// Feature row for one (query, candidate) pair.
 pub type Features = [f32; NUM_FEATURES];
+
+/// A candidate ranked by the fast-memory first-order estimate, carrying
+/// both distances the progressive walk needs: the coarse ADC distance `d0`
+/// (input to the refined estimate) and `d1 = d0 + ‖δ‖²` (the ordering and
+/// lower-bound key). Produced by the engine's phase-1 ranking; consumed by
+/// [`ProgressiveEstimator::refine_progressive_into`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FirstOrderCand {
+    pub id: u64,
+    /// Coarse ADC distance from the front stage.
+    pub d0: f32,
+    /// First-order estimate d̂₁ = d̂₀ + ‖δ‖² (fast memory only).
+    pub d1: f32,
+}
+
+/// What a progressive walk did: how many candidates it looked at (bound
+/// checks) and how many it actually streamed from far memory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProgressiveOutcome {
+    /// Candidates whose first-order bound was compared against the running
+    /// k-th refined bound (streamed + at most one that tripped the cutoff).
+    pub considered: usize,
+    /// Candidates whose TRQ record was streamed and refined.
+    pub streamed: usize,
+}
 
 /// Estimator bound to a TRQ store and a calibration model.
 pub struct ProgressiveEstimator<'a> {
@@ -59,12 +84,79 @@ impl<'a> ProgressiveEstimator<'a> {
     /// Refine a whole candidate list, returning (id, refined) sorted
     /// ascending by the refined estimate.
     pub fn refine_list(&self, query: &[f32], candidates: &[Scored]) -> Vec<Scored> {
-        let mut out: Vec<Scored> = candidates
-            .iter()
-            .map(|c| Scored::new(self.estimate(query, c.id as usize, c.dist), c.id))
-            .collect();
-        out.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+        let mut out = Vec::new();
+        self.refine_into(query, candidates, &mut out);
         out
+    }
+
+    /// Buffer-reusing form of [`ProgressiveEstimator::refine_list`]: writes
+    /// the refined, ascending-sorted list into `out` (cleared first). The
+    /// persistent engine's hot path calls this with per-worker scratch so
+    /// steady-state refinement does no heap allocation.
+    pub fn refine_into(&self, query: &[f32], candidates: &[Scored], out: &mut Vec<Scored>) {
+        out.clear();
+        out.extend(
+            candidates
+                .iter()
+                .map(|c| Scored::new(self.estimate(query, c.id as usize, c.dist), c.id)),
+        );
+        out.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+    }
+
+    /// Batch feature extraction: one [`Features`] row per candidate
+    /// (`candidates[i].dist` is its coarse distance d̂₀), flattened into
+    /// `out` (cleared first). This is the layout the XLA `refine_block`
+    /// executable and the calibration trainer consume.
+    pub fn features_batch(&self, query: &[f32], candidates: &[Scored], out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(candidates.len() * NUM_FEATURES);
+        for c in candidates {
+            out.extend_from_slice(&self.features(query, c.id as usize, c.dist));
+        }
+    }
+
+    /// Progressive early-exit refinement (paper §I: "refinement stops early
+    /// once a candidate is provably outside the top-k").
+    ///
+    /// `ordered` must be sorted ascending by `d1`. The walk maintains the
+    /// running k-th *refined* estimate in `bound`; a candidate whose
+    /// first-order lower bound `d1 − margin_first` exceeds the k-th refined
+    /// upper bound `bound.threshold() + margin_refined` cannot enter the
+    /// true top-k — and because `d1` is non-decreasing along the walk while
+    /// the bound only tightens, neither can anything after it, so the walk
+    /// stops and the remaining candidates are never streamed from far
+    /// memory.
+    ///
+    /// Refined estimates of the streamed prefix are appended to `out`
+    /// (cleared first, in streaming order — callers sort). `bound` is reset
+    /// to `k` here; both buffers come from reusable scratch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refine_progressive_into(
+        &self,
+        query: &[f32],
+        ordered: &[FirstOrderCand],
+        k: usize,
+        margin_first: f32,
+        margin_refined: f32,
+        bound: &mut TopK,
+        out: &mut Vec<Scored>,
+    ) -> ProgressiveOutcome {
+        bound.reset(k.max(1));
+        out.clear();
+        let mut stats = ProgressiveOutcome::default();
+        for c in ordered {
+            stats.considered += 1;
+            if bound.is_full()
+                && c.d1 - margin_first > bound.threshold() + margin_refined
+            {
+                break;
+            }
+            let d = self.estimate(query, c.id as usize, c.d0);
+            bound.push(d, c.id);
+            out.push(Scored::new(d, c.id));
+            stats.streamed += 1;
+        }
+        stats
     }
 }
 
@@ -184,6 +276,82 @@ mod tests {
         let mut ids: Vec<u64> = refined.iter().map(|s| s.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..50).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn refine_into_matches_refine_list_and_reuses_buffer() {
+        let (data, recon, _pq, store, _n) = fixture();
+        let dim = store.dim;
+        let est = ProgressiveEstimator::new(&store, Calibration::analytic());
+        let q = data[0..dim].to_vec();
+        let cands: Vec<Scored> = (0..40)
+            .map(|i| Scored::new(l2_sq(&q, &recon[i * dim..(i + 1) * dim]), i as u64))
+            .collect();
+        let expect = est.refine_list(&q, &cands);
+        let mut out = Vec::new();
+        est.refine_into(&q, &cands, &mut out);
+        assert_eq!(out, expect);
+        // Second call on the same buffer must fully replace contents.
+        est.refine_into(&q, &cands[..10], &mut out);
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn features_batch_matches_rowwise() {
+        let (data, recon, _pq, store, _n) = fixture();
+        let dim = store.dim;
+        let est = ProgressiveEstimator::new(&store, Calibration::analytic());
+        let q = &data[0..dim];
+        let cands: Vec<Scored> = (0..8)
+            .map(|i| Scored::new(l2_sq(q, &recon[i * dim..(i + 1) * dim]), i as u64))
+            .collect();
+        let mut flat = Vec::new();
+        est.features_batch(q, &cands, &mut flat);
+        assert_eq!(flat.len(), 8 * NUM_FEATURES);
+        for (i, c) in cands.iter().enumerate() {
+            let row = est.features(q, c.id as usize, c.dist);
+            assert_eq!(&flat[i * NUM_FEATURES..(i + 1) * NUM_FEATURES], &row);
+        }
+    }
+
+    #[test]
+    fn progressive_walk_streams_prefix_and_matches_full_with_huge_margin() {
+        let (data, recon, _pq, store, _n) = fixture();
+        let dim = store.dim;
+        let est = ProgressiveEstimator::new(&store, Calibration::analytic());
+        let q = data[5 * dim..6 * dim].to_vec();
+        let cands: Vec<Scored> = (0..60)
+            .map(|i| Scored::new(l2_sq(&q, &recon[i * dim..(i + 1) * dim]), i as u64))
+            .collect();
+        let mut ordered: Vec<FirstOrderCand> = cands
+            .iter()
+            .map(|c| FirstOrderCand {
+                id: c.id,
+                d0: c.dist,
+                d1: est.estimate_first_order(c.id as usize, c.dist),
+            })
+            .collect();
+        ordered.sort_by(|a, b| a.d1.partial_cmp(&b.d1).unwrap().then(a.id.cmp(&b.id)));
+
+        let mut bound = TopK::new(1);
+        let mut out = Vec::new();
+        // Huge margins: nothing is provably outside, everything streams.
+        let stats = est.refine_progressive_into(
+            &q, &ordered, 10, 1e9, 1e9, &mut bound, &mut out,
+        );
+        assert_eq!(stats.streamed, 60);
+        assert_eq!(stats.considered, 60);
+        out.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+        assert_eq!(out, est.refine_list(&q, &cands));
+
+        // Zero margins: the walk must stop early on this spread of
+        // distances, but never before the bound is full.
+        let stats0 = est.refine_progressive_into(
+            &q, &ordered, 10, 0.0, 0.0, &mut bound, &mut out,
+        );
+        assert!(stats0.streamed >= 10);
+        assert!(stats0.streamed < 60, "zero-margin walk streamed everything");
+        assert!(stats0.considered <= stats0.streamed + 1);
     }
 
     #[test]

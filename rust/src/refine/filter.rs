@@ -11,13 +11,16 @@
 
 use crate::util::topk::Scored;
 
+/// Number of entries [`filter_top_ratio`] would keep — the allocation-free
+/// form the persistent engine uses on its reused scratch buffers.
+pub fn filter_top_ratio_len(len: usize, ratio: f64, k: usize) -> usize {
+    ((len as f64 * ratio).ceil() as usize).max(k).min(len)
+}
+
 /// Keep the top `ratio` fraction of `refined` (sorted ascending), but never
 /// fewer than `k` entries (the final top-k must be recoverable).
 pub fn filter_top_ratio(refined: &[Scored], ratio: f64, k: usize) -> Vec<Scored> {
-    let keep = ((refined.len() as f64 * ratio).ceil() as usize)
-        .max(k)
-        .min(refined.len());
-    refined[..keep].to_vec()
+    refined[..filter_top_ratio_len(refined.len(), ratio, k)].to_vec()
 }
 
 /// Provable-outside-top-k cutoff (paper §I: "refinement stops early once a
@@ -28,15 +31,20 @@ pub fn filter_top_ratio(refined: &[Scored], ratio: f64, k: usize) -> Vec<Scored>
 /// estimate minus `margin` exceeds the k-th refined estimate plus `margin`
 /// cannot enter the true top-k; everything before that point is kept.
 pub fn provable_cutoff(refined: &[Scored], k: usize, margin: f32) -> Vec<Scored> {
+    refined[..provable_cutoff_len(refined, k, margin)].to_vec()
+}
+
+/// Number of entries [`provable_cutoff`] would keep (allocation-free form).
+pub fn provable_cutoff_len(refined: &[Scored], k: usize, margin: f32) -> usize {
     if refined.len() <= k {
-        return refined.to_vec();
+        return refined.len();
     }
     let kth_upper = refined[k - 1].dist + margin;
     let cut = refined
         .iter()
         .position(|s| s.dist - margin > kth_upper)
         .unwrap_or(refined.len());
-    refined[..cut.max(k)].to_vec()
+    cut.max(k)
 }
 
 /// Estimate an error margin for [`provable_cutoff`] from calibration
@@ -89,6 +97,25 @@ mod tests {
     fn provable_cutoff_small_list() {
         let refined = mk(&[1.0, 2.0]);
         assert_eq!(provable_cutoff(&refined, 5, 0.1).len(), 2);
+    }
+
+    #[test]
+    fn len_variants_match_allocating_forms() {
+        let refined = mk(&[1.0, 2.0, 2.8, 4.0, 9.0]);
+        for k in 1..=5 {
+            for margin in [0.0f32, 0.5, 2.0] {
+                assert_eq!(
+                    provable_cutoff(&refined, k, margin).len(),
+                    provable_cutoff_len(&refined, k, margin)
+                );
+            }
+            for ratio in [0.0f64, 0.2, 0.6, 1.0] {
+                assert_eq!(
+                    filter_top_ratio(&refined, ratio, k).len(),
+                    filter_top_ratio_len(refined.len(), ratio, k)
+                );
+            }
+        }
     }
 
     #[test]

@@ -7,5 +7,8 @@ pub mod estimator;
 pub mod filter;
 
 pub use calib::Calibration;
-pub use estimator::{Features, ProgressiveEstimator};
-pub use filter::{filter_top_ratio, provable_cutoff};
+pub use estimator::{Features, FirstOrderCand, ProgressiveEstimator, ProgressiveOutcome};
+pub use filter::{
+    filter_top_ratio, filter_top_ratio_len, margin_from_residuals, provable_cutoff,
+    provable_cutoff_len,
+};

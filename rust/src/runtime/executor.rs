@@ -1,190 +1,252 @@
 //! XLA executable wrapper: compile-once, execute-many on the PJRT CPU
 //! client, with block padding (PJRT executables are fixed-shape; callers
 //! pass any `n` and the executor pads/chunks to the compiled block size).
+//!
+//! The PJRT bindings (`xla` crate) are not part of the offline vendor set,
+//! so the real implementation is gated behind the `xla` cargo feature.
+//! Without it, [`XlaRuntime`] is a stub whose `load` fails with a
+//! descriptive error — every caller already handles load failure by
+//! falling back to native compute (see `integration_runtime.rs` and
+//! `examples/rag_serving.rs`).
 
-use crate::runtime::manifest::Manifest;
-use crate::Result;
-use anyhow::Context;
-use std::path::Path;
+#[cfg(feature = "xla")]
+mod imp {
+    use crate::runtime::manifest::Manifest;
+    use crate::Result;
+    use anyhow::Context;
+    use std::path::Path;
 
-/// Loaded AOT executables + the PJRT client that owns them.
-///
-/// NOTE: the underlying PJRT handles are not `Send`; the coordinator keeps
-/// the runtime on the leader thread (workers do native compute).
-pub struct XlaRuntime {
-    pub manifest: Manifest,
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    coarse_scan: xla::PjRtLoadedExecutable,
-    refine_block: xla::PjRtLoadedExecutable,
-    rerank_block: xla::PjRtLoadedExecutable,
-    /// Executions performed (diagnostics).
-    pub executions: std::cell::Cell<u64>,
+    /// Loaded AOT executables + the PJRT client that owns them.
+    ///
+    /// NOTE: the underlying PJRT handles are not `Send`; the coordinator
+    /// keeps the runtime on the leader thread (workers do native compute).
+    pub struct XlaRuntime {
+        pub manifest: Manifest,
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        coarse_scan: xla::PjRtLoadedExecutable,
+        refine_block: xla::PjRtLoadedExecutable,
+        rerank_block: xla::PjRtLoadedExecutable,
+        /// Executions performed (diagnostics).
+        pub executions: std::cell::Cell<u64>,
+    }
+
+    fn load_exe(
+        client: &xla::PjRtClient,
+        dir: &Path,
+        name: &str,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse {} (run `make artifacts`)", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))
+    }
+
+    impl XlaRuntime {
+        /// Load and compile every artifact in `dir`.
+        pub fn load(dir: &Path) -> Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            let coarse_scan = load_exe(&client, dir, "coarse_scan")?;
+            let refine_block = load_exe(&client, dir, "refine_block")?;
+            let rerank_block = load_exe(&client, dir, "rerank_block")?;
+            Ok(XlaRuntime {
+                manifest,
+                client,
+                coarse_scan,
+                refine_block,
+                rerank_block,
+                executions: std::cell::Cell::new(0),
+            })
+        }
+
+        fn run1(
+            &self,
+            exe: &xla::PjRtLoadedExecutable,
+            args: &[xla::Literal],
+        ) -> Result<Vec<f32>> {
+            self.executions.set(self.executions.get() + 1);
+            let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True -> 1-tuple.
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+
+        /// ADC scan: `lut` is `pq_m x pq_ksub`, `codes` is `n x pq_m` (any
+        /// n). Returns `n` coarse distances.
+        pub fn coarse_scan(&self, lut: &[f32], codes: &[u8]) -> Result<Vec<f32>> {
+            let m = self.manifest;
+            anyhow::ensure!(lut.len() == m.pq_m * m.pq_ksub, "lut shape mismatch");
+            anyhow::ensure!(codes.len() % m.pq_m == 0, "codes not a multiple of pq_m");
+            let n = codes.len() / m.pq_m;
+            let lut_lit =
+                xla::Literal::vec1(lut).reshape(&[m.pq_m as i64, m.pq_ksub as i64])?;
+            let mut out = Vec::with_capacity(n);
+            // Chunk into compiled scan_n blocks, padding the tail with code 0.
+            let mut block = vec![0i32; m.scan_n * m.pq_m];
+            let mut start = 0usize;
+            while start < n {
+                let take = (n - start).min(m.scan_n);
+                for (dst, src) in block
+                    .iter_mut()
+                    .zip(codes[start * m.pq_m..(start + take) * m.pq_m].iter())
+                {
+                    *dst = *src as i32;
+                }
+                for v in block[take * m.pq_m..].iter_mut() {
+                    *v = 0;
+                }
+                let codes_lit = xla::Literal::vec1(&block)
+                    .reshape(&[m.scan_n as i64, m.pq_m as i64])?;
+                let dists = self.run1(&self.coarse_scan, &[lut_lit.clone(), codes_lit])?;
+                out.extend_from_slice(&dists[..take]);
+                start += take;
+            }
+            Ok(out)
+        }
+
+        /// FaTRQ refinement of `n` candidates (any n; padded to refine_n).
+        #[allow(clippy::too_many_arguments)]
+        pub fn refine_block(
+            &self,
+            query: &[f32],
+            weights: &[f32],
+            d0: &[f32],
+            packed: &[u8],
+            scale: &[f32],
+            cross: &[f32],
+            dnorm_sq: &[f32],
+        ) -> Result<Vec<f32>> {
+            let m = self.manifest;
+            anyhow::ensure!(query.len() == m.dim, "query dim mismatch");
+            anyhow::ensure!(weights.len() == m.num_features, "weights len mismatch");
+            let n = d0.len();
+            anyhow::ensure!(packed.len() == n * m.packed_bytes, "packed shape mismatch");
+            anyhow::ensure!(scale.len() == n && cross.len() == n && dnorm_sq.len() == n);
+
+            let q_lit = xla::Literal::vec1(query);
+            let w_lit = xla::Literal::vec1(weights);
+            let mut out = Vec::with_capacity(n);
+            let bn = m.refine_n;
+            let pb = m.packed_bytes;
+            let mut d0_b = vec![0f32; bn];
+            let mut packed_b = vec![121i32; bn * pb]; // 121 = all-zero trits
+            let mut scale_b = vec![0f32; bn];
+            let mut cross_b = vec![0f32; bn];
+            let mut dn_b = vec![0f32; bn];
+            let mut start = 0usize;
+            while start < n {
+                let take = (n - start).min(bn);
+                d0_b[..take].copy_from_slice(&d0[start..start + take]);
+                d0_b[take..].fill(0.0);
+                for (dst, src) in packed_b
+                    .iter_mut()
+                    .zip(packed[start * pb..(start + take) * pb].iter())
+                {
+                    *dst = *src as i32;
+                }
+                packed_b[take * pb..].fill(121);
+                scale_b[..take].copy_from_slice(&scale[start..start + take]);
+                scale_b[take..].fill(0.0);
+                cross_b[..take].copy_from_slice(&cross[start..start + take]);
+                cross_b[take..].fill(0.0);
+                dn_b[..take].copy_from_slice(&dnorm_sq[start..start + take]);
+                dn_b[take..].fill(0.0);
+                let args = [
+                    q_lit.clone(),
+                    w_lit.clone(),
+                    xla::Literal::vec1(&d0_b),
+                    xla::Literal::vec1(&packed_b).reshape(&[bn as i64, pb as i64])?,
+                    xla::Literal::vec1(&scale_b),
+                    xla::Literal::vec1(&cross_b),
+                    xla::Literal::vec1(&dn_b),
+                ];
+                let est = self.run1(&self.refine_block, &args)?;
+                out.extend_from_slice(&est[..take]);
+                start += take;
+            }
+            Ok(out)
+        }
+
+        /// Exact rerank of `n` vectors (any n; padded to rerank_n).
+        pub fn rerank_block(&self, query: &[f32], vectors: &[f32]) -> Result<Vec<f32>> {
+            let m = self.manifest;
+            anyhow::ensure!(query.len() == m.dim, "query dim mismatch");
+            anyhow::ensure!(vectors.len() % m.dim == 0, "vectors shape mismatch");
+            let n = vectors.len() / m.dim;
+            let q_lit = xla::Literal::vec1(query);
+            let bn = m.rerank_n;
+            let mut out = Vec::with_capacity(n);
+            let mut block = vec![0f32; bn * m.dim];
+            let mut start = 0usize;
+            while start < n {
+                let take = (n - start).min(bn);
+                block[..take * m.dim]
+                    .copy_from_slice(&vectors[start * m.dim..(start + take) * m.dim]);
+                block[take * m.dim..].fill(0.0);
+                let v_lit =
+                    xla::Literal::vec1(&block).reshape(&[bn as i64, m.dim as i64])?;
+                let dists = self.run1(&self.rerank_block, &[q_lit.clone(), v_lit])?;
+                out.extend_from_slice(&dists[..take]);
+                start += take;
+            }
+            Ok(out)
+        }
+    }
 }
 
-fn load_exe(
-    client: &xla::PjRtClient,
-    dir: &Path,
-    name: &str,
-) -> Result<xla::PjRtLoadedExecutable> {
-    let path = dir.join(format!("{name}.hlo.txt"));
-    let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().context("artifact path not utf-8")?,
-    )
-    .with_context(|| format!("parse {} (run `make artifacts`)", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .with_context(|| format!("compile {name}"))
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use crate::runtime::manifest::Manifest;
+    use crate::Result;
+    use anyhow::bail;
+    use std::path::Path;
+
+    /// Stub runtime compiled when the `xla` feature is off: `load` always
+    /// fails, so the struct is never constructed and the compute methods
+    /// are unreachable (they still typecheck for callers).
+    pub struct XlaRuntime {
+        pub manifest: Manifest,
+        /// Executions performed (diagnostics).
+        pub executions: std::cell::Cell<u64>,
+    }
+
+    impl XlaRuntime {
+        /// Always fails: the PJRT bindings were not compiled in.
+        pub fn load(_dir: &Path) -> Result<Self> {
+            bail!(
+                "fatrq was built without the `xla` feature; the PJRT/XLA \
+                 runtime is unavailable (native compute paths still work)"
+            );
+        }
+
+        pub fn coarse_scan(&self, _lut: &[f32], _codes: &[u8]) -> Result<Vec<f32>> {
+            bail!("xla feature disabled");
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn refine_block(
+            &self,
+            _query: &[f32],
+            _weights: &[f32],
+            _d0: &[f32],
+            _packed: &[u8],
+            _scale: &[f32],
+            _cross: &[f32],
+            _dnorm_sq: &[f32],
+        ) -> Result<Vec<f32>> {
+            bail!("xla feature disabled");
+        }
+
+        pub fn rerank_block(&self, _query: &[f32], _vectors: &[f32]) -> Result<Vec<f32>> {
+            bail!("xla feature disabled");
+        }
+    }
 }
 
-impl XlaRuntime {
-    /// Load and compile every artifact in `dir`.
-    pub fn load(dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let coarse_scan = load_exe(&client, dir, "coarse_scan")?;
-        let refine_block = load_exe(&client, dir, "refine_block")?;
-        let rerank_block = load_exe(&client, dir, "rerank_block")?;
-        Ok(XlaRuntime {
-            manifest,
-            client,
-            coarse_scan,
-            refine_block,
-            rerank_block,
-            executions: std::cell::Cell::new(0),
-        })
-    }
-
-    fn run1(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[xla::Literal],
-    ) -> Result<Vec<f32>> {
-        self.executions.set(self.executions.get() + 1);
-        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True -> 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// ADC scan: `lut` is `pq_m x pq_ksub`, `codes` is `n x pq_m` (any n).
-    /// Returns `n` coarse distances.
-    pub fn coarse_scan(&self, lut: &[f32], codes: &[u8]) -> Result<Vec<f32>> {
-        let m = self.manifest;
-        anyhow::ensure!(lut.len() == m.pq_m * m.pq_ksub, "lut shape mismatch");
-        anyhow::ensure!(codes.len() % m.pq_m == 0, "codes not a multiple of pq_m");
-        let n = codes.len() / m.pq_m;
-        let lut_lit = xla::Literal::vec1(lut).reshape(&[m.pq_m as i64, m.pq_ksub as i64])?;
-        let mut out = Vec::with_capacity(n);
-        // Chunk into compiled scan_n blocks, padding the tail with code 0.
-        let mut block = vec![0i32; m.scan_n * m.pq_m];
-        let mut start = 0usize;
-        while start < n {
-            let take = (n - start).min(m.scan_n);
-            for (dst, src) in block
-                .iter_mut()
-                .zip(codes[start * m.pq_m..(start + take) * m.pq_m].iter())
-            {
-                *dst = *src as i32;
-            }
-            for v in block[take * m.pq_m..].iter_mut() {
-                *v = 0;
-            }
-            let codes_lit = xla::Literal::vec1(&block)
-                .reshape(&[m.scan_n as i64, m.pq_m as i64])?;
-            let dists = self.run1(&self.coarse_scan, &[lut_lit.clone(), codes_lit])?;
-            out.extend_from_slice(&dists[..take]);
-            start += take;
-        }
-        Ok(out)
-    }
-
-    /// FaTRQ refinement of `n` candidates (any n; padded to refine_n).
-    #[allow(clippy::too_many_arguments)]
-    pub fn refine_block(
-        &self,
-        query: &[f32],
-        weights: &[f32],
-        d0: &[f32],
-        packed: &[u8],
-        scale: &[f32],
-        cross: &[f32],
-        dnorm_sq: &[f32],
-    ) -> Result<Vec<f32>> {
-        let m = self.manifest;
-        anyhow::ensure!(query.len() == m.dim, "query dim mismatch");
-        anyhow::ensure!(weights.len() == m.num_features, "weights len mismatch");
-        let n = d0.len();
-        anyhow::ensure!(packed.len() == n * m.packed_bytes, "packed shape mismatch");
-        anyhow::ensure!(scale.len() == n && cross.len() == n && dnorm_sq.len() == n);
-
-        let q_lit = xla::Literal::vec1(query);
-        let w_lit = xla::Literal::vec1(weights);
-        let mut out = Vec::with_capacity(n);
-        let bn = m.refine_n;
-        let pb = m.packed_bytes;
-        let mut d0_b = vec![0f32; bn];
-        let mut packed_b = vec![121i32; bn * pb]; // 121 = all-zero trits
-        let mut scale_b = vec![0f32; bn];
-        let mut cross_b = vec![0f32; bn];
-        let mut dn_b = vec![0f32; bn];
-        let mut start = 0usize;
-        while start < n {
-            let take = (n - start).min(bn);
-            d0_b[..take].copy_from_slice(&d0[start..start + take]);
-            d0_b[take..].fill(0.0);
-            for (dst, src) in packed_b
-                .iter_mut()
-                .zip(packed[start * pb..(start + take) * pb].iter())
-            {
-                *dst = *src as i32;
-            }
-            packed_b[take * pb..].fill(121);
-            scale_b[..take].copy_from_slice(&scale[start..start + take]);
-            scale_b[take..].fill(0.0);
-            cross_b[..take].copy_from_slice(&cross[start..start + take]);
-            cross_b[take..].fill(0.0);
-            dn_b[..take].copy_from_slice(&dnorm_sq[start..start + take]);
-            dn_b[take..].fill(0.0);
-            let args = [
-                q_lit.clone(),
-                w_lit.clone(),
-                xla::Literal::vec1(&d0_b),
-                xla::Literal::vec1(&packed_b).reshape(&[bn as i64, pb as i64])?,
-                xla::Literal::vec1(&scale_b),
-                xla::Literal::vec1(&cross_b),
-                xla::Literal::vec1(&dn_b),
-            ];
-            let est = self.run1(&self.refine_block, &args)?;
-            out.extend_from_slice(&est[..take]);
-            start += take;
-        }
-        Ok(out)
-    }
-
-    /// Exact rerank of `n` vectors (any n; padded to rerank_n).
-    pub fn rerank_block(&self, query: &[f32], vectors: &[f32]) -> Result<Vec<f32>> {
-        let m = self.manifest;
-        anyhow::ensure!(query.len() == m.dim, "query dim mismatch");
-        anyhow::ensure!(vectors.len() % m.dim == 0, "vectors shape mismatch");
-        let n = vectors.len() / m.dim;
-        let q_lit = xla::Literal::vec1(query);
-        let bn = m.rerank_n;
-        let mut out = Vec::with_capacity(n);
-        let mut block = vec![0f32; bn * m.dim];
-        let mut start = 0usize;
-        while start < n {
-            let take = (n - start).min(bn);
-            block[..take * m.dim]
-                .copy_from_slice(&vectors[start * m.dim..(start + take) * m.dim]);
-            block[take * m.dim..].fill(0.0);
-            let v_lit =
-                xla::Literal::vec1(&block).reshape(&[bn as i64, m.dim as i64])?;
-            let dists = self.run1(&self.rerank_block, &[q_lit.clone(), v_lit])?;
-            out.extend_from_slice(&dists[..take]);
-            start += take;
-        }
-        Ok(out)
-    }
-}
+pub use imp::XlaRuntime;

@@ -1,24 +1,38 @@
-//! A small owned thread pool plus a scoped `parallel_for` helper.
+//! A small owned thread pool plus scoped data-parallel helpers.
 //!
 //! tokio/rayon are not in the offline vendor set; the coordinator needs
-//! worker threads for query serving and the build path needs data-parallel
-//! loops (k-means, encoding). `std::thread::scope` gives us both safely.
+//! persistent worker threads for query serving and the build path needs
+//! data-parallel loops (k-means, encoding). The pool is the serving-side
+//! primitive (`QueryEngine` owns one); [`parallel_for`]/[`parallel_map`]
+//! use `std::thread::scope` and have no queue overhead.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Shared completion tracking: a plain counter under a mutex paired with a
+/// condvar. The mutex makes the increment-on-submit / decrement-on-finish
+/// pairing correct by construction — the previous atomic counter used
+/// `fetch_add(Acquire)`, which is not a valid publish ordering, and
+/// `wait_idle` burned a core spin-yielding.
+struct PoolState {
+    /// Jobs submitted but not yet finished.
+    pending: Mutex<usize>,
+    /// Signalled each time `pending` returns to zero.
+    idle: Condvar,
+}
+
 /// A fixed-size pool of worker threads consuming a shared job queue.
 ///
-/// Used by the coordinator for request handling; build-time data parallel
-/// loops should prefer [`parallel_for`], which has no queue overhead.
+/// Used by the coordinator engine for request handling; build-time data
+/// parallel loops should prefer [`parallel_for`].
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
-    pending: Arc<AtomicUsize>,
+    state: Arc<PoolState>,
 }
 
 impl ThreadPool {
@@ -27,11 +41,11 @@ impl ThreadPool {
         assert!(n >= 1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new(AtomicUsize::new(0));
+        let state = Arc::new(PoolState { pending: Mutex::new(0), idle: Condvar::new() });
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
-                let pending = Arc::clone(&pending);
+                let state = Arc::clone(&state);
                 thread::Builder::new()
                     .name(format!("fatrq-worker-{i}"))
                     .spawn(move || loop {
@@ -41,8 +55,15 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
-                                pending.fetch_sub(1, Ordering::Release);
+                                // A panicking job must neither wedge
+                                // `wait_idle` nor kill the worker; the job
+                                // is accounted finished either way.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                                let mut pending = state.pending.lock().unwrap();
+                                *pending -= 1;
+                                if *pending == 0 {
+                                    state.idle.notify_all();
+                                }
                             }
                             Err(_) => break, // sender dropped: shut down
                         }
@@ -50,7 +71,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, pending }
+        ThreadPool { tx: Some(tx), workers, state }
     }
 
     /// Number of worker threads.
@@ -60,7 +81,7 @@ impl ThreadPool {
 
     /// Submit a job.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.pending.fetch_add(1, Ordering::Acquire);
+        *self.state.pending.lock().unwrap() += 1;
         self.tx
             .as_ref()
             .expect("pool alive")
@@ -68,10 +89,60 @@ impl ThreadPool {
             .expect("worker alive");
     }
 
-    /// Busy-wait (with yield) until all submitted jobs completed.
+    /// Block (sleeping on the condvar, not spinning) until every submitted
+    /// job has completed.
     pub fn wait_idle(&self) {
-        while self.pending.load(Ordering::Acquire) != 0 {
-            thread::yield_now();
+        let mut pending = self.state.pending.lock().unwrap();
+        while *pending != 0 {
+            pending = self.state.idle.wait(pending).unwrap();
+        }
+    }
+
+    /// Run `f(slot, i)` for every `i in 0..n` across the pool and block
+    /// until all calls complete. Work is claimed dynamically one index at a
+    /// time. `slot` is in `0..size()` and is distinct for callbacks running
+    /// concurrently, so callers can address per-worker scratch state.
+    ///
+    /// `f` may borrow from the caller: the lifetime is erased internally,
+    /// which is sound because this function does not return until the last
+    /// job touching `f` has finished (panics included — a panicking call
+    /// marks the batch failed and is re-raised here after the barrier).
+    ///
+    /// Must not be called from inside a pool job (it would deadlock waiting
+    /// for itself).
+    pub fn dispatch<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let f_ref: &(dyn Fn(usize, usize) + Sync) = &f;
+        // SAFETY: `wait_idle` below blocks until every job submitted here
+        // has run to completion, so the erased reference never outlives the
+        // closure it points to.
+        let f_static: &'static (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let next = Arc::new(AtomicUsize::new(0));
+        let panicked = Arc::new(AtomicBool::new(false));
+        let lanes = self.size().min(n);
+        for slot in 0..lanes {
+            let next = Arc::clone(&next);
+            let panicked = Arc::clone(&panicked);
+            self.execute(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if catch_unwind(AssertUnwindSafe(|| f_static(slot, i))).is_err() {
+                    panicked.store(true, Ordering::Release);
+                    break;
+                }
+            });
+        }
+        self.wait_idle();
+        if panicked.load(Ordering::Acquire) {
+            panic!("ThreadPool::dispatch: a dispatched call panicked");
         }
     }
 }
@@ -129,19 +200,44 @@ where
 }
 
 /// Map `f` over `0..n` in parallel, collecting results in index order.
+///
+/// Each worker writes a disjoint contiguous chunk of the (uninitialized)
+/// output buffer directly, so `T` needs no `Default + Clone` and there is
+/// no per-element locking. If `f` panics, the panic propagates out of the
+/// enclosing scope; already-produced elements are leaked, never dropped
+/// uninitialized.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    if n == 0 {
+        return out;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        out.extend((0..n).map(f));
+        return out;
+    }
+    let chunk = n.div_ceil(threads);
     {
-        let slots: Vec<Mutex<&mut T>> = out.iter_mut().map(Mutex::new).collect();
-        parallel_for(n, threads, |i| {
-            let mut slot = slots[i].lock().unwrap();
-            **slot = f(i);
+        let spare = &mut out.spare_capacity_mut()[..n];
+        thread::scope(|s| {
+            for (t, slice) in spare.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                s.spawn(move || {
+                    let start = t * chunk;
+                    for (j, slot) in slice.iter_mut().enumerate() {
+                        slot.write(f(start + j));
+                    }
+                });
+            }
         });
     }
+    // SAFETY: the scope above joined every worker, and together the chunks
+    // cover exactly `out[..n]`, so all `n` elements are initialized.
+    unsafe { out.set_len(n) };
     out
 }
 
@@ -172,6 +268,80 @@ mod tests {
     }
 
     #[test]
+    fn wait_idle_blocks_for_slow_jobs() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicU64::new(0));
+        for _ in 0..4 {
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                thread::sleep(std::time::Duration::from_millis(20));
+                d.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("deliberate"));
+        pool.wait_idle();
+        // Workers must still be alive and accounting must balance.
+        let ok = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let ok = Arc::clone(&ok);
+            pool.execute(move || {
+                ok.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(ok.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn dispatch_covers_every_index_with_valid_slots() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..500).map(|_| AtomicUsize::new(0)).collect();
+        let max_slot = AtomicUsize::new(0);
+        pool.dispatch(500, |slot, i| {
+            assert!(slot < 4);
+            max_slot.fetch_max(slot, Ordering::Relaxed);
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dispatch_borrows_and_reuses_pool() {
+        let pool = ThreadPool::new(3);
+        for round in 0..5usize {
+            let acc: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+            pool.dispatch(64, |_slot, i| {
+                acc[i].store(i * round, Ordering::Relaxed);
+            });
+            for (i, a) in acc.iter().enumerate() {
+                assert_eq!(a.load(Ordering::Relaxed), i * round);
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let hit = catch_unwind(AssertUnwindSafe(|| {
+            pool.dispatch(10, |_s, i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(hit.is_err());
+        // The pool stays usable afterwards.
+        pool.dispatch(4, |_s, _i| {});
+    }
+
+    #[test]
     fn parallel_for_covers_every_index() {
         let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
         parallel_for(1000, 8, |i| {
@@ -195,5 +365,20 @@ mod tests {
         let out = parallel_map(64, 4, |i| i * i);
         let expect: Vec<usize> = (0..64).map(|i| i * i).collect();
         assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn parallel_map_needs_no_default_or_clone() {
+        // A type with neither Default nor Clone.
+        #[derive(Debug, PartialEq)]
+        struct Opaque(usize);
+        let out = parallel_map(37, 5, Opaque);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, Opaque(i));
+        }
+        // Ragged tail: n not divisible by threads.
+        let out = parallel_map(10, 3, Opaque);
+        assert_eq!(out.len(), 10);
+        assert_eq!(out[9], Opaque(9));
     }
 }

@@ -104,6 +104,14 @@ impl TopK {
         }
     }
 
+    /// Reset for reuse with a (possibly new) bound `k`, keeping the heap's
+    /// allocation — the scratch-reuse hook for the persistent engine.
+    pub fn reset(&mut self, k: usize) {
+        assert!(k > 0, "k must be positive");
+        self.k = k;
+        self.heap.clear();
+    }
+
     /// Consume into entries sorted ascending by distance (ties by id for
     /// determinism).
     pub fn into_sorted(mut self) -> Vec<Scored> {
@@ -111,6 +119,15 @@ impl TopK {
             a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id))
         });
         self.heap
+    }
+
+    /// Drain into a freshly sorted `Vec`, leaving the heap empty (the
+    /// borrowed-`self` twin of [`TopK::into_sorted`] for reused scratch).
+    pub fn take_sorted(&mut self) -> Vec<Scored> {
+        self.heap.sort_by(|a, b| {
+            a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id))
+        });
+        std::mem::take(&mut self.heap)
     }
 
     /// Sorted ids only.
@@ -180,6 +197,23 @@ mod tests {
     fn argmin_k_basic() {
         let d = vec![4.0f32, 0.0, 3.0, 1.0, 2.0];
         assert_eq!(argmin_k(&d, 3), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn reset_and_take_sorted_reuse() {
+        let mut t = TopK::new(3);
+        for (i, d) in [5.0, 1.0, 4.0, 2.0].iter().enumerate() {
+            t.push(*d, i as u64);
+        }
+        let first = t.take_sorted();
+        assert_eq!(first.iter().map(|s| s.dist).collect::<Vec<_>>(), vec![1.0, 2.0, 4.0]);
+        assert!(t.is_empty());
+        t.reset(2);
+        t.push(9.0, 0);
+        t.push(3.0, 1);
+        t.push(7.0, 2);
+        let second = t.take_sorted();
+        assert_eq!(second.iter().map(|s| s.dist).collect::<Vec<_>>(), vec![3.0, 7.0]);
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! Integration: the persistent QueryEngine — early-exit correctness
+//! against the classic filter_top_ratio path, and determinism of the
+//! scratch-reusing batch path across thread counts.
+
+use fatrq::config::{
+    DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
+};
+use fatrq::coordinator::{build_system, QueryEngine};
+use fatrq::index::FlatIndex;
+use fatrq::metrics::recall_at_k;
+use std::sync::Arc;
+
+fn cfg() -> SystemConfig {
+    SystemConfig {
+        dataset: DatasetConfig {
+            dim: 96,
+            count: 6000,
+            clusters: 48,
+            noise: 0.35,
+            query_noise: 1.0,
+            queries: 32,
+            seed: 77,
+        },
+        quant: QuantConfig { pq_m: 24, pq_nbits: 6, kmeans_iters: 6, train_sample: 4000 },
+        index: IndexConfig {
+            kind: IndexKind::Ivf,
+            nlist: 64,
+            nprobe: 16,
+            graph_degree: 20,
+            ef_search: 96,
+            ef_construction: 96,
+        },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 120,
+            k: 10,
+            filter_ratio: 0.25,
+            calib_sample: 0.01,
+            early_exit: false,
+            margin_quantile: 0.98,
+        },
+        ..Default::default()
+    }
+}
+
+/// The paper's early-exit claim, end to end: enabling `early_exit` keeps
+/// recall@10 within 1% of the static filter_top_ratio policy while issuing
+/// strictly fewer far-memory reads (and strictly fewer than `candidates`).
+#[test]
+fn early_exit_matches_ratio_recall_with_fewer_far_reads() {
+    let sys = Arc::new(build_system(&cfg()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 4);
+    let classic = engine.params().with_early_exit(false);
+    let progressive = engine.params().with_early_exit(true);
+
+    let outs_classic = engine.run_with(&classic, &sys.dataset.queries);
+    let outs_ee = engine.run_with(&progressive, &sys.dataset.queries);
+
+    let flat = FlatIndex::new(sys.dataset.base.clone(), sys.dataset.dim);
+    let nq = sys.dataset.num_queries();
+    let (mut r_classic, mut r_ee) = (0.0f64, 0.0f64);
+    let (mut far_classic, mut far_ee, mut cands) = (0usize, 0usize, 0usize);
+    for q in 0..nq {
+        let truth = flat.search_exact(sys.dataset.query(q), 10);
+        r_classic += recall_at_k(&outs_classic[q].topk, &truth, 10);
+        r_ee += recall_at_k(&outs_ee[q].topk, &truth, 10);
+        far_classic += outs_classic[q].breakdown.far_reads;
+        far_ee += outs_ee[q].breakdown.far_reads;
+        cands += outs_ee[q].breakdown.candidates;
+        assert_eq!(outs_ee[q].topk.len(), 10);
+    }
+    r_classic /= nq as f64;
+    r_ee /= nq as f64;
+
+    // Classic streams every candidate; the progressive walk must not.
+    assert_eq!(far_classic, cands);
+    assert!(far_ee < far_classic, "far reads: ee {far_ee} !< classic {far_classic}");
+    assert!(far_ee < cands, "far reads {far_ee} !< candidates {cands}");
+    assert!(
+        r_ee >= r_classic - 0.01,
+        "early-exit recall {r_ee:.4} fell more than 1% below ratio-filter {r_classic:.4}"
+    );
+}
+
+/// Determinism with reused scratch: a 1-worker engine and an N-worker
+/// engine must produce identical top-k lists and identical IO accounting,
+/// in both refinement flavours, and repeated runs on warm scratch must not
+/// drift.
+#[test]
+fn engine_deterministic_one_vs_many_threads() {
+    for early_exit in [false, true] {
+        let mut c = cfg();
+        c.refine.early_exit = early_exit;
+        let sys = Arc::new(build_system(&c).unwrap());
+        let e1 = QueryEngine::with_threads(Arc::clone(&sys), 1);
+        let e8 = QueryEngine::with_threads(Arc::clone(&sys), 8);
+        let a = e1.run(&sys.dataset.queries);
+        let b = e8.run(&sys.dataset.queries);
+        let warm = e8.run(&sys.dataset.queries);
+        assert_eq!(a.len(), sys.dataset.num_queries());
+        for q in 0..a.len() {
+            assert_eq!(a[q].topk, b[q].topk, "early_exit={early_exit} query {q}");
+            assert_eq!(b[q].topk, warm[q].topk, "warm scratch drifted, query {q}");
+            assert_eq!(
+                a[q].breakdown.far_reads, b[q].breakdown.far_reads,
+                "early_exit={early_exit} query {q} far reads"
+            );
+            assert_eq!(a[q].breakdown.ssd_reads, b[q].breakdown.ssd_reads);
+        }
+    }
+}
+
+/// The engine honours per-call mode overrides without rebuilding, and all
+/// three modes return valid sorted top-k lists.
+#[test]
+fn engine_mode_overrides() {
+    let sys = Arc::new(build_system(&cfg()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    for mode in [RefineMode::Baseline, RefineMode::FatrqSw, RefineMode::FatrqHw] {
+        let outs = engine.run_with(&engine.params().with_mode(mode), &sys.dataset.queries);
+        for out in &outs {
+            assert_eq!(out.topk.len(), 10, "{mode:?}");
+            for w in out.topk.windows(2) {
+                assert!(w[0].dist <= w[1].dist);
+            }
+        }
+    }
+}

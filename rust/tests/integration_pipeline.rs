@@ -35,6 +35,7 @@ fn cfg(kind: IndexKind) -> SystemConfig {
             k: 10,
             filter_ratio: 0.25,
             calib_sample: 0.01,
+            ..Default::default()
         },
         ..Default::default()
     }
