@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
     println!("system built in {:.1}s", t0.elapsed().as_secs_f64());
     println!(
         "  fast {:.1} MiB | far {:.1} MiB | storage {:.1} MiB",
-        sys.scorer.fast_bytes() as f64 / (1 << 20) as f64,
+        (sys.scorer.fast_bytes() + sys.index.fast_bytes()) as f64 / (1 << 20) as f64,
         sys.trq.far_bytes() as f64 / (1 << 20) as f64,
         (scale * 768 * 4) as f64 / (1 << 20) as f64
     );

@@ -15,6 +15,7 @@
 //! by the slowest stage, which for 768-D is the unpack/accumulate stream.
 
 use crate::accel::pqueue::HwPriorityQueue;
+use crate::kernels::ternary::TernaryQueryLut;
 use crate::quant::pack::packed_len;
 use crate::quant::trq::TrqStore;
 use crate::refine::{Calibration, FirstOrderCand, ProgressiveEstimator, ProgressiveOutcome};
@@ -89,12 +90,26 @@ impl<'a> RefineEngine<'a> {
         candidates: &[Scored],
         queue_len: usize,
     ) -> (Vec<Scored>, RefineTiming) {
+        self.refine_with(query, candidates, queue_len, None)
+    }
+
+    /// [`RefineEngine::refine`] with an optional per-query ternary
+    /// ADC-table context for the functional estimates (the cycle model is
+    /// unchanged — hardware always streams through its unpack LUT; the
+    /// table only speeds the software twin).
+    pub fn refine_with(
+        &self,
+        query: &[f32],
+        candidates: &[Scored],
+        queue_len: usize,
+        tlut: Option<&TernaryQueryLut>,
+    ) -> (Vec<Scored>, RefineTiming) {
         let dim = self.est.store.dim;
         let mut queue = HwPriorityQueue::new(queue_len.min(candidates.len()).max(1));
         let stream_cycles = self.cycles_per_candidate(dim);
         let mut cycles: u64 = 0;
         for c in candidates {
-            let d = self.est.estimate(query, c.id as usize, c.dist);
+            let d = self.est.estimate_with(query, c.id as usize, c.dist, tlut);
             queue.insert(d, c.id);
             // Pipelined: per candidate the engine is busy for the unpack
             // stream; MAC + queue offer overlap the next stream, but the
@@ -131,7 +146,26 @@ impl<'a> RefineEngine<'a> {
         bound: &mut TopK,
         out: &mut Vec<Scored>,
     ) -> (ProgressiveOutcome, ProgressiveRefineTiming) {
-        let stats = self.est.refine_progressive_into(
+        self.refine_progressive_with(
+            query, ordered, k, margin_first, margin_refined, bound, out, None,
+        )
+    }
+
+    /// [`RefineEngine::refine_progressive`] with an optional ternary
+    /// ADC-table context (see [`RefineEngine::refine_with`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn refine_progressive_with(
+        &self,
+        query: &[f32],
+        ordered: &[FirstOrderCand],
+        k: usize,
+        margin_first: f32,
+        margin_refined: f32,
+        bound: &mut TopK,
+        out: &mut Vec<Scored>,
+        tlut: Option<&TernaryQueryLut>,
+    ) -> (ProgressiveOutcome, ProgressiveRefineTiming) {
+        let stats = self.est.refine_progressive_into_with(
             query,
             ordered,
             k,
@@ -139,6 +173,7 @@ impl<'a> RefineEngine<'a> {
             margin_refined,
             bound,
             out,
+            tlut,
         );
         let dim = self.est.store.dim;
         let stream_cycles = self.cycles_per_candidate(dim);

@@ -28,6 +28,18 @@ impl FrontIndex {
             FrontIndex::Flat(f) => f,
         }
     }
+
+    /// Fast-memory bytes resident in the index structure itself, on top of
+    /// the scorer's codes+codebooks (IVF: centroids + list ids + the
+    /// per-list contiguous code duplicate; graph: adjacency; flat: none —
+    /// its raw vectors are the storage tier).
+    pub fn fast_bytes(&self) -> usize {
+        match self {
+            FrontIndex::Ivf(i) => i.fast_bytes(),
+            FrontIndex::Graph(g) => g.fast_bytes(),
+            FrontIndex::Flat(_) => 0,
+        }
+    }
 }
 
 /// Everything the pipeline needs, fully built.

@@ -9,12 +9,14 @@
 //! - an `Arc<BuiltSystem>` (index, TRQ store, calibration),
 //! - a [`ThreadPool`] of workers,
 //! - one [`QueryScratch`] per worker — resettable `SsdSim` /
-//!   `FarMemoryDevice` models and reusable candidate-ranking/survivor
-//!   buffers plus reusable `TopK`s — so the steady-state refinement path
-//!   performs no heap allocation beyond the returned top-k list. (Two
-//!   remaining per-query allocations are noted where they happen: the
-//!   front-stage `search` result, and the classic-mode HW ranking
-//!   returned by `RefineEngine::refine`.)
+//!   `FarMemoryDevice` models, front-stage [`IndexScratch`] + candidate
+//!   buffer (the index writes via `AnnIndex::search_into`), the per-query
+//!   ternary ADC table ([`crate::kernels::ternary`]), and reusable
+//!   candidate-ranking/survivor buffers plus reusable `TopK`s — so the
+//!   steady-state query path performs no heap allocation beyond the
+//!   returned top-k list. (One remaining per-query allocation is noted
+//!   where it happens: the classic-mode HW ranking returned by
+//!   `RefineEngine::refine`.)
 //!
 //! It also hosts the **true progressive early-exit refinement**
 //! (`RefineConfig::early_exit`): phase 1 ranks candidates by the
@@ -29,6 +31,8 @@ use crate::accel::RefineEngine;
 use crate::config::{RefineMode, SystemConfig};
 use crate::coordinator::builder::BuiltSystem;
 use crate::coordinator::pipeline::{Breakdown, QueryOutcome, GPU_SPEEDUP};
+use crate::index::{CandidateList, IndexScratch};
+use crate::kernels::ternary::{TernaryQueryLut, TERNARY_TAB_MIN_CANDIDATES};
 use crate::refine::{
     filter_top_ratio_len, provable_cutoff_len, FirstOrderCand, ProgressiveEstimator,
 };
@@ -78,8 +82,23 @@ impl QueryParams {
 }
 
 /// Reusable per-worker state: device models are `reset()` instead of
-/// reconstructed, buffers keep their capacity across queries.
+/// reconstructed, buffers keep their capacity across queries. Split into
+/// a front-stage half and a refinement half so the refinement functions
+/// can borrow the candidate list and their own scratch simultaneously.
 pub struct QueryScratch {
+    front: FrontScratch,
+    refine: RefineScratch,
+}
+
+/// Front-stage buffers: index traversal scratch + the candidate list the
+/// traversal writes into (previously a fresh `Vec` per query).
+struct FrontScratch {
+    index: IndexScratch,
+    cands: CandidateList,
+}
+
+/// Refinement-stage buffers.
+struct RefineScratch {
     ssd: SsdSim,
     far: FarMemoryDevice,
     /// Phase-1 first-order ranking (early-exit path).
@@ -90,25 +109,38 @@ pub struct QueryScratch {
     bound: TopK,
     /// Final exact top-k accumulator.
     topk: TopK,
+    /// Per-query ternary ADC table (kernel layer); rebuilt in place when
+    /// the candidate count amortizes it.
+    tlut: TernaryQueryLut,
 }
 
 impl QueryScratch {
     pub fn new(cfg: &SystemConfig) -> Self {
         let cands = cfg.refine.candidates.max(1);
         QueryScratch {
-            ssd: SsdSim::new(&cfg.sim),
-            far: FarMemoryDevice::new(&cfg.sim),
-            ordered: Vec::with_capacity(cands),
-            refined: Vec::with_capacity(cands),
-            bound: TopK::new(cfg.refine.k.max(1)),
-            topk: TopK::new(cfg.refine.k.max(1)),
+            front: FrontScratch {
+                index: IndexScratch::new(),
+                cands: Vec::with_capacity(cands),
+            },
+            refine: RefineScratch {
+                ssd: SsdSim::new(&cfg.sim),
+                far: FarMemoryDevice::new(&cfg.sim),
+                ordered: Vec::with_capacity(cands),
+                refined: Vec::with_capacity(cands),
+                bound: TopK::new(cfg.refine.k.max(1)),
+                topk: TopK::new(cfg.refine.k.max(1)),
+                tlut: TernaryQueryLut::new(),
+            },
         }
     }
 }
 
 /// Serve one query against `sys` with reusable `scratch`. This is the one
 /// hot path shared by [`QueryEngine`], the back-compat
-/// [`crate::coordinator::Pipeline`], and `run_batch`.
+/// [`crate::coordinator::Pipeline`], and `run_batch`. The whole path —
+/// front stage (`search_into`), first-order ranking, progressive walk,
+/// rerank — runs out of the per-worker scratch; steady state allocates
+/// nothing beyond the returned top-k list.
 pub(crate) fn execute_query(
     sys: &BuiltSystem,
     p: &QueryParams,
@@ -119,15 +151,19 @@ pub(crate) fn execute_query(
 
     // ---- Stage 1: front-stage traversal (the "GPU") ----
     let t0 = Instant::now();
-    let cands = sys.index.as_ann().search(query, p.candidates);
+    sys.index
+        .as_ann()
+        .search_into(query, p.candidates, &mut scratch.front.index, &mut scratch.front.cands);
     bd.traversal_ns = t0.elapsed().as_nanos() as f64 / GPU_SPEEDUP;
-    bd.candidates = cands.len();
+    bd.candidates = scratch.front.cands.len();
+    let cands = &scratch.front.cands;
+    let s = &mut scratch.refine;
 
     // ---- Stage 2+3: refinement + rerank ----
     let topk = match p.mode {
-        RefineMode::Baseline => refine_baseline(sys, p, query, &cands, scratch, &mut bd),
-        RefineMode::FatrqSw => refine_fatrq(sys, p, query, &cands, false, scratch, &mut bd),
-        RefineMode::FatrqHw => refine_fatrq(sys, p, query, &cands, true, scratch, &mut bd),
+        RefineMode::Baseline => refine_baseline(sys, p, query, cands, s, &mut bd),
+        RefineMode::FatrqSw => refine_fatrq(sys, p, query, cands, false, s, &mut bd),
+        RefineMode::FatrqHw => refine_fatrq(sys, p, query, cands, true, s, &mut bd),
     };
     QueryOutcome { topk, breakdown: bd }
 }
@@ -139,7 +175,7 @@ fn refine_baseline(
     p: &QueryParams,
     query: &[f32],
     cands: &[Scored],
-    s: &mut QueryScratch,
+    s: &mut RefineScratch,
     bd: &mut Breakdown,
 ) -> Vec<Scored> {
     let dim = sys.dataset.dim;
@@ -175,11 +211,32 @@ fn refine_fatrq(
     query: &[f32],
     cands: &[Scored],
     on_device: bool,
-    s: &mut QueryScratch,
+    s: &mut RefineScratch,
     bd: &mut Breakdown,
 ) -> Vec<Scored> {
     let dim = sys.dataset.dim;
     let rec_bytes = sys.trq.record_bytes();
+
+    // Kernel selection: with enough residual dots ahead, build the
+    // per-query ternary ADC table once (in reusable scratch) and route
+    // every dot through it; below the threshold the byte-LUT fallback
+    // wins. The classic path refines every candidate; the early-exit walk
+    // streams an unknown prefix, but provably at least `min(k, cands)`
+    // records (the bound must fill before the walk can break), so gate on
+    // that guaranteed lower bound — the build then always amortizes.
+    // Bit-for-bit identical either way, so the gate can never change
+    // results.
+    let dots_lower_bound = if p.early_exit {
+        p.k.min(cands.len())
+    } else {
+        cands.len()
+    };
+    let tlut: Option<&TernaryQueryLut> = if dots_lower_bound >= TERNARY_TAB_MIN_CANDIDATES {
+        s.tlut.build(query);
+        Some(&s.tlut)
+    } else {
+        None
+    };
 
     let keep = if p.early_exit {
         // -- phase 1: first-order ranking, fast memory only --
@@ -196,7 +253,7 @@ fn refine_fatrq(
         // -- phase 2: progressive walk, streaming only survivors --
         let streamed = if on_device {
             let engine = RefineEngine::new(&sys.trq, sys.cal.clone());
-            let (stats, timing) = engine.refine_progressive(
+            let (stats, timing) = engine.refine_progressive_with(
                 query,
                 &s.ordered,
                 p.k,
@@ -204,12 +261,13 @@ fn refine_fatrq(
                 sys.margin,
                 &mut s.bound,
                 &mut s.refined,
+                tlut,
             );
             bd.refine_compute_ns = timing.ns;
             stats.streamed
         } else {
             let t0 = Instant::now();
-            let stats = est.refine_progressive_into(
+            let stats = est.refine_progressive_into_with(
                 query,
                 &s.ordered,
                 p.k,
@@ -217,6 +275,7 @@ fn refine_fatrq(
                 sys.margin,
                 &mut s.bound,
                 &mut s.refined,
+                tlut,
             );
             bd.refine_compute_ns = t0.elapsed().as_nanos() as f64;
             stats.streamed
@@ -261,10 +320,11 @@ fn refine_fatrq(
             // still allocates its queue + ranked Vec internally — the one
             // classic-mode allocation scratch reuse doesn't yet remove.)
             let engine = RefineEngine::new(&sys.trq, sys.cal.clone());
-            let (ranked, timing) = engine.refine(
+            let (ranked, timing) = engine.refine_with(
                 query,
                 cands,
                 cands.len().min(crate::accel::pqueue::HW_QUEUE_CAPACITY),
+                tlut,
             );
             bd.refine_compute_ns = timing.ns;
             s.refined.clear();
@@ -273,7 +333,7 @@ fn refine_fatrq(
             // SW: measured host time, refined in place in scratch.
             let est = ProgressiveEstimator::new(&sys.trq, sys.cal.clone());
             let t0 = Instant::now();
-            est.refine_into(query, cands, &mut s.refined);
+            est.refine_into_with(query, cands, &mut s.refined, tlut);
             bd.refine_compute_ns = t0.elapsed().as_nanos() as f64;
         }
         filter_top_ratio_len(s.refined.len(), p.filter_ratio, p.k)

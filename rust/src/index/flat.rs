@@ -1,9 +1,9 @@
 //! Exact exhaustive index — ground truth oracle for recall measurement and
 //! the distortion experiments (Fig 7 uses top-100 exact neighbors).
 
-use crate::index::{AnnIndex, CandidateList};
-use crate::util::{l2_sq, parallel_for, threadpool::default_threads, topk::TopK};
-use std::sync::Mutex;
+use crate::index::{AnnIndex, CandidateList, IndexScratch};
+use crate::kernels::pqscan::l2_scan_topk;
+use crate::util::threadpool::{default_threads, parallel_map};
 
 /// Brute-force L2 index over an owned row-major matrix.
 pub struct FlatIndex {
@@ -22,33 +22,38 @@ impl FlatIndex {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
 
-    /// Exact top-n ids + distances for one query.
+    /// Exact top-n ids + distances for one query (throwaway scratch;
+    /// serving paths use [`AnnIndex::search_into`]).
     pub fn search_exact(&self, query: &[f32], n: usize) -> CandidateList {
-        let count = self.len();
-        let mut top = TopK::new(n.min(count).max(1));
-        for i in 0..count {
-            top.push(l2_sq(query, self.vector(i)), i as u64);
-        }
-        top.into_sorted()
+        self.search(query, n)
     }
 
     /// Exact top-n for a batch of queries, parallel across queries.
-    /// Returns one candidate list per query.
+    /// Returns one candidate list per query, in query order (lock-free:
+    /// each worker writes its own output slot). Each query builds its own
+    /// throwaway scratch — this is a build/ground-truth path, not the
+    /// serving path; serving reuses scratch via [`AnnIndex::search_into`].
     pub fn search_batch(&self, queries: &[f32], n: usize) -> Vec<CandidateList> {
         let nq = queries.len() / self.dim;
-        let results: Vec<Mutex<CandidateList>> =
-            (0..nq).map(|_| Mutex::new(Vec::new())).collect();
-        parallel_for(nq, default_threads(), |q| {
-            let list = self.search_exact(&queries[q * self.dim..(q + 1) * self.dim], n);
-            *results[q].lock().unwrap() = list;
-        });
-        results.into_iter().map(|m| m.into_inner().unwrap()).collect()
+        parallel_map(nq, default_threads(), |q| {
+            self.search_exact(&queries[q * self.dim..(q + 1) * self.dim], n)
+        })
     }
 }
 
 impl AnnIndex for FlatIndex {
-    fn search(&self, query: &[f32], n: usize) -> CandidateList {
-        self.search_exact(query, n)
+    fn search_into(
+        &self,
+        query: &[f32],
+        n: usize,
+        scratch: &mut IndexScratch,
+        out: &mut CandidateList,
+    ) {
+        let count = self.len();
+        scratch.top.reset(n.min(count).max(1));
+        l2_scan_topk(query, &self.data, self.dim, &mut scratch.dists, &mut scratch.top);
+        out.clear();
+        scratch.top.drain_sorted_into(out);
     }
 
     fn len(&self) -> usize {
@@ -107,5 +112,23 @@ mod tests {
         let idx = FlatIndex::new(vec![0.0, 1.0, 2.0, 3.0], 2);
         let res = idx.search_exact(&[0.0, 0.0], 10);
         assert_eq!(res.len(), 2);
+    }
+
+    #[test]
+    fn search_into_matches_search_with_reused_scratch() {
+        use crate::index::IndexScratch;
+        let mut rng = Rng::new(31);
+        let dim = 12;
+        let mut data = vec![0f32; 400 * dim];
+        rng.fill_gaussian(&mut data);
+        let idx = FlatIndex::new(data, dim);
+        let mut scratch = IndexScratch::new();
+        let mut out = Vec::new();
+        for q in 0..10 {
+            let query: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            let n = 5 + q * 3;
+            idx.search_into(&query, n, &mut scratch, &mut out);
+            assert_eq!(out, idx.search_exact(&query, n), "query {q}");
+        }
     }
 }

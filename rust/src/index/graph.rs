@@ -5,7 +5,7 @@
 //! exact distances at build time, PQ-ADC coarse scores at query time.
 
 use crate::index::scorer::PqScorer;
-use crate::index::{AnnIndex, CandidateList};
+use crate::index::{AnnIndex, CandidateList, IndexScratch};
 use crate::util::{l2_sq, topk::Scored, topk::TopK};
 use std::collections::HashSet;
 
@@ -125,18 +125,24 @@ impl GraphIndex {
         self.beam_generic(entry, ef, limit, dist)
     }
 
-    /// Core beam search over the graph with a pluggable distance.
-    fn beam_generic<F: Fn(u32) -> f32>(
+    /// Core beam search over the graph with a pluggable distance, writing
+    /// into caller-owned state (cleared/reset here) so serving paths reuse
+    /// per-worker buffers. Results are left in `best`.
+    #[allow(clippy::too_many_arguments)]
+    fn beam_into<F: Fn(u32) -> f32>(
         &self,
         entry: u32,
         ef: usize,
         limit: usize,
         dist: F,
-    ) -> Vec<Scored> {
-        let mut visited = HashSet::with_capacity(ef * 4);
-        let mut best = TopK::new(ef.max(1)); // results (max-heap on dist)
+        visited: &mut HashSet<u32>,
+        frontier: &mut Vec<Scored>,
+        best: &mut TopK,
+    ) {
+        visited.clear();
+        frontier.clear();
+        best.reset(ef.max(1)); // results (max-heap on dist)
         // Frontier: min-heap via sorted Vec (small ef, fine).
-        let mut frontier: Vec<Scored> = Vec::with_capacity(ef * 2);
         let d0 = dist(entry);
         visited.insert(entry);
         best.push(d0, entry as u64);
@@ -162,6 +168,20 @@ impl GraphIndex {
                 }
             }
         }
+    }
+
+    /// [`GraphIndex::beam_into`] with throwaway state (construction path).
+    fn beam_generic<F: Fn(u32) -> f32>(
+        &self,
+        entry: u32,
+        ef: usize,
+        limit: usize,
+        dist: F,
+    ) -> Vec<Scored> {
+        let mut visited = HashSet::with_capacity(ef * 4);
+        let mut frontier: Vec<Scored> = Vec::with_capacity(ef * 2);
+        let mut best = TopK::new(ef.max(1));
+        self.beam_into(entry, ef, limit, dist, &mut visited, &mut frontier, &mut best);
         best.into_sorted()
     }
 
@@ -203,15 +223,10 @@ impl GraphIndex {
     }
 
     /// Query-time beam search using coarse PQ-ADC scores (what the GPU does
-    /// in the paper's pipeline).
+    /// in the paper's pipeline). Throwaway-scratch wrapper over
+    /// [`AnnIndex::search_into`].
     pub fn search_coarse(&self, query: &[f32], n: usize) -> CandidateList {
-        let qs = self.scorer.for_query(query);
-        let ef = self.ef_search.max(n);
-        let mut out = self.beam_generic(self.entry, ef, self.count, |id| {
-            qs.score(id as usize)
-        });
-        out.truncate(n);
-        out
+        self.search(query, n)
     }
 
     /// Edges per node actually used (diagnostics).
@@ -219,11 +234,37 @@ impl GraphIndex {
         let used = self.adjacency.iter().filter(|&&e| e != EMPTY).count();
         used as f64 / self.count as f64
     }
+
+    /// Fast-memory bytes resident in the graph structure itself
+    /// (adjacency), on top of the scorer's codes+codebooks.
+    pub fn fast_bytes(&self) -> usize {
+        self.adjacency.len() * 4
+    }
 }
 
 impl AnnIndex for GraphIndex {
-    fn search(&self, query: &[f32], n: usize) -> CandidateList {
-        self.search_coarse(query, n)
+    fn search_into(
+        &self,
+        query: &[f32],
+        n: usize,
+        scratch: &mut IndexScratch,
+        out: &mut CandidateList,
+    ) {
+        self.scorer.pq.adc_table_into(query, &mut scratch.lut);
+        let ef = self.ef_search.max(n);
+        let lut = &scratch.lut;
+        self.beam_into(
+            self.entry,
+            ef,
+            self.count,
+            |id| self.scorer.score_with(lut, id as usize),
+            &mut scratch.visited,
+            &mut scratch.frontier,
+            &mut scratch.top,
+        );
+        out.clear();
+        scratch.top.drain_sorted_into(out);
+        out.truncate(n);
     }
 
     fn len(&self) -> usize {
@@ -334,6 +375,20 @@ mod tests {
         idx.ef_search = 128;
         let high = recall(&idx);
         assert!(high >= low, "ef128 {high} < ef16 {low}");
+    }
+
+    #[test]
+    fn search_into_matches_search_with_reused_scratch() {
+        use crate::index::IndexScratch;
+        let (ds, idx) = build_small();
+        let mut scratch = IndexScratch::new();
+        let mut out = Vec::new();
+        for q in 0..ds.num_queries() {
+            let query = ds.query(q);
+            idx.search_into(query, 40, &mut scratch, &mut out);
+            assert_eq!(out, idx.search(query, 40), "query {q}");
+            assert!(out.len() <= 40);
+        }
     }
 
     #[test]

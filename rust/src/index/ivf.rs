@@ -1,10 +1,16 @@
 //! IVF index: k-means coarse partition + inverted lists, candidates scored
 //! with PQ-ADC (FAISS `IVF,PQ` stand-in — paper baseline "IVF-FAISS").
+//!
+//! Codes are duplicated per list in **list order** (`list_codes`, the
+//! FAISS inverted-list layout) so a probe is one blocked
+//! [`crate::kernels::pqscan::adc_scan_topk`] over contiguous rows instead
+//! of a bounds-checked gather per id.
 
 use crate::index::scorer::PqScorer;
-use crate::index::{AnnIndex, CandidateList};
+use crate::index::{AnnIndex, CandidateList, IndexScratch};
+use crate::kernels::pqscan::adc_scan_topk;
 use crate::quant::kmeans::{self, KMeans};
-use crate::util::{l2_sq, topk::TopK};
+use crate::util::{l2_sq, topk::Scored, topk::TopK};
 
 /// Inverted-file index with PQ-coded candidates.
 pub struct IvfIndex {
@@ -12,7 +18,12 @@ pub struct IvfIndex {
     pub coarse: KMeans,
     /// `nlist` inverted lists of vector ids.
     pub lists: Vec<Vec<u32>>,
-    /// Fast-memory coarse scorer (PQ codes by id).
+    /// Per-list contiguous PQ code rows (`lists[l].len() * m` bytes each),
+    /// the blocked-scan layout. Row `j` of list `l` is the code of vector
+    /// `lists[l][j]`.
+    pub list_codes: Vec<Vec<u8>>,
+    /// Fast-memory coarse scorer (PQ codes by id — kept for the shared
+    /// codebook and the per-id paths: graph traversal, calibration).
     pub scorer: PqScorer,
     /// Probes per query.
     pub nprobe: usize,
@@ -40,16 +51,39 @@ impl IvfIndex {
             let c = coarse.assign(&data[i * dim..(i + 1) * dim]);
             lists[c].push(i as u32);
         }
-        IvfIndex { coarse, lists, scorer, nprobe, count: n }
+        let m = scorer.pq.m;
+        let list_codes = lists
+            .iter()
+            .map(|l| {
+                let mut codes = Vec::with_capacity(l.len() * m);
+                for &id in l {
+                    codes.extend_from_slice(
+                        &scorer.codes[id as usize * m..(id as usize + 1) * m],
+                    );
+                }
+                codes
+            })
+            .collect();
+        IvfIndex { coarse, lists, list_codes, scorer, nprobe, count: n }
     }
 
     /// The `nprobe` nearest list ids for a query.
     pub fn probe_lists(&self, query: &[f32]) -> Vec<usize> {
-        let mut top = TopK::new(self.nprobe.min(self.coarse.k));
+        let mut top = TopK::new(1);
+        let mut probes = Vec::new();
+        self.probe_order_into(query, &mut top, &mut probes);
+        probes.into_iter().map(|s| s.id as usize).collect()
+    }
+
+    /// Scratch-reusing probe selection: the `nprobe` nearest lists,
+    /// ascending by centroid distance (list id in `Scored::id`).
+    fn probe_order_into(&self, query: &[f32], top: &mut TopK, out: &mut Vec<Scored>) {
+        top.reset(self.nprobe.min(self.coarse.k).max(1));
         for c in 0..self.coarse.k {
             top.push(l2_sq(query, self.coarse.centroid(c)), c as u64);
         }
-        top.into_sorted().into_iter().map(|s| s.id as usize).collect()
+        out.clear();
+        top.drain_sorted_into(out);
     }
 
     /// Number of candidates scanned for a query (for the Fig 2/6 breakdown).
@@ -65,18 +99,43 @@ impl IvfIndex {
         }
         out
     }
+
+    /// Fast-memory bytes resident in the index structure itself, on top of
+    /// the scorer's codes+codebooks: coarse centroids, inverted-list ids,
+    /// and the per-list contiguous code duplicate (`list_codes`).
+    pub fn fast_bytes(&self) -> usize {
+        self.coarse.centroids.len() * 4
+            + self.lists.iter().map(|l| l.len() * 4).sum::<usize>()
+            + self.list_codes.iter().map(|c| c.len()).sum::<usize>()
+    }
 }
 
 impl AnnIndex for IvfIndex {
-    fn search(&self, query: &[f32], n: usize) -> CandidateList {
-        let qs = self.scorer.for_query(query);
-        let mut top = TopK::new(n.max(1));
-        for l in self.probe_lists(query) {
-            for &id in &self.lists[l] {
-                top.push(qs.score(id as usize), id as u64);
-            }
+    fn search_into(
+        &self,
+        query: &[f32],
+        n: usize,
+        scratch: &mut IndexScratch,
+        out: &mut CandidateList,
+    ) {
+        let pq = &self.scorer.pq;
+        pq.adc_table_into(query, &mut scratch.lut);
+        self.probe_order_into(query, &mut scratch.top, &mut scratch.probes);
+        scratch.top.reset(n.max(1));
+        for p in &scratch.probes {
+            let l = p.id as usize;
+            adc_scan_topk(
+                &scratch.lut,
+                pq.ksub,
+                pq.m,
+                &self.list_codes[l],
+                &self.lists[l],
+                &mut scratch.dists,
+                &mut scratch.top,
+            );
         }
-        top.into_sorted()
+        out.clear();
+        scratch.top.drain_sorted_into(out);
     }
 
     fn len(&self) -> usize {
@@ -158,6 +217,53 @@ mod tests {
         }
         let recall = hit as f64 / total as f64;
         assert!(recall > 0.6, "candidate recall {recall}");
+    }
+
+    #[test]
+    fn blocked_scan_matches_per_id_path() {
+        // The blocked kernel must reproduce the per-id QueryScorer loop
+        // exactly: same candidates, same distances, same order.
+        let (ds, idx) = build_small();
+        for q in 0..ds.num_queries() {
+            let query = ds.query(q);
+            let blocked = idx.search(query, 60);
+            let qs = idx.scorer.for_query(query);
+            let mut top = crate::util::topk::TopK::new(60);
+            for l in idx.probe_lists(query) {
+                for &id in &idx.lists[l] {
+                    top.push(qs.score(id as usize), id as u64);
+                }
+            }
+            assert_eq!(blocked, top.into_sorted(), "query {q}");
+        }
+    }
+
+    #[test]
+    fn list_codes_mirror_scorer_codes() {
+        let (_, idx) = build_small();
+        let m = idx.scorer.pq.m;
+        for (l, list) in idx.lists.iter().enumerate() {
+            assert_eq!(idx.list_codes[l].len(), list.len() * m);
+            for (j, &id) in list.iter().enumerate() {
+                assert_eq!(
+                    &idx.list_codes[l][j * m..(j + 1) * m],
+                    &idx.scorer.codes[id as usize * m..(id as usize + 1) * m]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn search_into_matches_search_with_reused_scratch() {
+        use crate::index::IndexScratch;
+        let (ds, idx) = build_small();
+        let mut scratch = IndexScratch::new();
+        let mut out = Vec::new();
+        for q in 0..ds.num_queries() {
+            let query = ds.query(q);
+            idx.search_into(query, 50, &mut scratch, &mut out);
+            assert_eq!(out, idx.search(query, 50), "query {q}");
+        }
     }
 
     #[test]

@@ -3,9 +3,15 @@
 //!
 //! - [`flat`] — exact exhaustive scan (ground truth + small corpora).
 //! - [`ivf`] — inverted-file index over a coarse k-means partition
-//!   (FAISS-IVF stand-in).
+//!   (FAISS-IVF stand-in) with per-list contiguous code rows for blocked
+//!   ADC scans.
 //! - [`graph`] — degree-bounded navigable graph with greedy beam search
 //!   (CAGRA/HNSW-class stand-in; flat single-layer graph per [27]).
+//!
+//! All three serve queries through [`AnnIndex::search_into`] with
+//! caller-owned [`IndexScratch`], so a persistent engine's front stage
+//! allocates nothing in steady state; [`AnnIndex::search`] is the
+//! convenience wrapper that builds throwaway scratch.
 
 pub mod flat;
 pub mod graph;
@@ -16,17 +22,73 @@ pub use flat::FlatIndex;
 pub use graph::GraphIndex;
 pub use ivf::IvfIndex;
 
-use crate::util::topk::Scored;
+use crate::util::topk::{Scored, TopK};
+use std::collections::HashSet;
 
 /// A front-stage candidate list: ids with their *coarse* (quantized)
 /// distances, ascending. Only 4 bytes/candidate (the coarse distance)
 /// travel to the refinement device (paper §IV).
 pub type CandidateList = Vec<Scored>;
 
+/// Reusable per-worker front-stage buffers, shared across the three index
+/// kinds (one scratch serves any of them; unused fields stay empty). All
+/// buffers keep their capacity across queries.
+pub struct IndexScratch {
+    /// Per-query PQ-ADC lookup table (IVF/graph).
+    pub lut: Vec<f32>,
+    /// Blocked-scan distance buffer ([`crate::kernels::pqscan`]).
+    pub dists: Vec<f32>,
+    /// Traversal top-k (probe selection, candidate selection, beam).
+    pub top: TopK,
+    /// IVF probe order (list id in `Scored::id`).
+    pub probes: Vec<Scored>,
+    /// Graph: visited set.
+    pub visited: HashSet<u32>,
+    /// Graph: beam frontier.
+    pub frontier: Vec<Scored>,
+}
+
+impl IndexScratch {
+    pub fn new() -> Self {
+        IndexScratch {
+            lut: Vec::new(),
+            dists: Vec::new(),
+            top: TopK::new(1),
+            probes: Vec::new(),
+            visited: HashSet::new(),
+            frontier: Vec::new(),
+        }
+    }
+}
+
+impl Default for IndexScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Common search interface over the front-stage indexes.
 pub trait AnnIndex: Send + Sync {
+    /// Write up to `n` candidates for `query` (scored with coarse codes,
+    /// ascending) into `out` (cleared first), reusing `scratch` — the
+    /// zero-allocation serving entry point.
+    fn search_into(
+        &self,
+        query: &[f32],
+        n: usize,
+        scratch: &mut IndexScratch,
+        out: &mut CandidateList,
+    );
+
     /// Return up to `n` candidates for `query`, scored with coarse codes.
-    fn search(&self, query: &[f32], n: usize) -> CandidateList;
+    /// Convenience wrapper over [`AnnIndex::search_into`] with throwaway
+    /// scratch; hot loops should hold an [`IndexScratch`] instead.
+    fn search(&self, query: &[f32], n: usize) -> CandidateList {
+        let mut scratch = IndexScratch::new();
+        let mut out = CandidateList::new();
+        self.search_into(query, n, &mut scratch, &mut out);
+        out
+    }
 
     /// Number of indexed vectors.
     fn len(&self) -> usize;

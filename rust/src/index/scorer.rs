@@ -34,6 +34,15 @@ impl PqScorer {
         QueryScorer { scorer: self, lut: self.pq.adc_table(query) }
     }
 
+    /// Coarse (ADC) distance of vector `id` against a caller-owned table
+    /// (built with [`crate::quant::ProductQuantizer::adc_table_into`]) —
+    /// the scratch-reusing twin of [`QueryScorer::score`].
+    #[inline]
+    pub fn score_with(&self, lut: &[f32], id: usize) -> f32 {
+        let m = self.pq.m;
+        self.pq.adc_distance(lut, &self.codes[id * m..(id + 1) * m])
+    }
+
     /// Fast-memory bytes held by the coarse codes.
     pub fn fast_bytes(&self) -> usize {
         self.codes.len() + self.pq.codebooks.len() * 4
@@ -44,10 +53,7 @@ impl QueryScorer<'_> {
     /// Coarse (ADC) distance of vector `id` to the query.
     #[inline]
     pub fn score(&self, id: usize) -> f32 {
-        let m = self.scorer.pq.m;
-        self.scorer
-            .pq
-            .adc_distance(&self.lut, &self.scorer.codes[id * m..(id + 1) * m])
+        self.scorer.score_with(&self.lut, id)
     }
 
     /// Borrow the ADC table (the XLA scan path feeds it to the `pq_adc`

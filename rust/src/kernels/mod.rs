@@ -1,0 +1,29 @@
+//! Query-time compute kernels — the table-driven, allocation-free hot
+//! loops every per-query path routes through.
+//!
+//! FaTRQ's throughput claim rests on refinement being compute-trivial once
+//! residuals stream from far memory: the accelerator does `⟨q, ē⟩` with a
+//! 256-entry unpack LUT and adds/subs only (paper §IV). This module is the
+//! software twin of that philosophy for the whole query path, in the
+//! FusionANNS/HAVEN tradition of LUT-resident distance kernels and blocked
+//! scans:
+//!
+//! - [`ternary`] — per-query **ternary ADC tables**: a `(dim/5) × 243`
+//!   table of byte-group dot contributions built by base-3 dynamic
+//!   programming turns [`crate::quant::trq::qdot_packed`]'s 5 multiply-adds
+//!   per packed byte into one lookup + add, bit-for-bit identical to the
+//!   byte-LUT fallback.
+//! - [`pqscan`] — **blocked ADC / L2 scans**: distance kernels over
+//!   contiguous code (or vector) rows, writing into reusable scratch and
+//!   feeding a [`crate::util::topk::TopK`] per block, instead of per-id
+//!   scoring through slice bounds checks.
+//!
+//! All kernels are exact drop-ins for the loops they replace: identical
+//! f32 results, so recall, early-exit walks, and determinism contracts are
+//! unaffected by which kernel a path picks.
+
+pub mod pqscan;
+pub mod ternary;
+
+pub use pqscan::{adc_row, adc_scan_block, adc_scan_topk, l2_scan_topk, SCAN_BLOCK};
+pub use ternary::{qdot_packed_tab, TernaryQueryLut, TERNARY_TAB_MIN_CANDIDATES};

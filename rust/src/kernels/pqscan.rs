@@ -1,0 +1,193 @@
+//! Blocked distance scans over contiguous rows.
+//!
+//! The front stage used to score candidates one id at a time through
+//! `QueryScorer::score` — a slice-bounds-checked gather per candidate.
+//! These kernels scan a *contiguous* block of code (or vector) rows,
+//! write distances into reusable scratch, and feed a [`TopK`] per block:
+//! the structure FAISS-class scanners use to win the coarse stage.
+//!
+//! [`adc_row`] is the one ADC inner loop shared by the per-id path
+//! ([`crate::quant::ProductQuantizer::adc_distance`] delegates here) and
+//! the blocked scans, so the two paths produce identical f32 distances by
+//! construction — blocked IVF/flat results match the per-id results
+//! exactly, candidate for candidate.
+
+use crate::util::l2_sq;
+use crate::util::topk::TopK;
+
+/// Rows per block: big enough to amortize loop overhead, small enough
+/// that the distance scratch stays L1-resident (64 × 4 B = 256 B).
+pub const SCAN_BLOCK: usize = 64;
+
+/// ADC distance of one `m`-byte code row against a per-query table
+/// (`m × ksub`, row-major). Four interleaved partial sums break the
+/// add-latency chain; the tail keeps the left fold.
+#[inline]
+pub fn adc_row(lut: &[f32], ksub: usize, code: &[u8]) -> f32 {
+    let m = code.len();
+    let unrolled = m / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let mut sub = 0usize;
+    while sub < unrolled {
+        s0 += lut[sub * ksub + code[sub] as usize];
+        s1 += lut[(sub + 1) * ksub + code[sub + 1] as usize];
+        s2 += lut[(sub + 2) * ksub + code[sub + 2] as usize];
+        s3 += lut[(sub + 3) * ksub + code[sub + 3] as usize];
+        sub += 4;
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    while sub < m {
+        acc += lut[sub * ksub + code[sub] as usize];
+        sub += 1;
+    }
+    acc
+}
+
+/// ADC-scan a contiguous code block (`out.len()` rows of `m` bytes),
+/// writing one distance per row.
+pub fn adc_scan_block(lut: &[f32], ksub: usize, m: usize, codes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len() * m);
+    for (row, slot) in codes.chunks_exact(m).zip(out.iter_mut()) {
+        *slot = adc_row(lut, ksub, row);
+    }
+}
+
+/// Blocked ADC scan of a contiguous code region feeding a [`TopK`]:
+/// `codes` holds `ids.len()` rows of `m` bytes, `dists` is reusable
+/// scratch (resized to [`SCAN_BLOCK`], never reallocated in steady
+/// state). Push order is id order, so results match the per-id loop
+/// exactly (ties and all).
+pub fn adc_scan_topk(
+    lut: &[f32],
+    ksub: usize,
+    m: usize,
+    codes: &[u8],
+    ids: &[u32],
+    dists: &mut Vec<f32>,
+    top: &mut TopK,
+) {
+    let n = ids.len();
+    debug_assert_eq!(codes.len(), n * m);
+    dists.clear();
+    dists.resize(SCAN_BLOCK, 0.0);
+    let mut start = 0usize;
+    while start < n {
+        let bn = (n - start).min(SCAN_BLOCK);
+        adc_scan_block(lut, ksub, m, &codes[start * m..(start + bn) * m], &mut dists[..bn]);
+        for (j, &d) in dists[..bn].iter().enumerate() {
+            top.push(d, ids[start + j] as u64);
+        }
+        start += bn;
+    }
+}
+
+/// Blocked exact-L2 scan over contiguous `dim`-wide f32 rows feeding a
+/// [`TopK`]; ids are the row indices. Same per-row [`l2_sq`] and push
+/// order as the naive loop, so results are identical.
+pub fn l2_scan_topk(query: &[f32], data: &[f32], dim: usize, dists: &mut Vec<f32>, top: &mut TopK) {
+    if dim == 0 {
+        return;
+    }
+    let n = data.len() / dim;
+    dists.clear();
+    dists.resize(SCAN_BLOCK, 0.0);
+    let mut start = 0usize;
+    while start < n {
+        let bn = (n - start).min(SCAN_BLOCK);
+        for (j, slot) in dists[..bn].iter_mut().enumerate() {
+            let i = start + j;
+            *slot = l2_sq(query, &data[i * dim..(i + 1) * dim]);
+        }
+        for (j, &d) in dists[..bn].iter().enumerate() {
+            top.push(d, (start + j) as u64);
+        }
+        start += bn;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fixture(n: usize, m: usize, ksub: usize, seed: u64) -> (Vec<f32>, Vec<u8>) {
+        let mut rng = Rng::new(seed);
+        let lut: Vec<f32> = (0..m * ksub).map(|_| rng.f32()).collect();
+        let codes: Vec<u8> = (0..n * m).map(|_| rng.below(ksub) as u8).collect();
+        (lut, codes)
+    }
+
+    #[test]
+    fn adc_row_matches_sequential_sum() {
+        for m in [1usize, 3, 4, 7, 16, 96] {
+            let (lut, codes) = fixture(1, m, 8, m as u64);
+            let seq: f32 = (0..m).map(|s| lut[s * 8 + codes[s] as usize]).sum();
+            let got = adc_row(&lut, 8, &codes);
+            assert!(
+                (got - seq).abs() < 1e-4 * seq.abs().max(1.0),
+                "m {m}: {got} vs {seq}"
+            );
+        }
+    }
+
+    #[test]
+    fn scan_block_matches_adc_row() {
+        let (n, m, ksub) = (100usize, 6usize, 8usize);
+        let (lut, codes) = fixture(n, m, ksub, 3);
+        let mut out = vec![0f32; n];
+        adc_scan_block(&lut, ksub, m, &codes, &mut out);
+        for i in 0..n {
+            assert_eq!(out[i], adc_row(&lut, ksub, &codes[i * m..(i + 1) * m]));
+        }
+    }
+
+    #[test]
+    fn blocked_scan_matches_per_row() {
+        let (n, m, ksub) = (300usize, 16usize, 16usize);
+        let (lut, codes) = fixture(n, m, ksub, 5);
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let mut dists = Vec::new();
+        let mut top = TopK::new(25);
+        adc_scan_topk(&lut, ksub, m, &codes, &ids, &mut dists, &mut top);
+        let blocked = top.take_sorted();
+        let mut top2 = TopK::new(25);
+        for i in 0..n {
+            top2.push(adc_row(&lut, ksub, &codes[i * m..(i + 1) * m]), i as u64);
+        }
+        assert_eq!(blocked, top2.take_sorted());
+    }
+
+    #[test]
+    fn blocked_scan_ragged_and_empty() {
+        let (lut, codes) = fixture(67, 8, 4, 9); // not a multiple of SCAN_BLOCK
+        let ids: Vec<u32> = (100..167).collect(); // non-identity ids
+        let mut dists = Vec::new();
+        let mut top = TopK::new(10);
+        adc_scan_topk(&lut, 4, 8, &codes, &ids, &mut dists, &mut top);
+        let got = top.take_sorted();
+        assert_eq!(got.len(), 10);
+        assert!(got.iter().all(|s| (100..167).contains(&(s.id as u32))));
+        // Empty scan leaves the TopK untouched.
+        let mut top = TopK::new(3);
+        adc_scan_topk(&lut, 4, 8, &[], &[], &mut dists, &mut top);
+        assert!(top.is_empty());
+    }
+
+    #[test]
+    fn l2_scan_matches_naive_loop() {
+        let mut rng = Rng::new(77);
+        let (n, dim) = (200usize, 24usize);
+        let mut data = vec![0f32; n * dim];
+        rng.fill_gaussian(&mut data);
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let mut dists = Vec::new();
+        let mut top = TopK::new(15);
+        l2_scan_topk(&q, &data, dim, &mut dists, &mut top);
+        let blocked = top.take_sorted();
+        let mut top2 = TopK::new(15);
+        for i in 0..n {
+            top2.push(l2_sq(&q, &data[i * dim..(i + 1) * dim]), i as u64);
+        }
+        assert_eq!(blocked, top2.take_sorted());
+    }
+}

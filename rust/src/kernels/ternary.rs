@@ -1,0 +1,244 @@
+//! Per-query ternary ADC tables (the tentpole kernel).
+//!
+//! [`crate::quant::trq::qdot_packed`] spends 5 multiply-adds plus a
+//! 20-byte LUT row load per packed byte. But within one query `q` the
+//! contribution of byte value `b` at byte position `g` is a constant:
+//!
+//! `T[g][b] = Σ_{j<5} trit(b, j) · q[5g + j]`
+//!
+//! so a `(dim/5) × 243` table collapses the inner product to one f32 load
+//! and one add per packed byte — the exact structure of PQ's asymmetric
+//! distance computation, applied to the ternary residual code. `k*` still
+//! comes for free from the shared 256-entry k-count table
+//! ([`crate::quant::pack::decode_lut`]), and the base-3 far-memory format
+//! is untouched (the table is a query-side artifact; record bytes stay
+//! `packed_len(dim) + 8`).
+//!
+//! **Build cost** is O(groups × 243) via base-3 dynamic programming — each
+//! entry extends a one-trit-shorter prefix with a single add, not 5 FMAs
+//! from scratch — so a 768-D table costs ~56k adds, amortized after a few
+//! dozen candidates ([`TERNARY_TAB_MIN_CANDIDATES`]). Below the threshold
+//! callers keep the byte-LUT fallback; because the two kernels follow the
+//! same summation-order contract (see `qdot_packed`), results are
+//! bit-for-bit identical in f32 either way and the threshold can never
+//! change a ranking.
+
+use crate::quant::pack::{decode_lut, packed_len, TRITS_PER_BYTE};
+
+/// Candidate count below which building the per-query table costs more
+/// than it saves over the byte-LUT fallback (~363 DP adds per group
+/// amortize against ~9 saved ops per byte per candidate).
+pub const TERNARY_TAB_MIN_CANDIDATES: usize = 32;
+
+/// Table rows are 256 wide (not 243) so the per-byte index is a shift+or
+/// instead of a multiply; entries 243..=255 mirror the decode-LUT
+/// semantics of the fallback so the kernel stays total on corrupt bytes.
+const ROW: usize = 256;
+
+/// A per-query ternary ADC table, reusable across queries (lives in
+/// per-worker scratch; steady state allocates nothing).
+#[derive(Clone, Debug, Default)]
+pub struct TernaryQueryLut {
+    dim: usize,
+    /// `packed_len(dim) × ROW` byte-group dot contributions.
+    table: Vec<f32>,
+}
+
+impl TernaryQueryLut {
+    pub fn new() -> Self {
+        TernaryQueryLut { dim: 0, table: Vec::new() }
+    }
+
+    /// Dimensionality of the query the table was last built for.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// (Re)build the table for `q`, reusing the existing allocation.
+    ///
+    /// Base-3 DP per 5-dim group: level `l` extends every length-`l`
+    /// prefix sum with `(d − 1)·q[l]` for digit `d ∈ {0,1,2}` — the same
+    /// `prefix + t·q` f32 operations, in the same left-fold order, that
+    /// the byte-LUT fallback performs per candidate, which is what makes
+    /// the two kernels bit-for-bit identical.
+    pub fn build(&mut self, q: &[f32]) {
+        let dim = q.len();
+        let groups = packed_len(dim);
+        self.dim = dim;
+        self.table.clear();
+        self.table.resize(groups * ROW, 0.0);
+        let lut = decode_lut();
+        for g in 0..groups {
+            let d0 = g * TRITS_PER_BYTE;
+            let live = (dim - d0).min(TRITS_PER_BYTE);
+            let qs = &q[d0..d0 + live];
+            let row = &mut self.table[g * ROW..(g + 1) * ROW];
+            // Level 0: the three length-1 prefixes t·q0 (the same
+            // `t * q` multiply the fallback performs, so even signed
+            // zeros agree).
+            for d in 0..3usize {
+                row[d] = (d as f32 - 1.0) * qs[0];
+            }
+            let mut size = 3usize;
+            // Live levels: write digit 2 then 1 then 0 so reads from
+            // [0, size) happen before the in-place digit-0 overwrite.
+            for &qv in &qs[1..] {
+                for d in (0..3usize).rev() {
+                    let term = (d as f32 - 1.0) * qv;
+                    for y in 0..size {
+                        row[d * size + y] = row[y] + term;
+                    }
+                }
+                size *= 3;
+            }
+            // Dead trailing digits of a ragged tail group extend the
+            // prefix unchanged (valid codes pack trailing trits as 0, but
+            // keep every byte value covered like the fallback does).
+            for _ in live..TRITS_PER_BYTE {
+                for d in (1..3usize).rev() {
+                    for y in 0..size {
+                        row[d * size + y] = row[y];
+                    }
+                }
+                size *= 3;
+            }
+            // Bytes 243..=255 never come out of `pack_ternary`; fill them
+            // from the decode LUT anyway so the kernel stays total (no
+            // out-of-bounds read) and the *dot* agrees with the fallback
+            // even on corrupt bytes. (The k* count can still differ from
+            // the fallback on a corrupt ragged-tail byte: the shared
+            // kcount table counts all 5 decoded trits while the fallback
+            // counts live trits only. Valid codes — trailing trits packed
+            // as 0 — are always bit-for-bit identical in both outputs.)
+            for (b, slot) in row.iter_mut().enumerate().skip(243) {
+                let t = &lut.trits_f32[b];
+                let mut gsum = t[0] * qs[0];
+                for (j, &qv) in qs.iter().enumerate().skip(1) {
+                    gsum += t[j] * qv;
+                }
+                *slot = gsum;
+            }
+        }
+    }
+}
+
+/// Table-driven `⟨q, ē⟩` + `k*`: one load + add per packed byte against a
+/// prebuilt [`TernaryQueryLut`]. Bit-for-bit identical in f32 to
+/// [`crate::quant::trq::qdot_packed`] on valid codes (trailing trits of a
+/// ragged tail byte packed as 0) — same group contributions, same eight
+/// interleaved accumulator lanes, same final combine.
+#[inline]
+pub fn qdot_packed_tab(tab: &TernaryQueryLut, packed: &[u8]) -> (f32, usize) {
+    debug_assert_eq!(packed.len(), packed_len(tab.dim));
+    let kcount = &decode_lut().kcount;
+    let table = &tab.table[..];
+    let mut acc = [0.0f32; 8];
+    let mut k = 0usize;
+    for (i, &byte) in packed.iter().enumerate() {
+        acc[i & 7] += table[(i << 8) | byte as usize];
+        k += kcount[byte as usize] as usize;
+    }
+    (
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])),
+        k,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::pack_ternary;
+    use crate::quant::trq::{qdot_packed, ternary_encode};
+    use crate::util::rng::Rng;
+
+    fn random_code(rng: &mut Rng, dim: usize) -> Vec<u8> {
+        let delta: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let code = ternary_encode(&delta);
+        let mut packed = vec![0u8; packed_len(dim)];
+        pack_ternary(&code.trits, &mut packed);
+        packed
+    }
+
+    #[test]
+    fn table_matches_byte_lut_bit_for_bit() {
+        // The tentpole contract: identical f32 result and identical k*
+        // across exact-multiple and ragged dims.
+        let mut rng = Rng::new(404);
+        let mut tab = TernaryQueryLut::new();
+        for dim in [5usize, 17, 64, 768, 769] {
+            for _case in 0..20 {
+                let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+                tab.build(&q);
+                assert_eq!(tab.dim(), dim);
+                let packed = random_code(&mut rng, dim);
+                let (fallback, k_fb) = qdot_packed(&q, &packed, dim);
+                let (table, k_tab) = qdot_packed_tab(&tab, &packed);
+                assert_eq!(table, fallback, "dim {dim}: table != fallback");
+                assert_eq!(k_tab, k_fb, "dim {dim}: k mismatch");
+            }
+        }
+    }
+
+    #[test]
+    fn table_matches_fallback_on_tiny_dims() {
+        let mut rng = Rng::new(7);
+        let mut tab = TernaryQueryLut::new();
+        for dim in [1usize, 2, 3, 4, 6, 9] {
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            tab.build(&q);
+            let packed = random_code(&mut rng, dim);
+            assert_eq!(qdot_packed_tab(&tab, &packed), qdot_packed(&q, &packed, dim));
+        }
+    }
+
+    #[test]
+    fn table_total_on_out_of_range_bytes() {
+        // Bytes 243..=255 never come out of pack_ternary; the table must
+        // still agree with the byte-LUT fallback on them (full groups).
+        let mut rng = Rng::new(11);
+        let dim = 10;
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let mut tab = TernaryQueryLut::new();
+        tab.build(&q);
+        for b in [243u8, 250, 255] {
+            let packed = vec![b, 100];
+            assert_eq!(qdot_packed_tab(&tab, &packed), qdot_packed(&q, &packed, dim));
+        }
+    }
+
+    #[test]
+    fn rebuild_reuses_allocation_and_tracks_dim() {
+        let mut rng = Rng::new(21);
+        let mut tab = TernaryQueryLut::new();
+        let q1: Vec<f32> = (0..768).map(|_| rng.gaussian_f32()).collect();
+        tab.build(&q1);
+        let cap = tab.table.capacity();
+        let q2: Vec<f32> = (0..64).map(|_| rng.gaussian_f32()).collect();
+        tab.build(&q2);
+        assert_eq!(tab.dim(), 64);
+        assert!(tab.table.capacity() >= cap.min(13 * 256));
+        // A smaller rebuild must still be correct (stale entries cleared).
+        let packed = random_code(&mut rng, 64);
+        assert_eq!(qdot_packed_tab(&tab, &packed), qdot_packed(&q2, &packed, 64));
+    }
+
+    #[test]
+    fn estimate_via_table_preserves_scaling() {
+        // acc·scale/√k downstream of the table equals the fallback exactly,
+        // so the §III-B estimator is untouched by kernel choice.
+        let mut rng = Rng::new(33);
+        let dim = 96;
+        let delta: Vec<f32> = (0..dim).map(|_| 0.2 * rng.gaussian_f32()).collect();
+        let code = ternary_encode(&delta);
+        let mut packed = vec![0u8; packed_len(dim)];
+        pack_ternary(&code.trits, &mut packed);
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let mut tab = TernaryQueryLut::new();
+        tab.build(&q);
+        let (a1, k1) = qdot_packed(&q, &packed, dim);
+        let (a2, k2) = qdot_packed_tab(&tab, &packed);
+        assert_eq!((a1, k1), (a2, k2));
+        assert_eq!(k1, code.k);
+    }
+}

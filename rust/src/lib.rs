@@ -15,6 +15,9 @@
 //! - [`config`] — TOML-subset parser and typed system configuration
 //! - [`vecstore`] — synthetic embedding generation and on-disk vector store
 //! - [`quant`] — k-means, PQ, scalar quantizers, TRQ ternary residual codec
+//! - [`kernels`] — query-time compute kernels: per-query ternary ADC
+//!   tables (one lookup+add per packed byte) and blocked ADC/L2 scans over
+//!   contiguous rows, all exact drop-ins for the loops they replace
 //! - [`index`] — IVF, graph (CAGRA-style stand-in), and flat exact indexes
 //! - [`refine`] — L2 decomposition, progressive estimator (+ early-exit
 //!   walk), OLS calibration, filtering/cutoff policies
@@ -42,6 +45,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod index;
+pub mod kernels;
 pub mod metrics;
 pub mod quant;
 pub mod refine;

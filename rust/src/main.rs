@@ -58,8 +58,8 @@ fn cmd_build(args: &Args) -> anyhow::Result<()> {
     println!("  vectors          : {} x {}D", sys.dataset.count(), sys.dataset.dim);
     println!("  index            : {}", sys.index.as_ann().name());
     println!(
-        "  fast memory      : {:.1} MiB (PQ codes + codebooks)",
-        sys.scorer.fast_bytes() as f64 / (1 << 20) as f64
+        "  fast memory      : {:.1} MiB (PQ codes + codebooks + index structure)",
+        (sys.scorer.fast_bytes() + sys.index.fast_bytes()) as f64 / (1 << 20) as f64
     );
     println!(
         "  far memory       : {:.1} MiB ({} B/record TRQ)",

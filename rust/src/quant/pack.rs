@@ -45,20 +45,43 @@ pub fn unpack_ternary(packed: &[u8], dim: usize, out: &mut [i8]) {
     }
 }
 
-/// Decode table: byte -> 5 trits. Mirrors the accelerator's 256-entry
-/// ternary-decoder LUT (paper §IV); also used by the hot unpack path.
-pub fn decode_table() -> Vec<[i8; TRITS_PER_BYTE]> {
-    (0u16..256)
-        .map(|byte| {
+/// The shared 256-entry ternary-decode tables — the software twin of the
+/// accelerator's unpack LUT (paper §IV), built once per process.
+///
+/// Historically `quant::pack` and `quant::trq` each built their own copy
+/// (`Vec<[i8; 5]>` vs `Vec<[f32; 5]>`); this is the single source of truth
+/// for both, stored as boxed *arrays* so a lookup is one indexed load off a
+/// stable base pointer instead of `Vec` base + bounds + row — and `byte as
+/// usize` can never exceed 255, so the bounds check vanishes entirely.
+pub struct DecodeLut {
+    /// byte -> 5 trits in {-1, 0, +1} (decode/unpack format).
+    pub trits: Box<[[i8; TRITS_PER_BYTE]; 256]>,
+    /// byte -> the same 5 trits as f32 (the qdot kernels' operand format).
+    pub trits_f32: Box<[[f32; TRITS_PER_BYTE]; 256]>,
+    /// byte -> nonzero-trit count (free `k*` recovery, §III-D).
+    pub kcount: [u8; 256],
+}
+
+static DECODE: std::sync::OnceLock<DecodeLut> = std::sync::OnceLock::new();
+
+/// The process-wide [`DecodeLut`].
+pub fn decode_lut() -> &'static DecodeLut {
+    DECODE.get_or_init(|| {
+        let mut trits = Box::new([[0i8; TRITS_PER_BYTE]; 256]);
+        let mut trits_f32 = Box::new([[0f32; TRITS_PER_BYTE]; 256]);
+        let mut kcount = [0u8; 256];
+        for byte in 0..256usize {
             let mut y = byte;
-            let mut trits = [0i8; TRITS_PER_BYTE];
-            for t in trits.iter_mut() {
-                *t = (y % 3) as i8 - 1;
+            for slot in 0..TRITS_PER_BYTE {
+                let t = (y % 3) as i8 - 1;
                 y /= 3;
+                trits[byte][slot] = t;
+                trits_f32[byte][slot] = t as f32;
+                kcount[byte] += (t != 0) as u8;
             }
-            trits
-        })
-        .collect()
+        }
+        DecodeLut { trits, trits_f32, kcount }
+    })
 }
 
 /// Storage cost in bits per dimension for the packed format.
@@ -107,13 +130,18 @@ mod tests {
     }
 
     #[test]
-    fn decode_table_matches_unpack() {
-        let table = decode_table();
+    fn decode_lut_matches_unpack() {
+        let lut = decode_lut();
         for byte in 0u16..243 {
             let packed = [byte as u8];
             let mut out = vec![0i8; 5];
             unpack_ternary(&packed, 5, &mut out);
-            assert_eq!(out.as_slice(), &table[byte as usize]);
+            assert_eq!(out.as_slice(), &lut.trits[byte as usize]);
+            let k = out.iter().filter(|&&t| t != 0).count();
+            assert_eq!(k as u8, lut.kcount[byte as usize]);
+            for (slot, &t) in out.iter().enumerate() {
+                assert_eq!(lut.trits_f32[byte as usize][slot], t as f32);
+            }
         }
     }
 

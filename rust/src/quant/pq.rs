@@ -138,8 +138,18 @@ impl ProductQuantizer {
     /// expansion `‖q_s − c‖² = ‖q_s‖² − 2⟨q_s, c⟩ + ‖c‖²` with ‖c‖²
     /// precomputed at train time (front-stage per-query hot path).
     pub fn adc_table(&self, q: &[f32]) -> Vec<f32> {
+        let mut lut = Vec::new();
+        self.adc_table_into(q, &mut lut);
+        lut
+    }
+
+    /// Buffer-reusing form of [`ProductQuantizer::adc_table`]: writes the
+    /// `m x ksub` table into `lut` (cleared first). The zero-allocation
+    /// front stage calls this with per-worker scratch.
+    pub fn adc_table_into(&self, q: &[f32], lut: &mut Vec<f32>) {
         debug_assert_eq!(q.len(), self.dim);
-        let mut lut = vec![0f32; self.m * self.ksub];
+        lut.clear();
+        lut.resize(self.m * self.ksub, 0.0);
         let dsub = self.dsub;
         for sub in 0..self.m {
             let qs = &q[sub * dsub..(sub + 1) * dsub];
@@ -152,27 +162,21 @@ impl ProductQuantizer {
                 out[c] = q_sq - 2.0 * ip + norms[c];
             }
         }
-        lut
     }
 
-    /// ADC distance of one code against a prebuilt table.
+    /// ADC distance of one code against a prebuilt table. Delegates to the
+    /// shared [`crate::kernels::pqscan::adc_row`] kernel — the same inner
+    /// loop the blocked scans use, so per-id and blocked paths agree
+    /// exactly.
     #[inline]
     pub fn adc_distance(&self, lut: &[f32], code: &[u8]) -> f32 {
         debug_assert_eq!(code.len(), self.m);
-        let mut acc = 0f32;
-        for sub in 0..self.m {
-            acc += lut[sub * self.ksub + code[sub] as usize];
-        }
-        acc
+        crate::kernels::pqscan::adc_row(lut, self.ksub, code)
     }
 
     /// ADC scan over a contiguous code block (`n x m`), writing distances.
     pub fn adc_scan(&self, lut: &[f32], codes: &[u8], out: &mut [f32]) {
-        let n = out.len();
-        debug_assert_eq!(codes.len(), n * self.m);
-        for i in 0..n {
-            out[i] = self.adc_distance(lut, &codes[i * self.m..(i + 1) * self.m]);
-        }
+        crate::kernels::pqscan::adc_scan_block(lut, self.ksub, self.m, codes, out);
     }
 
     /// Bytes per encoded vector.

@@ -19,9 +19,8 @@
 //! counting nonzero trits during decode (the accelerator gets it for free
 //! from its unpack LUT).
 
-use crate::quant::pack::{pack_ternary, packed_len};
-use crate::util::{dot, norm, parallel_for, threadpool::default_threads};
-use std::sync::Mutex;
+use crate::quant::pack::{decode_lut, pack_ternary, packed_len};
+use crate::util::{dot, norm, threadpool::default_threads, threadpool::parallel_map};
 
 /// A ternary direction code before packing.
 #[derive(Clone, Debug, PartialEq)]
@@ -101,64 +100,56 @@ pub fn encode_record(x: &[f32], xc: &[f32]) -> TrqRecord {
     TrqRecord { packed, cross, scale: dnorm * code.alignment }
 }
 
-/// 256-entry decode tables — the software twin of the accelerator's
-/// ternary-decoder LUT (§IV). `DECODE_F32[b]` holds the 5 trits of byte
-/// `b` as f32, `KCOUNT[b]` the nonzero count.
-struct DecodeTables {
-    trits: Vec<[f32; 5]>,
-    kcount: [u8; 256],
-}
-
-static DECODE: std::sync::OnceLock<DecodeTables> = std::sync::OnceLock::new();
-
-fn decode_tables() -> &'static DecodeTables {
-    DECODE.get_or_init(|| {
-        let mut trits = vec![[0f32; 5]; 256];
-        let mut kcount = [0u8; 256];
-        for (byte, row) in trits.iter_mut().enumerate() {
-            let mut y = byte;
-            for slot in row.iter_mut() {
-                let t = (y % 3) as i8 - 1;
-                y /= 3;
-                *slot = t as f32;
-            }
-            kcount[byte] = row.iter().filter(|&&t| t != 0.0).count() as u8;
-        }
-        DecodeTables { trits, kcount }
-    })
-}
-
 /// Inner product of a query with a packed ternary code: `⟨q, ē⟩` — in
 /// hardware this is adds/subs only (§III-C); here each packed byte decodes
-/// through the 256-entry LUT and contributes 5 (±1/0)·q lanes, which the
-/// compiler vectorizes. Also returns the nonzero count `k*`.
+/// through the shared 256-entry [`decode_lut`] and contributes 5 (±1/0)·q
+/// lanes. Also returns the nonzero count `k*`.
+///
+/// This is the **byte-LUT fallback kernel**: per query, the ternary ADC
+/// table kernel ([`crate::kernels::ternary`]) replaces the 5 multiply-adds
+/// per byte with one table lookup, and falls back to this function when the
+/// candidate count is too small to amortize the table build.
+///
+/// **Summation-order contract** (the table kernel reproduces it so the two
+/// paths are bit-for-bit identical in f32, keeping results independent of
+/// the fallback threshold): byte `i`'s group contribution is the strict
+/// left fold `t0·q0 + t1·q1 + … + t4·q4`, accumulated as
+/// `acc[i & 7] += g_i` into eight interleaved lanes combined at the end as
+/// `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`. The lanes also break the
+/// one-add-per-byte latency chain that bounded the previous
+/// single-accumulator version (EXPERIMENTS.md §Perf).
 pub fn qdot_packed(q: &[f32], packed: &[u8], dim: usize) -> (f32, usize) {
     debug_assert_eq!(packed.len(), packed_len(dim));
-    let tables = decode_tables();
+    let lut = decode_lut();
     let full_bytes = dim / 5;
     let mut k = 0usize;
     let mut d = 0usize;
-    let mut acc = 0.0f32;
-    // (A manually 2-way-unrolled variant was tried and measured *slower*
-    // — the extra slice bounds work beat the FMA-latency win; see the
-    // EXPERIMENTS.md §Perf iteration log.)
-    for &byte in &packed[..full_bytes] {
-        let t = &tables.trits[byte as usize];
+    let mut acc = [0.0f32; 8];
+    for (i, &byte) in packed[..full_bytes].iter().enumerate() {
+        let t = &lut.trits_f32[byte as usize];
         let qs = &q[d..d + 5];
-        acc += t[0] * qs[0] + t[1] * qs[1] + t[2] * qs[2] + t[3] * qs[3] + t[4] * qs[4];
-        k += tables.kcount[byte as usize] as usize;
+        let g = t[0] * qs[0] + t[1] * qs[1] + t[2] * qs[2] + t[3] * qs[3] + t[4] * qs[4];
+        acc[i & 7] += g;
+        k += lut.kcount[byte as usize] as usize;
         d += 5;
     }
     if d < dim {
         // Ragged tail byte: only the first dim-d trits are live (the
         // encoder packs trailing slots as 0, but stay defensive).
-        let t = &tables.trits[packed[full_bytes] as usize];
-        for (j, &qv) in q[d..dim].iter().enumerate() {
-            acc += t[j] * qv;
+        let t = &lut.trits_f32[packed[full_bytes] as usize];
+        let qs = &q[d..dim];
+        let mut g = t[0] * qs[0];
+        k += (t[0] != 0.0) as usize;
+        for (j, &qv) in qs.iter().enumerate().skip(1) {
+            g += t[j] * qv;
             k += (t[j] != 0.0) as usize;
         }
+        acc[full_bytes & 7] += g;
     }
-    (acc, k)
+    (
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])),
+        k,
+    )
 }
 
 /// Estimate `⟨q, δ⟩` from a record (§III-B).
@@ -192,28 +183,55 @@ pub struct TrqStore {
     pub mean_alignment: f32,
 }
 
+/// A raw pointer that may cross threads. Used for disjoint-chunk writes
+/// into preallocated output columns: every access stays inside the chunk's
+/// own row range, so no two workers ever alias.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
 impl TrqStore {
     /// Encode every row of `data` (`n x dim`) against its reconstruction in
     /// `recon` (`n x dim`), in parallel.
+    ///
+    /// Workers write their chunk's rows straight into the preallocated
+    /// output columns (disjoint ranges, no locks) and
+    /// [`parallel_map`] collects the per-chunk alignment sums in order —
+    /// the previous version funneled five `Mutex`-guarded vectors through a
+    /// write-local-then-copy double buffer (EXPERIMENTS.md §Perf).
     pub fn build(data: &[f32], recon: &[f32], dim: usize) -> TrqStore {
         assert_eq!(data.len(), recon.len());
         let n = data.len() / dim;
         let plen = packed_len(dim);
-        let packed = Mutex::new(vec![0u8; n * plen]);
-        let cross = Mutex::new(vec![0f32; n]);
-        let scale = Mutex::new(vec![0f32; n]);
-        let dnorm_sq = Mutex::new(vec![0f32; n]);
-        let align_sum = Mutex::new(0.0f64);
+        let mut packed = vec![0u8; n * plen];
+        let mut cross = vec![0f32; n];
+        let mut scale = vec![0f32; n];
+        let mut dnorm_sq = vec![0f32; n];
         let threads = default_threads();
         let chunk = (n / (threads * 4)).max(64);
         let nchunks = n.div_ceil(chunk);
-        parallel_for(nchunks, threads, |ci| {
+        let packed_ptr = SendPtr(packed.as_mut_ptr());
+        let cross_ptr = SendPtr(cross.as_mut_ptr());
+        let scale_ptr = SendPtr(scale.as_mut_ptr());
+        let dnorm_ptr = SendPtr(dnorm_sq.as_mut_ptr());
+        let align_partials: Vec<f64> = parallel_map(nchunks, threads, |ci| {
             let start = ci * chunk;
             let end = ((ci + 1) * chunk).min(n);
-            let mut lp = vec![0u8; (end - start) * plen];
-            let mut lc = vec![0f32; end - start];
-            let mut ls = vec![0f32; end - start];
-            let mut ld = vec![0f32; end - start];
+            // SAFETY: chunks are disjoint row ranges of vectors that outlive
+            // the scoped workers inside `parallel_map`; each worker touches
+            // only rows [start, end) of each column.
+            let (lp, lc, ls, ld) = unsafe {
+                (
+                    std::slice::from_raw_parts_mut(
+                        packed_ptr.0.add(start * plen),
+                        (end - start) * plen,
+                    ),
+                    std::slice::from_raw_parts_mut(cross_ptr.0.add(start), end - start),
+                    std::slice::from_raw_parts_mut(scale_ptr.0.add(start), end - start),
+                    std::slice::from_raw_parts_mut(dnorm_ptr.0.add(start), end - start),
+                )
+            };
             let mut la = 0.0f64;
             let mut delta = vec![0f32; dim];
             for (j, i) in (start..end).enumerate() {
@@ -230,22 +248,11 @@ impl TrqStore {
                 ld[j] = dn * dn;
                 la += code.alignment as f64;
             }
-            packed.lock().unwrap()[start * plen..end * plen].copy_from_slice(&lp);
-            cross.lock().unwrap()[start..end].copy_from_slice(&lc);
-            scale.lock().unwrap()[start..end].copy_from_slice(&ls);
-            dnorm_sq.lock().unwrap()[start..end].copy_from_slice(&ld);
-            *align_sum.lock().unwrap() += la;
+            la
         });
-        let mean_alignment = (align_sum.into_inner().unwrap() / n.max(1) as f64) as f32;
-        TrqStore {
-            dim,
-            count: n,
-            packed: packed.into_inner().unwrap(),
-            cross: cross.into_inner().unwrap(),
-            scale: scale.into_inner().unwrap(),
-            dnorm_sq: dnorm_sq.into_inner().unwrap(),
-            mean_alignment,
-        }
+        let mean_alignment =
+            (align_partials.iter().sum::<f64>() / n.max(1) as f64) as f32;
+        TrqStore { dim, count: n, packed, cross, scale, dnorm_sq, mean_alignment }
     }
 
     #[inline]

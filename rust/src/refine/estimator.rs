@@ -7,6 +7,7 @@
 //! `d̂ = W · [d̂₀, d̂_ip, ‖δ‖², ⟨x_c,δ⟩, 1]`, with
 //! `d̂_ip = −2·⟨q,ē⟩·scale/√k*` the multiplication-free residual term.
 
+use crate::kernels::ternary::{qdot_packed_tab, TernaryQueryLut};
 use crate::quant::trq::{qdot_packed, TrqStore};
 use crate::refine::calib::{Calibration, NUM_FEATURES};
 use crate::util::topk::{Scored, TopK};
@@ -51,9 +52,25 @@ impl<'a> ProgressiveEstimator<'a> {
     }
 
     /// Build the feature row for candidate `id` with coarse distance `d0`.
+    /// With a query context (`tlut` built for this query), `⟨q, ē⟩` comes
+    /// from the ternary ADC-table kernel — one lookup+add per packed byte —
+    /// otherwise from the byte-LUT fallback. The two are bit-for-bit
+    /// identical in f32, so kernel choice never changes a ranking.
     #[inline]
-    pub fn features(&self, query: &[f32], id: usize, d0: f32) -> Features {
-        let (acc, k) = qdot_packed(query, self.store.packed_row(id), self.store.dim);
+    pub fn features_with(
+        &self,
+        query: &[f32],
+        id: usize,
+        d0: f32,
+        tlut: Option<&TernaryQueryLut>,
+    ) -> Features {
+        let (acc, k) = match tlut {
+            Some(tab) => {
+                debug_assert_eq!(tab.dim(), self.store.dim);
+                qdot_packed_tab(tab, self.store.packed_row(id))
+            }
+            None => qdot_packed(query, self.store.packed_row(id), self.store.dim),
+        };
         let qdot = if k == 0 {
             0.0
         } else {
@@ -68,10 +85,29 @@ impl<'a> ProgressiveEstimator<'a> {
         ]
     }
 
+    /// [`ProgressiveEstimator::features_with`] without a query context.
+    #[inline]
+    pub fn features(&self, query: &[f32], id: usize, d0: f32) -> Features {
+        self.features_with(query, id, d0, None)
+    }
+
     /// Refined distance estimate for candidate `id`.
     #[inline]
     pub fn estimate(&self, query: &[f32], id: usize, d0: f32) -> f32 {
-        self.cal.predict(&self.features(query, id, d0))
+        self.estimate_with(query, id, d0, None)
+    }
+
+    /// [`ProgressiveEstimator::estimate`] with an optional query context
+    /// (see [`ProgressiveEstimator::features_with`]).
+    #[inline]
+    pub fn estimate_with(
+        &self,
+        query: &[f32],
+        id: usize,
+        d0: f32,
+        tlut: Option<&TernaryQueryLut>,
+    ) -> f32 {
+        self.cal.predict(&self.features_with(query, id, d0, tlut))
     }
 
     /// First-order estimate d̂₁ = d̂₀ + ‖δ‖² (paper §III-A) — no far-memory
@@ -94,12 +130,23 @@ impl<'a> ProgressiveEstimator<'a> {
     /// persistent engine's hot path calls this with per-worker scratch so
     /// steady-state refinement does no heap allocation.
     pub fn refine_into(&self, query: &[f32], candidates: &[Scored], out: &mut Vec<Scored>) {
+        self.refine_into_with(query, candidates, out, None);
+    }
+
+    /// [`ProgressiveEstimator::refine_into`] with an optional ternary
+    /// ADC-table context for the residual dot (the engine passes one when
+    /// the candidate count amortizes the table build).
+    pub fn refine_into_with(
+        &self,
+        query: &[f32],
+        candidates: &[Scored],
+        out: &mut Vec<Scored>,
+        tlut: Option<&TernaryQueryLut>,
+    ) {
         out.clear();
-        out.extend(
-            candidates
-                .iter()
-                .map(|c| Scored::new(self.estimate(query, c.id as usize, c.dist), c.id)),
-        );
+        out.extend(candidates.iter().map(|c| {
+            Scored::new(self.estimate_with(query, c.id as usize, c.dist, tlut), c.id)
+        }));
         out.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
     }
 
@@ -141,6 +188,25 @@ impl<'a> ProgressiveEstimator<'a> {
         bound: &mut TopK,
         out: &mut Vec<Scored>,
     ) -> ProgressiveOutcome {
+        self.refine_progressive_into_with(
+            query, ordered, k, margin_first, margin_refined, bound, out, None,
+        )
+    }
+
+    /// [`ProgressiveEstimator::refine_progressive_into`] with an optional
+    /// ternary ADC-table context for the streamed refinements.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refine_progressive_into_with(
+        &self,
+        query: &[f32],
+        ordered: &[FirstOrderCand],
+        k: usize,
+        margin_first: f32,
+        margin_refined: f32,
+        bound: &mut TopK,
+        out: &mut Vec<Scored>,
+        tlut: Option<&TernaryQueryLut>,
+    ) -> ProgressiveOutcome {
         bound.reset(k.max(1));
         out.clear();
         let mut stats = ProgressiveOutcome::default();
@@ -151,7 +217,7 @@ impl<'a> ProgressiveEstimator<'a> {
             {
                 break;
             }
-            let d = self.estimate(query, c.id as usize, c.d0);
+            let d = self.estimate_with(query, c.id as usize, c.d0, tlut);
             bound.push(d, c.id);
             out.push(Scored::new(d, c.id));
             stats.streamed += 1;
@@ -352,6 +418,54 @@ mod tests {
         assert!(stats0.streamed >= 10);
         assert!(stats0.streamed < 60, "zero-margin walk streamed everything");
         assert!(stats0.considered <= stats0.streamed + 1);
+    }
+
+    #[test]
+    fn table_context_matches_fallback_exactly() {
+        // The kernel-choice invariant: with a TernaryQueryLut built for the
+        // query, every estimator output is bit-for-bit the no-context one —
+        // features, refined lists, and progressive walks (streamed counts
+        // included), so the fallback threshold can never change a result.
+        use crate::kernels::ternary::TernaryQueryLut;
+        let (data, recon, _pq, store, _n) = fixture();
+        let dim = store.dim;
+        let est = ProgressiveEstimator::new(&store, Calibration::analytic());
+        let q = data[3 * dim..4 * dim].to_vec();
+        let mut tab = TernaryQueryLut::new();
+        tab.build(&q);
+        let cands: Vec<Scored> = (0..80)
+            .map(|i| Scored::new(l2_sq(&q, &recon[i * dim..(i + 1) * dim]), i as u64))
+            .collect();
+        for c in &cands {
+            assert_eq!(
+                est.features_with(&q, c.id as usize, c.dist, Some(&tab)),
+                est.features(&q, c.id as usize, c.dist)
+            );
+        }
+        let mut with_tab = Vec::new();
+        let mut without = Vec::new();
+        est.refine_into_with(&q, &cands, &mut with_tab, Some(&tab));
+        est.refine_into(&q, &cands, &mut without);
+        assert_eq!(with_tab, without);
+
+        let mut ordered: Vec<FirstOrderCand> = cands
+            .iter()
+            .map(|c| FirstOrderCand {
+                id: c.id,
+                d0: c.dist,
+                d1: est.estimate_first_order(c.id as usize, c.dist),
+            })
+            .collect();
+        ordered.sort_by(|a, b| a.d1.partial_cmp(&b.d1).unwrap().then(a.id.cmp(&b.id)));
+        let mut bound = TopK::new(10);
+        let (mut o1, mut o2) = (Vec::new(), Vec::new());
+        let s1 = est.refine_progressive_into_with(
+            &q, &ordered, 10, 0.05, 0.05, &mut bound, &mut o1, Some(&tab),
+        );
+        let s2 = est.refine_progressive_into(&q, &ordered, 10, 0.05, 0.05, &mut bound, &mut o2);
+        assert_eq!(s1.streamed, s2.streamed);
+        assert_eq!(s1.considered, s2.considered);
+        assert_eq!(o1, o2);
     }
 
     #[test]

@@ -130,6 +130,18 @@ impl TopK {
         std::mem::take(&mut self.heap)
     }
 
+    /// Sort the kept entries ascending (ties by id) and append them to
+    /// `out`, leaving the heap empty but keeping *both* allocations — the
+    /// fully reusable drain for per-worker scratch, unlike
+    /// [`TopK::take_sorted`] which gives the heap buffer away.
+    pub fn drain_sorted_into(&mut self, out: &mut Vec<Scored>) {
+        self.heap.sort_by(|a, b| {
+            a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id))
+        });
+        out.extend_from_slice(&self.heap);
+        self.heap.clear();
+    }
+
     /// Sorted ids only.
     pub fn into_ids(self) -> Vec<u64> {
         self.into_sorted().into_iter().map(|s| s.id).collect()
@@ -214,6 +226,25 @@ mod tests {
         t.push(7.0, 2);
         let second = t.take_sorted();
         assert_eq!(second.iter().map(|s| s.dist).collect::<Vec<_>>(), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn drain_sorted_into_keeps_allocations() {
+        let mut t = TopK::new(3);
+        for (i, d) in [5.0, 1.0, 4.0, 2.0].iter().enumerate() {
+            t.push(*d, i as u64);
+        }
+        let mut out = Vec::with_capacity(8);
+        t.drain_sorted_into(&mut out);
+        assert_eq!(out.iter().map(|s| s.dist).collect::<Vec<_>>(), vec![1.0, 2.0, 4.0]);
+        assert!(t.is_empty());
+        // The heap buffer must survive the drain (no realloc on refill).
+        t.reset(2);
+        t.push(9.0, 0);
+        t.push(3.0, 1);
+        out.clear();
+        t.drain_sorted_into(&mut out);
+        assert_eq!(out.iter().map(|s| s.dist).collect::<Vec<_>>(), vec![3.0, 9.0]);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! (routing, ranking, filtering, codecs), via the in-repo mini property
 //! harness (`fatrq::util::prop` — no proptest crate offline).
 
+use fatrq::kernels::ternary::{qdot_packed_tab, TernaryQueryLut};
 use fatrq::quant::pack::{pack_ternary, packed_len, unpack_ternary};
 use fatrq::quant::trq::{encode_record, estimate_qdot, qdot_packed, ternary_encode};
 use fatrq::refine::filter::{filter_top_ratio, provable_cutoff};
@@ -151,6 +152,31 @@ fn prop_qdot_packed_counts_nonzeros() {
             let q = vec![1.0f32; delta.len()];
             let (_, k) = qdot_packed(&q, &packed, delta.len());
             k == code.k
+        },
+    );
+}
+
+#[test]
+fn prop_ternary_table_kernel_matches_byte_lut() {
+    // The kernel-layer contract: the per-query ADC-table kernel is
+    // bit-for-bit identical in f32 (and in k*) to the byte-LUT fallback
+    // for every valid packed code, at any dimensionality — ragged tails
+    // included — so the amortization threshold can never change a result.
+    forall(
+        Config { cases: 120, seed: 12, max_size: 800 },
+        |rng: &mut Rng, size: usize| -> Vec<f32> {
+            (0..size.max(1)).map(|_| rng.gaussian_f32()).collect()
+        },
+        |delta| {
+            let dim = delta.len();
+            let code = ternary_encode(delta);
+            let mut packed = vec![0u8; packed_len(dim)];
+            pack_ternary(&code.trits, &mut packed);
+            let mut rng = Rng::new(dim as u64 ^ 0xAB);
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            let mut tab = TernaryQueryLut::new();
+            tab.build(&q);
+            qdot_packed_tab(&tab, &packed) == qdot_packed(&q, &packed, dim)
         },
     );
 }
