@@ -15,7 +15,7 @@
 use fatrq::config::{
     DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
 };
-use fatrq::coordinator::{build_system, ground_truth, Pipeline, QueryEngine};
+use fatrq::coordinator::{build_system, ground_truth, Pipeline, QueryEngine, ShardedEngine};
 use fatrq::metrics::{recall_at_k, LatencyStats};
 use fatrq::runtime::XlaRuntime;
 use fatrq::util::l2_sq;
@@ -166,6 +166,43 @@ fn main() -> anyhow::Result<()> {
             far_q / nq,
             ssd_q / nq,
             base_lat / mean.max(1e-9)
+        );
+    }
+
+    // --- Sharded scatter/gather over the same corpus, one shared
+    // far-memory device: the contention-honest batch-serving numbers ---
+    let shards = 4usize;
+    println!("\nbuilding {shards}-shard scatter/gather engine over the same corpus...");
+    let t0 = std::time::Instant::now();
+    let mut sharded = ShardedEngine::from_dataset(&cfg, &sys.dataset, shards)?;
+    println!("shards built in {:.1}s", t0.elapsed().as_secs_f64());
+    println!(
+        "\n{:>14} {:>9} {:>11} {:>11} {:>9} {:>9} {:>7}",
+        "serving", "recall@10", "p50(us)", "p99(us)", "queue(us)", "wall-qps", "far/q"
+    );
+    for contention in [false, true] {
+        sharded.set_shared_timeline(contention);
+        let wall0 = std::time::Instant::now();
+        let outs = sharded.run(&sys.dataset.queries);
+        let wall_s = wall0.elapsed().as_secs_f64();
+        let nq = outs.len();
+        let mut lat = LatencyStats::default();
+        let (mut recall, mut queue, mut far_q) = (0.0f64, 0.0f64, 0usize);
+        for (q, out) in outs.iter().enumerate() {
+            recall += recall_at_k(&out.topk, &truth[q], 10);
+            lat.record(out.breakdown.total_ns());
+            queue += out.breakdown.queue_ns;
+            far_q += out.breakdown.far_reads;
+        }
+        println!(
+            "{:>14} {:>9.4} {:>11.1} {:>11.1} {:>9.1} {:>9.0} {:>7}",
+            if contention { "4sh contended" } else { "4sh idle-dev" },
+            recall / nq as f64,
+            lat.p50() / 1e3,
+            lat.p99() / 1e3,
+            queue / nq as f64 / 1e3,
+            nq as f64 / wall_s.max(1e-12),
+            far_q / nq
         );
     }
     println!("\ndone.");

@@ -104,8 +104,30 @@ impl<'a> RefineEngine<'a> {
         queue_len: usize,
         tlut: Option<&TernaryQueryLut>,
     ) -> (Vec<Scored>, RefineTiming) {
-        let dim = self.est.store.dim;
         let mut queue = HwPriorityQueue::new(queue_len.min(candidates.len()).max(1));
+        let mut sorted = Vec::new();
+        let timing =
+            self.refine_into_with(query, candidates, queue_len, tlut, &mut queue, &mut sorted);
+        (sorted, timing)
+    }
+
+    /// Scratch-resident form of [`RefineEngine::refine_with`]: the queue
+    /// registers and the ranked output live in caller-owned buffers
+    /// (`queue` is reset here, `out` is cleared first), so the persistent
+    /// engine's classic-mode HW path performs no per-query allocation —
+    /// the last one the scratch-reuse work had left behind. Ranking and
+    /// cycle accounting are identical to the allocating form.
+    pub fn refine_into_with(
+        &self,
+        query: &[f32],
+        candidates: &[Scored],
+        queue_len: usize,
+        tlut: Option<&TernaryQueryLut>,
+        queue: &mut HwPriorityQueue,
+        out: &mut Vec<Scored>,
+    ) -> RefineTiming {
+        let dim = self.est.store.dim;
+        queue.reset(queue_len.min(candidates.len()).max(1));
         let stream_cycles = self.cycles_per_candidate(dim);
         let mut cycles: u64 = 0;
         for c in candidates {
@@ -117,14 +139,14 @@ impl<'a> RefineEngine<'a> {
             cycles += stream_cycles - MAC_CYCLES - 1;
         }
         cycles += MAC_CYCLES + 1; // drain the pipeline tail
-        let (sorted, qcycles) = queue.drain_sorted();
+        out.clear();
+        let qcycles = queue.drain_sorted_into(out);
         cycles += qcycles - candidates.len() as u64; // inserts already counted
-        let timing = RefineTiming {
+        RefineTiming {
             cycles,
             candidates: candidates.len() as u64,
             ns: cycles as f64 / CLOCK_GHZ,
-        };
-        (sorted, timing)
+        }
     }
 
     /// Progressive early-exit refinement on-device (paper §I/§IV).
@@ -296,6 +318,35 @@ mod tests {
         );
         assert_eq!(host_stats.streamed, stats.streamed);
         assert_eq!(host_out, out);
+    }
+
+    #[test]
+    fn refine_into_matches_allocating_form_and_reuses_buffers() {
+        let (data, recon, store) = fixture();
+        let dim = store.dim;
+        let engine = RefineEngine::new(&store, Calibration::analytic());
+        let q = &data[0..dim];
+        let cands: Vec<Scored> = (0..120)
+            .map(|i| Scored::new(l2_sq(q, &recon[i * dim..(i + 1) * dim]), i as u64))
+            .collect();
+        let (want, t_want) = engine.refine(q, &cands, 64);
+        let mut queue = HwPriorityQueue::new(1);
+        let mut out = Vec::new();
+        let t = engine.refine_into_with(q, &cands, 64, None, &mut queue, &mut out);
+        assert_eq!(out, want);
+        assert_eq!(t.cycles, t_want.cycles);
+        // Steady state: repeated calls must not move or regrow either
+        // buffer (the classic-mode allocation the scratch work removes).
+        let fp = (queue.buf_fingerprint(), out.as_ptr() as usize, out.capacity());
+        for _ in 0..5 {
+            engine.refine_into_with(q, &cands, 64, None, &mut queue, &mut out);
+        }
+        assert_eq!(
+            (queue.buf_fingerprint(), out.as_ptr() as usize, out.capacity()),
+            fp,
+            "refine_into_with must reuse the caller's buffers"
+        );
+        assert_eq!(out, want);
     }
 
     #[test]

@@ -73,6 +73,38 @@ impl HwPriorityQueue {
         let cycles = self.cycles;
         (self.inner.into_sorted(), cycles)
     }
+
+    /// Reset for reuse with a (possibly new) `capacity`, keeping the
+    /// register-array allocation — the scratch-reuse hook mirroring
+    /// [`TopK::reset`].
+    pub fn reset(&mut self, capacity: usize) {
+        assert!(
+            (1..=HW_QUEUE_CAPACITY).contains(&capacity),
+            "hw queue supports 1..={HW_QUEUE_CAPACITY} entries"
+        );
+        self.inner.reset(capacity);
+        self.capacity = capacity;
+        self.inserts = 0;
+        self.admitted = 0;
+        self.cycles = 0;
+    }
+
+    /// Borrowed drain: sort the kept entries ascending and append them to
+    /// `out`, leaving the queue empty but keeping both allocations (the
+    /// reusable twin of [`HwPriorityQueue::drain_sorted`]). Returns total
+    /// cycles consumed, drain flush included — identical accounting.
+    pub fn drain_sorted_into(&mut self, out: &mut Vec<Scored>) -> u64 {
+        let depth = (self.capacity as f64).log2().ceil() as u64;
+        self.cycles += self.inner.len() as u64 + depth;
+        self.inner.drain_sorted_into(out);
+        self.cycles
+    }
+
+    /// (pointer, capacity) of the backing register array — scratch-reuse
+    /// diagnostics (see the engine's allocation-stability test).
+    pub fn buf_fingerprint(&self) -> (usize, usize) {
+        self.inner.buf_fingerprint()
+    }
 }
 
 #[cfg(test)]
@@ -112,6 +144,36 @@ mod tests {
         let result = std::panic::catch_unwind(|| HwPriorityQueue::new(HW_QUEUE_CAPACITY + 1));
         assert!(result.is_err());
         let _ok = HwPriorityQueue::new(HW_QUEUE_CAPACITY);
+    }
+
+    #[test]
+    fn reset_and_drain_into_match_consuming_drain() {
+        let mut rng = Rng::new(9);
+        let dists: Vec<f32> = (0..300).map(|_| rng.f32() * 10.0).collect();
+        let mut consuming = HwPriorityQueue::new(16);
+        let mut reused = HwPriorityQueue::new(4);
+        reused.reset(16);
+        for (i, &d) in dists.iter().enumerate() {
+            consuming.insert(d, i as u64);
+            reused.insert(d, i as u64);
+        }
+        let mut out = Vec::new();
+        let cycles_into = reused.drain_sorted_into(&mut out);
+        let (want, cycles) = consuming.drain_sorted();
+        assert_eq!(out, want);
+        assert_eq!(cycles_into, cycles);
+        assert!(reused.is_empty());
+        // Reuse after drain: allocation survives, accounting restarts.
+        let fp = reused.buf_fingerprint();
+        reused.reset(16);
+        assert_eq!(reused.cycles, 0);
+        for (i, &d) in dists.iter().enumerate() {
+            reused.insert(d, i as u64);
+        }
+        out.clear();
+        reused.drain_sorted_into(&mut out);
+        assert_eq!(out, want);
+        assert_eq!(reused.buf_fingerprint(), fp);
     }
 
     #[test]

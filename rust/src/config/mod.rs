@@ -217,6 +217,12 @@ pub struct SimConfig {
     pub host_dram_latency_ns: f64,
     /// Host DRAM bandwidth GB/s.
     pub host_dram_bandwidth_gbps: f64,
+    /// Serialize every in-flight query's far-memory record stream onto one
+    /// shared device timeline (bank/link occupancy) instead of giving each
+    /// query a private idle device. Batch latency then reflects contention
+    /// and `Breakdown::queue_ns` records the waiting time; at batch size 1
+    /// the two models agree exactly.
+    pub shared_timeline: bool,
 }
 
 impl Default for SimConfig {
@@ -237,6 +243,7 @@ impl Default for SimConfig {
             ssd_page_bytes: 4096,
             host_dram_latency_ns: 90.0,
             host_dram_bandwidth_gbps: 80.0,
+            shared_timeline: false,
         }
     }
 }
@@ -442,6 +449,9 @@ fn apply_sim(c: &mut SimConfig, t: &Table) -> Result<()> {
             "ssd_page_bytes" => c.ssd_page_bytes = need_usize(v, k)?,
             "host_dram_latency_ns" => c.host_dram_latency_ns = need_f64(v, k)?,
             "host_dram_bandwidth_gbps" => c.host_dram_bandwidth_gbps = need_f64(v, k)?,
+            "shared_timeline" => {
+                c.shared_timeline = v.as_bool().context("sim.shared_timeline must be a bool")?
+            }
             other => bail!("unknown key sim.{other}"),
         }
     }
@@ -506,6 +516,7 @@ mod tests {
             [sim]
             cxl_latency_ns = 271
             ssd_latency_us = 45.0
+            shared_timeline = true
 
             [pipeline]
             batch = 16
@@ -518,6 +529,7 @@ mod tests {
         assert!(cfg.refine.early_exit);
         assert_eq!(cfg.refine.margin_quantile, 0.98);
         assert_eq!(cfg.sim.cxl_latency_ns, 271.0);
+        assert!(cfg.sim.shared_timeline);
         assert!(cfg.pipeline.use_xla);
     }
 

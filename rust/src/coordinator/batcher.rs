@@ -61,6 +61,23 @@ pub fn run_batch(
     let outcomes = run_on_pool(sys, &params, &pool, &scratches, &sys.dataset.queries);
     let wall_ns = wall0.elapsed().as_nanos() as f64;
 
+    report_from_outcomes(&outcomes, truth, k, threads, wall_ns, mode.name())
+}
+
+/// Aggregate a batch of [`QueryOutcome`]s into a [`BatchReport`] — the one
+/// reduction shared by [`run_batch`] and the sharded serving path, so
+/// recall scoring, latency percentiles and breakdown averaging cannot
+/// drift between the two.
+pub fn report_from_outcomes(
+    outcomes: &[crate::coordinator::QueryOutcome],
+    truth: &[Vec<Scored>],
+    k: usize,
+    threads: usize,
+    wall_ns: f64,
+    mode: &'static str,
+) -> BatchReport {
+    let nq = outcomes.len();
+    assert_eq!(truth.len(), nq);
     let mut lat = LatencyStats::default();
     let mut recall_sum = 0.0;
     let mut agg = Breakdown::default();
@@ -70,6 +87,7 @@ pub fn run_batch(
         let bd = &out.breakdown;
         agg.traversal_ns += bd.traversal_ns;
         agg.far_ns += bd.far_ns;
+        agg.queue_ns += bd.queue_ns;
         agg.refine_compute_ns += bd.refine_compute_ns;
         agg.ssd_ns += bd.ssd_ns;
         agg.rerank_ns += bd.rerank_ns;
@@ -80,6 +98,7 @@ pub fn run_batch(
     let n = nq.max(1) as f64;
     agg.traversal_ns /= n;
     agg.far_ns /= n;
+    agg.queue_ns /= n;
     agg.refine_compute_ns /= n;
     agg.ssd_ns /= n;
     agg.rerank_ns /= n;
@@ -102,14 +121,20 @@ pub fn run_batch(
         wall_qps: if wall_ns > 0.0 { nq as f64 * 1e9 / wall_ns } else { 0.0 },
         wall_ns,
         breakdown: agg,
-        mode: mode.name(),
+        mode,
     }
 }
 
 /// Exact ground truth for every dataset query (shared across mode runs).
 pub fn ground_truth(sys: &BuiltSystem, k: usize) -> Vec<Vec<Scored>> {
-    let flat = FlatIndex::new(sys.dataset.base.clone(), sys.dataset.dim);
-    flat.search_batch(&sys.dataset.queries, k)
+    ground_truth_for(&sys.dataset, k)
+}
+
+/// [`ground_truth`] for a bare dataset (the sharded engine has no single
+/// `BuiltSystem` to hand over).
+pub fn ground_truth_for(dataset: &crate::vecstore::Dataset, k: usize) -> Vec<Vec<Scored>> {
+    let flat = FlatIndex::new(dataset.base.clone(), dataset.dim);
+    flat.search_batch(&dataset.queries, k)
 }
 
 #[cfg(test)]

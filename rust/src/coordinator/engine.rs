@@ -11,12 +11,11 @@
 //! - one [`QueryScratch`] per worker — resettable `SsdSim` /
 //!   `FarMemoryDevice` models, front-stage [`IndexScratch`] + candidate
 //!   buffer (the index writes via `AnnIndex::search_into`), the per-query
-//!   ternary ADC table ([`crate::kernels::ternary`]), and reusable
-//!   candidate-ranking/survivor buffers plus reusable `TopK`s — so the
-//!   steady-state query path performs no heap allocation beyond the
-//!   returned top-k list. (One remaining per-query allocation is noted
-//!   where it happens: the classic-mode HW ranking returned by
-//!   `RefineEngine::refine`.)
+//!   ternary ADC table ([`crate::kernels::ternary`]), the classic-mode HW
+//!   queue registers ([`HwPriorityQueue`]), and reusable candidate-
+//!   ranking/survivor buffers plus reusable `TopK`s — so the steady-state
+//!   query path performs no heap allocation beyond the returned top-k
+//!   list (asserted by the allocation-stability test below).
 //!
 //! It also hosts the **true progressive early-exit refinement**
 //! (`RefineConfig::early_exit`): phase 1 ranks candidates by the
@@ -27,6 +26,7 @@
 //! at the first provable exclusion — making `far_reads < candidates`
 //! observable in [`Breakdown`] for the first time.
 
+use crate::accel::pqueue::HwPriorityQueue;
 use crate::accel::RefineEngine;
 use crate::config::{RefineMode, SystemConfig};
 use crate::coordinator::builder::BuiltSystem;
@@ -36,7 +36,7 @@ use crate::kernels::ternary::{TernaryQueryLut, TERNARY_TAB_MIN_CANDIDATES};
 use crate::refine::{
     filter_top_ratio_len, provable_cutoff_len, FirstOrderCand, ProgressiveEstimator,
 };
-use crate::simulator::{FarMemoryDevice, SsdSim};
+use crate::simulator::{FarMemoryDevice, FarStream, SharedTimeline, SsdSim};
 use crate::util::threadpool::{default_threads, ThreadPool};
 use crate::util::topk::{Scored, TopK};
 use crate::util::l2_sq;
@@ -112,6 +112,9 @@ struct RefineScratch {
     /// Per-query ternary ADC table (kernel layer); rebuilt in place when
     /// the candidate count amortizes it.
     tlut: TernaryQueryLut,
+    /// Classic-mode HW queue registers (reset per query; the ranking that
+    /// used to be allocated inside `RefineEngine::refine`).
+    hwq: HwPriorityQueue,
 }
 
 impl QueryScratch {
@@ -130,6 +133,9 @@ impl QueryScratch {
                 bound: TopK::new(cfg.refine.k.max(1)),
                 topk: TopK::new(cfg.refine.k.max(1)),
                 tlut: TernaryQueryLut::new(),
+                hwq: HwPriorityQueue::new(
+                    cands.min(crate::accel::pqueue::HW_QUEUE_CAPACITY),
+                ),
             },
         }
     }
@@ -147,6 +153,21 @@ pub(crate) fn execute_query(
     query: &[f32],
     scratch: &mut QueryScratch,
 ) -> QueryOutcome {
+    execute_query_traced(sys, p, query, scratch, None)
+}
+
+/// [`execute_query`] that additionally captures the query's far-memory
+/// record stream into `trace` (cleared first) for post-hoc scheduling on
+/// the shared batch timeline ([`SharedTimeline`]). The functional result
+/// and the independent-model accounting are identical with or without a
+/// trace.
+pub(crate) fn execute_query_traced(
+    sys: &BuiltSystem,
+    p: &QueryParams,
+    query: &[f32],
+    scratch: &mut QueryScratch,
+    trace: Option<&mut FarStream>,
+) -> QueryOutcome {
     let mut bd = Breakdown::default();
 
     // ---- Stage 1: front-stage traversal (the "GPU") ----
@@ -161,9 +182,16 @@ pub(crate) fn execute_query(
 
     // ---- Stage 2+3: refinement + rerank ----
     let topk = match p.mode {
-        RefineMode::Baseline => refine_baseline(sys, p, query, cands, s, &mut bd),
-        RefineMode::FatrqSw => refine_fatrq(sys, p, query, cands, false, s, &mut bd),
-        RefineMode::FatrqHw => refine_fatrq(sys, p, query, cands, true, s, &mut bd),
+        RefineMode::Baseline => {
+            if let Some(t) = trace {
+                // Baseline never touches far memory; an empty stream keeps
+                // batch scheduling positional.
+                t.addrs.clear();
+            }
+            refine_baseline(sys, p, query, cands, s, &mut bd)
+        }
+        RefineMode::FatrqSw => refine_fatrq(sys, p, query, cands, false, s, &mut bd, trace),
+        RefineMode::FatrqHw => refine_fatrq(sys, p, query, cands, true, s, &mut bd, trace),
     };
     QueryOutcome { topk, breakdown: bd }
 }
@@ -205,6 +233,7 @@ fn refine_baseline(
 /// - progressive (`early_exit = true`): rank by the fast-memory
 ///   first-order estimate, stream records only until provably outside the
 ///   top-k, keep the `provable_cutoff` survivors.
+#[allow(clippy::too_many_arguments)]
 fn refine_fatrq(
     sys: &BuiltSystem,
     p: &QueryParams,
@@ -213,6 +242,7 @@ fn refine_fatrq(
     on_device: bool,
     s: &mut RefineScratch,
     bd: &mut Breakdown,
+    trace: Option<&mut FarStream>,
 ) -> Vec<Scored> {
     let dim = sys.dataset.dim;
     let rec_bytes = sys.trq.record_bytes();
@@ -282,6 +312,12 @@ fn refine_fatrq(
         };
 
         // Far-memory traffic: exactly the streamed prefix.
+        if let Some(t) = trace {
+            t.local = on_device;
+            t.rec_bytes = rec_bytes;
+            t.addrs.clear();
+            t.addrs.extend(s.ordered[..streamed].iter().map(|c| c.id * rec_bytes as u64));
+        }
         s.far.reset();
         let mut far_done = 0.0f64;
         for c in &s.ordered[..streamed] {
@@ -301,6 +337,12 @@ fn refine_fatrq(
         provable_cutoff_len(&s.refined, p.k, sys.margin)
     } else {
         // -- classic path: stream every record --
+        if let Some(t) = trace {
+            t.local = on_device;
+            t.rec_bytes = rec_bytes;
+            t.addrs.clear();
+            t.addrs.extend(cands.iter().map(|c| c.id * rec_bytes as u64));
+        }
         s.far.reset();
         let mut far_done = 0.0f64;
         for c in cands {
@@ -316,19 +358,20 @@ fn refine_fatrq(
         bd.far_reads = cands.len();
 
         if on_device {
-            // HW: the engine's cycle model provides the time. (refine()
-            // still allocates its queue + ranked Vec internally — the one
-            // classic-mode allocation scratch reuse doesn't yet remove.)
+            // HW: the engine's cycle model provides the time; queue
+            // registers and the ranked output live in per-worker scratch
+            // (`refine_into_with`), closing the last classic-mode
+            // per-query allocation.
             let engine = RefineEngine::new(&sys.trq, sys.cal.clone());
-            let (ranked, timing) = engine.refine_with(
+            let timing = engine.refine_into_with(
                 query,
                 cands,
                 cands.len().min(crate::accel::pqueue::HW_QUEUE_CAPACITY),
                 tlut,
+                &mut s.hwq,
+                &mut s.refined,
             );
             bd.refine_compute_ns = timing.ns;
-            s.refined.clear();
-            s.refined.extend_from_slice(&ranked);
         } else {
             // SW: measured host time, refined in place in scratch.
             let est = ProgressiveEstimator::new(&sys.trq, sys.cal.clone());
@@ -446,6 +489,13 @@ impl QueryEngine {
 /// results in query order. Shared by [`QueryEngine::run_with`] and
 /// `run_batch` so slot handling, panic behaviour and result collection
 /// cannot drift apart.
+///
+/// With `sim.shared_timeline` on, every query's far-memory record stream
+/// is captured during the functional pass and the whole batch is then
+/// scheduled on one [`SharedTimeline`] (all queries arrive together), so
+/// `Breakdown::queue_ns` carries the contention each query suffered. The
+/// post-pass is single-threaded over deterministically ordered streams,
+/// so timings are identical across worker counts.
 pub(crate) fn run_on_pool(
     sys: &BuiltSystem,
     params: &QueryParams,
@@ -457,16 +507,68 @@ pub(crate) fn run_on_pool(
     assert_eq!(queries.len() % dim, 0, "queries must be nq * dim flattened");
     assert!(scratches.len() >= pool.size().min(queries.len() / dim.max(1)));
     let nq = queries.len() / dim;
-    let results: Vec<OnceLock<QueryOutcome>> = (0..nq).map(|_| OnceLock::new()).collect();
-    pool.dispatch(nq, |slot, q| {
-        let mut scratch = scratches[slot].lock().unwrap();
-        let out = execute_query(sys, params, &queries[q * dim..(q + 1) * dim], &mut scratch);
-        let _ = results[q].set(out);
+    let shared = sys.cfg.sim.shared_timeline;
+    let (mut outs, streams) = dispatch_traced(pool, scratches, params, nq, shared, |q| {
+        (sys, &queries[q * dim..(q + 1) * dim])
     });
-    results
+    if let Some(streams) = streams {
+        let timings = SharedTimeline::new(&sys.cfg.sim).schedule(&streams);
+        for (out, t) in outs.iter_mut().zip(&timings) {
+            out.breakdown.queue_ns = t.queue_ns;
+        }
+    }
+    outs
+}
+
+/// The one scatter core shared by [`run_on_pool`] and
+/// [`crate::coordinator::ShardedEngine`]: dispatch `tasks` over `pool`
+/// (one reusable scratch per slot, results in task order), capturing each
+/// task's far-memory stream when `shared` is on. `task(t)` maps a task
+/// index to the system it runs against and its query slice. Keeping the
+/// OnceLock collection and traced-vs-untraced dispatch in one place means
+/// the monolithic and sharded serving paths cannot drift apart.
+pub(crate) fn dispatch_traced<'a, F>(
+    pool: &ThreadPool,
+    scratches: &[Mutex<QueryScratch>],
+    params: &QueryParams,
+    tasks: usize,
+    shared: bool,
+    task: F,
+) -> (Vec<QueryOutcome>, Option<Vec<FarStream>>)
+where
+    F: Fn(usize) -> (&'a BuiltSystem, &'a [f32]) + Sync,
+{
+    let results: Vec<OnceLock<QueryOutcome>> = (0..tasks).map(|_| OnceLock::new()).collect();
+    let streams: Vec<OnceLock<FarStream>> =
+        (0..if shared { tasks } else { 0 }).map(|_| OnceLock::new()).collect();
+    pool.dispatch(tasks, |slot, t| {
+        let (sys, query) = task(t);
+        let mut scratch = scratches[slot].lock().unwrap();
+        let out = if shared {
+            let mut tr = FarStream::default();
+            let out = execute_query_traced(sys, params, query, &mut scratch, Some(&mut tr));
+            let _ = streams[t].set(tr);
+            out
+        } else {
+            execute_query(sys, params, query, &mut scratch)
+        };
+        let _ = results[t].set(out);
+    });
+    let outs = results
         .into_iter()
-        .map(|c| c.into_inner().expect("query completed"))
-        .collect()
+        .map(|c| c.into_inner().expect("task completed"))
+        .collect();
+    let streams = if shared {
+        Some(
+            streams
+                .into_iter()
+                .map(|c| c.into_inner().expect("stream captured"))
+                .collect(),
+        )
+    } else {
+        None
+    };
+    (outs, streams)
 }
 
 #[cfg(test)]
@@ -478,7 +580,11 @@ mod tests {
     use crate::coordinator::builder::build_system;
 
     fn sys(early_exit: bool) -> BuiltSystem {
-        let cfg = SystemConfig {
+        sys_with(early_exit, false)
+    }
+
+    fn sys_with(early_exit: bool, shared_timeline: bool) -> BuiltSystem {
+        let mut cfg = SystemConfig {
             dataset: DatasetConfig {
                 dim: 64,
                 count: 4000,
@@ -506,6 +612,7 @@ mod tests {
             },
             ..Default::default()
         };
+        cfg.sim.shared_timeline = shared_timeline;
         build_system(&cfg).unwrap()
     }
 
@@ -549,6 +656,97 @@ mod tests {
             assert_eq!(a[q].topk, b[q].topk, "query {q} (1 vs 4 threads)");
             assert_eq!(b[q].topk, c[q].topk, "query {q} (fresh vs reused scratch)");
             assert_eq!(a[q].breakdown.far_reads, b[q].breakdown.far_reads);
+        }
+    }
+
+    /// (pointer, capacity) of every long-lived scratch buffer. The final
+    /// top-k accumulator is deliberately absent: its heap is handed to the
+    /// caller as the returned top-k list every query (the one permitted
+    /// allocation).
+    fn fingerprint(s: &QueryScratch) -> Vec<(usize, usize)> {
+        vec![
+            (s.front.cands.as_ptr() as usize, s.front.cands.capacity()),
+            (s.front.index.lut.as_ptr() as usize, s.front.index.lut.capacity()),
+            (s.front.index.dists.as_ptr() as usize, s.front.index.dists.capacity()),
+            (s.front.index.probes.as_ptr() as usize, s.front.index.probes.capacity()),
+            s.front.index.top.buf_fingerprint(),
+            (s.refine.ordered.as_ptr() as usize, s.refine.ordered.capacity()),
+            (s.refine.refined.as_ptr() as usize, s.refine.refined.capacity()),
+            s.refine.bound.buf_fingerprint(),
+            s.refine.tlut.buf_fingerprint(),
+            s.refine.hwq.buf_fingerprint(),
+        ]
+    }
+
+    #[test]
+    fn steady_state_scratch_allocations_are_stable() {
+        use crate::coordinator::Pipeline;
+        let sys = sys(false);
+        let classic = Pipeline::new(&sys).with_mode(RefineMode::FatrqHw);
+        let progressive =
+            Pipeline::new(&sys).with_mode(RefineMode::FatrqHw).with_early_exit(true);
+        let sw = Pipeline::new(&sys).with_mode(RefineMode::FatrqSw);
+        let mut scratch = QueryScratch::new(&sys.cfg);
+        let nq = sys.dataset.num_queries();
+        let run_all = |scratch: &mut QueryScratch| {
+            for q in 0..nq {
+                let query = sys.dataset.query(q);
+                classic.query_with_scratch(query, scratch);
+                progressive.query_with_scratch(query, scratch);
+                sw.query_with_scratch(query, scratch);
+            }
+        };
+        // Warm-up pass: buffers may still be growing to their peaks here.
+        run_all(&mut scratch);
+        let fp = fingerprint(&scratch);
+        // 100+ steady-state queries across all three FaTRQ paths: every
+        // scratch buffer must keep its address and capacity.
+        for _ in 0..2 {
+            run_all(&mut scratch); // 24 queries x 3 paths x 2 rounds = 144
+        }
+        assert_eq!(
+            fingerprint(&scratch),
+            fp,
+            "a scratch buffer reallocated in steady state"
+        );
+    }
+
+    #[test]
+    fn shared_timeline_adds_queue_time_under_batch_load() {
+        let sys = Arc::new(sys_with(false, true));
+        let engine = QueryEngine::with_threads(Arc::clone(&sys), 4);
+        let dim = sys.dataset.dim;
+
+        // Batch of 1: the shared timeline reduces to the independent model
+        // exactly — no queueing.
+        let one = engine.run(&sys.dataset.queries[0..dim]);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].breakdown.queue_ns, 0.0, "solo query must not queue");
+
+        // Full batch: far_ns stays the private-device (independent) value;
+        // contention appears as queue_ns on top, so batch latency strictly
+        // exceeds the independent model's.
+        let outs = engine.run(&sys.dataset.queries);
+        assert_eq!(
+            outs[0].breakdown.far_ns, one[0].breakdown.far_ns,
+            "far_ns must stay the independent-model value under load"
+        );
+        assert!(outs.iter().all(|o| o.breakdown.queue_ns >= 0.0));
+        let queued: f64 = outs.iter().map(|o| o.breakdown.queue_ns).sum();
+        assert!(queued > 0.0, "a {}-query batch must contend on the device", outs.len());
+        let with: f64 = outs.iter().map(|o| o.breakdown.total_ns()).sum();
+        let without: f64 =
+            outs.iter().map(|o| o.breakdown.total_ns() - o.breakdown.queue_ns).sum();
+        assert!(with > without, "contention-aware batch latency must exceed independent");
+
+        // Determinism: worker count must not change results or timings of
+        // the simulated components.
+        let e1 = QueryEngine::with_threads(Arc::clone(&sys), 1);
+        let solo_pool = e1.run(&sys.dataset.queries);
+        for (a, b) in solo_pool.iter().zip(&outs) {
+            assert_eq!(a.topk, b.topk);
+            assert_eq!(a.breakdown.far_reads, b.breakdown.far_reads);
+            assert_eq!(a.breakdown.queue_ns, b.breakdown.queue_ns);
         }
     }
 

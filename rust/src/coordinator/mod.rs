@@ -12,13 +12,19 @@
 //!   (back-compat + ablations). Produces per-stage breakdowns.
 //! - [`batcher`] — batch query driving over the engine core for
 //!   throughput runs; reports measured wall-clock QPS.
+//! - [`shard`] — scatter/gather serving over N corpus shards (contiguous
+//!   id ranges, each a full `BuiltSystem`), merged by (distance, global
+//!   id); with `sim.shared_timeline` all in-flight record streams contend
+//!   on one far-memory device.
 
 pub mod batcher;
 pub mod builder;
 pub mod engine;
 pub mod pipeline;
+pub mod shard;
 
-pub use batcher::{ground_truth, run_batch, BatchReport};
+pub use batcher::{ground_truth, ground_truth_for, report_from_outcomes, run_batch, BatchReport};
 pub use builder::{build_system, build_system_with, BuiltSystem};
 pub use engine::{QueryEngine, QueryParams, QueryScratch};
 pub use pipeline::{Breakdown, Pipeline, QueryOutcome};
+pub use shard::ShardedEngine;

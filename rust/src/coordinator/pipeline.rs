@@ -42,8 +42,14 @@ pub const GPU_SPEEDUP: f64 = 25.0;
 pub struct Breakdown {
     /// Front-stage traversal + ADC (GPU-scaled measured time).
     pub traversal_ns: f64,
-    /// Far-memory record streaming (simulated CXL/DRAM).
+    /// Far-memory record streaming (simulated CXL/DRAM), charged against a
+    /// private idle device — the independent model.
     pub far_ns: f64,
+    /// Extra far-memory waiting caused by other in-flight queries when the
+    /// shared batch timeline is on (`sim.shared_timeline`): the stream's
+    /// completion under bank/link contention minus `far_ns`. Zero at batch
+    /// size 1 and whenever the shared timeline is off.
+    pub queue_ns: f64,
     /// Refinement compute: measured host ns (SW) or engine cycles (HW).
     pub refine_compute_ns: f64,
     /// SSD fetches of full-precision survivors (simulated).
@@ -60,11 +66,17 @@ pub struct Breakdown {
 
 impl Breakdown {
     pub fn total_ns(&self) -> f64 {
-        self.traversal_ns + self.far_ns + self.refine_compute_ns + self.ssd_ns + self.rerank_ns
+        self.traversal_ns
+            + self.far_ns
+            + self.queue_ns
+            + self.refine_compute_ns
+            + self.ssd_ns
+            + self.rerank_ns
     }
     /// Refinement share of the total (the Fig 2 metric).
     pub fn refine_share(&self) -> f64 {
-        let refine = self.far_ns + self.refine_compute_ns + self.ssd_ns + self.rerank_ns;
+        let refine =
+            self.far_ns + self.queue_ns + self.refine_compute_ns + self.ssd_ns + self.rerank_ns;
         refine / self.total_ns().max(1e-9)
     }
 }

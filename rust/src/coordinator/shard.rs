@@ -1,0 +1,354 @@
+//! Sharded scatter/gather serving.
+//!
+//! COSMOS and FusionANNS both scale batch throughput by partitioning the
+//! corpus; one `BuiltSystem` cannot. [`ShardedEngine`] splits the dataset
+//! into N contiguous-id-range shards, each a full [`BuiltSystem`] of its
+//! own (front-stage index, TRQ far-memory store, calibration + margins),
+//! and serves queries by scatter/gather over one shared [`ThreadPool`]:
+//!
+//! - **scatter** — every query fans out to all shards as independent
+//!   (query, shard) tasks claimed dynamically by pool workers, each
+//!   reusing its own [`QueryScratch`] (shards share scratch shape, so one
+//!   scratch per worker serves them all);
+//! - **gather** — per-shard top-k lists are remapped from shard-local ids
+//!   to global ids (`local + shard base`) and merged by
+//!   `(distance, global id)` — the same tie rule the monolithic engine's
+//!   `TopK` uses, which is what makes a 1-shard engine bit-identical to
+//!   the monolith and the N-shard merge deterministic;
+//! - **accounting** — per-stage times aggregate as the max across shards
+//!   (shards run each stage concurrently), I/O counts as sums, and the
+//!   measured merge cost lands in `rerank_ns`.
+//!
+//! The corpus is partitioned but the far memory is still *one* CXL
+//! device: with `sim.shared_timeline` on, the record streams of every
+//! in-flight (query, shard) task are scheduled together on one
+//! [`SharedTimeline`], and each query's `Breakdown::queue_ns` reports the
+//! contention its slowest shard stream suffered — batch latency reflects
+//! a loaded device, not N×S private idle ones.
+
+use crate::config::SystemConfig;
+use crate::coordinator::builder::{build_system_with, BuiltSystem};
+use crate::coordinator::engine::{dispatch_traced, QueryParams, QueryScratch};
+use crate::coordinator::pipeline::{Breakdown, QueryOutcome};
+use crate::simulator::SharedTimeline;
+use crate::util::threadpool::{default_threads, ThreadPool};
+use crate::util::topk::Scored;
+use crate::vecstore::Dataset;
+use crate::Result;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Scatter/gather serving over N corpus shards (see module docs).
+pub struct ShardedEngine {
+    shards: Vec<Arc<BuiltSystem>>,
+    /// Global id of each shard's first vector (`global = local + base`).
+    base_ids: Vec<u64>,
+    /// Embedding dimensionality (shared by every shard).
+    dim: usize,
+    /// The held-out query set, kept for convenience runs; base vectors are
+    /// NOT duplicated here — the shards own their slices.
+    queries: Vec<f32>,
+    pool: ThreadPool,
+    scratches: Vec<Mutex<QueryScratch>>,
+    params: QueryParams,
+    cfg: SystemConfig,
+}
+
+impl ShardedEngine {
+    /// Synthesize the dataset from `cfg` and build `shards` shard systems.
+    pub fn build(cfg: &SystemConfig, shards: usize) -> Result<Self> {
+        let dataset = crate::vecstore::synthesize(&cfg.dataset);
+        Self::from_dataset(cfg, &dataset, shards)
+    }
+
+    /// Build over an existing dataset (shared with a monolithic build in
+    /// equivalence tests and benches). Thread count comes from
+    /// `cfg.pipeline.threads` (0 = auto).
+    pub fn from_dataset(cfg: &SystemConfig, dataset: &Dataset, shards: usize) -> Result<Self> {
+        let threads = match cfg.pipeline.threads {
+            0 => default_threads(),
+            t => t,
+        };
+        Self::from_dataset_with_threads(cfg, dataset, shards, threads)
+    }
+
+    /// [`ShardedEngine::from_dataset`] with an explicit worker count.
+    pub fn from_dataset_with_threads(
+        cfg: &SystemConfig,
+        dataset: &Dataset,
+        shards: usize,
+        threads: usize,
+    ) -> Result<Self> {
+        let n = dataset.count();
+        anyhow::ensure!(shards >= 1, "need at least one shard");
+        anyhow::ensure!(
+            shards <= n,
+            "cannot split {n} vectors into {shards} non-empty shards"
+        );
+        let dim = dataset.dim;
+        let mut systems = Vec::with_capacity(shards);
+        let mut base_ids = Vec::with_capacity(shards);
+        for s in 0..shards {
+            // Balanced contiguous id ranges: shard s owns [start, end).
+            let start = s * n / shards;
+            let end = (s + 1) * n / shards;
+            let sub = Dataset {
+                dim,
+                base: dataset.base[start * dim..end * dim].to_vec(),
+                // Queries stay with the engine; shards only serve their
+                // corpus slice.
+                queries: Vec::new(),
+                labels: dataset.labels[start..end].to_vec(),
+            };
+            let mut scfg = cfg.clone();
+            scfg.dataset.count = end - start;
+            systems.push(Arc::new(build_system_with(&scfg, sub)?));
+            base_ids.push(start as u64);
+        }
+        let threads = threads.max(1);
+        let pool = ThreadPool::new(threads);
+        let scratches = (0..threads).map(|_| Mutex::new(QueryScratch::new(cfg))).collect();
+        Ok(ShardedEngine {
+            shards: systems,
+            base_ids,
+            dim,
+            queries: dataset.queries.clone(),
+            pool,
+            scratches,
+            params: QueryParams::from_config(cfg),
+            cfg: cfg.clone(),
+        })
+    }
+
+    /// Override the default per-query parameters.
+    pub fn with_params(mut self, params: QueryParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Replace the worker pool, keeping every shard build — lets tests and
+    /// benches compare worker counts over one (expensive, and not
+    /// bit-reproducible across rebuilds) set of shard systems.
+    pub fn with_worker_threads(mut self, threads: usize) -> Self {
+        let threads = threads.max(1);
+        self.pool = ThreadPool::new(threads);
+        self.scratches =
+            (0..threads).map(|_| Mutex::new(QueryScratch::new(&self.cfg))).collect();
+        self
+    }
+
+    /// Toggle the shared far-memory timeline without rebuilding shards
+    /// (benches sweep contention on/off over one build).
+    pub fn set_shared_timeline(&mut self, on: bool) {
+        self.cfg.sim.shared_timeline = on;
+    }
+
+    pub fn params(&self) -> &QueryParams {
+        &self.params
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Embedding dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The held-out query set (`num_queries * dim` flattened).
+    pub fn queries(&self) -> &[f32] {
+        &self.queries
+    }
+
+    /// Borrow one shard's built system (diagnostics/tests).
+    pub fn shard(&self, s: usize) -> &BuiltSystem {
+        &self.shards[s]
+    }
+
+    /// Serve one query through all shards.
+    pub fn query(&self, query: &[f32]) -> QueryOutcome {
+        let mut outs = self.run_with(&self.params, query);
+        assert_eq!(outs.len(), 1);
+        outs.pop().unwrap()
+    }
+
+    /// Serve a batch: `queries` is `nq * dim` flattened; results come back
+    /// in query order, ids global.
+    pub fn run(&self, queries: &[f32]) -> Vec<QueryOutcome> {
+        self.run_with(&self.params, queries)
+    }
+
+    /// [`ShardedEngine::run`] with per-call parameter overrides.
+    pub fn run_with(&self, params: &QueryParams, queries: &[f32]) -> Vec<QueryOutcome> {
+        let dim = self.dim;
+        assert_eq!(queries.len() % dim, 0, "queries must be nq * dim flattened");
+        let nq = queries.len() / dim;
+        let ns = self.shards.len();
+        let tasks = nq * ns;
+        let shared = self.cfg.sim.shared_timeline;
+
+        // ---- scatter: one task per (query, shard), claimed dynamically ----
+        let (outs, streams) =
+            dispatch_traced(&self.pool, &self.scratches, params, tasks, shared, |t| {
+                let (q, s) = (t / ns, t % ns);
+                (&*self.shards[s], &queries[q * dim..(q + 1) * dim])
+            });
+
+        // One far-memory device for the whole engine: schedule every
+        // in-flight (query, shard) stream together, arrival-ordered.
+        let timings = streams.map(|mut streams| {
+            // The engine traces shard-local record addresses
+            // (`local_id * rec_bytes`); rebase each stream onto its
+            // shard's contiguous global range so distinct records from
+            // different shards never alias the same device address (shard
+            // s's records live at [base, base + count) * rec_bytes, the
+            // partitioned layout the module docs describe).
+            for (t, stream) in streams.iter_mut().enumerate() {
+                let base = self.base_ids[t % ns] * stream.rec_bytes as u64;
+                if base != 0 {
+                    for addr in stream.addrs.iter_mut() {
+                        *addr += base;
+                    }
+                }
+            }
+            SharedTimeline::new(&self.cfg.sim).schedule(&streams)
+        });
+
+        // ---- gather: remap to global ids, merge, aggregate breakdowns ----
+        let mut merged_outs = Vec::with_capacity(nq);
+        let mut merged: Vec<Scored> = Vec::with_capacity(ns * params.k);
+        for q in 0..nq {
+            let t0 = Instant::now();
+            merged.clear();
+            let mut bd = Breakdown::default();
+            for (s, out) in outs[q * ns..(q + 1) * ns].iter().enumerate() {
+                merged.extend(
+                    out.topk.iter().map(|c| Scored::new(c.dist, c.id + self.base_ids[s])),
+                );
+                let ob = &out.breakdown;
+                // Stages run concurrently across shards: time aggregates
+                // as the slowest shard; I/O counts as sums.
+                bd.traversal_ns = bd.traversal_ns.max(ob.traversal_ns);
+                bd.far_ns = bd.far_ns.max(ob.far_ns);
+                bd.refine_compute_ns = bd.refine_compute_ns.max(ob.refine_compute_ns);
+                bd.ssd_ns = bd.ssd_ns.max(ob.ssd_ns);
+                bd.rerank_ns = bd.rerank_ns.max(ob.rerank_ns);
+                bd.candidates += ob.candidates;
+                bd.far_reads += ob.far_reads;
+                bd.ssd_reads += ob.ssd_reads;
+            }
+            merged.sort_unstable_by(|a, b| {
+                a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id))
+            });
+            merged.truncate(params.k);
+            if let Some(tm) = &timings {
+                // The query completes when its slowest shard stream does,
+                // under contention vs. alone. Both components come from
+                // the rebased (global-address) replay so that
+                // far_ns + queue_ns equals the modeled contended
+                // completion exactly — the per-shard far_ns above was
+                // replayed at shard-local addresses and would mix layouts.
+                let slice = &tm[q * ns..(q + 1) * ns];
+                let solo = slice.iter().map(|t| t.solo_ns).fold(0.0f64, f64::max);
+                let shared_done = slice.iter().map(|t| t.shared_ns).fold(0.0f64, f64::max);
+                bd.far_ns = solo;
+                bd.queue_ns = (shared_done - solo).max(0.0);
+            }
+            bd.rerank_ns += t0.elapsed().as_nanos() as f64;
+            merged_outs.push(QueryOutcome { topk: merged.clone(), breakdown: bd });
+        }
+        merged_outs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode,
+        SystemConfig,
+    };
+
+    fn cfg() -> SystemConfig {
+        SystemConfig {
+            dataset: DatasetConfig {
+                dim: 32,
+                count: 1200,
+                clusters: 10,
+                noise: 0.3,
+                query_noise: 0.8,
+                queries: 6,
+                seed: 17,
+            },
+            quant: QuantConfig { pq_m: 8, pq_nbits: 5, kmeans_iters: 5, train_sample: 800 },
+            index: IndexConfig { kind: IndexKind::Ivf, nlist: 12, nprobe: 12, ..Default::default() },
+            refine: RefineConfig {
+                mode: RefineMode::FatrqHw,
+                candidates: 120,
+                k: 10,
+                filter_ratio: 1.0,
+                calib_sample: 0.02,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn shard_ranges_are_contiguous_and_balanced() {
+        let cfg = cfg();
+        let dataset = crate::vecstore::synthesize(&cfg.dataset);
+        let engine = ShardedEngine::from_dataset_with_threads(&cfg, &dataset, 5, 2).unwrap();
+        assert_eq!(engine.num_shards(), 5);
+        let mut covered = 0usize;
+        for s in 0..5 {
+            assert_eq!(engine.base_ids[s] as usize, covered);
+            covered += engine.shard(s).dataset.count();
+        }
+        assert_eq!(covered, dataset.count());
+        // Balanced: sizes differ by at most one.
+        let sizes: Vec<usize> = (0..5).map(|s| engine.shard(s).dataset.count()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        // Shard rows are the same bits as the global rows they cover.
+        assert_eq!(engine.shard(2).dataset.vector(0), {
+            let g = engine.base_ids[2] as usize;
+            dataset.vector(g)
+        });
+    }
+
+    #[test]
+    fn global_ids_remapped_into_owning_shard_range() {
+        let cfg = cfg();
+        let dataset = crate::vecstore::synthesize(&cfg.dataset);
+        let engine = ShardedEngine::from_dataset_with_threads(&cfg, &dataset, 3, 2).unwrap();
+        let out = engine.query(dataset.query(0));
+        assert_eq!(out.topk.len(), 10);
+        let n = dataset.count() as u64;
+        for w in out.topk.windows(2) {
+            assert!(w[0].dist <= w[1].dist);
+        }
+        for c in &out.topk {
+            assert!(c.id < n, "id {} not a global id", c.id);
+            // The global id must resolve to the exact vector the distance
+            // was computed against.
+            let d = crate::util::l2_sq(dataset.query(0), dataset.vector(c.id as usize));
+            assert_eq!(d, c.dist, "id {} remapped to the wrong row", c.id);
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_shard_counts() {
+        let cfg = cfg();
+        let dataset = crate::vecstore::synthesize(&cfg.dataset);
+        assert!(ShardedEngine::from_dataset_with_threads(&cfg, &dataset, 0, 1).is_err());
+        assert!(
+            ShardedEngine::from_dataset_with_threads(&cfg, &dataset, dataset.count() + 1, 1)
+                .is_err()
+        );
+    }
+}

@@ -55,6 +55,13 @@ impl TernaryQueryLut {
         self.dim
     }
 
+    /// (pointer, capacity) of the table buffer — scratch-reuse
+    /// diagnostics: rebuilding for a same-dim query must not reallocate
+    /// (see the engine's allocation-stability test).
+    pub fn buf_fingerprint(&self) -> (usize, usize) {
+        (self.table.as_ptr() as usize, self.table.capacity())
+    }
+
     /// (Re)build the table for `q`, reusing the existing allocation.
     ///
     /// Base-3 DP per 5-dim group: level `l` extends every length-`l`

@@ -23,14 +23,24 @@
 //!   walk), OLS calibration, filtering/cutoff policies
 //! - [`tiering`] — fast/far/storage placement and access accounting
 //! - [`simulator`] — DDR5 DRAM timing, CXL link, SSD queue models (Table I),
-//!   all resettable for scratch reuse
+//!   all resettable for scratch reuse, plus the shared batch timeline
+//!   ([`simulator::SharedTimeline`]) that serializes every in-flight
+//!   query's record stream onto one bank/link occupancy model for
+//!   contention-accurate batch latency (`sim.shared_timeline`)
 //! - [`accel`] — CXL Type-2 refinement accelerator cycle/area/power model,
 //!   including early-exit cycle accounting
 //! - [`runtime`] — PJRT client wrapper; loads `artifacts/*.hlo.txt` (L2/L1;
 //!   stubbed unless built with the `xla` feature)
 //! - [`coordinator`] — system build, the persistent
 //!   [`coordinator::QueryEngine`] (thread pool + per-worker reusable
-//!   scratch), the per-call `Pipeline` façade, and batch driving
+//!   scratch), the per-call `Pipeline` façade, batch driving, and the
+//!   **shard layer**: [`coordinator::ShardedEngine`] partitions the corpus
+//!   into N contiguous-id-range shards (each a full `BuiltSystem` with its
+//!   own index, TRQ store and calibration) and serves by scatter/gather —
+//!   fan-out over the pool, per-shard top-k remapped to global ids and
+//!   merged by `(distance, id)`, per-stage times aggregated as the slowest
+//!   shard, I/O counts summed, far-memory contention charged by the shared
+//!   timeline across all in-flight (query, shard) streams
 //! - [`metrics`] — recall, distortion, latency histograms, throughput
 //! - [`cli`] — hand-rolled argument parsing for the `fatrq` binary
 //!

@@ -9,7 +9,10 @@
 
 use fatrq::cli::Args;
 use fatrq::config::{RefineMode, SystemConfig};
-use fatrq::coordinator::{build_system, ground_truth, run_batch};
+use fatrq::coordinator::{
+    build_system, ground_truth, ground_truth_for, report_from_outcomes, run_batch, BatchReport,
+    QueryParams, ShardedEngine,
+};
 use fatrq::runtime::XlaRuntime;
 use fatrq::util::rng::Rng;
 use std::path::Path;
@@ -23,7 +26,9 @@ COMMANDS:
   build   --config <toml>            build the system, print an inventory
   query   --config <toml> [--mode baseline|fatrq-sw|fatrq-hw]
           [--early-exit] [--margin-quantile Q] [--threads N]
+          [--shards N] [--shared-timeline]
   bench   --config <toml> [--threads N] [--early-exit] [--margin-quantile Q]
+          [--shards N] [--shared-timeline]
   xla     --artifacts <dir>          verify AOT artifacts vs native compute
   help
 
@@ -32,6 +37,11 @@ FLAGS:
                         memory only until provably outside the top-k
   --margin-quantile Q   calibration-residual quantile for the provable
                         cutoff margins (default from config, 0.95)
+  --shards N            partition the corpus across N shard systems and
+                        serve by scatter/gather (default 1 = monolithic)
+  --shared-timeline     schedule every in-flight query's far-memory stream
+                        on one shared device timeline: batch latency
+                        reflects contention, breakdown gains a queue term
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
@@ -39,9 +49,12 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
         Some(path) => SystemConfig::from_file(Path::new(path))?,
         None => SystemConfig::default(),
     };
-    // Refinement overrides shared by query/bench.
+    // Refinement/serving overrides shared by query/bench.
     if args.has("early-exit") {
         cfg.refine.early_exit = true;
+    }
+    if args.has("shared-timeline") {
+        cfg.sim.shared_timeline = true;
     }
     cfg.refine.margin_quantile =
         args.get_f64("margin-quantile", cfg.refine.margin_quantile)?;
@@ -77,20 +90,10 @@ fn cmd_build(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_query(args: &Args) -> anyhow::Result<()> {
-    args.expect_only(&["config", "mode", "threads", "early-exit", "margin-quantile"])?;
-    let cfg = load_config(args)?;
-    let mode = match args.get("mode") {
-        Some(m) => RefineMode::parse(m)?,
-        None => cfg.refine.mode,
-    };
-    let threads = args.get_usize("threads", 4)?;
-    let sys = build_system(&cfg)?;
-    let truth = ground_truth(&sys, cfg.refine.k);
-    let rep = run_batch(&sys, mode, &truth, threads);
+fn print_report(rep: &BatchReport, k: usize, threads: usize, shards: usize) {
     println!(
-        "mode={} queries={} recall@{}={:.4}",
-        rep.mode, rep.queries, cfg.refine.k, rep.mean_recall
+        "mode={} queries={} shards={} recall@{}={:.4}",
+        rep.mode, rep.queries, shards, k, rep.mean_recall
     );
     println!(
         "latency: mean {:.1} us  p50 {:.1} us  p99 {:.1} us  ({:.0} model qps, {:.0} wall qps @{} threads)",
@@ -103,9 +106,10 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     );
     let bd = rep.breakdown;
     println!(
-        "breakdown (us): traversal {:.1} | far {:.1} | refine {:.1} | ssd {:.1} | rerank {:.1}",
+        "breakdown (us): traversal {:.1} | far {:.1} | queue {:.1} | refine {:.1} | ssd {:.1} | rerank {:.1}",
         bd.traversal_ns / 1e3,
         bd.far_ns / 1e3,
+        bd.queue_ns / 1e3,
         bd.refine_compute_ns / 1e3,
         bd.ssd_ns / 1e3,
         bd.rerank_ns / 1e3
@@ -114,30 +118,89 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         "io: {} candidates, {} far reads, {} ssd reads per query",
         bd.candidates, bd.far_reads, bd.ssd_reads
     );
+}
+
+/// Build the serving stack per `--shards` and return one closure running a
+/// full batch in a given mode — monolithic `run_batch` or sharded
+/// scatter/gather, same `BatchReport` either way.
+#[allow(clippy::type_complexity)]
+fn make_runner(
+    cfg: &SystemConfig,
+    shards: usize,
+    threads: usize,
+) -> anyhow::Result<Box<dyn Fn(RefineMode) -> BatchReport>> {
+    let k = cfg.refine.k;
+    if shards > 1 {
+        let dataset = fatrq::vecstore::synthesize(&cfg.dataset);
+        let truth = ground_truth_for(&dataset, k);
+        let engine = ShardedEngine::from_dataset_with_threads(cfg, &dataset, shards, threads)?;
+        let cfg = cfg.clone();
+        Ok(Box::new(move |mode| {
+            let params = QueryParams::from_config(&cfg).with_mode(mode);
+            let wall0 = std::time::Instant::now();
+            let outs = engine.run_with(&params, engine.queries());
+            let wall_ns = wall0.elapsed().as_nanos() as f64;
+            report_from_outcomes(&outs, &truth, k, threads, wall_ns, mode.name())
+        }))
+    } else {
+        let sys = build_system(cfg)?;
+        let truth = ground_truth(&sys, k);
+        Ok(Box::new(move |mode| run_batch(&sys, mode, &truth, threads)))
+    }
+}
+
+fn cmd_query(args: &Args) -> anyhow::Result<()> {
+    args.expect_only(&[
+        "config",
+        "mode",
+        "threads",
+        "shards",
+        "early-exit",
+        "margin-quantile",
+        "shared-timeline",
+    ])?;
+    let cfg = load_config(args)?;
+    let mode = match args.get("mode") {
+        Some(m) => RefineMode::parse(m)?,
+        None => cfg.refine.mode,
+    };
+    let threads = args.get_usize("threads", 4)?;
+    let shards = args.get_usize("shards", 1)?;
+    let run = make_runner(&cfg, shards, threads)?;
+    let rep = run(mode);
+    print_report(&rep, cfg.refine.k, threads, shards);
     Ok(())
 }
 
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
-    args.expect_only(&["config", "threads", "early-exit", "margin-quantile"])?;
+    args.expect_only(&[
+        "config",
+        "threads",
+        "shards",
+        "early-exit",
+        "margin-quantile",
+        "shared-timeline",
+    ])?;
     let cfg = load_config(args)?;
     let threads = args.get_usize("threads", 4)?;
-    let sys = build_system(&cfg)?;
-    let truth = ground_truth(&sys, cfg.refine.k);
+    let shards = args.get_usize("shards", 1)?;
+    let run = make_runner(&cfg, shards, threads)?;
     println!(
-        "{:>10} {:>9} {:>12} {:>10} {:>10} {:>10}",
-        "mode", "recall", "latency(us)", "far/query", "ssd/query", "speedup"
+        "{:>10} {:>9} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "mode", "recall", "latency(us)", "queue(us)", "far/query", "ssd/query", "speedup"
     );
-    let base = run_batch(&sys, RefineMode::Baseline, &truth, threads);
-    for (mode, rep) in [
-        (RefineMode::Baseline, base.clone()),
-        (RefineMode::FatrqSw, run_batch(&sys, RefineMode::FatrqSw, &truth, threads)),
-        (RefineMode::FatrqHw, run_batch(&sys, RefineMode::FatrqHw, &truth, threads)),
+    let base = run(RefineMode::Baseline);
+    for rep in [
+        base.clone(),
+        run(RefineMode::FatrqSw),
+        run(RefineMode::FatrqHw),
     ] {
         println!(
-            "{:>10} {:>9.4} {:>12.1} {:>10} {:>10} {:>9.2}x",
-            mode.name(),
+            "{:>10} {:>9.4} {:>12.1} {:>10.1} {:>10} {:>10} {:>9.2}x",
+            rep.mode,
             rep.mean_recall,
             rep.mean_latency_ns / 1e3,
+            rep.breakdown.queue_ns / 1e3,
             rep.breakdown.far_reads,
             rep.breakdown.ssd_reads,
             base.mean_latency_ns / rep.mean_latency_ns

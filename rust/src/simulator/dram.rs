@@ -63,6 +63,15 @@ impl DramSim {
         }
     }
 
+    /// Map a byte address to its (channel, global bank index) — the shared
+    /// resources an access occupies. Used by the batch timeline
+    /// ([`crate::simulator::SharedTimeline`]) to arbitrate concurrent
+    /// streams over the same bank/channel state this simulator models.
+    pub fn locate(&self, addr: u64) -> (usize, usize) {
+        let (channel, bank, _row) = self.map(addr);
+        (channel, bank)
+    }
+
     /// Map a byte address to (channel, bank index, row).
     fn map(&self, addr: u64) -> (usize, usize, u64) {
         let row_size = self.cfg.row_size as u64;

@@ -11,6 +11,10 @@
 //! - [`ssd`] — latency + IOPS-bounded queue (45 µs / 1200K IOPS).
 //! - [`device`] — the composed far-memory device: CXL link in front of the
 //!   DRAM backend, as the accelerator sees it.
+//! - [`timeline`] — the shared batch timeline: serializes every in-flight
+//!   query's record stream onto one bank/link occupancy model so batch
+//!   latency reflects contention (`sim.shared_timeline`), instead of N
+//!   independent idle devices.
 //!
 //! All simulators are *latency accounting* models driven by access streams;
 //! they return simulated nanoseconds and keep queue state so sustained
@@ -20,11 +24,13 @@ pub mod cxl;
 pub mod device;
 pub mod dram;
 pub mod ssd;
+pub mod timeline;
 
 pub use cxl::CxlLink;
 pub use device::FarMemoryDevice;
 pub use dram::DramSim;
 pub use ssd::SsdSim;
+pub use timeline::{FarStream, SharedTimeline, StreamTiming};
 
 /// Simulated time in nanoseconds.
 pub type SimNs = f64;

@@ -146,6 +146,13 @@ impl TopK {
     pub fn into_ids(self) -> Vec<u64> {
         self.into_sorted().into_iter().map(|s| s.id).collect()
     }
+
+    /// (pointer, capacity) of the backing buffer — scratch-reuse
+    /// diagnostics: a steady-state hot path must leave both unchanged
+    /// across queries (see the engine's allocation-stability test).
+    pub fn buf_fingerprint(&self) -> (usize, usize) {
+        (self.heap.as_ptr() as usize, self.heap.capacity())
+    }
 }
 
 /// Select the indices of the `k` smallest values in `dists` (ascending).

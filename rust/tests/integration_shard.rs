@@ -1,0 +1,172 @@
+//! Sharded scatter/gather serving — end-to-end invariants.
+//!
+//! - **shard-vs-monolith equivalence**: on the same seeded dataset, a
+//!   `ShardedEngine` with N ∈ {1, 2, 4} shards returns bit-identical
+//!   top-k ids and distances to the monolithic `QueryEngine`, for flat and
+//!   IVF front stages and all three refine modes. The equivalence config
+//!   keeps every candidate through refinement (`filter_ratio = 1.0`) so
+//!   the test isolates what sharding must preserve: front-stage coverage,
+//!   global-id remapping, exact rerank, and the `(distance, id)` merge
+//!   tie rule.
+//! - **determinism**: identical results across 1 vs 4 pool workers and
+//!   across repeated runs with reused scratch, shared timeline included.
+//! - **early-exit × sharding**: per-shard progressive walks keep the
+//!   aggregate `far_reads < candidates` and recall within 1% of the
+//!   unsharded early-exit path at N = 4.
+
+use fatrq::config::{
+    DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
+};
+use fatrq::coordinator::{
+    build_system_with, ground_truth_for, QueryEngine, QueryParams, ShardedEngine,
+};
+use fatrq::metrics::recall_at_k;
+use fatrq::vecstore::synthesize;
+use std::sync::Arc;
+
+/// Equivalence config: all lists probed, nothing filtered (see module
+/// docs), queries close to their seed vectors so the exact top-k is
+/// unambiguous.
+fn equiv_cfg(kind: IndexKind) -> SystemConfig {
+    SystemConfig {
+        dataset: DatasetConfig {
+            dim: 32,
+            count: 1600,
+            clusters: 12,
+            noise: 0.3,
+            query_noise: 0.8,
+            queries: 10,
+            seed: 23,
+        },
+        quant: QuantConfig { pq_m: 8, pq_nbits: 5, kmeans_iters: 6, train_sample: 1200 },
+        index: IndexConfig { kind, nlist: 16, nprobe: 16, ..Default::default() },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            // Deep relative to the corpus (300 of 1600 monolithic, 300 of
+            // ~400 per shard at N = 4): every true top-10 member lands in
+            // each arrangement's candidate pool with enormous margin, so
+            // the exact rerank pins the same global top-k everywhere.
+            candidates: 300,
+            k: 10,
+            filter_ratio: 1.0,
+            calib_sample: 0.02,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sharded_topk_matches_monolith_for_flat_and_ivf_all_modes() {
+    for kind in [IndexKind::Flat, IndexKind::Ivf] {
+        let cfg = equiv_cfg(kind);
+        let dataset = synthesize(&cfg.dataset);
+        let mono_sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+        let mono = QueryEngine::with_threads(Arc::clone(&mono_sys), 2);
+        for shards in [1usize, 2, 4] {
+            let sharded =
+                ShardedEngine::from_dataset_with_threads(&cfg, &dataset, shards, 2).unwrap();
+            for mode in [RefineMode::Baseline, RefineMode::FatrqSw, RefineMode::FatrqHw] {
+                let params = QueryParams::from_config(&cfg).with_mode(mode);
+                let want = mono.run_with(&params, &dataset.queries);
+                let got = sharded.run_with(&params, &dataset.queries);
+                assert_eq!(want.len(), got.len());
+                for (q, (w, g)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(
+                        w.topk, g.topk,
+                        "{}/{mode:?}: query {q} diverged at {shards} shards",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_run_is_deterministic_across_workers_and_reuse() {
+    let mut cfg = equiv_cfg(IndexKind::Ivf);
+    cfg.refine.early_exit = true;
+    cfg.sim.shared_timeline = true;
+    let dataset = synthesize(&cfg.dataset);
+    // One shard build, re-pooled at different worker counts (shard builds
+    // are not bit-reproducible — parallel k-means merges partial sums in
+    // completion order — so the comparison must share the build).
+    let engine = ShardedEngine::from_dataset_with_threads(&cfg, &dataset, 4, 1).unwrap();
+    let a = engine.run(&dataset.queries);
+    let engine = engine.with_worker_threads(4);
+    let b = engine.run(&dataset.queries);
+    // Run again so the per-worker scratches carry history.
+    let c = engine.run(&dataset.queries);
+    assert_eq!(a.len(), b.len());
+    for q in 0..a.len() {
+        assert_eq!(a[q].topk, b[q].topk, "query {q}: 1 vs 4 workers");
+        assert_eq!(b[q].topk, c[q].topk, "query {q}: fresh vs reused scratch");
+        assert_eq!(a[q].breakdown.far_reads, b[q].breakdown.far_reads, "query {q}");
+        assert_eq!(a[q].breakdown.queue_ns, b[q].breakdown.queue_ns, "query {q}");
+        assert_eq!(b[q].breakdown.queue_ns, c[q].breakdown.queue_ns, "query {q}");
+    }
+}
+
+#[test]
+fn sharded_early_exit_keeps_recall_and_cuts_far_reads() {
+    // The progressive-walk config: candidates are genuinely filtered, so
+    // early exit has something to save (extends the engine's
+    // `early_exit_reduces_far_reads_and_keeps_recall` pattern to 4
+    // shards).
+    let cfg = SystemConfig {
+        dataset: DatasetConfig {
+            dim: 64,
+            count: 4000,
+            clusters: 32,
+            noise: 0.35,
+            query_noise: 1.0,
+            queries: 16,
+            seed: 5,
+        },
+        quant: QuantConfig { pq_m: 16, pq_nbits: 6, kmeans_iters: 6, train_sample: 2048 },
+        index: IndexConfig { kind: IndexKind::Ivf, nlist: 32, nprobe: 10, ..Default::default() },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 100,
+            k: 10,
+            filter_ratio: 0.3,
+            calib_sample: 0.01,
+            early_exit: true,
+            margin_quantile: 0.98,
+        },
+        ..Default::default()
+    };
+    let dataset = synthesize(&cfg.dataset);
+    let truth = ground_truth_for(&dataset, 10);
+
+    let mono_sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let mono = QueryEngine::with_threads(Arc::clone(&mono_sys), 2);
+    let sharded = ShardedEngine::from_dataset_with_threads(&cfg, &dataset, 4, 2).unwrap();
+
+    let outs_mono = mono.run(&dataset.queries);
+    let outs_shard = sharded.run(&dataset.queries);
+
+    let nq = dataset.num_queries();
+    let (mut r_mono, mut r_shard) = (0.0f64, 0.0f64);
+    let (mut far, mut cands) = (0usize, 0usize);
+    for q in 0..nq {
+        r_mono += recall_at_k(&outs_mono[q].topk, &truth[q], 10);
+        r_shard += recall_at_k(&outs_shard[q].topk, &truth[q], 10);
+        // Aggregate (summed-across-shards) counts: the per-shard
+        // progressive walks must still stream less than the combined
+        // candidate pool.
+        far += outs_shard[q].breakdown.far_reads;
+        cands += outs_shard[q].breakdown.candidates;
+    }
+    r_mono /= nq as f64;
+    r_shard /= nq as f64;
+    assert!(
+        far < cands,
+        "sharded early exit: aggregate far reads {far} !< candidates {cands}"
+    );
+    assert!(
+        r_shard >= r_mono - 0.01,
+        "sharded early-exit recall {r_shard:.4} fell more than 1% below unsharded {r_mono:.4}"
+    );
+}

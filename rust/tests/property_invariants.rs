@@ -2,10 +2,12 @@
 //! (routing, ranking, filtering, codecs), via the in-repo mini property
 //! harness (`fatrq::util::prop` — no proptest crate offline).
 
+use fatrq::config::SimConfig;
 use fatrq::kernels::ternary::{qdot_packed_tab, TernaryQueryLut};
 use fatrq::quant::pack::{pack_ternary, packed_len, unpack_ternary};
 use fatrq::quant::trq::{encode_record, estimate_qdot, qdot_packed, ternary_encode};
 use fatrq::refine::filter::{filter_top_ratio, provable_cutoff};
+use fatrq::simulator::{FarStream, SharedTimeline};
 use fatrq::util::prop::{forall, vec_gauss, Config};
 use fatrq::util::rng::Rng;
 use fatrq::util::topk::{Scored, TopK};
@@ -256,5 +258,86 @@ fn prop_estimator_unbiased_on_isotropic_residuals() {
     assert!(
         bias.abs() < 0.1 * scale,
         "bias {bias:.5} vs mean |signal| {scale:.5}"
+    );
+}
+
+/// Generator for a batch of random far-memory record streams (mixed HW/SW
+/// modes, scattered record addresses — the shape the engine captures).
+fn gen_streams(rng: &mut Rng, size: usize) -> Vec<FarStream> {
+    let batch = 1 + rng.below(6);
+    (0..batch)
+        .map(|_| {
+            let n = 1 + rng.below(size.max(2));
+            FarStream {
+                local: rng.below(2) == 0,
+                rec_bytes: 26 + rng.below(140),
+                addrs: (0..n).map(|_| rng.next_u64() % (1 << 30)).collect(),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_shared_timeline_batch_of_one_reduces_to_independent() {
+    forall(
+        Config { cases: 60, seed: 31, max_size: 150 },
+        gen_streams,
+        |streams| {
+            let tl = SharedTimeline::new(&SimConfig::default());
+            // Every stream scheduled alone must reproduce the private
+            // independent-device completion bit-for-bit, with zero queue.
+            streams.iter().all(|s| {
+                let t = tl.schedule(std::slice::from_ref(s));
+                t[0].shared_ns == tl.solo(s) && t[0].queue_ns == 0.0
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_shared_timeline_monotone_and_work_conserving() {
+    forall(
+        Config { cases: 40, seed: 32, max_size: 120 },
+        gen_streams,
+        |streams| {
+            let tl = SharedTimeline::new(&SimConfig::default());
+            let mut prev_makespan = 0.0f64;
+            for n in 1..=streams.len() {
+                let t = tl.schedule(&streams[..n]);
+                // (a) monotone: contention never speeds a stream up, and
+                // batch completion never shrinks as the batch grows.
+                if t.iter().any(|ti| ti.shared_ns < ti.solo_ns) {
+                    return false;
+                }
+                let makespan = t.iter().map(|ti| ti.shared_ns).fold(0.0f64, f64::max);
+                if makespan < prev_makespan {
+                    return false;
+                }
+                // (b) work-conserving: never slower than running the
+                // streams fully serialized (sum of solo completions).
+                let serialized: f64 = t.iter().map(|ti| ti.solo_ns).sum();
+                if makespan > serialized * (1.0 + 1e-9) + 1.0 {
+                    return false;
+                }
+                prev_makespan = makespan;
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_shared_timeline_deterministic() {
+    forall(
+        Config { cases: 30, seed: 33, max_size: 100 },
+        gen_streams,
+        |streams| {
+            let tl = SharedTimeline::new(&SimConfig::default());
+            let a = tl.schedule(streams);
+            let b = tl.schedule(streams);
+            a.iter().zip(&b).all(|(x, y)| {
+                x.shared_ns == y.shared_ns && x.solo_ns == y.solo_ns
+            })
+        },
     );
 }
