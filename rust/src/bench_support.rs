@@ -181,10 +181,15 @@ impl Pipelined<'_> {
             mean_recall: recall / n,
             mean_latency_ns: lat.mean(),
             p50_ns: lat.p50(),
+            p95_ns: lat.p95(),
             p99_ns: lat.p99(),
             qps: if lat.mean() > 0.0 { threads as f64 * 1e9 / lat.mean() } else { 0.0 },
             wall_qps: if wall_ns > 0.0 { nq as f64 * 1e9 / wall_ns } else { 0.0 },
             wall_ns,
+            // This loop is a sequential ablation driver — it never runs
+            // through the pipelined scheduler.
+            makespan_ns: 0.0,
+            pipeline_depth: 0,
             breakdown: agg,
             mode: mode.name(),
         }

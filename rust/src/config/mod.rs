@@ -218,11 +218,19 @@ pub struct SimConfig {
     /// Host DRAM bandwidth GB/s.
     pub host_dram_bandwidth_gbps: f64,
     /// Serialize every in-flight query's far-memory record stream onto one
-    /// shared device timeline (bank/link occupancy) instead of giving each
-    /// query a private idle device. Batch latency then reflects contention
-    /// and `Breakdown::queue_ns` records the waiting time; at batch size 1
-    /// the two models agree exactly.
+    /// shared device timeline (bank/link occupancy) — and its survivor
+    /// fetches onto one shared per-shard SSD queue — instead of giving
+    /// each query private idle devices. Batch latency then reflects
+    /// contention and `Breakdown::queue_ns` records the waiting time; a
+    /// query admitted to idle devices (batch size 1, pipeline depth 1)
+    /// matches the independent model exactly.
     pub shared_timeline: bool,
+    /// Open-loop arrival rate for batch serving, queries/sec. 0 = the
+    /// closed batch (every query arrives at t = 0); > 0 spaces arrivals
+    /// `1e9 / qps` ns apart on the simulated timeline, so the serving
+    /// report's p50/p95/p99 become tail-latency-vs-load numbers
+    /// (admission wait included).
+    pub arrival_qps: f64,
 }
 
 impl Default for SimConfig {
@@ -244,8 +252,20 @@ impl Default for SimConfig {
             host_dram_latency_ns: 90.0,
             host_dram_bandwidth_gbps: 80.0,
             shared_timeline: false,
+            arrival_qps: 0.0,
         }
     }
+}
+
+/// Serving-scheduler parameters (the pipelined batch path).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeConfig {
+    /// Pipeline depth: how many queries the scheduler keeps in flight,
+    /// overlapping CPU front-stage work with simulated far-memory / SSD
+    /// occupancy of other queries. 0 = unbounded (the whole batch); 1 =
+    /// the sequential engine (stages of one query at a time,
+    /// bit-identical results *and* accounting).
+    pub pipeline_depth: usize,
 }
 
 /// Coordinator / serving parameters.
@@ -282,6 +302,7 @@ pub struct SystemConfig {
     pub refine: RefineConfig,
     pub sim: SimConfig,
     pub pipeline: PipelineConfig,
+    pub serve: ServeConfig,
 }
 
 impl SystemConfig {
@@ -301,6 +322,7 @@ impl SystemConfig {
                 "refine" => apply_refine(&mut cfg.refine, sub)?,
                 "sim" => apply_sim(&mut cfg.sim, sub)?,
                 "pipeline" => apply_pipeline(&mut cfg.pipeline, sub)?,
+                "serve" => apply_serve(&mut cfg.serve, sub)?,
                 other => bail!("unknown config section [{other}]"),
             }
         }
@@ -344,6 +366,9 @@ impl SystemConfig {
         }
         if !(0.0..=1.0).contains(&self.refine.margin_quantile) {
             bail!("margin_quantile must be in [0,1]");
+        }
+        if !self.sim.arrival_qps.is_finite() || self.sim.arrival_qps < 0.0 {
+            bail!("sim.arrival_qps must be a finite non-negative rate");
         }
         Ok(())
     }
@@ -452,6 +477,7 @@ fn apply_sim(c: &mut SimConfig, t: &Table) -> Result<()> {
             "shared_timeline" => {
                 c.shared_timeline = v.as_bool().context("sim.shared_timeline must be a bool")?
             }
+            "arrival_qps" => c.arrival_qps = need_f64(v, k)?,
             other => bail!("unknown key sim.{other}"),
         }
     }
@@ -471,6 +497,16 @@ fn apply_pipeline(c: &mut PipelineConfig, t: &Table) -> Result<()> {
             }
             "use_xla" => c.use_xla = v.as_bool().context("pipeline.use_xla must be a bool")?,
             other => bail!("unknown key pipeline.{other}"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_serve(c: &mut ServeConfig, t: &Table) -> Result<()> {
+    for (k, v) in t {
+        match k.as_str() {
+            "pipeline_depth" => c.pipeline_depth = need_usize(v, k)?,
+            other => bail!("unknown key serve.{other}"),
         }
     }
     Ok(())
@@ -517,10 +553,14 @@ mod tests {
             cxl_latency_ns = 271
             ssd_latency_us = 45.0
             shared_timeline = true
+            arrival_qps = 20000.0
 
             [pipeline]
             batch = 16
             use_xla = true
+
+            [serve]
+            pipeline_depth = 8
         "#;
         let cfg = SystemConfig::from_toml(doc).unwrap();
         assert_eq!(cfg.dataset.dim, 128);
@@ -530,7 +570,9 @@ mod tests {
         assert_eq!(cfg.refine.margin_quantile, 0.98);
         assert_eq!(cfg.sim.cxl_latency_ns, 271.0);
         assert!(cfg.sim.shared_timeline);
+        assert_eq!(cfg.sim.arrival_qps, 20000.0);
         assert!(cfg.pipeline.use_xla);
+        assert_eq!(cfg.serve.pipeline_depth, 8);
     }
 
     #[test]
@@ -549,6 +591,10 @@ mod tests {
         assert!(SystemConfig::from_toml(bad3).is_err());
         let bad4 = "[refine]\nmargin_quantile = 1.5";
         assert!(SystemConfig::from_toml(bad4).is_err());
+        let bad5 = "[sim]\narrival_qps = -5.0";
+        assert!(SystemConfig::from_toml(bad5).is_err());
+        let bad6 = "[serve]\nbogus = 1";
+        assert!(SystemConfig::from_toml(bad6).is_err());
     }
 
     #[test]

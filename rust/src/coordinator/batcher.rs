@@ -1,15 +1,20 @@
-//! Batched query driving: runs a query set through the shared engine core
-//! across pool workers and aggregates latency/recall/throughput — the
-//! driver behind the Fig 6 harness and the serving example.
+//! Batched query driving: runs a query set through the pipelined
+//! stage-graph scheduler across pool workers and aggregates
+//! latency/recall/throughput — the driver behind the Fig 6 harness and
+//! the serving example.
 //!
-//! Each worker owns one reusable [`QueryScratch`] for the whole batch (no
-//! per-query simulator/buffer construction, no `Mutex<Option<..>>` per
-//! result — the per-query-state problem the engine refactor removed).
+//! Each scratch slot serves one in-flight query at a time for the whole
+//! batch (no per-query simulator/buffer construction), and the report now
+//! carries both views of latency: the per-query service breakdown and the
+//! simulated serving timeline (admission wait + device queueing included)
+//! with p50/p95/p99 and the batch makespan.
 
 use crate::config::RefineMode;
 use crate::coordinator::builder::BuiltSystem;
-use crate::coordinator::engine::{run_on_pool, QueryParams, QueryScratch};
+use crate::coordinator::engine::{run_on_pool, QueryParams};
 use crate::coordinator::pipeline::Breakdown;
+use crate::coordinator::pipelined::ServeReport;
+use crate::coordinator::stage::QueryScratch;
 use crate::index::FlatIndex;
 use crate::metrics::{recall_at_k, LatencyStats};
 use crate::util::threadpool::ThreadPool;
@@ -22,9 +27,12 @@ use std::time::Instant;
 pub struct BatchReport {
     pub queries: usize,
     pub mean_recall: f64,
-    /// Mean simulated+measured latency per query, ns.
+    /// Mean simulated+measured latency per query, ns. From the serving
+    /// timeline when the batch ran pipelined (admission wait included),
+    /// else the mean of per-query breakdown totals.
     pub mean_latency_ns: f64,
     pub p50_ns: f64,
+    pub p95_ns: f64,
     pub p99_ns: f64,
     /// Throughput implied by mean (simulated+measured) latency with
     /// `parallelism` lanes — the paper-model number.
@@ -34,13 +42,20 @@ pub struct BatchReport {
     pub wall_qps: f64,
     /// Wall-clock duration of the batch, ns.
     pub wall_ns: f64,
+    /// Simulated batch makespan under the pipelined scheduler (0 when the
+    /// batch did not run through it).
+    pub makespan_ns: f64,
+    /// Pipeline depth the batch was scheduled at (0 = unbounded).
+    pub pipeline_depth: usize,
     /// Mean per-stage breakdown.
     pub breakdown: Breakdown,
     pub mode: &'static str,
 }
 
-/// Run every dataset query through the engine core in `mode`, on `threads`
-/// pool workers, scoring recall@k against `truth` (one list per query).
+/// Run every dataset query through the pipelined engine core in `mode`,
+/// on `threads` pool workers, scoring recall@k against `truth` (one list
+/// per query). Pipeline depth and arrival rate come from the system's
+/// config (`serve.pipeline_depth`, `sim.arrival_qps`).
 pub fn run_batch(
     sys: &BuiltSystem,
     mode: RefineMode,
@@ -58,16 +73,24 @@ pub fn run_batch(
         (0..threads).map(|_| Mutex::new(QueryScratch::new(&sys.cfg))).collect();
 
     let wall0 = Instant::now();
-    let outcomes = run_on_pool(sys, &params, &pool, &scratches, &sys.dataset.queries);
+    let (outcomes, serve) = run_on_pool(
+        sys,
+        &params,
+        &pool,
+        &scratches,
+        &sys.dataset.queries,
+        sys.cfg.serve.pipeline_depth,
+        sys.cfg.sim.arrival_qps,
+    );
     let wall_ns = wall0.elapsed().as_nanos() as f64;
 
-    report_from_outcomes(&outcomes, truth, k, threads, wall_ns, mode.name())
+    report_with_serve(&outcomes, truth, k, threads, wall_ns, mode.name(), Some(&serve))
 }
 
-/// Aggregate a batch of [`QueryOutcome`]s into a [`BatchReport`] — the one
-/// reduction shared by [`run_batch`] and the sharded serving path, so
-/// recall scoring, latency percentiles and breakdown averaging cannot
-/// drift between the two.
+/// Aggregate a batch of [`QueryOutcome`](crate::coordinator::QueryOutcome)s
+/// into a [`BatchReport`] — the one reduction shared by [`run_batch`] and
+/// the sharded serving path, so recall scoring, latency percentiles and
+/// breakdown averaging cannot drift between the two.
 pub fn report_from_outcomes(
     outcomes: &[crate::coordinator::QueryOutcome],
     truth: &[Vec<Scored>],
@@ -76,14 +99,28 @@ pub fn report_from_outcomes(
     wall_ns: f64,
     mode: &'static str,
 ) -> BatchReport {
+    report_with_serve(outcomes, truth, k, threads, wall_ns, mode, None)
+}
+
+/// [`report_from_outcomes`] with the simulated serving timeline attached:
+/// latency statistics come from the timeline (`done − arrival`, admission
+/// wait and device queueing included) and the report carries the batch
+/// makespan — the numbers the pipelined-serving sweeps compare.
+pub fn report_with_serve(
+    outcomes: &[crate::coordinator::QueryOutcome],
+    truth: &[Vec<Scored>],
+    k: usize,
+    threads: usize,
+    wall_ns: f64,
+    mode: &'static str,
+    serve: Option<&ServeReport>,
+) -> BatchReport {
     let nq = outcomes.len();
     assert_eq!(truth.len(), nq);
-    let mut lat = LatencyStats::default();
     let mut recall_sum = 0.0;
     let mut agg = Breakdown::default();
     for (q, out) in outcomes.iter().enumerate() {
         recall_sum += recall_at_k(&out.topk, &truth[q], k);
-        lat.record(out.breakdown.total_ns());
         let bd = &out.breakdown;
         agg.traversal_ns += bd.traversal_ns;
         agg.far_ns += bd.far_ns;
@@ -106,13 +143,28 @@ pub fn report_from_outcomes(
     agg.far_reads = (agg.far_reads as f64 / n) as usize;
     agg.ssd_reads = (agg.ssd_reads as f64 / n) as usize;
 
-    let mean_latency_ns = lat.mean();
+    // Latency statistics: the serving timeline when available (it already
+    // folds in device queueing and any admission wait), else the
+    // per-query service totals.
+    let (mean_latency_ns, p50_ns, p95_ns, p99_ns, makespan_ns, pipeline_depth) = match serve {
+        Some(s) => {
+            (s.mean_latency_ns, s.p50_ns, s.p95_ns, s.p99_ns, s.makespan_ns, s.depth)
+        }
+        None => {
+            let mut lat = LatencyStats::default();
+            for out in outcomes {
+                lat.record(out.breakdown.total_ns());
+            }
+            (lat.mean(), lat.p50(), lat.p95(), lat.p99(), 0.0, 0)
+        }
+    };
     BatchReport {
         queries: nq,
         mean_recall: recall_sum / n,
         mean_latency_ns,
-        p50_ns: lat.p50(),
-        p99_ns: lat.p99(),
+        p50_ns,
+        p95_ns,
+        p99_ns,
         qps: if mean_latency_ns > 0.0 {
             threads as f64 * 1e9 / mean_latency_ns
         } else {
@@ -120,6 +172,8 @@ pub fn report_from_outcomes(
         },
         wall_qps: if wall_ns > 0.0 { nq as f64 * 1e9 / wall_ns } else { 0.0 },
         wall_ns,
+        makespan_ns,
+        pipeline_depth,
         breakdown: agg,
         mode,
     }
@@ -179,9 +233,11 @@ mod tests {
         assert!(rep.mean_recall > 0.3, "recall {}", rep.mean_recall);
         assert!(rep.mean_latency_ns > 0.0);
         assert!(rep.p99_ns >= rep.p50_ns);
+        assert!(rep.p95_ns >= rep.p50_ns && rep.p99_ns >= rep.p95_ns);
         assert!(rep.qps > 0.0);
         assert!(rep.wall_qps > 0.0, "wall-clock QPS must be measured");
         assert!(rep.wall_ns > 0.0);
+        assert!(rep.makespan_ns > 0.0, "pipelined batch must report a makespan");
         assert_eq!(rep.mode, "fatrq-hw");
     }
 

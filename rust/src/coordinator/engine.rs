@@ -1,47 +1,48 @@
 //! The persistent serving engine.
 //!
-//! The original `Pipeline::query` rebuilt its device simulators, estimator
-//! and working buffers on every call, and `run_batch` spun up throwaway
-//! scoped threads with a `Mutex<Option<..>>` per result — per-query state
-//! that FusionANNS/COSMOS-class serving systems restructure their hot
-//! paths to avoid. [`QueryEngine`] owns everything long-lived instead:
+//! [`QueryEngine`] owns everything long-lived on the serving path:
 //!
 //! - an `Arc<BuiltSystem>` (index, TRQ store, calibration),
 //! - a [`ThreadPool`] of workers,
-//! - one [`QueryScratch`] per worker — resettable `SsdSim` /
-//!   `FarMemoryDevice` models, front-stage [`IndexScratch`] + candidate
-//!   buffer (the index writes via `AnnIndex::search_into`), the per-query
-//!   ternary ADC table ([`crate::kernels::ternary`]), the classic-mode HW
-//!   queue registers ([`HwPriorityQueue`]), and reusable candidate-
-//!   ranking/survivor buffers plus reusable `TopK`s — so the steady-state
-//!   query path performs no heap allocation beyond the returned top-k
-//!   list (asserted by the allocation-stability test below).
+//! - one [`QueryScratch`] per pool slot — resettable `SsdSim` /
+//!   `FarMemoryDevice` models, front-stage `IndexScratch` + candidate
+//!   buffer, the per-query ternary ADC table, the classic-mode HW queue
+//!   registers, and the candidate-ranking/survivor buffers — so the
+//!   steady-state query path performs no heap allocation beyond the
+//!   returned top-k list (asserted by the allocation-stability test
+//!   below).
+//!
+//! The per-query dataflow itself lives in the **stage graph**
+//! ([`crate::coordinator::stage`]): front-stage traversal → far-memory
+//! (progressive) refinement → SSD fetch of survivors → exact rerank, as
+//! four resumable steps. [`execute_query`] is the sequential walk (all
+//! four steps back to back — the single-query path); batches go through
+//! the **pipelined scheduler** ([`crate::coordinator::pipelined`]),
+//! which interleaves ready stages of a window of in-flight queries
+//! across the pool and drives the simulated clock by admission:
+//! far-memory streams reserve the shared timeline as queries reach the
+//! far-refinement stage, SSD bursts reserve the shared SSD queue
+//! (`sim.shared_timeline`), and `serve.pipeline_depth` caps how many
+//! queries are in flight (0 = the whole batch; 1 = the sequential
+//! engine, bit-identical accounting included).
 //!
 //! It also hosts the **true progressive early-exit refinement**
 //! (`RefineConfig::early_exit`): phase 1 ranks candidates by the
 //! fast-memory first-order estimate `d̂₀ + ‖δ‖²` (zero far-memory
-//! traffic); phase 2 walks that ranking, streams packed TRQ codes from far
-//! memory only while a candidate's first-order lower bound stays within
-//! the running k-th refined bound (calibration-derived margins), and stops
-//! at the first provable exclusion — making `far_reads < candidates`
-//! observable in [`Breakdown`] for the first time.
+//! traffic); phase 2 walks that ranking, streams packed TRQ codes from
+//! far memory only while a candidate's first-order lower bound stays
+//! within the running k-th refined bound (calibration-derived margins),
+//! and stops at the first provable exclusion — making
+//! `far_reads < candidates` observable in the per-stage breakdown.
 
-use crate::accel::pqueue::HwPriorityQueue;
-use crate::accel::RefineEngine;
 use crate::config::{RefineMode, SystemConfig};
 use crate::coordinator::builder::BuiltSystem;
-use crate::coordinator::pipeline::{Breakdown, QueryOutcome, GPU_SPEEDUP};
-use crate::index::{CandidateList, IndexScratch};
-use crate::kernels::ternary::{TernaryQueryLut, TERNARY_TAB_MIN_CANDIDATES};
-use crate::refine::{
-    filter_top_ratio_len, provable_cutoff_len, FirstOrderCand, ProgressiveEstimator,
-};
-use crate::simulator::{FarMemoryDevice, FarStream, SharedTimeline, SsdSim};
+use crate::coordinator::pipeline::QueryOutcome;
+use crate::coordinator::pipelined::{execute_stage_graph, BatchProfile, ServeReport};
+use crate::coordinator::stage::{run_stage, QueryScratch, Stage, StageState};
+use crate::simulator::FarStream;
 use crate::util::threadpool::{default_threads, ThreadPool};
-use crate::util::topk::{Scored, TopK};
-use crate::util::l2_sq;
-use std::sync::{Arc, Mutex, OnceLock};
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
 
 /// Per-query serving parameters, detached from the config so callers can
 /// sweep modes/depths without rebuilding the system.
@@ -81,72 +82,12 @@ impl QueryParams {
     }
 }
 
-/// Reusable per-worker state: device models are `reset()` instead of
-/// reconstructed, buffers keep their capacity across queries. Split into
-/// a front-stage half and a refinement half so the refinement functions
-/// can borrow the candidate list and their own scratch simultaneously.
-pub struct QueryScratch {
-    front: FrontScratch,
-    refine: RefineScratch,
-}
-
-/// Front-stage buffers: index traversal scratch + the candidate list the
-/// traversal writes into (previously a fresh `Vec` per query).
-struct FrontScratch {
-    index: IndexScratch,
-    cands: CandidateList,
-}
-
-/// Refinement-stage buffers.
-struct RefineScratch {
-    ssd: SsdSim,
-    far: FarMemoryDevice,
-    /// Phase-1 first-order ranking (early-exit path).
-    ordered: Vec<FirstOrderCand>,
-    /// Refined (second-order) estimates, sorted ascending after phase 2.
-    refined: Vec<Scored>,
-    /// Running k-th refined bound for the progressive walk.
-    bound: TopK,
-    /// Final exact top-k accumulator.
-    topk: TopK,
-    /// Per-query ternary ADC table (kernel layer); rebuilt in place when
-    /// the candidate count amortizes it.
-    tlut: TernaryQueryLut,
-    /// Classic-mode HW queue registers (reset per query; the ranking that
-    /// used to be allocated inside `RefineEngine::refine`).
-    hwq: HwPriorityQueue,
-}
-
-impl QueryScratch {
-    pub fn new(cfg: &SystemConfig) -> Self {
-        let cands = cfg.refine.candidates.max(1);
-        QueryScratch {
-            front: FrontScratch {
-                index: IndexScratch::new(),
-                cands: Vec::with_capacity(cands),
-            },
-            refine: RefineScratch {
-                ssd: SsdSim::new(&cfg.sim),
-                far: FarMemoryDevice::new(&cfg.sim),
-                ordered: Vec::with_capacity(cands),
-                refined: Vec::with_capacity(cands),
-                bound: TopK::new(cfg.refine.k.max(1)),
-                topk: TopK::new(cfg.refine.k.max(1)),
-                tlut: TernaryQueryLut::new(),
-                hwq: HwPriorityQueue::new(
-                    cands.min(crate::accel::pqueue::HW_QUEUE_CAPACITY),
-                ),
-            },
-        }
-    }
-}
-
-/// Serve one query against `sys` with reusable `scratch`. This is the one
-/// hot path shared by [`QueryEngine`], the back-compat
-/// [`crate::coordinator::Pipeline`], and `run_batch`. The whole path —
-/// front stage (`search_into`), first-order ranking, progressive walk,
-/// rerank — runs out of the per-worker scratch; steady state allocates
-/// nothing beyond the returned top-k list.
+/// Serve one query against `sys` with reusable `scratch`: the sequential
+/// stage walk (all four stage-graph steps back to back on the caller's
+/// thread). This is the one hot path shared by [`QueryEngine::query`],
+/// the back-compat [`crate::coordinator::Pipeline`], and — stage by
+/// stage — the pipelined scheduler, which interleaves the very same
+/// steps across queries.
 pub(crate) fn execute_query(
     sys: &BuiltSystem,
     p: &QueryParams,
@@ -157,259 +98,39 @@ pub(crate) fn execute_query(
 }
 
 /// [`execute_query`] that additionally captures the query's far-memory
-/// record stream into `trace` (cleared first) for post-hoc scheduling on
-/// the shared batch timeline ([`SharedTimeline`]). The functional result
-/// and the independent-model accounting are identical with or without a
-/// trace.
+/// record stream into `trace` (cleared first) for scheduling on a shared
+/// device timeline. The functional result and the independent-model
+/// accounting are identical with or without a trace.
 pub(crate) fn execute_query_traced(
     sys: &BuiltSystem,
     p: &QueryParams,
     query: &[f32],
     scratch: &mut QueryScratch,
-    trace: Option<&mut FarStream>,
+    mut trace: Option<&mut FarStream>,
 ) -> QueryOutcome {
-    let mut bd = Breakdown::default();
-
-    // ---- Stage 1: front-stage traversal (the "GPU") ----
-    let t0 = Instant::now();
-    sys.index
-        .as_ann()
-        .search_into(query, p.candidates, &mut scratch.front.index, &mut scratch.front.cands);
-    bd.traversal_ns = t0.elapsed().as_nanos() as f64 / GPU_SPEEDUP;
-    bd.candidates = scratch.front.cands.len();
-    let cands = &scratch.front.cands;
-    let s = &mut scratch.refine;
-
-    // ---- Stage 2+3: refinement + rerank ----
-    let topk = match p.mode {
-        RefineMode::Baseline => {
-            if let Some(t) = trace {
-                // Baseline never touches far memory; an empty stream keeps
-                // batch scheduling positional.
-                t.addrs.clear();
-            }
-            refine_baseline(sys, p, query, cands, s, &mut bd)
-        }
-        RefineMode::FatrqSw => refine_fatrq(sys, p, query, cands, false, s, &mut bd, trace),
-        RefineMode::FatrqHw => refine_fatrq(sys, p, query, cands, true, s, &mut bd, trace),
-    };
-    QueryOutcome { topk, breakdown: bd }
-}
-
-/// Baseline: fetch EVERY candidate's full vector from SSD, exact rerank
-/// (what IVF-FAISS / CAGRA-cuVS do — paper §II-A).
-fn refine_baseline(
-    sys: &BuiltSystem,
-    p: &QueryParams,
-    query: &[f32],
-    cands: &[Scored],
-    s: &mut RefineScratch,
-    bd: &mut Breakdown,
-) -> Vec<Scored> {
-    let dim = sys.dataset.dim;
-    s.ssd.reset();
-    let mut done = 0.0f64;
-    for _ in cands {
-        done = s.ssd.read(dim * 4, 0.0).max(done);
+    let mut st = StageState::new();
+    while st.stage != Stage::Done {
+        run_stage(sys, p, query, scratch, &mut st, trace.as_deref_mut());
     }
-    bd.ssd_ns = done;
-    bd.ssd_reads = cands.len();
-
-    let t0 = Instant::now();
-    s.topk.reset(p.k);
-    for c in cands {
-        let d = l2_sq(query, sys.dataset.vector(c.id as usize));
-        s.topk.push(d, c.id);
-    }
-    bd.rerank_ns = t0.elapsed().as_nanos() as f64;
-    s.topk.take_sorted()
-}
-
-/// FaTRQ: refine with TRQ records from far memory, fetch only the
-/// filtered survivors from SSD. Two sub-modes:
-///
-/// - classic (`early_exit = false`): stream every candidate's record, rank
-///   by the refined estimate, keep the top `filter_ratio` slice;
-/// - progressive (`early_exit = true`): rank by the fast-memory
-///   first-order estimate, stream records only until provably outside the
-///   top-k, keep the `provable_cutoff` survivors.
-#[allow(clippy::too_many_arguments)]
-fn refine_fatrq(
-    sys: &BuiltSystem,
-    p: &QueryParams,
-    query: &[f32],
-    cands: &[Scored],
-    on_device: bool,
-    s: &mut RefineScratch,
-    bd: &mut Breakdown,
-    trace: Option<&mut FarStream>,
-) -> Vec<Scored> {
-    let dim = sys.dataset.dim;
-    let rec_bytes = sys.trq.record_bytes();
-
-    // Kernel selection: with enough residual dots ahead, build the
-    // per-query ternary ADC table once (in reusable scratch) and route
-    // every dot through it; below the threshold the byte-LUT fallback
-    // wins. The classic path refines every candidate; the early-exit walk
-    // streams an unknown prefix, but provably at least `min(k, cands)`
-    // records (the bound must fill before the walk can break), so gate on
-    // that guaranteed lower bound — the build then always amortizes.
-    // Bit-for-bit identical either way, so the gate can never change
-    // results.
-    let dots_lower_bound = if p.early_exit {
-        p.k.min(cands.len())
-    } else {
-        cands.len()
-    };
-    let tlut: Option<&TernaryQueryLut> = if dots_lower_bound >= TERNARY_TAB_MIN_CANDIDATES {
-        s.tlut.build(query);
-        Some(&s.tlut)
-    } else {
-        None
-    };
-
-    let keep = if p.early_exit {
-        // -- phase 1: first-order ranking, fast memory only --
-        let est = ProgressiveEstimator::new(&sys.trq, sys.cal.clone());
-        s.ordered.clear();
-        s.ordered.extend(cands.iter().map(|c| FirstOrderCand {
-            id: c.id,
-            d0: c.dist,
-            d1: est.estimate_first_order(c.id as usize, c.dist),
-        }));
-        s.ordered
-            .sort_unstable_by(|a, b| a.d1.partial_cmp(&b.d1).unwrap().then(a.id.cmp(&b.id)));
-
-        // -- phase 2: progressive walk, streaming only survivors --
-        let streamed = if on_device {
-            let engine = RefineEngine::new(&sys.trq, sys.cal.clone());
-            let (stats, timing) = engine.refine_progressive_with(
-                query,
-                &s.ordered,
-                p.k,
-                sys.margin_first,
-                sys.margin,
-                &mut s.bound,
-                &mut s.refined,
-                tlut,
-            );
-            bd.refine_compute_ns = timing.ns;
-            stats.streamed
-        } else {
-            let t0 = Instant::now();
-            let stats = est.refine_progressive_into_with(
-                query,
-                &s.ordered,
-                p.k,
-                sys.margin_first,
-                sys.margin,
-                &mut s.bound,
-                &mut s.refined,
-                tlut,
-            );
-            bd.refine_compute_ns = t0.elapsed().as_nanos() as f64;
-            stats.streamed
-        };
-
-        // Far-memory traffic: exactly the streamed prefix.
-        if let Some(t) = trace {
-            t.local = on_device;
-            t.rec_bytes = rec_bytes;
-            t.addrs.clear();
-            t.addrs.extend(s.ordered[..streamed].iter().map(|c| c.id * rec_bytes as u64));
-        }
-        s.far.reset();
-        let mut far_done = 0.0f64;
-        for c in &s.ordered[..streamed] {
-            let addr = c.id * rec_bytes as u64;
-            let d = if on_device {
-                s.far.local_read(addr, rec_bytes, 0.0)
-            } else {
-                s.far.host_read(addr, rec_bytes, 0.0)
-            };
-            far_done = far_done.max(d);
-        }
-        bd.far_ns = far_done;
-        bd.far_reads = streamed;
-
-        s.refined
-            .sort_unstable_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
-        provable_cutoff_len(&s.refined, p.k, sys.margin)
-    } else {
-        // -- classic path: stream every record --
-        if let Some(t) = trace {
-            t.local = on_device;
-            t.rec_bytes = rec_bytes;
-            t.addrs.clear();
-            t.addrs.extend(cands.iter().map(|c| c.id * rec_bytes as u64));
-        }
-        s.far.reset();
-        let mut far_done = 0.0f64;
-        for c in cands {
-            let addr = c.id * rec_bytes as u64;
-            let d = if on_device {
-                s.far.local_read(addr, rec_bytes, 0.0)
-            } else {
-                s.far.host_read(addr, rec_bytes, 0.0)
-            };
-            far_done = far_done.max(d);
-        }
-        bd.far_ns = far_done;
-        bd.far_reads = cands.len();
-
-        if on_device {
-            // HW: the engine's cycle model provides the time; queue
-            // registers and the ranked output live in per-worker scratch
-            // (`refine_into_with`), closing the last classic-mode
-            // per-query allocation.
-            let engine = RefineEngine::new(&sys.trq, sys.cal.clone());
-            let timing = engine.refine_into_with(
-                query,
-                cands,
-                cands.len().min(crate::accel::pqueue::HW_QUEUE_CAPACITY),
-                tlut,
-                &mut s.hwq,
-                &mut s.refined,
-            );
-            bd.refine_compute_ns = timing.ns;
-        } else {
-            // SW: measured host time, refined in place in scratch.
-            let est = ProgressiveEstimator::new(&sys.trq, sys.cal.clone());
-            let t0 = Instant::now();
-            est.refine_into_with(query, cands, &mut s.refined, tlut);
-            bd.refine_compute_ns = t0.elapsed().as_nanos() as f64;
-        }
-        filter_top_ratio_len(s.refined.len(), p.filter_ratio, p.k)
-    };
-
-    // -- SSD fetch of survivors + exact rerank --
-    let survivors = &s.refined[..keep];
-    s.ssd.reset();
-    let mut ssd_done = 0.0f64;
-    for _ in survivors {
-        ssd_done = s.ssd.read(dim * 4, 0.0).max(ssd_done);
-    }
-    bd.ssd_ns = ssd_done;
-    bd.ssd_reads = survivors.len();
-
-    let t0 = Instant::now();
-    s.topk.reset(p.k);
-    for c in survivors {
-        let d = l2_sq(query, sys.dataset.vector(c.id as usize));
-        s.topk.push(d, c.id);
-    }
-    bd.rerank_ns = t0.elapsed().as_nanos() as f64;
-    s.topk.take_sorted()
+    QueryOutcome { topk: st.topk, breakdown: st.bd }
 }
 
 /// The persistent query engine (see module docs).
 pub struct QueryEngine {
     sys: Arc<BuiltSystem>,
     pool: ThreadPool,
-    /// One scratch per pool worker, addressed by dispatch slot. The Mutex
+    /// One scratch per pool slot, addressed by dispatch slot. The Mutex
     /// is uncontended (slots are exclusive among concurrent callbacks);
     /// it exists to keep the aliasing story safe.
     scratches: Vec<Mutex<QueryScratch>>,
+    /// Serializes whole serving calls (`query`, `run*`, `profile_with`)
+    /// from concurrent threads. The stage-graph executor parks a query's
+    /// in-flight state in its slot *between* waves — with the slot mutex
+    /// released — so two interleaved batch runs on one engine would
+    /// corrupt each other's slots without this gate (the pre-stage-graph
+    /// engine got the same exclusion implicitly by running each whole
+    /// query under one slot lock).
+    serve_gate: Mutex<()>,
     params: QueryParams,
 }
 
@@ -432,7 +153,7 @@ impl QueryEngine {
             .map(|_| Mutex::new(QueryScratch::new(&sys.cfg)))
             .collect();
         let params = QueryParams::from_config(&sys.cfg);
-        QueryEngine { sys, pool, scratches, params }
+        QueryEngine { sys, pool, scratches, serve_gate: Mutex::new(()), params }
     }
 
     /// Override the default per-query parameters.
@@ -466,13 +187,14 @@ impl QueryEngine {
 
     /// Serve one query on the caller's thread (borrows worker 0's scratch).
     pub fn query(&self, query: &[f32]) -> QueryOutcome {
+        let _gate = self.serve_gate.lock().unwrap();
         let mut scratch = self.scratches[0].lock().unwrap();
         execute_query(&self.sys, &self.params, query, &mut scratch)
     }
 
     /// Serve a batch: `queries` is `nq * dim` flattened, results come back
-    /// in query order. Queries are claimed dynamically across the pool;
-    /// each worker reuses its own scratch.
+    /// in query order. The batch runs through the pipelined scheduler at
+    /// the config's `serve.pipeline_depth` / `sim.arrival_qps`.
     pub fn run(&self, queries: &[f32]) -> Vec<QueryOutcome> {
         self.run_with(&self.params, queries)
     }
@@ -480,95 +202,64 @@ impl QueryEngine {
     /// [`QueryEngine::run`] with per-call parameter overrides (mode/depth
     /// sweeps without rebuilding the engine).
     pub fn run_with(&self, params: &QueryParams, queries: &[f32]) -> Vec<QueryOutcome> {
-        run_on_pool(&self.sys, params, &self.pool, &self.scratches, queries)
+        self.run_serve(params, queries).0
+    }
+
+    /// [`QueryEngine::run_with`] returning the simulated serving report
+    /// (admission timeline, latency percentiles, makespan) alongside the
+    /// per-query outcomes.
+    pub fn run_serve(
+        &self,
+        params: &QueryParams,
+        queries: &[f32],
+    ) -> (Vec<QueryOutcome>, ServeReport) {
+        self.profile_with(params, queries)
+            .into_schedule(self.sys.cfg.serve.pipeline_depth, self.sys.cfg.sim.arrival_qps)
+    }
+
+    /// One functional pass over the batch, reusable across `(depth,
+    /// arrival_qps)` schedules — depth sweeps compare identical stage
+    /// profiles (see [`BatchProfile`]).
+    pub fn profile_with(&self, params: &QueryParams, queries: &[f32]) -> BatchProfile {
+        // In-flight slot state spans waves (see `serve_gate`): one
+        // serving call at a time.
+        let _gate = self.serve_gate.lock().unwrap();
+        let sys = &*self.sys;
+        let dim = sys.dataset.dim;
+        assert_eq!(queries.len() % dim, 0, "queries must be nq * dim flattened");
+        let nq = queries.len() / dim;
+        let shared = sys.cfg.sim.shared_timeline;
+        let results = execute_stage_graph(&self.pool, &self.scratches, params, nq, shared, |q| {
+            (sys, &queries[q * dim..(q + 1) * dim])
+        });
+        BatchProfile::capture(&sys.cfg.sim, shared, dim, params.mode, results)
     }
 }
 
-/// The one batch-orchestration core: dispatch `queries` (flattened
-/// `nq * dim`) across `pool`, one reusable scratch per dispatch slot,
-/// results in query order. Shared by [`QueryEngine::run_with`] and
-/// `run_batch` so slot handling, panic behaviour and result collection
-/// cannot drift apart.
-///
-/// With `sim.shared_timeline` on, every query's far-memory record stream
-/// is captured during the functional pass and the whole batch is then
-/// scheduled on one [`SharedTimeline`] (all queries arrive together), so
-/// `Breakdown::queue_ns` carries the contention each query suffered. The
-/// post-pass is single-threaded over deterministically ordered streams,
-/// so timings are identical across worker counts.
+/// The one batch-orchestration core shared by [`QueryEngine::run_serve`]
+/// and `run_batch`: execute the batch through the stage graph on `pool`
+/// (one in-flight query per scratch slot), then charge device queueing by
+/// the admission-time schedule at (`depth`, `arrival_qps`). Results in
+/// query order; `Breakdown::queue_ns` carries far-memory + SSD contention
+/// when `sim.shared_timeline` is on.
 pub(crate) fn run_on_pool(
     sys: &BuiltSystem,
     params: &QueryParams,
     pool: &ThreadPool,
     scratches: &[Mutex<QueryScratch>],
     queries: &[f32],
-) -> Vec<QueryOutcome> {
+    depth: usize,
+    arrival_qps: f64,
+) -> (Vec<QueryOutcome>, ServeReport) {
     let dim = sys.dataset.dim;
     assert_eq!(queries.len() % dim, 0, "queries must be nq * dim flattened");
-    assert!(scratches.len() >= pool.size().min(queries.len() / dim.max(1)));
     let nq = queries.len() / dim;
     let shared = sys.cfg.sim.shared_timeline;
-    let (mut outs, streams) = dispatch_traced(pool, scratches, params, nq, shared, |q| {
+    let results = execute_stage_graph(pool, scratches, params, nq, shared, |q| {
         (sys, &queries[q * dim..(q + 1) * dim])
     });
-    if let Some(streams) = streams {
-        let timings = SharedTimeline::new(&sys.cfg.sim).schedule(&streams);
-        for (out, t) in outs.iter_mut().zip(&timings) {
-            out.breakdown.queue_ns = t.queue_ns;
-        }
-    }
-    outs
-}
-
-/// The one scatter core shared by [`run_on_pool`] and
-/// [`crate::coordinator::ShardedEngine`]: dispatch `tasks` over `pool`
-/// (one reusable scratch per slot, results in task order), capturing each
-/// task's far-memory stream when `shared` is on. `task(t)` maps a task
-/// index to the system it runs against and its query slice. Keeping the
-/// OnceLock collection and traced-vs-untraced dispatch in one place means
-/// the monolithic and sharded serving paths cannot drift apart.
-pub(crate) fn dispatch_traced<'a, F>(
-    pool: &ThreadPool,
-    scratches: &[Mutex<QueryScratch>],
-    params: &QueryParams,
-    tasks: usize,
-    shared: bool,
-    task: F,
-) -> (Vec<QueryOutcome>, Option<Vec<FarStream>>)
-where
-    F: Fn(usize) -> (&'a BuiltSystem, &'a [f32]) + Sync,
-{
-    let results: Vec<OnceLock<QueryOutcome>> = (0..tasks).map(|_| OnceLock::new()).collect();
-    let streams: Vec<OnceLock<FarStream>> =
-        (0..if shared { tasks } else { 0 }).map(|_| OnceLock::new()).collect();
-    pool.dispatch(tasks, |slot, t| {
-        let (sys, query) = task(t);
-        let mut scratch = scratches[slot].lock().unwrap();
-        let out = if shared {
-            let mut tr = FarStream::default();
-            let out = execute_query_traced(sys, params, query, &mut scratch, Some(&mut tr));
-            let _ = streams[t].set(tr);
-            out
-        } else {
-            execute_query(sys, params, query, &mut scratch)
-        };
-        let _ = results[t].set(out);
-    });
-    let outs = results
-        .into_iter()
-        .map(|c| c.into_inner().expect("task completed"))
-        .collect();
-    let streams = if shared {
-        Some(
-            streams
-                .into_iter()
-                .map(|c| c.into_inner().expect("stream captured"))
-                .collect(),
-        )
-    } else {
-        None
-    };
-    (outs, streams)
+    BatchProfile::capture(&sys.cfg.sim, shared, dim, params.mode, results)
+        .into_schedule(depth, arrival_qps)
 }
 
 #[cfg(test)]
@@ -717,8 +408,8 @@ mod tests {
         let engine = QueryEngine::with_threads(Arc::clone(&sys), 4);
         let dim = sys.dataset.dim;
 
-        // Batch of 1: the shared timeline reduces to the independent model
-        // exactly — no queueing.
+        // Batch of 1: an admitted stream sees an idle device — no
+        // queueing, exactly the independent model.
         let one = engine.run(&sys.dataset.queries[0..dim]);
         assert_eq!(one.len(), 1);
         assert_eq!(one[0].breakdown.queue_ns, 0.0, "solo query must not queue");

@@ -4,27 +4,44 @@
 //! - [`builder`] — trains PQ, encodes codes, builds the front-stage index,
 //!   the TRQ far-memory store, and the calibration model (+ the provable-
 //!   cutoff error margins).
+//! - [`stage`] — the per-query **stage graph**: front-stage traversal →
+//!   far-memory (progressive) refinement → SSD fetch of survivors →
+//!   exact rerank, as four resumable steps over per-query state, each
+//!   confined to its query's scratch slice so any interleaving is
+//!   bit-identical.
 //! - [`engine`] — the persistent serving engine: owns the thread pool and
-//!   per-worker reusable scratch, hosts the shared per-query dataflow
-//!   (front-stage traversal → far-memory progressive refinement, with
-//!   optional early exit → SSD fetch of survivors → exact rerank).
+//!   per-slot reusable scratch; single queries walk the stage graph
+//!   sequentially, batches go through the pipelined scheduler.
+//! - [`pipelined`] — the **pipelined serving scheduler**: interleaves
+//!   ready stages of a window of in-flight queries across the pool
+//!   (stage-parallel, not just query-parallel) and drives the simulated
+//!   clock by admission — far-memory streams reserve the shared timeline
+//!   as queries reach refinement, SSD bursts reserve the shared per-shard
+//!   SSD queue, `serve.pipeline_depth` caps in-flight queries (1 = the
+//!   sequential engine, bit-identical), and open-loop arrivals
+//!   (`sim.arrival_qps`) produce tail-latency-vs-load reports.
 //! - [`pipeline`] — the stateless per-call façade over the same dataflow
 //!   (back-compat + ablations). Produces per-stage breakdowns.
 //! - [`batcher`] — batch query driving over the engine core for
-//!   throughput runs; reports measured wall-clock QPS.
+//!   throughput runs; reports measured wall-clock QPS plus the simulated
+//!   serving timeline (p50/p95/p99, makespan).
 //! - [`shard`] — scatter/gather serving over N corpus shards (contiguous
 //!   id ranges, each a full `BuiltSystem`), merged by (distance, global
-//!   id); with `sim.shared_timeline` all in-flight record streams contend
-//!   on one far-memory device.
+//!   id); all in-flight (query, shard) stage tasks share the pipelined
+//!   scheduler, one far-memory timeline and per-shard SSD queues.
 
 pub mod batcher;
 pub mod builder;
 pub mod engine;
 pub mod pipeline;
+pub mod pipelined;
 pub mod shard;
+pub mod stage;
 
 pub use batcher::{ground_truth, ground_truth_for, report_from_outcomes, run_batch, BatchReport};
 pub use builder::{build_system, build_system_with, BuiltSystem};
-pub use engine::{QueryEngine, QueryParams, QueryScratch};
+pub use engine::{QueryEngine, QueryParams};
 pub use pipeline::{Breakdown, Pipeline, QueryOutcome};
+pub use pipelined::{BatchProfile, ServeReport, ServeTiming};
 pub use shard::ShardedEngine;
+pub use stage::{QueryScratch, Stage, StageState};

@@ -28,7 +28,8 @@
 
 use crate::config::RefineMode;
 use crate::coordinator::builder::BuiltSystem;
-use crate::coordinator::engine::{execute_query, QueryParams, QueryScratch};
+use crate::coordinator::engine::{execute_query, QueryParams};
+use crate::coordinator::stage::QueryScratch;
 use crate::refine::{filter_top_ratio, Calibration, ProgressiveEstimator};
 use crate::util::topk::{Scored, TopK};
 use crate::util::l2_sq;
@@ -45,10 +46,12 @@ pub struct Breakdown {
     /// Far-memory record streaming (simulated CXL/DRAM), charged against a
     /// private idle device — the independent model.
     pub far_ns: f64,
-    /// Extra far-memory waiting caused by other in-flight queries when the
-    /// shared batch timeline is on (`sim.shared_timeline`): the stream's
-    /// completion under bank/link contention minus `far_ns`. Zero at batch
-    /// size 1 and whenever the shared timeline is off.
+    /// Extra device waiting caused by other in-flight queries when the
+    /// shared device queues are on (`sim.shared_timeline`): far-memory
+    /// bank/link contention plus SSD IOPS-queue contention, charged by the
+    /// pipelined scheduler at admission time. Zero whenever the query's
+    /// admissions see idle devices — batch size 1, pipeline depth 1, or
+    /// the shared queues off.
     pub queue_ns: f64,
     /// Refinement compute: measured host ns (SW) or engine cycles (HW).
     pub refine_compute_ns: f64,

@@ -19,18 +19,28 @@
 //!   (shards run each stage concurrently), I/O counts as sums, and the
 //!   measured merge cost lands in `rerank_ns`.
 //!
-//! The corpus is partitioned but the far memory is still *one* CXL
-//! device: with `sim.shared_timeline` on, the record streams of every
-//! in-flight (query, shard) task are scheduled together on one
-//! [`SharedTimeline`], and each query's `Breakdown::queue_ns` reports the
-//! contention its slowest shard stream suffered — batch latency reflects
-//! a loaded device, not N×S private idle ones.
+//! Batches run through the **pipelined stage-graph scheduler**
+//! ([`crate::coordinator::pipelined`]): every (query, shard) task walks
+//! `Front → FarRefine → Ssd → Merge` with ready stages interleaved
+//! across the pool, `serve.pipeline_depth` caps in-flight queries and
+//! `sim.arrival_qps` spaces open-loop arrivals. The corpus is
+//! partitioned but the far memory is still *one* CXL device: with
+//! `sim.shared_timeline` on, each task's record stream reserves the
+//! shared admission-time timeline as it reaches refinement, survivor
+//! fetches reserve the task's **shard-local SSD queue** (one shared SSD
+//! per shard, not a private device per query), and each query's
+//! `Breakdown::queue_ns` reports the contention its slowest shard task
+//! suffered — batch latency reflects loaded devices, not N×S private
+//! idle ones.
 
 use crate::config::SystemConfig;
 use crate::coordinator::builder::{build_system_with, BuiltSystem};
-use crate::coordinator::engine::{dispatch_traced, QueryParams, QueryScratch};
+use crate::coordinator::engine::QueryParams;
 use crate::coordinator::pipeline::{Breakdown, QueryOutcome};
-use crate::simulator::SharedTimeline;
+use crate::coordinator::pipelined::{
+    execute_stage_graph, modeled_merge_ns, simulate, ServeReport, SimInput, TaskProfile,
+};
+use crate::coordinator::stage::QueryScratch;
 use crate::util::threadpool::{default_threads, ThreadPool};
 use crate::util::topk::Scored;
 use crate::vecstore::Dataset;
@@ -50,6 +60,11 @@ pub struct ShardedEngine {
     queries: Vec<f32>,
     pool: ThreadPool,
     scratches: Vec<Mutex<QueryScratch>>,
+    /// Serializes whole serving calls: in-flight stage-graph slot state
+    /// spans waves with the slot mutex released, so concurrent `run*`
+    /// calls on one engine must not interleave (see
+    /// `QueryEngine::serve_gate`).
+    serve_gate: Mutex<()>,
     params: QueryParams,
     cfg: SystemConfig,
 }
@@ -115,6 +130,7 @@ impl ShardedEngine {
             queries: dataset.queries.clone(),
             pool,
             scratches,
+            serve_gate: Mutex::new(()),
             params: QueryParams::from_config(cfg),
             cfg: cfg.clone(),
         })
@@ -141,6 +157,18 @@ impl ShardedEngine {
     /// (benches sweep contention on/off over one build).
     pub fn set_shared_timeline(&mut self, on: bool) {
         self.cfg.sim.shared_timeline = on;
+    }
+
+    /// Set the pipelined admission window (0 = unbounded) without
+    /// rebuilding shards (benches/tests sweep depth over one build).
+    pub fn set_pipeline_depth(&mut self, depth: usize) {
+        self.cfg.serve.pipeline_depth = depth;
+    }
+
+    /// Set the open-loop arrival rate (0 = closed batch) without
+    /// rebuilding shards.
+    pub fn set_arrival_qps(&mut self, qps: f64) {
+        self.cfg.sim.arrival_qps = qps;
     }
 
     pub fn params(&self) -> &QueryParams {
@@ -185,6 +213,18 @@ impl ShardedEngine {
 
     /// [`ShardedEngine::run`] with per-call parameter overrides.
     pub fn run_with(&self, params: &QueryParams, queries: &[f32]) -> Vec<QueryOutcome> {
+        self.run_serve(params, queries).0
+    }
+
+    /// [`ShardedEngine::run_with`] returning the simulated serving report
+    /// (admission timeline, latency percentiles, makespan) alongside the
+    /// merged per-query outcomes.
+    pub fn run_serve(
+        &self,
+        params: &QueryParams,
+        queries: &[f32],
+    ) -> (Vec<QueryOutcome>, ServeReport) {
+        let _gate = self.serve_gate.lock().unwrap();
         let dim = self.dim;
         assert_eq!(queries.len() % dim, 0, "queries must be nq * dim flattened");
         let nq = queries.len() / dim;
@@ -192,32 +232,31 @@ impl ShardedEngine {
         let tasks = nq * ns;
         let shared = self.cfg.sim.shared_timeline;
 
-        // ---- scatter: one task per (query, shard), claimed dynamically ----
-        let (outs, streams) =
-            dispatch_traced(&self.pool, &self.scratches, params, tasks, shared, |t| {
-                let (q, s) = (t / ns, t % ns);
-                (&*self.shards[s], &queries[q * dim..(q + 1) * dim])
-            });
+        // ---- scatter: every (query, shard) task through the stage
+        // graph, ready stages interleaved across the pool ----
+        let results = execute_stage_graph(&self.pool, &self.scratches, params, tasks, shared, |t| {
+            let (q, s) = (t / ns, t % ns);
+            (&*self.shards[s], &queries[q * dim..(q + 1) * dim])
+        });
 
-        // One far-memory device for the whole engine: schedule every
-        // in-flight (query, shard) stream together, arrival-ordered.
-        let timings = streams.map(|mut streams| {
-            // The engine traces shard-local record addresses
-            // (`local_id * rec_bytes`); rebase each stream onto its
-            // shard's contiguous global range so distinct records from
-            // different shards never alias the same device address (shard
-            // s's records live at [base, base + count) * rec_bytes, the
-            // partitioned layout the module docs describe).
-            for (t, stream) in streams.iter_mut().enumerate() {
-                let base = self.base_ids[t % ns] * stream.rec_bytes as u64;
-                if base != 0 {
-                    for addr in stream.addrs.iter_mut() {
-                        *addr += base;
-                    }
+        // Per-task profiles for the simulated clock. The engine traces
+        // shard-local record addresses (`local_id * rec_bytes`); rebase
+        // each stream onto its shard's contiguous global range so distinct
+        // records from different shards never alias the same device
+        // address (shard s's records live at [base, base + count) *
+        // rec_bytes, the partitioned layout the module docs describe).
+        let mut outs = Vec::with_capacity(tasks);
+        let mut profiles = Vec::with_capacity(tasks);
+        for (t, (out, mut stream)) in results.into_iter().enumerate() {
+            let base = self.base_ids[t % ns] * stream.rec_bytes as u64;
+            if base != 0 {
+                for addr in stream.addrs.iter_mut() {
+                    *addr += base;
                 }
             }
-            SharedTimeline::new(&self.cfg.sim).schedule(&streams)
-        });
+            profiles.push(TaskProfile::from_outcome(&out, dim, params.mode, stream));
+            outs.push(out);
+        }
 
         // ---- gather: remap to global ids, merge, aggregate breakdowns ----
         let mut merged_outs = Vec::with_capacity(nq);
@@ -246,23 +285,43 @@ impl ShardedEngine {
                 a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id))
             });
             merged.truncate(params.k);
-            if let Some(tm) = &timings {
-                // The query completes when its slowest shard stream does,
-                // under contention vs. alone. Both components come from
-                // the rebased (global-address) replay so that
-                // far_ns + queue_ns equals the modeled contended
-                // completion exactly — the per-shard far_ns above was
-                // replayed at shard-local addresses and would mix layouts.
-                let slice = &tm[q * ns..(q + 1) * ns];
-                let solo = slice.iter().map(|t| t.solo_ns).fold(0.0f64, f64::max);
-                let shared_done = slice.iter().map(|t| t.shared_ns).fold(0.0f64, f64::max);
-                bd.far_ns = solo;
-                bd.queue_ns = (shared_done - solo).max(0.0);
-            }
+            // Measured gather cost lands in the breakdown's rerank term;
+            // the simulated clock charges the deterministic merge model
+            // instead (it must stay a pure function of the counts).
             bd.rerank_ns += t0.elapsed().as_nanos() as f64;
             merged_outs.push(QueryOutcome { topk: merged.clone(), breakdown: bd });
         }
-        merged_outs
+
+        // ---- simulated clock: admission-time schedule of every task's
+        // far-memory stream + shard-local SSD burst ----
+        let merge_ns = vec![modeled_merge_ns(ns, params.k); nq];
+        let (task_t, report) = simulate(&SimInput {
+            sim: &self.cfg.sim,
+            nq,
+            shards: ns,
+            depth: self.cfg.serve.pipeline_depth,
+            arrival_qps: self.cfg.sim.arrival_qps,
+            shared,
+            profiles: &profiles,
+            merge_ns: &merge_ns,
+        });
+        if shared {
+            for (q, out) in merged_outs.iter_mut().enumerate() {
+                // The query's far stage completes when its slowest shard
+                // stream does. Both components come from the rebased
+                // (global-address) replay — the per-shard far_ns from the
+                // gather above was replayed at shard-local addresses and
+                // would mix layouts.
+                let slice = &task_t[q * ns..(q + 1) * ns];
+                let bd = &mut out.breakdown;
+                bd.far_ns = slice.iter().map(|t| t.far_solo_ns).fold(0.0f64, f64::max);
+                bd.queue_ns = slice
+                    .iter()
+                    .map(|t| t.far_queue_ns + t.ssd_queue_ns)
+                    .fold(0.0f64, f64::max);
+            }
+        }
+        (merged_outs, report)
     }
 }
 

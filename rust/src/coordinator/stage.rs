@@ -1,0 +1,422 @@
+//! The per-query **stage graph**: the tiered dataflow of paper Fig 5 as
+//! four explicit, resumable steps over per-query state.
+//!
+//! ```text
+//! FrontStage      index traversal + PQ-ADC ("GPU")      fast memory
+//! FarRefineStage  TRQ record streaming + (progressive)  far memory (CXL)
+//!                 refinement, survivor selection
+//! SsdStage        full-vector fetches of survivors      storage
+//! MergeStage      exact rerank -> final top-k           host
+//! ```
+//!
+//! Each step advances a [`StageState`] by exactly one stage, reading and
+//! writing only that query's slice of [`QueryScratch`] — so a scheduler
+//! can interleave *stages of different queries* across a worker pool
+//! instead of marching each query front-to-back. The sequential engine
+//! ([`crate::coordinator::engine::execute_query`]) is the degenerate
+//! walk (run all four steps back to back on one thread); the pipelined
+//! scheduler ([`crate::coordinator::pipelined`]) admits a window of
+//! queries and runs every ready stage of every in-flight query per wave.
+//!
+//! Functional results are a property of the query alone: no step reads
+//! another query's state, so any interleaving — any pipeline depth, any
+//! worker count — produces bit-identical top-k lists. Device *timing* is
+//! the part that depends on what else is in flight, and that is exactly
+//! what moves out of here: steps charge the private/idle device model
+//! (`far_ns`, `ssd_ns`) and capture the access streams
+//! ([`FarStream`], SSD read counts), and the pipelined scheduler replays
+//! those on shared admission-time device queues.
+
+use crate::accel::pqueue::HwPriorityQueue;
+use crate::accel::RefineEngine;
+use crate::config::{RefineMode, SystemConfig};
+use crate::coordinator::builder::BuiltSystem;
+use crate::coordinator::engine::QueryParams;
+use crate::coordinator::pipeline::{Breakdown, GPU_SPEEDUP};
+use crate::index::{CandidateList, IndexScratch};
+use crate::kernels::ternary::{TernaryQueryLut, TERNARY_TAB_MIN_CANDIDATES};
+use crate::refine::{
+    filter_top_ratio_len, provable_cutoff_len, FirstOrderCand, ProgressiveEstimator,
+};
+use crate::simulator::{FarMemoryDevice, FarStream, SsdSim};
+use crate::util::l2_sq;
+use crate::util::topk::{Scored, TopK};
+use std::time::Instant;
+
+/// Reusable per-query buffers: device models are `reset()` instead of
+/// reconstructed, buffers keep their capacity across queries. Split into
+/// a front-stage half and a refinement half so the refinement stages can
+/// borrow the candidate list and their own scratch simultaneously.
+pub struct QueryScratch {
+    pub(crate) front: FrontScratch,
+    pub(crate) refine: RefineScratch,
+}
+
+/// Front-stage buffers: index traversal scratch + the candidate list the
+/// traversal writes into (previously a fresh `Vec` per query).
+pub(crate) struct FrontScratch {
+    pub(crate) index: IndexScratch,
+    pub(crate) cands: CandidateList,
+}
+
+/// Refinement/SSD/merge-stage buffers.
+pub(crate) struct RefineScratch {
+    pub(crate) ssd: SsdSim,
+    pub(crate) far: FarMemoryDevice,
+    /// Phase-1 first-order ranking (early-exit path).
+    pub(crate) ordered: Vec<FirstOrderCand>,
+    /// Refined (second-order) estimates, sorted ascending after phase 2.
+    pub(crate) refined: Vec<Scored>,
+    /// Running k-th refined bound for the progressive walk.
+    pub(crate) bound: TopK,
+    /// Final exact top-k accumulator.
+    pub(crate) topk: TopK,
+    /// Per-query ternary ADC table (kernel layer); rebuilt in place when
+    /// the candidate count amortizes it.
+    pub(crate) tlut: TernaryQueryLut,
+    /// Classic-mode HW queue registers (reset per query; the ranking that
+    /// used to be allocated inside `RefineEngine::refine`).
+    pub(crate) hwq: HwPriorityQueue,
+}
+
+impl QueryScratch {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let cands = cfg.refine.candidates.max(1);
+        QueryScratch {
+            front: FrontScratch {
+                index: IndexScratch::new(),
+                cands: Vec::with_capacity(cands),
+            },
+            refine: RefineScratch {
+                ssd: SsdSim::new(&cfg.sim),
+                far: FarMemoryDevice::new(&cfg.sim),
+                ordered: Vec::with_capacity(cands),
+                refined: Vec::with_capacity(cands),
+                bound: TopK::new(cfg.refine.k.max(1)),
+                topk: TopK::new(cfg.refine.k.max(1)),
+                tlut: TernaryQueryLut::new(),
+                hwq: HwPriorityQueue::new(
+                    cands.min(crate::accel::pqueue::HW_QUEUE_CAPACITY),
+                ),
+            },
+        }
+    }
+}
+
+/// The four stages of the query dataflow, plus the terminal marker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Front,
+    FarRefine,
+    Ssd,
+    Merge,
+    Done,
+}
+
+/// One query's progress through the stage graph: the current stage, the
+/// accumulating per-stage accounting, the survivor window the SSD/merge
+/// stages consume, and the final top-k. All heavy intermediate data lives
+/// in the companion [`QueryScratch`].
+pub struct StageState {
+    pub stage: Stage,
+    pub bd: Breakdown,
+    /// Survivors to fetch from SSD and rerank: a prefix length of either
+    /// the refined ranking (FaTRQ modes) or the raw candidate list
+    /// (Baseline fetches every candidate).
+    keep: usize,
+    /// Whether the survivor prefix indexes the candidate list (Baseline)
+    /// or the refined ranking (FaTRQ).
+    from_candidates: bool,
+    /// Final exact top-k, filled by [`Stage::Merge`] (the one permitted
+    /// steady-state allocation — it is handed to the caller).
+    pub topk: Vec<Scored>,
+}
+
+impl StageState {
+    pub fn new() -> Self {
+        StageState {
+            stage: Stage::Front,
+            bd: Breakdown::default(),
+            keep: 0,
+            from_candidates: false,
+            topk: Vec::new(),
+        }
+    }
+
+    /// Rewind to a fresh query (scratch buffers keep their capacity).
+    pub fn reset(&mut self) {
+        self.stage = Stage::Front;
+        self.bd = Breakdown::default();
+        self.keep = 0;
+        self.from_candidates = false;
+        self.topk = Vec::new();
+    }
+}
+
+impl Default for StageState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Advance `st` by exactly one stage. `trace`, when present, receives the
+/// query's far-memory record stream during [`Stage::FarRefine`] (cleared
+/// first; untouched by the other stages) for admission-time scheduling on
+/// the shared timeline. Functional results and independent-model
+/// accounting are identical with or without a trace.
+pub(crate) fn run_stage(
+    sys: &BuiltSystem,
+    p: &QueryParams,
+    query: &[f32],
+    scratch: &mut QueryScratch,
+    st: &mut StageState,
+    trace: Option<&mut FarStream>,
+) {
+    match st.stage {
+        Stage::Front => {
+            front_stage(sys, p, query, scratch, st);
+            st.stage = Stage::FarRefine;
+        }
+        Stage::FarRefine => {
+            far_refine_stage(sys, p, query, scratch, st, trace);
+            st.stage = Stage::Ssd;
+        }
+        Stage::Ssd => {
+            ssd_stage(sys, scratch, st);
+            st.stage = Stage::Merge;
+        }
+        Stage::Merge => {
+            merge_stage(sys, p, query, scratch, st);
+            st.stage = Stage::Done;
+        }
+        Stage::Done => unreachable!("stepping a completed query"),
+    }
+}
+
+/// Stage 1: front-stage traversal (the "GPU") — ANN candidate generation
+/// into reusable scratch.
+fn front_stage(
+    sys: &BuiltSystem,
+    p: &QueryParams,
+    query: &[f32],
+    scratch: &mut QueryScratch,
+    st: &mut StageState,
+) {
+    let t0 = Instant::now();
+    sys.index.as_ann().search_into(
+        query,
+        p.candidates,
+        &mut scratch.front.index,
+        &mut scratch.front.cands,
+    );
+    st.bd.traversal_ns = t0.elapsed().as_nanos() as f64 / GPU_SPEEDUP;
+    st.bd.candidates = scratch.front.cands.len();
+}
+
+/// Stage 2: far-memory refinement. FaTRQ modes stream TRQ records from
+/// far memory (classic: every candidate; progressive: only until provably
+/// outside the top-k) and select the survivor prefix; Baseline never
+/// touches far memory — every candidate survives to the SSD stage.
+fn far_refine_stage(
+    sys: &BuiltSystem,
+    p: &QueryParams,
+    query: &[f32],
+    scratch: &mut QueryScratch,
+    st: &mut StageState,
+    trace: Option<&mut FarStream>,
+) {
+    let cands = &scratch.front.cands;
+    let s = &mut scratch.refine;
+    let on_device = match p.mode {
+        RefineMode::Baseline => {
+            if let Some(t) = trace {
+                // Baseline never touches far memory; an empty stream keeps
+                // batch scheduling positional.
+                t.addrs.clear();
+            }
+            st.keep = cands.len();
+            st.from_candidates = true;
+            return;
+        }
+        RefineMode::FatrqSw => false,
+        RefineMode::FatrqHw => true,
+    };
+    st.from_candidates = false;
+    let bd = &mut st.bd;
+    let rec_bytes = sys.trq.record_bytes();
+
+    // Kernel selection: with enough residual dots ahead, build the
+    // per-query ternary ADC table once (in reusable scratch) and route
+    // every dot through it; below the threshold the byte-LUT fallback
+    // wins. The classic path refines every candidate; the early-exit walk
+    // streams an unknown prefix, but provably at least `min(k, cands)`
+    // records (the bound must fill before the walk can break), so gate on
+    // that guaranteed lower bound — the build then always amortizes.
+    // Bit-for-bit identical either way, so the gate can never change
+    // results.
+    let dots_lower_bound = if p.early_exit {
+        p.k.min(cands.len())
+    } else {
+        cands.len()
+    };
+    let tlut: Option<&TernaryQueryLut> = if dots_lower_bound >= TERNARY_TAB_MIN_CANDIDATES {
+        s.tlut.build(query);
+        Some(&s.tlut)
+    } else {
+        None
+    };
+
+    st.keep = if p.early_exit {
+        // -- phase 1: first-order ranking, fast memory only --
+        let est = ProgressiveEstimator::new(&sys.trq, sys.cal.clone());
+        s.ordered.clear();
+        s.ordered.extend(cands.iter().map(|c| FirstOrderCand {
+            id: c.id,
+            d0: c.dist,
+            d1: est.estimate_first_order(c.id as usize, c.dist),
+        }));
+        s.ordered
+            .sort_unstable_by(|a, b| a.d1.partial_cmp(&b.d1).unwrap().then(a.id.cmp(&b.id)));
+
+        // -- phase 2: progressive walk, streaming only survivors --
+        let streamed = if on_device {
+            let engine = RefineEngine::new(&sys.trq, sys.cal.clone());
+            let (stats, timing) = engine.refine_progressive_with(
+                query,
+                &s.ordered,
+                p.k,
+                sys.margin_first,
+                sys.margin,
+                &mut s.bound,
+                &mut s.refined,
+                tlut,
+            );
+            bd.refine_compute_ns = timing.ns;
+            stats.streamed
+        } else {
+            let t0 = Instant::now();
+            let stats = est.refine_progressive_into_with(
+                query,
+                &s.ordered,
+                p.k,
+                sys.margin_first,
+                sys.margin,
+                &mut s.bound,
+                &mut s.refined,
+                tlut,
+            );
+            bd.refine_compute_ns = t0.elapsed().as_nanos() as f64;
+            stats.streamed
+        };
+
+        // Far-memory traffic: exactly the streamed prefix.
+        if let Some(t) = trace {
+            t.local = on_device;
+            t.rec_bytes = rec_bytes;
+            t.addrs.clear();
+            t.addrs.extend(s.ordered[..streamed].iter().map(|c| c.id * rec_bytes as u64));
+        }
+        s.far.reset();
+        let mut far_done = 0.0f64;
+        for c in &s.ordered[..streamed] {
+            let addr = c.id * rec_bytes as u64;
+            let d = if on_device {
+                s.far.local_read(addr, rec_bytes, 0.0)
+            } else {
+                s.far.host_read(addr, rec_bytes, 0.0)
+            };
+            far_done = far_done.max(d);
+        }
+        bd.far_ns = far_done;
+        bd.far_reads = streamed;
+
+        s.refined
+            .sort_unstable_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+        provable_cutoff_len(&s.refined, p.k, sys.margin)
+    } else {
+        // -- classic path: stream every record --
+        if let Some(t) = trace {
+            t.local = on_device;
+            t.rec_bytes = rec_bytes;
+            t.addrs.clear();
+            t.addrs.extend(cands.iter().map(|c| c.id * rec_bytes as u64));
+        }
+        s.far.reset();
+        let mut far_done = 0.0f64;
+        for c in cands.iter() {
+            let addr = c.id * rec_bytes as u64;
+            let d = if on_device {
+                s.far.local_read(addr, rec_bytes, 0.0)
+            } else {
+                s.far.host_read(addr, rec_bytes, 0.0)
+            };
+            far_done = far_done.max(d);
+        }
+        bd.far_ns = far_done;
+        bd.far_reads = cands.len();
+
+        if on_device {
+            // HW: the engine's cycle model provides the time; queue
+            // registers and the ranked output live in per-query scratch
+            // (`refine_into_with`), closing the last classic-mode
+            // per-query allocation.
+            let engine = RefineEngine::new(&sys.trq, sys.cal.clone());
+            let timing = engine.refine_into_with(
+                query,
+                cands,
+                cands.len().min(crate::accel::pqueue::HW_QUEUE_CAPACITY),
+                tlut,
+                &mut s.hwq,
+                &mut s.refined,
+            );
+            bd.refine_compute_ns = timing.ns;
+        } else {
+            // SW: measured host time, refined in place in scratch.
+            let est = ProgressiveEstimator::new(&sys.trq, sys.cal.clone());
+            let t0 = Instant::now();
+            est.refine_into_with(query, cands, &mut s.refined, tlut);
+            bd.refine_compute_ns = t0.elapsed().as_nanos() as f64;
+        }
+        filter_top_ratio_len(s.refined.len(), p.filter_ratio, p.k)
+    };
+}
+
+/// Stage 3: SSD fetch of the survivor prefix (every candidate in Baseline
+/// mode — the exact refinement I/O the paper eliminates), charged against
+/// a private idle device; the shared per-shard SSD queue replays the same
+/// burst at admission time under pipelined serving.
+fn ssd_stage(sys: &BuiltSystem, scratch: &mut QueryScratch, st: &mut StageState) {
+    let dim = sys.dataset.dim;
+    let s = &mut scratch.refine;
+    s.ssd.reset();
+    let mut done = 0.0f64;
+    for _ in 0..st.keep {
+        done = s.ssd.read(dim * 4, 0.0).max(done);
+    }
+    st.bd.ssd_ns = done;
+    st.bd.ssd_reads = st.keep;
+}
+
+/// Stage 4: exact rerank of the fetched survivors into the final top-k.
+fn merge_stage(
+    sys: &BuiltSystem,
+    p: &QueryParams,
+    query: &[f32],
+    scratch: &mut QueryScratch,
+    st: &mut StageState,
+) {
+    let t0 = Instant::now();
+    let s = &mut scratch.refine;
+    s.topk.reset(p.k);
+    if st.from_candidates {
+        for c in &scratch.front.cands[..st.keep] {
+            s.topk.push(l2_sq(query, sys.dataset.vector(c.id as usize)), c.id);
+        }
+    } else {
+        for c in &s.refined[..st.keep] {
+            s.topk.push(l2_sq(query, sys.dataset.vector(c.id as usize)), c.id);
+        }
+    }
+    st.bd.rerank_ns = t0.elapsed().as_nanos() as f64;
+    st.topk = s.topk.take_sorted();
+}

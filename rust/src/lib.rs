@@ -23,24 +23,36 @@
 //!   walk), OLS calibration, filtering/cutoff policies
 //! - [`tiering`] — fast/far/storage placement and access accounting
 //! - [`simulator`] — DDR5 DRAM timing, CXL link, SSD queue models (Table I),
-//!   all resettable for scratch reuse, plus the shared batch timeline
-//!   ([`simulator::SharedTimeline`]) that serializes every in-flight
-//!   query's record stream onto one bank/link occupancy model for
-//!   contention-accurate batch latency (`sim.shared_timeline`)
+//!   all resettable for scratch reuse. The devices emit per-access
+//!   **service profiles** (`DramAccess`/`LinkAccess`) whose occupancy
+//!   rules are shared with the contention schedulers: the batch timeline
+//!   ([`simulator::SharedTimeline`]), the admission-time timeline
+//!   ([`simulator::TimelineSched`]) and the shared per-shard SSD queue
+//!   ([`simulator::SsdQueue`]) all arbitrate in-flight queries over one
+//!   device state (`sim.shared_timeline`) without mirroring any device
+//!   arithmetic
 //! - [`accel`] — CXL Type-2 refinement accelerator cycle/area/power model,
 //!   including early-exit cycle accounting
 //! - [`runtime`] — PJRT client wrapper; loads `artifacts/*.hlo.txt` (L2/L1;
 //!   stubbed unless built with the `xla` feature)
-//! - [`coordinator`] — system build, the persistent
-//!   [`coordinator::QueryEngine`] (thread pool + per-worker reusable
-//!   scratch), the per-call `Pipeline` façade, batch driving, and the
-//!   **shard layer**: [`coordinator::ShardedEngine`] partitions the corpus
-//!   into N contiguous-id-range shards (each a full `BuiltSystem` with its
-//!   own index, TRQ store and calibration) and serves by scatter/gather —
-//!   fan-out over the pool, per-shard top-k remapped to global ids and
-//!   merged by `(distance, id)`, per-stage times aggregated as the slowest
-//!   shard, I/O counts summed, far-memory contention charged by the shared
-//!   timeline across all in-flight (query, shard) streams
+//! - [`coordinator`] — system build, the **stage graph**
+//!   ([`coordinator::stage`]: front → far-refine → SSD → merge as
+//!   resumable per-query steps), the persistent
+//!   [`coordinator::QueryEngine`] (thread pool + per-slot reusable
+//!   scratch), the **pipelined serving scheduler**
+//!   ([`coordinator::pipelined`]: ready stages of a window of in-flight
+//!   queries interleaved across the pool, far-memory/SSD reservations at
+//!   admission time, `serve.pipeline_depth`, open-loop `sim.arrival_qps`
+//!   with p50/p95/p99 from the timeline — depth 1 is the sequential
+//!   engine, bit-identical), the per-call `Pipeline` façade, batch
+//!   driving, and the **shard layer**: [`coordinator::ShardedEngine`]
+//!   partitions the corpus into N contiguous-id-range shards (each a full
+//!   `BuiltSystem` with its own index, TRQ store and calibration) and
+//!   serves by scatter/gather — fan-out over the pool, per-shard top-k
+//!   remapped to global ids and merged by `(distance, id)`, per-stage
+//!   times aggregated as the slowest shard, I/O counts summed, device
+//!   contention charged across all in-flight (query, shard) tasks on one
+//!   far-memory timeline and per-shard SSD queues
 //! - [`metrics`] — recall, distortion, latency histograms, throughput
 //! - [`cli`] — hand-rolled argument parsing for the `fatrq` binary
 //!

@@ -9,9 +9,10 @@
 
 use fatrq::cli::Args;
 use fatrq::config::{RefineMode, SystemConfig};
+use fatrq::coordinator::batcher::report_with_serve;
 use fatrq::coordinator::{
-    build_system, ground_truth, ground_truth_for, report_from_outcomes, run_batch, BatchReport,
-    QueryParams, ShardedEngine,
+    build_system, ground_truth, ground_truth_for, run_batch, BatchReport, QueryParams,
+    ShardedEngine,
 };
 use fatrq::runtime::XlaRuntime;
 use fatrq::util::rng::Rng;
@@ -26,9 +27,11 @@ COMMANDS:
   build   --config <toml>            build the system, print an inventory
   query   --config <toml> [--mode baseline|fatrq-sw|fatrq-hw]
           [--early-exit] [--margin-quantile Q] [--threads N]
-          [--shards N] [--shared-timeline]
+          [--shards N] [--shared-timeline] [--pipeline-depth D]
+          [--arrival-qps R]
   bench   --config <toml> [--threads N] [--early-exit] [--margin-quantile Q]
-          [--shards N] [--shared-timeline]
+          [--shards N] [--shared-timeline] [--pipeline-depth D]
+          [--arrival-qps R]
   xla     --artifacts <dir>          verify AOT artifacts vs native compute
   help
 
@@ -40,8 +43,15 @@ FLAGS:
   --shards N            partition the corpus across N shard systems and
                         serve by scatter/gather (default 1 = monolithic)
   --shared-timeline     schedule every in-flight query's far-memory stream
-                        on one shared device timeline: batch latency
+                        on one shared device timeline (and its survivor
+                        fetches on one shared SSD per shard): batch latency
                         reflects contention, breakdown gains a queue term
+  --pipeline-depth D    pipelined serving: keep D queries in flight, front
+                        stages overlapping other queries' simulated device
+                        time (0 = whole batch, 1 = sequential engine)
+  --arrival-qps R       open-loop arrivals at R queries/sec instead of the
+                        all-at-t=0 batch; latency percentiles then include
+                        admission wait (tail-latency-vs-load)
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
@@ -58,6 +68,9 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
     }
     cfg.refine.margin_quantile =
         args.get_f64("margin-quantile", cfg.refine.margin_quantile)?;
+    cfg.serve.pipeline_depth =
+        args.get_usize("pipeline-depth", cfg.serve.pipeline_depth)?;
+    cfg.sim.arrival_qps = args.get_f64("arrival-qps", cfg.sim.arrival_qps)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -96,14 +109,27 @@ fn print_report(rep: &BatchReport, k: usize, threads: usize, shards: usize) {
         rep.mode, rep.queries, shards, k, rep.mean_recall
     );
     println!(
-        "latency: mean {:.1} us  p50 {:.1} us  p99 {:.1} us  ({:.0} model qps, {:.0} wall qps @{} threads)",
+        "latency: mean {:.1} us  p50 {:.1} us  p95 {:.1} us  p99 {:.1} us  ({:.0} model qps, {:.0} wall qps @{} threads)",
         rep.mean_latency_ns / 1e3,
         rep.p50_ns / 1e3,
+        rep.p95_ns / 1e3,
         rep.p99_ns / 1e3,
         rep.qps,
         rep.wall_qps,
         threads
     );
+    if rep.makespan_ns > 0.0 {
+        println!(
+            "serving: depth {}  makespan {:.1} us  ({:.0} qps over the simulated timeline)",
+            if rep.pipeline_depth == 0 {
+                "unbounded".to_string()
+            } else {
+                rep.pipeline_depth.to_string()
+            },
+            rep.makespan_ns / 1e3,
+            rep.queries as f64 * 1e9 / rep.makespan_ns
+        );
+    }
     let bd = rep.breakdown;
     println!(
         "breakdown (us): traversal {:.1} | far {:.1} | queue {:.1} | refine {:.1} | ssd {:.1} | rerank {:.1}",
@@ -138,9 +164,9 @@ fn make_runner(
         Ok(Box::new(move |mode| {
             let params = QueryParams::from_config(&cfg).with_mode(mode);
             let wall0 = std::time::Instant::now();
-            let outs = engine.run_with(&params, engine.queries());
+            let (outs, serve) = engine.run_serve(&params, engine.queries());
             let wall_ns = wall0.elapsed().as_nanos() as f64;
-            report_from_outcomes(&outs, &truth, k, threads, wall_ns, mode.name())
+            report_with_serve(&outs, &truth, k, threads, wall_ns, mode.name(), Some(&serve))
         }))
     } else {
         let sys = build_system(cfg)?;
@@ -158,6 +184,8 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         "early-exit",
         "margin-quantile",
         "shared-timeline",
+        "pipeline-depth",
+        "arrival-qps",
     ])?;
     let cfg = load_config(args)?;
     let mode = match args.get("mode") {
@@ -180,6 +208,8 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "early-exit",
         "margin-quantile",
         "shared-timeline",
+        "pipeline-depth",
+        "arrival-qps",
     ])?;
     let cfg = load_config(args)?;
     let threads = args.get_usize("threads", 4)?;

@@ -7,6 +7,31 @@
 use crate::config::SimConfig;
 use crate::simulator::SimNs;
 
+/// One transfer's intrinsic link service profile: fixed round-trip
+/// latency (pipelined across requests) plus the serialization window that
+/// actually occupies the shared link. Emitted by [`CxlLink::profile`] and
+/// consumed both by [`CxlLink::transfer`] and by the shared timelines, so
+/// the link occupancy arithmetic lives in exactly one place.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkAccess {
+    /// Fixed link round-trip latency, ns (not an occupancy).
+    pub latency_ns: f64,
+    /// Serialization window occupying the link, ns.
+    pub ser_ns: f64,
+}
+
+impl LinkAccess {
+    /// The one link occupancy update rule: serialize when the link frees
+    /// (no earlier than `at`); the link is occupied only for the
+    /// serialization window, the latency is pipelined. Returns completion.
+    #[inline]
+    pub fn schedule(&self, link_free: &mut SimNs, at: SimNs) -> SimNs {
+        let start = at.max(*link_free);
+        *link_free = start + self.ser_ns;
+        start + self.latency_ns + self.ser_ns
+    }
+}
+
 /// Queue-aware CXL link.
 pub struct CxlLink {
     latency_ns: f64,
@@ -29,15 +54,15 @@ impl CxlLink {
         }
     }
 
+    /// Service profile of a `bytes`-sized transfer (see [`LinkAccess`]).
+    pub fn profile(&self, bytes: usize) -> LinkAccess {
+        LinkAccess { latency_ns: self.latency_ns, ser_ns: bytes as f64 / self.bw_bpns }
+    }
+
     /// Transfer `bytes` starting no earlier than `at`; returns completion
     /// time.
     pub fn transfer(&mut self, bytes: usize, at: SimNs) -> SimNs {
-        let start = at.max(self.free_at);
-        let ser = bytes as f64 / self.bw_bpns;
-        let done = start + self.latency_ns + ser;
-        // Link occupied only for the serialization window; latency is
-        // pipelined across requests.
-        self.free_at = start + ser;
+        let done = self.profile(bytes).schedule(&mut self.free_at, at);
         self.transfers += 1;
         self.bytes += bytes as u64;
         done

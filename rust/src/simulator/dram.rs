@@ -28,6 +28,39 @@ pub enum RowResult {
     Conflict,
 }
 
+/// One access's intrinsic service profile: which shared resources it
+/// occupies (channel, bank) and for how long (row-class latency + bus
+/// transfer). Emitted by [`DramSim::profile`] and consumed both by
+/// [`DramSim::read`] itself and by the shared batch/admission timelines
+/// ([`crate::simulator::SharedTimeline`], `TimelineSched`) — the single
+/// place the DRAM occupancy arithmetic lives, so the device model and the
+/// contention schedulers cannot drift apart.
+#[derive(Clone, Copy, Debug)]
+pub struct DramAccess {
+    pub channel: usize,
+    /// Global bank index (`channel * banks_per_channel + bank_in_channel`).
+    pub bank: usize,
+    /// Row-class latency (tCAS / tRCD+tCAS / tRP+tRCD+tCAS), ns.
+    pub lat_ns: f64,
+    /// Data-bus occupancy, ns.
+    pub transfer_ns: f64,
+}
+
+impl DramAccess {
+    /// The one bank/channel occupancy update rule: start when the bank and
+    /// the channel bus are both free (no earlier than `at`), hold the bank
+    /// until the data is out, free the channel after the longer of the
+    /// command latency and the transfer. Returns the completion time.
+    #[inline]
+    pub fn schedule(&self, bank_ready: &mut SimNs, channel_free: &mut SimNs, at: SimNs) -> SimNs {
+        let start = at.max(*bank_ready).max(*channel_free);
+        let done = start + self.lat_ns + self.transfer_ns;
+        *bank_ready = done;
+        *channel_free = start + self.lat_ns.max(self.transfer_ns);
+        done
+    }
+}
+
 /// Aggregate counters.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DramStats {
@@ -63,15 +96,6 @@ impl DramSim {
         }
     }
 
-    /// Map a byte address to its (channel, global bank index) — the shared
-    /// resources an access occupies. Used by the batch timeline
-    /// ([`crate::simulator::SharedTimeline`]) to arbitrate concurrent
-    /// streams over the same bank/channel state this simulator models.
-    pub fn locate(&self, addr: u64) -> (usize, usize) {
-        let (channel, bank, _row) = self.map(addr);
-        (channel, bank)
-    }
-
     /// Map a byte address to (channel, bank index, row).
     fn map(&self, addr: u64) -> (usize, usize, u64) {
         let row_size = self.cfg.row_size as u64;
@@ -85,16 +109,18 @@ impl DramSim {
         (channel, bank, row)
     }
 
-    /// Issue a read of `bytes` at `addr` at (or after) time `at`.
-    /// Returns (completion time, classification).
-    pub fn read(&mut self, addr: u64, bytes: usize, at: SimNs) -> (SimNs, RowResult) {
+    /// Classify an access and emit its intrinsic service profile,
+    /// advancing the per-bank open-row state (but not the occupancy
+    /// clocks — that is [`DramAccess::schedule`]'s job, driven either by
+    /// [`DramSim::read`] for a private device or by a shared timeline
+    /// arbitrating many streams over one set of banks).
+    pub fn profile(&mut self, addr: u64, bytes: usize) -> (DramAccess, RowResult) {
         let (channel, bank_idx, row) = self.map(addr);
         let t_cas = self.cfg.t_cas as f64 * self.clock_ns;
         let t_rcd = self.cfg.t_rcd as f64 * self.clock_ns;
         let t_rp = self.cfg.t_rp as f64 * self.clock_ns;
 
         let bank = &mut self.banks[bank_idx];
-        let start = at.max(bank.ready_at).max(self.channel_free[channel]);
         let (latency, class) = match bank.open_row {
             Some(r) if r == row => (t_cas, RowResult::Hit),
             Some(_) => (t_rp + t_rcd + t_cas, RowResult::Conflict),
@@ -105,10 +131,6 @@ impl DramSim {
         // DDR transfers on both edges: 2 * clock_mhz MT/s * 8 B = GB/s.
         let bus_bps = 2.0 * self.cfg.dram_clock_mhz * 1e6 * 8.0; // bytes/sec
         let transfer_ns = bytes as f64 / bus_bps * 1e9;
-        let done = start + latency + transfer_ns;
-        bank.ready_at = done;
-        self.channel_free[channel] = start + latency.max(transfer_ns);
-        self.now = self.now.max(done);
 
         self.stats.accesses += 1;
         self.stats.bytes += bytes as u64;
@@ -117,6 +139,22 @@ impl DramSim {
             RowResult::Miss => self.stats.misses += 1,
             RowResult::Conflict => self.stats.conflicts += 1,
         }
+        (
+            DramAccess { channel, bank: bank_idx, lat_ns: latency, transfer_ns },
+            class,
+        )
+    }
+
+    /// Issue a read of `bytes` at `addr` at (or after) time `at`.
+    /// Returns (completion time, classification).
+    pub fn read(&mut self, addr: u64, bytes: usize, at: SimNs) -> (SimNs, RowResult) {
+        let (acc, class) = self.profile(addr, bytes);
+        let done = acc.schedule(
+            &mut self.banks[acc.bank].ready_at,
+            &mut self.channel_free[acc.channel],
+            at,
+        );
+        self.now = self.now.max(done);
         (done, class)
     }
 

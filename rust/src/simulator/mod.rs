@@ -11,10 +11,21 @@
 //! - [`ssd`] — latency + IOPS-bounded queue (45 µs / 1200K IOPS).
 //! - [`device`] — the composed far-memory device: CXL link in front of the
 //!   DRAM backend, as the accelerator sees it.
-//! - [`timeline`] — the shared batch timeline: serializes every in-flight
-//!   query's record stream onto one bank/link occupancy model so batch
-//!   latency reflects contention (`sim.shared_timeline`), instead of N
-//!   independent idle devices.
+//! - [`timeline`] — the shared far-memory schedulers: the batch replay
+//!   ([`SharedTimeline`], all streams at t = 0) and the admission-time
+//!   scheduler ([`TimelineSched`]) the pipelined serving path drives, both
+//!   arbitrating every in-flight query's record stream over one bank/link
+//!   occupancy model (`sim.shared_timeline`) instead of N independent
+//!   idle devices.
+//!
+//! The device models emit per-access **service profiles**
+//! ([`dram::DramAccess`], [`cxl::LinkAccess`]): the classification /
+//! latency arithmetic lives in the device, the occupancy update rule lives
+//! on the profile, and both the private devices and the shared timelines
+//! schedule through the same rules — so the contention model can never
+//! desync from the device model. The SSD counterpart is [`SsdQueue`]: one
+//! shared IOPS token server per shard group for the survivor fetches of
+//! all in-flight queries.
 //!
 //! All simulators are *latency accounting* models driven by access streams;
 //! they return simulated nanoseconds and keep queue state so sustained
@@ -26,11 +37,11 @@ pub mod dram;
 pub mod ssd;
 pub mod timeline;
 
-pub use cxl::CxlLink;
+pub use cxl::{CxlLink, LinkAccess};
 pub use device::FarMemoryDevice;
-pub use dram::DramSim;
-pub use ssd::SsdSim;
-pub use timeline::{FarStream, SharedTimeline, StreamTiming};
+pub use dram::{DramAccess, DramSim};
+pub use ssd::{SsdGrant, SsdQueue, SsdSim};
+pub use timeline::{FarStream, SharedTimeline, StreamTiming, TimelineSched};
 
 /// Simulated time in nanoseconds.
 pub type SimNs = f64;

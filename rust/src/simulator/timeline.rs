@@ -1,45 +1,59 @@
-//! Shared far-memory batch timeline.
+//! Shared far-memory timelines: batch replay and admission-time
+//! scheduling.
 //!
 //! The engine's per-query model gives every query a private, idle
-//! [`FarMemoryDevice`] — fine for solo latency, dishonest for batch
-//! serving, where many in-flight queries contend for one CXL device
-//! (COSMOS/FusionANNS both model this; the paper's 9× throughput claim is
-//! a contended-batch number). [`SharedTimeline`] serializes the record
-//! streams of every in-flight query onto one bank/link occupancy model:
+//! [`FarMemoryDevice`](crate::simulator::FarMemoryDevice) — fine for solo
+//! latency, dishonest for batch serving, where many in-flight queries
+//! contend for one CXL device (COSMOS/FusionANNS both model this; the
+//! paper's 9× throughput claim is a contended-batch number). Two
+//! schedulers serialize the record streams of in-flight queries onto one
+//! bank/link occupancy model:
 //!
-//! - Each query's stream is captured as a [`FarStream`] (record addresses
-//!   in stream order plus the HW/SW mode) during the functional pass.
-//! - **Phase A** replays each stream alone on a private device — the
-//!   independent model, bit-identical to what the engine charges as
-//!   `Breakdown::far_ns` — and extracts each record's intrinsic service
-//!   profile (row-buffer class latency, bus transfer, link serialization)
-//!   and its (channel, bank) placement.
-//! - **Phase B** re-schedules all records on shared bank / channel / link
-//!   occupancy state, arrival-ordered: streams are interleaved round-robin
-//!   in batch order (all queries of a batch arrive at t = 0), each record
-//!   starting as soon as its bank, channel and (SW mode) link are free.
+//! - [`SharedTimeline::schedule`] — the batch replay kept from the
+//!   post-hoc era (and for its property tests): all streams arrive at
+//!   t = 0 and interleave round-robin in arrival order.
+//! - [`TimelineSched`] — the admission-time scheduler the pipelined
+//!   serving path uses ([`crate::coordinator::pipelined`]): occupancy
+//!   state persists across admissions, and each stream reserves the
+//!   device at the simulated instant its query reaches the far-refinement
+//!   stage, so front-stage work genuinely overlaps device occupancy.
 //!
-//! Row-buffer classification is per-stream (phase A): the controller is
-//! assumed to batch a stream's row hits; contention changes *when* a
+//! Both are built from the same two ingredients, and since the
+//! device-model service-profile refactor neither mirrors any device
+//! arithmetic:
+//!
+//! - **Phase A (intrinsic profiles)** — each stream is classified on a
+//!   private row-state machine ([`DramSim::profile`]) and its records'
+//!   `(channel, bank, latency class, transfer, link serialization)`
+//!   profiles are replayed on idle occupancy — the independent model,
+//!   bit-identical to what the engine charges as `Breakdown::far_ns`
+//!   because [`DramSim::read`] / [`CxlLink::transfer`] are themselves
+//!   implemented over the very same [`DramAccess::schedule`] /
+//!   [`LinkAccess::schedule`] occupancy rules.
+//! - **Phase B (shared occupancy)** — the same profiles replayed on
+//!   shared bank / channel / link state, each record starting as soon as
+//!   its resources are free (and no earlier than the stream's arrival).
+//!
+//! Row-buffer classification stays per-stream (phase A): the controller
+//! is assumed to batch a stream's row hits; contention changes *when* a
 //! record is served, never its intrinsic service time. That choice buys
 //! the invariants batch numbers need (property-tested in
 //! `tests/property_invariants.rs`):
 //!
-//! - **monotone** — adding streams never speeds any stream up, so batch
-//!   completion ≥ max of solo completions and is non-decreasing in batch
-//!   size;
+//! - **monotone** — adding streams never speeds any stream up;
 //! - **work-conserving** — greedy occupancy scheduling never does worse
 //!   than running the streams fully serialized;
-//! - **batch-1 reduction** — with one stream, phase B replays phase A's
-//!   arithmetic exactly, so `shared == solo` bit-for-bit and
-//!   `queue_ns == 0`.
+//! - **batch-1 reduction** — a stream admitted to an idle device is
+//!   served in exactly its intrinsic time: `shared == solo` bit-for-bit
+//!   and `queue_ns == 0` (the depth-1 == sequential contract).
 
 use crate::config::SimConfig;
-use crate::simulator::dram::RowResult;
+use crate::simulator::cxl::LinkAccess;
+use crate::simulator::dram::DramAccess;
 use crate::simulator::{CxlLink, DramSim, SimNs};
 
-/// One query's far-memory record stream, captured by the engine during
-/// the functional pass for post-hoc scheduling on the shared timeline.
+/// One query's far-memory record stream, captured by the engine's
+/// far-refinement stage for scheduling on a shared timeline.
 #[derive(Clone, Debug, Default)]
 pub struct FarStream {
     /// HW (on-device, no CXL traversal) vs SW (through-link) stream.
@@ -50,28 +64,71 @@ pub struct FarStream {
     pub addrs: Vec<u64>,
 }
 
-/// Per-stream result of a batch schedule.
+/// Per-stream result of a shared schedule.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StreamTiming {
-    /// Completion on a private idle device (the independent model).
+    /// Intrinsic stream duration on a private idle device (the
+    /// independent model — what the engine charges as `far_ns`).
     pub solo_ns: SimNs,
-    /// Completion on the shared timeline under batch contention.
+    /// Absolute completion time on the shared timeline. For the batch
+    /// replay every stream arrives at t = 0, so this is also a duration.
     pub shared_ns: SimNs,
-    /// `shared − solo`: time the stream spent waiting on bank / channel /
-    /// link occupancy held by other in-flight streams.
+    /// `shared − arrival − solo`: time the stream spent waiting on bank /
+    /// channel / link occupancy held by other in-flight streams.
     pub queue_ns: SimNs,
 }
 
-/// One record's intrinsic service profile (phase A output).
-struct Rec {
-    channel: usize,
-    bank: usize,
-    /// Row-buffer class latency (tCAS / tRCD+tCAS / tRP+tRCD+tCAS), ns.
-    lat_ns: f64,
-    /// Data-bus occupancy, ns.
-    transfer_ns: f64,
-    /// CXL link serialization, ns (SW streams only).
-    link_ser_ns: f64,
+/// Shared-resource occupancy state: when each bank, channel bus and the
+/// CXL link next free up. The *only* mutation path is the device-emitted
+/// [`DramAccess::schedule`] / [`LinkAccess::schedule`] rules.
+struct Occupancy {
+    bank_ready: Vec<SimNs>,
+    channel_free: Vec<SimNs>,
+    link_free: SimNs,
+}
+
+impl Occupancy {
+    fn new(cfg: &SimConfig) -> Self {
+        let nbanks =
+            cfg.dram_channels * cfg.dram_ranks_per_channel * cfg.dram_banks_per_rank;
+        Occupancy {
+            bank_ready: vec![0.0; nbanks],
+            channel_free: vec![0.0; cfg.dram_channels],
+            link_free: 0.0,
+        }
+    }
+}
+
+/// Phase A: classify `stream` on a private row-state machine and emit its
+/// per-record service profiles (plus the constant link profile).
+fn profile_stream(cfg: &SimConfig, stream: &FarStream) -> (Vec<DramAccess>, LinkAccess) {
+    let mut dram = DramSim::new(cfg);
+    let link = CxlLink::new(cfg).profile(stream.rec_bytes);
+    let recs = stream
+        .addrs
+        .iter()
+        .map(|&addr| dram.profile(addr, stream.rec_bytes).0)
+        .collect();
+    (recs, link)
+}
+
+/// Replay one stream's profiles over `occ`, no record starting before
+/// `at`; returns the completion time of the last record.
+fn replay(
+    recs: &[DramAccess],
+    link: LinkAccess,
+    local: bool,
+    occ: &mut Occupancy,
+    at: SimNs,
+) -> SimNs {
+    let mut done_max = at;
+    for r in recs {
+        let dram_done =
+            r.schedule(&mut occ.bank_ready[r.bank], &mut occ.channel_free[r.channel], at);
+        let done = if local { dram_done } else { link.schedule(&mut occ.link_free, dram_done) };
+        done_max = done_max.max(done);
+    }
+    done_max
 }
 
 /// The shared batch scheduler (see module docs).
@@ -86,92 +143,51 @@ impl SharedTimeline {
 
     /// Completion time of `stream` alone on an idle private device —
     /// bit-identical to the engine's independent far-memory accounting
-    /// (the same `host_read`/`local_read` loop over the same addresses).
+    /// (the same profile + occupancy rules `host_read`/`local_read`
+    /// resolve to).
     pub fn solo(&self, stream: &FarStream) -> SimNs {
-        let mut dev = crate::simulator::FarMemoryDevice::new(&self.cfg);
-        let mut done = 0.0f64;
-        for &addr in &stream.addrs {
-            let d = if stream.local {
-                dev.local_read(addr, stream.rec_bytes, 0.0)
-            } else {
-                dev.host_read(addr, stream.rec_bytes, 0.0)
-            };
-            done = done.max(d);
-        }
-        done
+        let (recs, link) = profile_stream(&self.cfg, stream);
+        replay(&recs, link, stream.local, &mut Occupancy::new(&self.cfg), 0.0)
     }
 
     /// Schedule a batch of streams all arriving at t = 0; returns one
-    /// [`StreamTiming`] per stream, in input (arrival) order.
+    /// [`StreamTiming`] per stream, in input (arrival) order. Streams are
+    /// interleaved round-robin record by record — the fairness model the
+    /// post-hoc batch replay established; the admission-time scheduler
+    /// ([`TimelineSched`]) instead serves each stream as an FCFS burst at
+    /// its arrival instant.
     pub fn schedule(&self, streams: &[FarStream]) -> Vec<StreamTiming> {
-        // Mirror DramSim / CxlLink arithmetic exactly (expression-for-
-        // expression) so a single-stream schedule is bit-identical to the
-        // private-device replay.
-        let clock_ns = 1000.0 / self.cfg.dram_clock_mhz;
-        let t_cas = self.cfg.t_cas as f64 * clock_ns;
-        let t_rcd = self.cfg.t_rcd as f64 * clock_ns;
-        let t_rp = self.cfg.t_rp as f64 * clock_ns;
-        let bus_bps = 2.0 * self.cfg.dram_clock_mhz * 1e6 * 8.0; // bytes/sec
-
-        // ---- Phase A: private replay per stream ----
-        let mut profiles: Vec<Vec<Rec>> = Vec::with_capacity(streams.len());
+        // ---- Phase A: intrinsic profiles + private replay per stream ----
+        let mut profiles = Vec::with_capacity(streams.len());
         let mut timings: Vec<StreamTiming> = Vec::with_capacity(streams.len());
         for stream in streams {
-            let mut dram = DramSim::new(&self.cfg);
-            let mut link = CxlLink::new(&self.cfg);
-            let mut solo = 0.0f64;
-            let mut recs = Vec::with_capacity(stream.addrs.len());
-            let transfer_ns = stream.rec_bytes as f64 / bus_bps * 1e9;
-            let link_ser_ns = stream.rec_bytes as f64 / self.cfg.cxl_bandwidth_gbps;
-            for &addr in &stream.addrs {
-                let (channel, bank) = dram.locate(addr);
-                let (dram_done, class) = dram.read(addr, stream.rec_bytes, 0.0);
-                let done = if stream.local {
-                    dram_done
-                } else {
-                    link.transfer(stream.rec_bytes, dram_done)
-                };
-                solo = solo.max(done);
-                let lat_ns = match class {
-                    RowResult::Hit => t_cas,
-                    RowResult::Miss => t_rcd + t_cas,
-                    RowResult::Conflict => t_rp + t_rcd + t_cas,
-                };
-                recs.push(Rec { channel, bank, lat_ns, transfer_ns, link_ser_ns });
-            }
-            profiles.push(recs);
+            let (recs, link) = profile_stream(&self.cfg, stream);
+            let solo = replay(&recs, link, stream.local, &mut Occupancy::new(&self.cfg), 0.0);
+            profiles.push((recs, link));
             timings.push(StreamTiming { solo_ns: solo, shared_ns: 0.0, queue_ns: 0.0 });
         }
 
         // ---- Phase B: shared replay, round-robin in arrival order ----
-        let nbanks = self.cfg.dram_channels
-            * self.cfg.dram_ranks_per_channel
-            * self.cfg.dram_banks_per_rank;
-        let mut bank_ready = vec![0.0f64; nbanks];
-        let mut channel_free = vec![0.0f64; self.cfg.dram_channels];
-        let mut link_free = 0.0f64;
+        let mut occ = Occupancy::new(&self.cfg);
         let mut next = vec![0usize; streams.len()];
-        let mut remaining: usize = profiles.iter().map(|p| p.len()).sum();
+        let mut remaining: usize = profiles.iter().map(|(recs, _)| recs.len()).sum();
         while remaining > 0 {
-            for (q, recs) in profiles.iter().enumerate() {
+            for (q, (recs, link)) in profiles.iter().enumerate() {
                 if next[q] >= recs.len() {
                     continue;
                 }
                 let r = &recs[next[q]];
                 next[q] += 1;
                 remaining -= 1;
-                // Same update rules as DramSim::read with at = 0.
-                let start = bank_ready[r.bank].max(channel_free[r.channel]);
-                let dram_done = start + r.lat_ns + r.transfer_ns;
-                bank_ready[r.bank] = dram_done;
-                channel_free[r.channel] = start + r.lat_ns.max(r.transfer_ns);
+                let dram_done = r.schedule(
+                    &mut occ.bank_ready[r.bank],
+                    &mut occ.channel_free[r.channel],
+                    0.0,
+                );
                 let done = if streams[q].local {
                     dram_done
                 } else {
-                    // Same update rules as CxlLink::transfer.
-                    let ls = dram_done.max(link_free);
-                    link_free = ls + r.link_ser_ns;
-                    ls + self.cfg.cxl_latency_ns + r.link_ser_ns
+                    link.schedule(&mut occ.link_free, dram_done)
                 };
                 timings[q].shared_ns = timings[q].shared_ns.max(done);
             }
@@ -180,6 +196,64 @@ impl SharedTimeline {
             t.queue_ns = (t.shared_ns - t.solo_ns).max(0.0);
         }
         timings
+    }
+}
+
+/// Admission-time shared-device scheduler: occupancy persists across
+/// [`TimelineSched::admit`] calls, so a stream admitted while earlier
+/// streams still hold banks / the link waits for them (FCFS), while a
+/// stream admitted to an idle device is served in exactly its intrinsic
+/// time — bit-for-bit, which is what keeps depth-1 pipelining identical
+/// to the sequential engine's accounting.
+pub struct TimelineSched {
+    cfg: SimConfig,
+    occ: Occupancy,
+    /// Latest instant any resource is still committed; admissions at or
+    /// after it see an idle device.
+    busy_until: SimNs,
+}
+
+impl TimelineSched {
+    pub fn new(cfg: &SimConfig) -> Self {
+        TimelineSched { cfg: cfg.clone(), occ: Occupancy::new(cfg), busy_until: 0.0 }
+    }
+
+    /// Admit one stream at time `at` (admissions must come in
+    /// non-decreasing `at` order — the event loop driving this guarantees
+    /// it). Returns the stream's intrinsic duration, absolute completion
+    /// and queueing delay.
+    pub fn admit(&mut self, stream: &FarStream, at: SimNs) -> StreamTiming {
+        if stream.addrs.is_empty() {
+            return StreamTiming { solo_ns: 0.0, shared_ns: at, queue_ns: 0.0 };
+        }
+        let (recs, link) = profile_stream(&self.cfg, stream);
+        let mut private = Occupancy::new(&self.cfg);
+        let solo = replay(&recs, link, stream.local, &mut private, 0.0);
+        if at >= self.busy_until {
+            // Idle device: served in exactly the intrinsic time. The
+            // occupancy the stream leaves behind is the private replay's,
+            // translated to `at` in a single add per resource — no
+            // incremental float drift can fake a queue term here.
+            for r in &recs {
+                self.occ.bank_ready[r.bank] =
+                    self.occ.bank_ready[r.bank].max(at + private.bank_ready[r.bank]);
+                self.occ.channel_free[r.channel] =
+                    self.occ.channel_free[r.channel].max(at + private.channel_free[r.channel]);
+            }
+            if !stream.local {
+                self.occ.link_free = self.occ.link_free.max(at + private.link_free);
+            }
+            self.busy_until = at + solo;
+            StreamTiming { solo_ns: solo, shared_ns: at + solo, queue_ns: 0.0 }
+        } else {
+            let done = replay(&recs, link, stream.local, &mut self.occ, at);
+            self.busy_until = self.busy_until.max(done);
+            StreamTiming {
+                solo_ns: solo,
+                shared_ns: done,
+                queue_ns: (done - at - solo).max(0.0),
+            }
+        }
     }
 }
 
@@ -211,6 +285,31 @@ mod tests {
                 "batch of 1 must reduce to the independent model exactly (local={local})"
             );
             assert_eq!(t[0].queue_ns, 0.0);
+        }
+    }
+
+    #[test]
+    fn solo_matches_far_memory_device_replay() {
+        // The desync tripwire the service-profile refactor must keep: the
+        // timeline's phase A and the engine's private-device loop resolve
+        // to the same profile + occupancy rules, so they agree bit for
+        // bit.
+        let cfg = SimConfig::default();
+        let tl = SharedTimeline::new(&cfg);
+        let mut rng = Rng::new(29);
+        for &local in &[false, true] {
+            let s = random_stream(&mut rng, 300, local);
+            let mut dev = crate::simulator::FarMemoryDevice::new(&cfg);
+            let mut done = 0.0f64;
+            for &addr in &s.addrs {
+                let d = if s.local {
+                    dev.local_read(addr, s.rec_bytes, 0.0)
+                } else {
+                    dev.host_read(addr, s.rec_bytes, 0.0)
+                };
+                done = done.max(d);
+            }
+            assert_eq!(tl.solo(&s), done, "profile replay desynced from device (local={local})");
         }
     }
 
@@ -286,5 +385,55 @@ mod tests {
             assert_eq!(x.shared_ns, y.shared_ns);
             assert_eq!(x.queue_ns, y.queue_ns);
         }
+    }
+
+    #[test]
+    fn admission_to_idle_device_is_exactly_solo() {
+        // The depth-1 contract: any admission instant, zero queue, shared
+        // duration == solo bit-for-bit.
+        let cfg = SimConfig::default();
+        let tl = SharedTimeline::new(&cfg);
+        let mut sched = TimelineSched::new(&cfg);
+        let mut rng = Rng::new(41);
+        let mut at = 0.0f64;
+        for i in 0..6 {
+            let s = random_stream(&mut rng, 100, i % 2 == 0);
+            let solo = tl.solo(&s);
+            let t = sched.admit(&s, at);
+            assert_eq!(t.solo_ns, solo, "stream {i}");
+            assert_eq!(t.shared_ns, at + solo, "stream {i}: idle admit must serve in solo time");
+            assert_eq!(t.queue_ns, 0.0, "stream {i}");
+            // Next admission strictly after this stream drains.
+            at = t.shared_ns + 1.0;
+        }
+    }
+
+    #[test]
+    fn overlapping_admissions_queue_and_are_monotone() {
+        let cfg = SimConfig::default();
+        let mut rng = Rng::new(13);
+        let a = random_stream(&mut rng, 200, false);
+        let b = random_stream(&mut rng, 200, false);
+        let mut sched = TimelineSched::new(&cfg);
+        let ta = sched.admit(&a, 0.0);
+        // Admit b in the middle of a's stream: it must wait.
+        let tb = sched.admit(&b, ta.shared_ns / 2.0);
+        assert_eq!(ta.queue_ns, 0.0);
+        assert!(tb.queue_ns > 0.0, "overlapping SW streams must contend: {tb:?}");
+        assert!(tb.shared_ns >= ta.shared_ns / 2.0 + tb.solo_ns);
+        // Determinism.
+        let mut sched2 = TimelineSched::new(&cfg);
+        let ta2 = sched2.admit(&a, 0.0);
+        let tb2 = sched2.admit(&b, ta.shared_ns / 2.0);
+        assert_eq!(ta.shared_ns, ta2.shared_ns);
+        assert_eq!(tb.queue_ns, tb2.queue_ns);
+    }
+
+    #[test]
+    fn empty_stream_admission_is_free() {
+        let cfg = SimConfig::default();
+        let mut sched = TimelineSched::new(&cfg);
+        let t = sched.admit(&FarStream::default(), 42.0);
+        assert_eq!((t.solo_ns, t.shared_ns, t.queue_ns), (0.0, 42.0, 0.0));
     }
 }

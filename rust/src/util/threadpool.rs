@@ -117,6 +117,19 @@ impl ThreadPool {
         if n == 0 {
             return;
         }
+        if n == 1 || self.size() == 1 {
+            // Serial fast path: a one-item batch (the pipelined
+            // scheduler's tail waves) or a one-worker pool gains nothing
+            // from the queue — run inline on the caller's thread, skipping
+            // the channel round-trip and the condvar sleep. Slot 0 is the
+            // same slot the single queue lane would have used; per-slot
+            // state is Mutex-guarded by every caller, so a concurrent
+            // dispatch from another thread stays safe.
+            for i in 0..n {
+                f(0, i);
+            }
+            return;
+        }
         let f_ref: &(dyn Fn(usize, usize) + Sync) = &f;
         // SAFETY: `wait_idle` below blocks until every job submitted here
         // has run to completion, so the erased reference never outlives the
@@ -324,6 +337,26 @@ mod tests {
                 assert_eq!(a.load(Ordering::Relaxed), i * round);
             }
         }
+    }
+
+    #[test]
+    fn dispatch_serial_fast_path_covers_all_indices() {
+        // n == 1 on a multi-worker pool and any n on a 1-worker pool run
+        // inline; coverage and slot validity must be identical.
+        let pool = ThreadPool::new(4);
+        let ran = AtomicUsize::new(0);
+        pool.dispatch(1, |slot, i| {
+            assert_eq!((slot, i), (0, 0));
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+        let single = ThreadPool::new(1);
+        let hits: Vec<AtomicUsize> = (0..32).map(|_| AtomicUsize::new(0)).collect();
+        single.dispatch(32, |slot, i| {
+            assert_eq!(slot, 0);
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
     #[test]
