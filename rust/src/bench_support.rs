@@ -190,6 +190,8 @@ impl Pipelined<'_> {
             // through the pipelined scheduler.
             makespan_ns: 0.0,
             pipeline_depth: 0,
+            cpu_lanes: 0,
+            tenants: Vec::new(),
             breakdown: agg,
             mode: mode.name(),
         }

@@ -188,6 +188,67 @@ impl Default for RefineConfig {
     }
 }
 
+/// Open-loop arrival process for batch serving (`sim.arrival_dist`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ArrivalDist {
+    /// Arrivals spaced exactly `1e9 / qps` ns apart.
+    #[default]
+    Uniform,
+    /// Seeded exponential inter-arrival gaps with mean `1e9 / qps`
+    /// (`sim.arrival_seed`): bursty open-loop load, which uniform spacing
+    /// systematically underestimates at the tail. Deterministic — the gap
+    /// sequence is a pure function of the seed, so the serving timeline
+    /// stays identical across worker counts, runs and hosts.
+    Poisson,
+}
+
+impl ArrivalDist {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "uniform" => ArrivalDist::Uniform,
+            "poisson" => ArrivalDist::Poisson,
+            other => bail!("unknown arrival dist `{other}` (uniform|poisson)"),
+        })
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalDist::Uniform => "uniform",
+            ArrivalDist::Poisson => "poisson",
+        }
+    }
+}
+
+/// Sharing discipline of the shared far-memory timeline for co-admitted
+/// record streams (`sim.stream_interleave`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum StreamInterleave {
+    /// Each stream is served as one FCFS burst at its admission instant
+    /// (the PR-4 model).
+    #[default]
+    Burst,
+    /// In-flight streams take turns record by record — the batch replay's
+    /// round-robin fairness applied to incremental admissions, so a short
+    /// stream admitted behind a long one is not stuck behind the whole
+    /// burst.
+    Record,
+}
+
+impl StreamInterleave {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "burst" => StreamInterleave::Burst,
+            "record" => StreamInterleave::Record,
+            other => bail!("unknown stream interleave `{other}` (burst|record)"),
+        })
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            StreamInterleave::Burst => "burst",
+            StreamInterleave::Record => "record",
+        }
+    }
+}
+
 /// Table I device parameters for the far-memory / storage simulators.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
@@ -227,10 +288,26 @@ pub struct SimConfig {
     pub shared_timeline: bool,
     /// Open-loop arrival rate for batch serving, queries/sec. 0 = the
     /// closed batch (every query arrives at t = 0); > 0 spaces arrivals
-    /// `1e9 / qps` ns apart on the simulated timeline, so the serving
+    /// on the simulated timeline per `arrival_dist`, so the serving
     /// report's p50/p95/p99 become tail-latency-vs-load numbers
     /// (admission wait included).
     pub arrival_qps: f64,
+    /// Arrival process shape at `arrival_qps` > 0: uniform spacing or
+    /// seeded Poisson (exponential gaps). Ignored when a trace is set.
+    pub arrival_dist: ArrivalDist,
+    /// Seed of the Poisson gap sequence (keeps the simulated timeline a
+    /// pure function of the config).
+    pub arrival_seed: u64,
+    /// Arrival-trace replay: absolute arrival offsets in ns, sorted
+    /// non-decreasing, one per query in order (empty = none). When the
+    /// batch is larger than the trace, the trace tiles — repetition `r`
+    /// of entry `i` arrives at `trace[i] + r * trace[last]`. Takes
+    /// precedence over `arrival_qps` / `arrival_dist`. Loaded from a file
+    /// of newline-separated offsets by `--arrival-trace`.
+    pub arrival_trace: Vec<f64>,
+    /// Sharing discipline for co-admitted far-memory record streams on
+    /// the shared timeline: FCFS bursts or record-level round-robin.
+    pub stream_interleave: StreamInterleave,
 }
 
 impl Default for SimConfig {
@@ -253,7 +330,62 @@ impl Default for SimConfig {
             host_dram_bandwidth_gbps: 80.0,
             shared_timeline: false,
             arrival_qps: 0.0,
+            arrival_dist: ArrivalDist::Uniform,
+            arrival_seed: 1,
+            arrival_trace: Vec::new(),
+            stream_interleave: StreamInterleave::Burst,
         }
+    }
+}
+
+/// One tenant of the multi-tenant serving scheduler (`serve.tenants`):
+/// spec syntax `name:weight[:quota]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Weighted-fair admission share (higher = admitted proportionally
+    /// more often when slots are contended; also the priority knob — a
+    /// high-weight tenant's waiting queries win admission ties).
+    pub weight: f64,
+    /// Max queries of this tenant in flight at once (0 = bounded only by
+    /// the global pipeline depth). An admission quota keeps a flooding
+    /// tenant from monopolizing the window even between completions of
+    /// other tenants.
+    pub quota: usize,
+}
+
+impl TenantSpec {
+    /// Parse `name:weight[:quota]`, e.g. `latency:4` or `batch:1:8`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut parts = s.split(':');
+        let name = parts
+            .next()
+            .filter(|n| !n.is_empty())
+            .with_context(|| format!("tenant spec `{s}`: empty name"))?
+            .to_string();
+        let weight = match parts.next() {
+            None => 1.0,
+            Some(w) => w
+                .parse::<f64>()
+                .ok()
+                .filter(|w| w.is_finite() && *w > 0.0)
+                .with_context(|| format!("tenant spec `{s}`: weight must be a positive number"))?,
+        };
+        let quota = match parts.next() {
+            None => 0,
+            Some(q) => q
+                .parse::<usize>()
+                .with_context(|| format!("tenant spec `{s}`: quota must be an integer"))?,
+        };
+        if parts.next().is_some() {
+            bail!("tenant spec `{s}`: expected name:weight[:quota]");
+        }
+        Ok(TenantSpec { name, weight, quota })
+    }
+
+    /// Parse a comma-separated list of specs (the CLI form).
+    pub fn parse_list(s: &str) -> Result<Vec<TenantSpec>> {
+        s.split(',').filter(|p| !p.trim().is_empty()).map(|p| Self::parse(p.trim())).collect()
     }
 }
 
@@ -266,6 +398,19 @@ pub struct ServeConfig {
     /// the sequential engine (stages of one query at a time,
     /// bit-identical results *and* accounting).
     pub pipeline_depth: usize,
+    /// CPU lanes of the simulated clock: front / SW-refine / rerank /
+    /// merge stages of in-flight queries occupy a bounded k-lane compute
+    /// server, so pipeline depth and lane count trade off realistically.
+    /// 0 = unbounded lanes — compute as a pure throughput device, the
+    /// pre-lane clock reproduced bit-for-bit. HW refinement runs on the
+    /// accelerator's cycle model and never occupies a lane.
+    pub cpu_lanes: usize,
+    /// Multi-tenant QoS: per-tenant weighted-fair admission + quotas
+    /// (empty = one implicit tenant, plain FIFO admission). Queries carry
+    /// a tenant tag (`run_serve_tagged`; untagged batches default to
+    /// round-robin over the configured tenants) and the serve report
+    /// gains per-tenant latency percentiles.
+    pub tenants: Vec<TenantSpec>,
 }
 
 /// Coordinator / serving parameters.
@@ -369,6 +514,29 @@ impl SystemConfig {
         }
         if !self.sim.arrival_qps.is_finite() || self.sim.arrival_qps < 0.0 {
             bail!("sim.arrival_qps must be a finite non-negative rate");
+        }
+        for &t in &self.sim.arrival_trace {
+            if !t.is_finite() || t < 0.0 {
+                bail!("sim.arrival_trace offsets must be finite and non-negative");
+            }
+        }
+        for w in self.sim.arrival_trace.windows(2) {
+            if w[1] < w[0] {
+                bail!("sim.arrival_trace must be sorted non-decreasing");
+            }
+        }
+        if self.sim.stream_interleave == StreamInterleave::Record && !self.sim.shared_timeline {
+            bail!(
+                "sim.stream_interleave = \"record\" requires sim.shared_timeline \
+                 (record-level fairness arbitrates the shared device; without it \
+                 every stream runs on a private idle device and the knob would be \
+                 silently ignored)"
+            );
+        }
+        for t in &self.serve.tenants {
+            if !t.weight.is_finite() || t.weight <= 0.0 {
+                bail!("serve.tenants: tenant `{}` weight must be positive", t.name);
+            }
         }
         Ok(())
     }
@@ -478,6 +646,24 @@ fn apply_sim(c: &mut SimConfig, t: &Table) -> Result<()> {
                 c.shared_timeline = v.as_bool().context("sim.shared_timeline must be a bool")?
             }
             "arrival_qps" => c.arrival_qps = need_f64(v, k)?,
+            "arrival_dist" => {
+                c.arrival_dist = ArrivalDist::parse(
+                    v.as_str().context("sim.arrival_dist must be a string")?,
+                )?
+            }
+            "arrival_seed" => c.arrival_seed = need_usize(v, k)? as u64,
+            "arrival_trace" => {
+                let arr = v.as_array().context("sim.arrival_trace must be an array")?;
+                c.arrival_trace = arr
+                    .iter()
+                    .map(|x| x.as_float().context("sim.arrival_trace entries must be numbers"))
+                    .collect::<Result<_>>()?;
+            }
+            "stream_interleave" => {
+                c.stream_interleave = StreamInterleave::parse(
+                    v.as_str().context("sim.stream_interleave must be a string")?,
+                )?
+            }
             other => bail!("unknown key sim.{other}"),
         }
     }
@@ -506,6 +692,18 @@ fn apply_serve(c: &mut ServeConfig, t: &Table) -> Result<()> {
     for (k, v) in t {
         match k.as_str() {
             "pipeline_depth" => c.pipeline_depth = need_usize(v, k)?,
+            "cpu_lanes" => c.cpu_lanes = need_usize(v, k)?,
+            "tenants" => {
+                let arr = v.as_array().context("serve.tenants must be an array")?;
+                c.tenants = arr
+                    .iter()
+                    .map(|x| {
+                        TenantSpec::parse(
+                            x.as_str().context("serve.tenants entries must be strings")?,
+                        )
+                    })
+                    .collect::<Result<_>>()?;
+            }
             other => bail!("unknown key serve.{other}"),
         }
     }
@@ -554,6 +752,10 @@ mod tests {
             ssd_latency_us = 45.0
             shared_timeline = true
             arrival_qps = 20000.0
+            arrival_dist = "poisson"
+            arrival_seed = 99
+            arrival_trace = [0.0, 1000.0, 2500.0]
+            stream_interleave = "record"
 
             [pipeline]
             batch = 16
@@ -561,6 +763,8 @@ mod tests {
 
             [serve]
             pipeline_depth = 8
+            cpu_lanes = 4
+            tenants = ["latency:4", "batch:1:8"]
         "#;
         let cfg = SystemConfig::from_toml(doc).unwrap();
         assert_eq!(cfg.dataset.dim, 128);
@@ -571,8 +775,51 @@ mod tests {
         assert_eq!(cfg.sim.cxl_latency_ns, 271.0);
         assert!(cfg.sim.shared_timeline);
         assert_eq!(cfg.sim.arrival_qps, 20000.0);
+        assert_eq!(cfg.sim.arrival_dist, ArrivalDist::Poisson);
+        assert_eq!(cfg.sim.arrival_seed, 99);
+        assert_eq!(cfg.sim.arrival_trace, vec![0.0, 1000.0, 2500.0]);
+        assert_eq!(cfg.sim.stream_interleave, StreamInterleave::Record);
         assert!(cfg.pipeline.use_xla);
         assert_eq!(cfg.serve.pipeline_depth, 8);
+        assert_eq!(cfg.serve.cpu_lanes, 4);
+        assert_eq!(cfg.serve.tenants.len(), 2);
+        assert_eq!(cfg.serve.tenants[0].name, "latency");
+        assert_eq!(cfg.serve.tenants[0].weight, 4.0);
+        assert_eq!(cfg.serve.tenants[0].quota, 0);
+        assert_eq!(cfg.serve.tenants[1].quota, 8);
+    }
+
+    #[test]
+    fn tenant_spec_parsing() {
+        let t = TenantSpec::parse("lat").unwrap();
+        assert_eq!((t.name.as_str(), t.weight, t.quota), ("lat", 1.0, 0));
+        let t = TenantSpec::parse("flood:0.5:3").unwrap();
+        assert_eq!((t.weight, t.quota), (0.5, 3));
+        assert!(TenantSpec::parse("").is_err());
+        assert!(TenantSpec::parse("x:-1").is_err());
+        assert!(TenantSpec::parse("x:1:2:3").is_err());
+        assert!(TenantSpec::parse("x:nope").is_err());
+        let l = TenantSpec::parse_list("a:2, b:1:4").unwrap();
+        assert_eq!(l.len(), 2);
+        assert_eq!(l[1].name, "b");
+    }
+
+    #[test]
+    fn arrival_and_interleave_parsing() {
+        assert_eq!(ArrivalDist::parse("poisson").unwrap(), ArrivalDist::Poisson);
+        assert!(ArrivalDist::parse("zipf").is_err());
+        assert_eq!(ArrivalDist::Poisson.name(), "poisson");
+        assert_eq!(
+            StreamInterleave::parse("record").unwrap(),
+            StreamInterleave::Record
+        );
+        assert!(StreamInterleave::parse("x").is_err());
+        assert_eq!(StreamInterleave::Burst.name(), "burst");
+        // Unsorted traces and non-positive weights are rejected.
+        let bad = "[sim]\narrival_trace = [5.0, 1.0]";
+        assert!(SystemConfig::from_toml(bad).is_err());
+        let bad2 = "[serve]\ntenants = [\"x:0\"]";
+        assert!(SystemConfig::from_toml(bad2).is_err());
     }
 
     #[test]
@@ -595,6 +842,12 @@ mod tests {
         assert!(SystemConfig::from_toml(bad5).is_err());
         let bad6 = "[serve]\nbogus = 1";
         assert!(SystemConfig::from_toml(bad6).is_err());
+        // Record-level interleaving without the shared timeline would be
+        // silently inert — rejected instead.
+        let bad7 = "[sim]\nstream_interleave = \"record\"";
+        assert!(SystemConfig::from_toml(bad7).is_err());
+        let ok7 = "[sim]\nstream_interleave = \"record\"\nshared_timeline = true";
+        assert!(SystemConfig::from_toml(ok7).is_ok());
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::config::RefineMode;
 use crate::coordinator::builder::BuiltSystem;
 use crate::coordinator::engine::{run_on_pool, QueryParams};
 use crate::coordinator::pipeline::Breakdown;
-use crate::coordinator::pipelined::ServeReport;
+use crate::coordinator::pipelined::{ServeReport, TenantLat};
 use crate::coordinator::stage::QueryScratch;
 use crate::index::FlatIndex;
 use crate::metrics::{recall_at_k, LatencyStats};
@@ -47,6 +47,11 @@ pub struct BatchReport {
     pub makespan_ns: f64,
     /// Pipeline depth the batch was scheduled at (0 = unbounded).
     pub pipeline_depth: usize,
+    /// CPU lanes the simulated clock was bounded to (0 = unbounded).
+    pub cpu_lanes: usize,
+    /// Per-tenant latency percentiles (empty unless `serve.tenants` is
+    /// configured).
+    pub tenants: Vec<TenantLat>,
     /// Mean per-stage breakdown.
     pub breakdown: Breakdown,
     pub mode: &'static str,
@@ -158,6 +163,10 @@ pub fn report_with_serve(
             (lat.mean(), lat.p50(), lat.p95(), lat.p99(), 0.0, 0)
         }
     };
+    let (cpu_lanes, tenants) = match serve {
+        Some(s) => (s.cpu_lanes, s.tenants.clone()),
+        None => (0, Vec::new()),
+    };
     BatchReport {
         queries: nq,
         mean_recall: recall_sum / n,
@@ -174,6 +183,8 @@ pub fn report_with_serve(
         wall_ns,
         makespan_ns,
         pipeline_depth,
+        cpu_lanes,
+        tenants,
         breakdown: agg,
         mode,
     }

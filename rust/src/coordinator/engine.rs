@@ -124,12 +124,11 @@ pub struct QueryEngine {
     /// it exists to keep the aliasing story safe.
     scratches: Vec<Mutex<QueryScratch>>,
     /// Serializes whole serving calls (`query`, `run*`, `profile_with`)
-    /// from concurrent threads. The stage-graph executor parks a query's
-    /// in-flight state in its slot *between* waves — with the slot mutex
-    /// released — so two interleaved batch runs on one engine would
-    /// corrupt each other's slots without this gate (the pre-stage-graph
-    /// engine got the same exclusion implicitly by running each whole
-    /// query under one slot lock).
+    /// from concurrent threads: interleaved batch runs on one engine
+    /// would contend for the same scratch slots and interleave their pool
+    /// dispatches (the run-to-completion executor keeps each task's slot
+    /// state consistent under its lock, but batch-level wave accounting
+    /// and slot utilization assume one serving call at a time).
     serve_gate: Mutex<()>,
     params: QueryParams,
 }
@@ -217,22 +216,39 @@ impl QueryEngine {
             .into_schedule(self.sys.cfg.serve.pipeline_depth, self.sys.cfg.sim.arrival_qps)
     }
 
+    /// [`QueryEngine::run_serve`] with explicit per-query tenant tags
+    /// (indices into `serve.tenants`): the multi-tenant QoS entry point.
+    /// Untagged serving (`run_serve`) round-robins queries over the
+    /// configured tenants instead.
+    pub fn run_serve_tagged(
+        &self,
+        params: &QueryParams,
+        queries: &[f32],
+        tenant_of: &[usize],
+    ) -> (Vec<QueryOutcome>, ServeReport) {
+        let mut profile = self.profile_with(params, queries);
+        profile
+            .set_tenants(self.sys.cfg.serve.tenants.clone(), tenant_of.to_vec());
+        profile.into_schedule(self.sys.cfg.serve.pipeline_depth, self.sys.cfg.sim.arrival_qps)
+    }
+
     /// One functional pass over the batch, reusable across `(depth,
-    /// arrival_qps)` schedules — depth sweeps compare identical stage
-    /// profiles (see [`BatchProfile`]).
+    /// arrival_qps)` schedules — and, via the profile's setters, across
+    /// CPU-lane counts, arrival distributions and tenant configurations
+    /// (see [`BatchProfile`]); sweeps compare identical stage profiles.
     pub fn profile_with(&self, params: &QueryParams, queries: &[f32]) -> BatchProfile {
-        // In-flight slot state spans waves (see `serve_gate`): one
-        // serving call at a time.
+        // One serving call at a time (see `serve_gate`).
         let _gate = self.serve_gate.lock().unwrap();
         let sys = &*self.sys;
         let dim = sys.dataset.dim;
         assert_eq!(queries.len() % dim, 0, "queries must be nq * dim flattened");
         let nq = queries.len() / dim;
         let shared = sys.cfg.sim.shared_timeline;
-        let results = execute_stage_graph(&self.pool, &self.scratches, params, nq, shared, |q| {
-            (sys, &queries[q * dim..(q + 1) * dim])
-        });
-        BatchProfile::capture(&sys.cfg.sim, shared, dim, params.mode, results)
+        let (results, waves) =
+            execute_stage_graph(&self.pool, &self.scratches, params, nq, shared, |q| {
+                (sys, &queries[q * dim..(q + 1) * dim])
+            });
+        BatchProfile::capture(&sys.cfg, shared, dim, params.mode, results, waves)
     }
 }
 
@@ -255,10 +271,10 @@ pub(crate) fn run_on_pool(
     assert_eq!(queries.len() % dim, 0, "queries must be nq * dim flattened");
     let nq = queries.len() / dim;
     let shared = sys.cfg.sim.shared_timeline;
-    let results = execute_stage_graph(pool, scratches, params, nq, shared, |q| {
+    let (results, waves) = execute_stage_graph(pool, scratches, params, nq, shared, |q| {
         (sys, &queries[q * dim..(q + 1) * dim])
     });
-    BatchProfile::capture(&sys.cfg.sim, shared, dim, params.mode, results)
+    BatchProfile::capture(&sys.cfg, shared, dim, params.mode, results, waves)
         .into_schedule(depth, arrival_qps)
 }
 

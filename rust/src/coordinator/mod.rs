@@ -15,11 +15,17 @@
 //! - [`pipelined`] — the **pipelined serving scheduler**: interleaves
 //!   ready stages of a window of in-flight queries across the pool
 //!   (stage-parallel, not just query-parallel) and drives the simulated
-//!   clock by admission — far-memory streams reserve the shared timeline
-//!   as queries reach refinement, SSD bursts reserve the shared per-shard
-//!   SSD queue, `serve.pipeline_depth` caps in-flight queries (1 = the
-//!   sequential engine, bit-identical), and open-loop arrivals
-//!   (`sim.arrival_qps`) produce tail-latency-vs-load reports.
+//!   clock by admission — every contended resource is a deterministic
+//!   resource server ([`crate::simulator::resource`]): far-memory
+//!   streams reserve the shared timeline as queries reach refinement
+//!   (FCFS bursts or record-level round-robin,
+//!   `sim.stream_interleave`), SSD bursts reserve the shared per-shard
+//!   SSD queue, compute stages occupy the bounded CPU lane server
+//!   (`serve.cpu_lanes`), `serve.pipeline_depth` caps in-flight queries
+//!   (1 = the sequential engine, bit-identical), open-loop arrivals
+//!   (`sim.arrival_qps`, uniform/Poisson/trace) produce
+//!   tail-latency-vs-load reports, and `serve.tenants` adds
+//!   weighted-fair multi-tenant admission with per-tenant percentiles.
 //! - [`pipeline`] — the stateless per-call façade over the same dataflow
 //!   (back-compat + ablations). Produces per-stage breakdowns.
 //! - [`batcher`] — batch query driving over the engine core for
@@ -42,6 +48,6 @@ pub use batcher::{ground_truth, ground_truth_for, report_from_outcomes, run_batc
 pub use builder::{build_system, build_system_with, BuiltSystem};
 pub use engine::{QueryEngine, QueryParams};
 pub use pipeline::{Breakdown, Pipeline, QueryOutcome};
-pub use pipelined::{BatchProfile, ServeReport, ServeTiming};
+pub use pipelined::{BatchProfile, ServeReport, ServeTiming, TenantLat};
 pub use shard::ShardedEngine;
 pub use stage::{QueryScratch, Stage, StageState};

@@ -10,25 +10,35 @@
 //! shared timeline replayed far-memory contention *post hoc* with every
 //! stream arriving at t = 0. This module replaces both:
 //!
-//! 1. **Stage-graph execution** ([`execute_stage_graph`]) — a window of
-//!    in-flight queries (one slot per pool worker) advances through
-//!    `Front → FarRefine → Ssd → Merge` in waves: every wave runs one
-//!    ready stage of every in-flight query across the worker pool, so a
-//!    late query's front stage genuinely executes alongside an early
-//!    query's refinement. Stages touch only their own query's
-//!    [`QueryScratch`] slice, so results are bit-identical to the
-//!    sequential walk at any depth and any worker count.
+//! 1. **Stage-graph execution** ([`execute_stage_graph`]) — one dispatch
+//!    round over the pool: every task (claimed dynamically, per-worker
+//!    scratch) walks `Front → FarRefine → Ssd → Merge` to completion,
+//!    different queries' stages genuinely executing concurrently across
+//!    the workers. Stages touch only their own query's [`QueryScratch`]
+//!    slice, so results are bit-identical to the sequential walk at any
+//!    depth and any worker count. No functional stage ever blocks on
+//!    another query's state (device reservations live in the simulated
+//!    clock below, not here), so the old scheme of re-dispatching every
+//!    in-flight query once per stage only spun it through the pool queue
+//!    four times per task.
 //! 2. **Admission-time scheduling** ([`simulate`]) — the simulated clock:
-//!    queries are admitted in arrival order, at most `depth` in flight
-//!    (depth 0 = unbounded, the closed batch); each query's far-memory
-//!    stream reserves the shared [`TimelineSched`] at the instant its
-//!    front stage completes, and its survivor fetch reserves the shared
-//!    per-shard [`SsdQueue`] when refinement completes. Device occupancy
-//!    persists across admissions, so `Breakdown::queue_ns` reports honest
-//!    cross-query contention — while a stream admitted to an idle device
-//!    is served in exactly its private-replay time, which is what makes
-//!    **depth 1 bit-identical to the sequential engine** (zero queueing,
-//!    makespan = Σ per-query latency).
+//!    queries are admitted in weighted-fair tenant order, at most `depth`
+//!    in flight (depth 0 = unbounded, the closed batch); every contended
+//!    resource is a deterministic **resource server**
+//!    ([`crate::simulator::resource`]) behind the same FCFS
+//!    idle-reduction policy: each query's far-memory stream reserves the
+//!    shared [`TimelineSched`] at the instant its front stage completes,
+//!    its survivor fetch reserves the shared per-shard [`SsdQueue`] when
+//!    refinement completes, and — new with `serve.cpu_lanes` — its
+//!    front / SW-refine / rerank / merge compute stages occupy a bounded
+//!    [`LaneServer`] (lanes = 0 models unbounded compute, the throughput
+//!    device of the paper's A10, reproduced bit-for-bit; HW refinement
+//!    runs on the accelerator cycle model and never takes a lane).
+//!    Device occupancy persists across admissions, so
+//!    `Breakdown::queue_ns` reports honest cross-query contention — while
+//!    a stream admitted to an idle device is served in exactly its
+//!    private-replay time, which is what makes **depth 1 bit-identical to
+//!    the sequential engine** (zero queueing, makespan = serialized sum).
 //!
 //! The simulation is a single-threaded discrete-event loop over per-task
 //! stage-cost profiles captured by the functional pass — a pure function
@@ -43,22 +53,33 @@
 //! deterministic cycle-model time — and device stages at the simulator
 //! models' own (deterministic) durations. `Breakdown` keeps the measured
 //! host nanoseconds; the serving timeline is the simulated clock.
-//! Compute stages see no lane contention — the front stage plays the
-//! paper's A10, a throughput device; `depth` is the concurrency
-//! throttle.
 //!
-//! Open-loop arrivals: `sim.arrival_qps > 0` spaces query arrivals
-//! `1e9 / qps` ns apart instead of the all-at-t=0 batch, and the report
-//! carries p50/p95/p99 of `done − arrival` (admission wait included) —
-//! the tail-latency-vs-load curve the ROADMAP asked for.
+//! Open-loop arrivals: `sim.arrival_qps > 0` spreads query arrivals over
+//! the timeline instead of the all-at-t=0 batch — uniformly spaced or as
+//! a seeded Poisson process (`sim.arrival_dist`, exponential gaps:
+//! burstiness that uniform spacing underestimates), or replayed from an
+//! explicit trace (`sim.arrival_trace`) — and the report carries
+//! p50/p95/p99 of `done − arrival` (admission wait included): the
+//! tail-latency-vs-load curve.
+//!
+//! Multi-tenant QoS: queries carry a tenant tag, `serve.tenants` gives
+//! each tenant a weighted-fair admission share and an optional in-flight
+//! quota, and the report gains per-tenant latency percentiles. The
+//! isolation property (runtime-asserted in the integration tests and the
+//! fig8 harness): because an underloaded tenant's virtual-work counter
+//! stays minimal, its waiting queries win the next freed slots, so a
+//! flooding tenant can delay an idle tenant's query by at most one
+//! in-flight query turn per concurrently-waiting query of that tenant —
+//! never by the flood's whole backlog.
 
-use crate::config::{RefineMode, SimConfig};
+use crate::config::{RefineMode, SimConfig, StreamInterleave, TenantSpec};
 use crate::coordinator::builder::BuiltSystem;
 use crate::coordinator::engine::QueryParams;
 use crate::coordinator::pipeline::QueryOutcome;
 use crate::coordinator::stage::{run_stage, QueryScratch, Stage, StageState};
 use crate::metrics::LatencyStats;
-use crate::simulator::{FarStream, SsdQueue, TimelineSched};
+use crate::simulator::{FarStream, LaneServer, SsdQueue, StreamTiming, TimelineSched};
+use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -106,6 +127,10 @@ pub(crate) struct TaskProfile {
     /// Refinement compute: the accelerator's cycle-model time (HW — al-
     /// ready deterministic) or the modeled host rate × streamed records.
     pub refine_ns: f64,
+    /// Whether refinement runs on a host CPU lane (SW mode) as opposed to
+    /// the accelerator (HW) or not at all (Baseline) — only CPU
+    /// refinement occupies the bounded lane server.
+    pub refine_on_cpu: bool,
     /// SSD survivor-fetch burst.
     pub ssd_reads: usize,
     pub ssd_bytes: usize,
@@ -142,6 +167,7 @@ impl TaskProfile {
             traversal_ns: (bd.candidates * dim) as f64 * FRONT_NS_PER_CAND_DIM,
             far_solo_ns: bd.far_ns,
             refine_ns,
+            refine_on_cpu: mode == RefineMode::FatrqSw,
             ssd_reads: bd.ssd_reads,
             ssd_bytes: dim * 4,
             ssd_solo_ns: bd.ssd_ns,
@@ -151,7 +177,8 @@ impl TaskProfile {
     }
 }
 
-/// Device-queueing charged to one task by the admission-time schedule.
+/// Device/lane queueing charged to one task by the admission-time
+/// schedule.
 #[derive(Clone, Copy, Debug, Default)]
 pub(crate) struct TaskTiming {
     /// Far-memory stream duration on an idle device. Under the shared
@@ -160,7 +187,12 @@ pub(crate) struct TaskTiming {
     /// streams.
     pub far_solo_ns: f64,
     pub far_queue_ns: f64,
+    /// SSD burst duration on an idle device (the independent model).
+    pub ssd_solo_ns: f64,
     pub ssd_queue_ns: f64,
+    /// Waiting for a free CPU lane across the task's compute stages
+    /// (always 0 with unbounded lanes).
+    pub cpu_queue_ns: f64,
 }
 
 /// Simulated wall-clock of one query through the pipelined scheduler.
@@ -169,18 +201,25 @@ pub struct ServeTiming {
     /// Open-loop arrival instant (0 for the closed batch).
     pub arrival_ns: f64,
     /// Instant the scheduler admitted the query (≥ arrival; admission
-    /// waits when `depth` queries are already in flight).
+    /// waits when `depth` queries are already in flight, when the query's
+    /// tenant is at its quota, or when weighted-fair admission favors
+    /// another tenant).
     pub admit_ns: f64,
     /// Instant the query's final top-k was ready.
     pub done_ns: f64,
     /// The query's idle-device service total on the simulated clock (its
     /// slowest shard task's stage durations + merge, no queueing). For a
     /// monolithic engine at pipeline depth 1 every admission sees idle
-    /// devices, so `done − admit == service_ns` — the depth-1 ==
-    /// sequential contract. (A sharded query's own shard streams still
-    /// share the device, so depth 1 there may carry a small queue term —
-    /// deliberately: one device is the point of the model.)
+    /// devices and idle lanes, so `done − admit == service_ns` — the
+    /// depth-1 == sequential contract. (A sharded query's own shard
+    /// streams still share the device, so depth 1 there may carry a small
+    /// queue term — deliberately: one device is the point of the model.)
     pub service_ns: f64,
+    /// CPU-lane wait of the query's gather/merge stage (always 0 with
+    /// unbounded lanes or merge-free monolithic queries). Per-task stage
+    /// queueing lives in the task timings; merge is the one per-query
+    /// stage, so its lane wait is reported here.
+    pub merge_queue_ns: f64,
 }
 
 impl ServeTiming {
@@ -191,6 +230,20 @@ impl ServeTiming {
     }
 }
 
+/// Per-tenant latency statistics of one pipelined run (populated when
+/// `serve.tenants` is configured).
+#[derive(Clone, Debug, Default)]
+pub struct TenantLat {
+    /// Index into the configured tenant list.
+    pub tenant: usize,
+    pub name: String,
+    pub queries: usize,
+    pub mean_latency_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+}
+
 /// Aggregate simulated-serving report of one pipelined run.
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
@@ -198,6 +251,8 @@ pub struct ServeReport {
     pub depth: usize,
     /// Open-loop arrival rate (0 = closed batch at t = 0).
     pub arrival_qps: f64,
+    /// CPU lanes the schedule was computed with (0 = unbounded).
+    pub cpu_lanes: usize,
     /// Per-query timeline, in query order.
     pub timings: Vec<ServeTiming>,
     /// Completion of the last query (simulated batch makespan).
@@ -207,6 +262,9 @@ pub struct ServeReport {
     pub p50_ns: f64,
     pub p95_ns: f64,
     pub p99_ns: f64,
+    /// Per-tenant `done − arrival` statistics (empty unless tenants are
+    /// configured).
+    pub tenants: Vec<TenantLat>,
 }
 
 impl ServeReport {
@@ -220,12 +278,37 @@ impl ServeReport {
     }
 }
 
-/// Per-query arrival offsets: a closed batch (all at t = 0) when `qps`
-/// is 0, else open-loop arrivals spaced `1e9 / qps` ns apart.
-pub(crate) fn arrival_offsets(nq: usize, qps: f64) -> Vec<f64> {
+/// Per-query arrival offsets. Precedence: an explicit trace replays (and
+/// tiles past its end); else `qps > 0` spreads arrivals per the
+/// configured distribution (uniform gaps, or seeded exponential gaps for
+/// Poisson); else the closed batch (all at t = 0). Pure function of
+/// (`nq`, `qps`, config) — the Poisson gap sequence is seeded, so the
+/// serving timeline stays deterministic across worker counts and hosts.
+pub(crate) fn arrival_offsets(nq: usize, qps: f64, sim: &SimConfig) -> Vec<f64> {
+    if !sim.arrival_trace.is_empty() {
+        let tr = &sim.arrival_trace;
+        let span = *tr.last().unwrap();
+        return (0..nq)
+            .map(|q| tr[q % tr.len()] + (q / tr.len()) as f64 * span)
+            .collect();
+    }
     if qps > 0.0 {
         let gap = 1e9 / qps;
-        (0..nq).map(|q| q as f64 * gap).collect()
+        match sim.arrival_dist {
+            crate::config::ArrivalDist::Uniform => (0..nq).map(|q| q as f64 * gap).collect(),
+            crate::config::ArrivalDist::Poisson => {
+                let mut rng = Rng::new(sim.arrival_seed);
+                let mut t = 0.0f64;
+                (0..nq)
+                    .map(|_| {
+                        let at = t;
+                        // Exponential gap with mean `gap`; 1 - u in (0, 1].
+                        t += -gap * (1.0 - rng.f64()).ln();
+                        at
+                    })
+                    .collect()
+            }
+        }
     } else {
         vec![0.0; nq]
     }
@@ -235,34 +318,28 @@ pub(crate) fn arrival_offsets(nq: usize, qps: f64) -> Vec<f64> {
 // Functional layer: stage-graph execution over the worker pool.
 // ---------------------------------------------------------------------
 
-/// Control state of one in-flight task slot (the heavy buffers live in
-/// the per-slot [`QueryScratch`]).
-struct SlotState {
-    st: StageState,
-    stream: FarStream,
-    task: usize,
-}
-
-/// Run `ntasks` tasks through the stage graph, one in-flight task per
-/// scratch slot, interleaving ready stages across `pool` in waves: every
-/// wave advances each in-flight task by exactly one stage, so stages of
-/// different tasks run concurrently (a just-admitted task's front stage
-/// next to an older task's refinement). Tasks are admitted in index
-/// order as slots free up; results return in task order.
+/// Run `ntasks` tasks through the stage graph in **one dispatch round**:
+/// pool workers claim tasks dynamically, each walking its task through
+/// *all* its stages to completion against the worker's own scratch slot
+/// (the `slot` index [`ThreadPool::dispatch`] hands out is distinct among
+/// concurrent callbacks). Functional stages never block on another
+/// task's state — device reservations belong to the simulated clock —
+/// so the pre-refactor scheme of re-dispatching every in-flight task
+/// once per stage (and parking partial state in slots between waves)
+/// only spun each task through the pool queue four times. The dispatch
+/// round count (now always 1 for a nonempty batch; previously
+/// `~4 × ceil(ntasks / slots)`) is returned alongside the results so
+/// tests can pin the drop.
 ///
 /// `capture` records each task's far-memory stream (for admission-time
 /// scheduling). `task(t)` maps a task index to the system it runs
 /// against and its query slice.
 ///
-/// Functional results are independent of the wave interleaving, the slot
+/// Functional results are independent of the claim order, the slot
 /// count and the worker count: each stage touches only its own task's
 /// state (bit-identity is pinned by `tests/integration_pipelined.rs`).
-///
-/// The caller must hold `scratches` exclusively for the whole call:
-/// in-flight task state parks in a slot *between* waves with the slot
-/// mutex released, so a second concurrent run over the same scratches
-/// would interleave queries within a slot (the engines guard this with a
-/// serve gate; `run_batch` builds per-call scratches).
+/// The engines still serialize whole serving calls behind a serve gate
+/// so concurrent batches don't contend for the same scratch slots.
 pub(crate) fn execute_stage_graph<'a, F>(
     pool: &ThreadPool,
     scratches: &[Mutex<QueryScratch>],
@@ -270,79 +347,44 @@ pub(crate) fn execute_stage_graph<'a, F>(
     ntasks: usize,
     capture: bool,
     task: F,
-) -> Vec<(QueryOutcome, FarStream)>
+) -> (Vec<(QueryOutcome, FarStream)>, usize)
 where
     F: Fn(usize) -> (&'a BuiltSystem, &'a [f32]) + Sync,
 {
-    let cap = scratches.len().min(ntasks).max(1);
-    assert!(!scratches.is_empty(), "need at least one scratch slot");
-    let mut slots: Vec<Mutex<SlotState>> = (0..cap)
-        .map(|_| {
-            Mutex::new(SlotState {
-                st: StageState::new(),
-                stream: FarStream::default(),
-                task: usize::MAX,
-            })
-        })
-        .collect();
-    let mut assigned: Vec<bool> = vec![false; cap];
-    let mut results: Vec<Option<(QueryOutcome, FarStream)>> =
-        (0..ntasks).map(|_| None).collect();
-    let mut next_task = 0usize;
-    let mut wave: Vec<usize> = Vec::with_capacity(cap);
-
-    loop {
-        // Admit tasks (in index order) into free slots.
-        for (s, used) in assigned.iter_mut().enumerate() {
-            if !*used && next_task < ntasks {
-                let slot = slots[s].get_mut().unwrap();
-                slot.task = next_task;
-                slot.st.reset();
-                slot.stream.addrs.clear();
-                *used = true;
-                next_task += 1;
-            }
-        }
-        wave.clear();
-        wave.extend((0..cap).filter(|&s| assigned[s]));
-        if wave.is_empty() {
-            break;
-        }
-
-        // One wave: every in-flight task runs its ready stage, claimed
-        // dynamically across the pool.
-        pool.dispatch(wave.len(), |_lane, i| {
-            let s = wave[i];
-            let mut slot = slots[s].lock().unwrap();
-            let mut scratch = scratches[s].lock().unwrap();
-            let (sys, query) = task(slot.task);
-            let SlotState { st, stream, .. } = &mut *slot;
+    assert!(
+        scratches.len() >= pool.size().min(ntasks.max(1)),
+        "need one scratch slot per concurrent worker"
+    );
+    if ntasks == 0 {
+        return (Vec::new(), 0);
+    }
+    let results: Vec<Mutex<Option<(QueryOutcome, FarStream)>>> =
+        (0..ntasks).map(|_| Mutex::new(None)).collect();
+    pool.dispatch(ntasks, |slot, t| {
+        let mut scratch = scratches[slot].lock().unwrap();
+        let (sys, query) = task(t);
+        let mut st = StageState::new();
+        let mut stream = FarStream::default();
+        while st.stage != Stage::Done {
             run_stage(
                 sys,
                 params,
                 query,
                 &mut scratch,
-                st,
-                if capture { Some(stream) } else { None },
+                &mut st,
+                if capture { Some(&mut stream) } else { None },
             );
-        });
-
-        // Retire completed tasks, freeing their slots.
-        for &s in &wave {
-            let slot = slots[s].get_mut().unwrap();
-            if slot.st.stage == Stage::Done {
-                let topk = std::mem::take(&mut slot.st.topk);
-                let stream = std::mem::take(&mut slot.stream);
-                results[slot.task] =
-                    Some((QueryOutcome { topk, breakdown: slot.st.bd }, stream));
-                assigned[s] = false;
-            }
         }
-    }
-    results
-        .into_iter()
-        .map(|r| r.expect("every task completed"))
-        .collect()
+        *results[t].lock().unwrap() =
+            Some((QueryOutcome { topk: std::mem::take(&mut st.topk), breakdown: st.bd }, stream));
+    });
+    (
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every task completed"))
+            .collect(),
+        1,
+    )
 }
 
 // ---------------------------------------------------------------------
@@ -359,6 +401,8 @@ pub(crate) struct SimInput<'a> {
     pub depth: usize,
     /// Open-loop arrival rate (0 = closed batch).
     pub arrival_qps: f64,
+    /// CPU lanes (0 = unbounded compute).
+    pub cpu_lanes: usize,
     /// Shared device queues (far-memory timeline + per-shard SSD). When
     /// off, every task sees private idle devices and only stage *overlap*
     /// is modeled.
@@ -367,6 +411,11 @@ pub(crate) struct SimInput<'a> {
     /// Per-query gather/merge cost appended after the slowest task
     /// (empty = zero, the monolithic case where rerank lives in the task).
     pub merge_ns: &'a [f64],
+    /// Tenant configuration (empty = one implicit tenant, FIFO admission).
+    pub tenants: &'a [TenantSpec],
+    /// Per-query tenant index (empty = all tenant 0; must index into
+    /// `tenants` otherwise).
+    pub tenant_of: &'a [usize],
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -375,8 +424,21 @@ enum EvKind {
     Arrival(usize),
     /// A task's front stage completed: reserve the far-memory timeline.
     FarReady(usize),
+    /// Record-interleave mode: tentative completion of a task's far
+    /// stream. Re-arbitration on later admissions bumps the version;
+    /// only the latest version fires.
+    FarDone(usize, u32),
+    /// A task's far stream completed and its SW refinement wants a CPU
+    /// lane (bounded lanes only).
+    RefineReady(usize),
     /// A task's refinement completed: reserve the shard's SSD queue.
     SsdReady(usize),
+    /// A task's SSD burst completed and its rerank wants a CPU lane
+    /// (bounded lanes only).
+    RerankReady(usize),
+    /// A query's last task completed and its gather/merge wants a CPU
+    /// lane (bounded lanes only).
+    MergeReady(usize),
     /// A query's slowest task + merge completed: free its admission slot.
     QueryDone(usize),
 }
@@ -409,147 +471,359 @@ impl Ord for Ev {
     }
 }
 
+/// Mutable event-loop state bundled so stage-transition helpers can be
+/// methods instead of closures fighting over borrows.
+struct SimState<'a> {
+    profiles: &'a [TaskProfile],
+    shards: usize,
+    merge_ns: &'a [f64],
+    lanes: LaneServer,
+    task_timing: Vec<TaskTiming>,
+    timings: Vec<ServeTiming>,
+    tasks_left: Vec<usize>,
+    task_done_max: Vec<f64>,
+    /// Per-query max of its tasks' idle-device service totals.
+    service_max: Vec<f64>,
+    heap: BinaryHeap<std::cmp::Reverse<Ev>>,
+    seq: u64,
+}
+
+impl SimState<'_> {
+    fn push(&mut self, t: f64, kind: EvKind) {
+        self.heap.push(std::cmp::Reverse(Ev { t, seq: self.seq, kind }));
+        self.seq += 1;
+    }
+
+    /// Launch task `t`'s front stage at admission instant `now`.
+    fn launch_front(&mut self, t: usize, now: f64) {
+        let dur = self.profiles[t].traversal_ns;
+        if self.lanes.bounded() && dur > 0.0 {
+            let g = self.lanes.admit(dur, now);
+            self.task_timing[t].cpu_queue_ns += g.queue_ns;
+            self.push(g.done_ns, EvKind::FarReady(t));
+        } else {
+            // Unbounded lanes: the pre-lane throughput-device arithmetic,
+            // bit-for-bit.
+            self.push(now + dur, EvKind::FarReady(t));
+        }
+    }
+
+    /// Task `t`'s far stream completed at `far_done`: run refinement.
+    fn after_far(&mut self, t: usize, far_done: f64) {
+        let refine_ns = self.profiles[t].refine_ns;
+        let on_cpu = self.profiles[t].refine_on_cpu;
+        if self.lanes.bounded() && on_cpu && refine_ns > 0.0 {
+            self.push(far_done, EvKind::RefineReady(t));
+        } else {
+            self.push(far_done + refine_ns, EvKind::SsdReady(t));
+        }
+    }
+
+    /// Task `t`'s SSD burst completed at `ssd_done`: run the rerank.
+    fn after_ssd(&mut self, t: usize, ssd_done: f64) {
+        let rerank_ns = self.profiles[t].rerank_ns;
+        if self.lanes.bounded() && rerank_ns > 0.0 {
+            self.push(ssd_done, EvKind::RerankReady(t));
+        } else {
+            self.finish_task(t, ssd_done + rerank_ns);
+        }
+    }
+
+    /// Task `t` fully completed at `task_done`: fold into its query, and
+    /// once the query's last task lands, run the gather/merge.
+    fn finish_task(&mut self, t: usize, task_done: f64) {
+        let pr = &self.profiles[t];
+        let tt = self.task_timing[t];
+        let task_service =
+            pr.traversal_ns + tt.far_solo_ns + pr.refine_ns + tt.ssd_solo_ns + pr.rerank_ns;
+        let q = t / self.shards;
+        self.task_done_max[q] = self.task_done_max[q].max(task_done);
+        self.service_max[q] = self.service_max[q].max(task_service);
+        self.tasks_left[q] -= 1;
+        if self.tasks_left[q] == 0 {
+            let merge = if self.merge_ns.is_empty() { 0.0 } else { self.merge_ns[q] };
+            self.timings[q].service_ns = self.service_max[q] + merge;
+            let done_max = self.task_done_max[q];
+            if self.lanes.bounded() && merge > 0.0 {
+                self.push(done_max, EvKind::MergeReady(q));
+            } else {
+                self.push(done_max + merge, EvKind::QueryDone(q));
+            }
+        }
+    }
+}
+
 /// Run the admission-time schedule (see module docs): a pure,
 /// single-threaded function of its inputs — worker counts never touch it.
-/// Returns per-task device queueing and the per-query serve report.
+/// Returns per-task device/lane queueing and the per-query serve report.
 pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
-    let SimInput { nq, shards, depth, arrival_qps, shared, profiles, merge_ns, .. } = *input;
+    let SimInput {
+        nq,
+        shards,
+        depth,
+        arrival_qps,
+        cpu_lanes,
+        shared,
+        profiles,
+        merge_ns,
+        tenants,
+        tenant_of,
+        ..
+    } = *input;
     let nq_shards = nq * shards;
     assert_eq!(profiles.len(), nq_shards, "one profile per (query, shard) task");
     assert!(merge_ns.is_empty() || merge_ns.len() == nq);
+    assert!(tenant_of.is_empty() || tenant_of.len() == nq);
+    let ntenants = tenants.len().max(1);
+    let tenant = |q: usize| -> usize {
+        if tenant_of.is_empty() {
+            0
+        } else {
+            let t = tenant_of[q];
+            assert!(t < ntenants, "query {q}: tenant tag {t} out of range");
+            t
+        }
+    };
     let depth_cap = if depth == 0 { nq.max(1) } else { depth.min(nq.max(1)) };
-    let arrivals = arrival_offsets(nq, arrival_qps);
+    let arrivals = arrival_offsets(nq, arrival_qps, input.sim);
+    let record_mode = shared && input.sim.stream_interleave == StreamInterleave::Record;
 
     let mut far = TimelineSched::new(input.sim);
     let mut ssd: Vec<SsdQueue> = (0..shards).map(|_| SsdQueue::new(input.sim)).collect();
-    let mut task_timing = vec![TaskTiming::default(); nq_shards];
-    let mut timings = vec![ServeTiming::default(); nq];
-    let mut tasks_left = vec![shards; nq];
-    let mut task_done_max = vec![0.0f64; nq];
-    // Per-query max of its tasks' idle-device service totals.
-    let mut service_max = vec![0.0f64; nq];
-
-    let mut heap: BinaryHeap<std::cmp::Reverse<Ev>> = BinaryHeap::new();
-    let mut seq = 0u64;
-    let mut push = |heap: &mut BinaryHeap<std::cmp::Reverse<Ev>>, t: f64, kind: EvKind| {
-        heap.push(std::cmp::Reverse(Ev { t, seq, kind }));
-        seq += 1;
+    let mut st = SimState {
+        profiles,
+        shards,
+        merge_ns,
+        lanes: LaneServer::new(cpu_lanes),
+        task_timing: vec![TaskTiming::default(); nq_shards],
+        timings: vec![ServeTiming::default(); nq],
+        tasks_left: vec![shards; nq],
+        task_done_max: vec![0.0f64; nq],
+        service_max: vec![0.0f64; nq],
+        heap: BinaryHeap::new(),
+        seq: 0,
     };
     for (q, &at) in arrivals.iter().enumerate() {
-        push(&mut heap, at, EvKind::Arrival(q));
+        st.push(at, EvKind::Arrival(q));
     }
 
-    let mut waiting: VecDeque<usize> = VecDeque::new();
+    // Record-interleave bookkeeping: registration order of tasks on the
+    // round-robin arbiter, per-task completion version, and the latest
+    // re-arbitrated timing (finalized when its FarDone fires).
+    let mut rr_tasks: Vec<usize> = Vec::new();
+    let mut far_ver = vec![0u32; nq_shards];
+    let mut far_latest = vec![StreamTiming::default(); nq_shards];
+    let mut far_finalized = vec![false; nq_shards];
+
+    // Weighted-fair tenant admission state.
+    let mut waiting: Vec<VecDeque<usize>> = vec![VecDeque::new(); ntenants];
+    let mut waiting_total = 0usize;
+    let mut vwork = vec![0.0f64; ntenants];
+    let mut tn_inflight = vec![0usize; ntenants];
     let mut in_flight = 0usize;
     let mut makespan = 0.0f64;
 
-    while let Some(std::cmp::Reverse(ev)) = heap.pop() {
+    while let Some(std::cmp::Reverse(ev)) = st.heap.pop() {
         let now = ev.t;
         match ev.kind {
             EvKind::Arrival(q) => {
-                timings[q].arrival_ns = now;
-                waiting.push_back(q);
+                st.timings[q].arrival_ns = now;
+                waiting[tenant(q)].push_back(q);
+                waiting_total += 1;
             }
             EvKind::FarReady(t) => {
                 let pr = &profiles[t];
-                let far_done = if shared {
-                    let st = far.admit(&pr.stream, now);
-                    task_timing[t].far_solo_ns = st.solo_ns;
-                    task_timing[t].far_queue_ns = st.queue_ns;
-                    st.shared_ns
+                if record_mode && !pr.stream.addrs.is_empty() {
+                    // Register on the round-robin arbiter and re-issue
+                    // tentative completions for every stream the
+                    // re-arbitration may have shifted (never earlier than
+                    // `now` — fairness only delays).
+                    let all = far.admit_interleaved(&pr.stream, now);
+                    rr_tasks.push(t);
+                    for (i, &rt) in rr_tasks.iter().enumerate() {
+                        if far_finalized[rt] {
+                            continue;
+                        }
+                        far_ver[rt] += 1;
+                        far_latest[rt] = all[i];
+                        st.push(all[i].shared_ns.max(now), EvKind::FarDone(rt, far_ver[rt]));
+                    }
+                } else if shared {
+                    let s = far.admit(&pr.stream, now);
+                    st.task_timing[t].far_solo_ns = s.solo_ns;
+                    st.task_timing[t].far_queue_ns = s.queue_ns;
+                    st.after_far(t, s.shared_ns);
                 } else {
-                    task_timing[t].far_solo_ns = pr.far_solo_ns;
-                    now + pr.far_solo_ns
-                };
-                push(&mut heap, far_done + pr.refine_ns, EvKind::SsdReady(t));
+                    st.task_timing[t].far_solo_ns = pr.far_solo_ns;
+                    st.after_far(t, now + pr.far_solo_ns);
+                }
+            }
+            EvKind::FarDone(t, v) => {
+                if v != far_ver[t] {
+                    continue; // superseded by a later re-arbitration
+                }
+                far_finalized[t] = true;
+                let s = far_latest[t];
+                st.task_timing[t].far_solo_ns = s.solo_ns;
+                st.task_timing[t].far_queue_ns = s.queue_ns;
+                st.after_far(t, now);
+            }
+            EvKind::RefineReady(t) => {
+                let g = st.lanes.admit(profiles[t].refine_ns, now);
+                st.task_timing[t].cpu_queue_ns += g.queue_ns;
+                st.push(g.done_ns, EvKind::SsdReady(t));
             }
             EvKind::SsdReady(t) => {
                 let pr = &profiles[t];
                 let (ssd_done, ssd_solo) = if shared {
                     let g = ssd[t % shards].admit(pr.ssd_reads, pr.ssd_bytes, now);
-                    task_timing[t].ssd_queue_ns = g.queue_ns;
+                    st.task_timing[t].ssd_queue_ns = g.queue_ns;
                     (g.done_ns, g.solo_ns)
                 } else {
                     (now + pr.ssd_solo_ns, pr.ssd_solo_ns)
                 };
-                let q = t / shards;
-                let task_done = ssd_done + pr.rerank_ns;
-                task_done_max[q] = task_done_max[q].max(task_done);
-                let task_service = pr.traversal_ns
-                    + task_timing[t].far_solo_ns
-                    + pr.refine_ns
-                    + ssd_solo
-                    + pr.rerank_ns;
-                service_max[q] = service_max[q].max(task_service);
-                tasks_left[q] -= 1;
-                if tasks_left[q] == 0 {
-                    let merge = if merge_ns.is_empty() { 0.0 } else { merge_ns[q] };
-                    timings[q].service_ns = service_max[q] + merge;
-                    push(&mut heap, task_done_max[q] + merge, EvKind::QueryDone(q));
-                }
+                st.task_timing[t].ssd_solo_ns = ssd_solo;
+                st.after_ssd(t, ssd_done);
+            }
+            EvKind::RerankReady(t) => {
+                let g = st.lanes.admit(profiles[t].rerank_ns, now);
+                st.task_timing[t].cpu_queue_ns += g.queue_ns;
+                st.finish_task(t, g.done_ns);
+            }
+            EvKind::MergeReady(q) => {
+                let merge = if merge_ns.is_empty() { 0.0 } else { merge_ns[q] };
+                let g = st.lanes.admit(merge, now);
+                st.timings[q].merge_queue_ns = g.queue_ns;
+                st.push(g.done_ns, EvKind::QueryDone(q));
             }
             EvKind::QueryDone(q) => {
-                timings[q].done_ns = now;
+                st.timings[q].done_ns = now;
                 makespan = makespan.max(now);
                 in_flight -= 1;
+                tn_inflight[tenant(q)] -= 1;
             }
         }
-        // Admit waiting queries into free slots, in arrival order. A
-        // query admitted at `now` launches every shard task's front
-        // stage immediately (the front stage is a throughput device).
-        while in_flight < depth_cap {
-            let Some(q) = waiting.pop_front() else { break };
+        // Admit waiting queries into free slots: weighted-fair across
+        // tenants (least virtual work first, tenant index breaking ties),
+        // FIFO within a tenant, quota-capped tenants skipped. A query
+        // admitted at `now` launches every shard task's front stage
+        // immediately.
+        while in_flight < depth_cap && waiting_total > 0 {
+            let mut best: Option<usize> = None;
+            for tn in 0..ntenants {
+                if waiting[tn].is_empty() {
+                    continue;
+                }
+                let quota = if tenants.is_empty() { 0 } else { tenants[tn].quota };
+                if quota > 0 && tn_inflight[tn] >= quota {
+                    continue;
+                }
+                best = match best {
+                    None => Some(tn),
+                    Some(b) if vwork[tn] < vwork[b] => Some(tn),
+                    b => b,
+                };
+            }
+            let Some(tn) = best else { break };
+            let q = waiting[tn].pop_front().unwrap();
+            waiting_total -= 1;
+            vwork[tn] += 1.0 / if tenants.is_empty() { 1.0 } else { tenants[tn].weight };
+            tn_inflight[tn] += 1;
             in_flight += 1;
-            timings[q].admit_ns = now;
+            st.timings[q].admit_ns = now;
             for s in 0..shards {
-                let t = q * shards + s;
-                push(&mut heap, now + profiles[t].traversal_ns, EvKind::FarReady(t));
+                st.launch_front(q * shards + s, now);
             }
         }
     }
-    debug_assert!(waiting.is_empty() && in_flight == 0);
+    debug_assert!(waiting_total == 0 && in_flight == 0);
 
+    let timings = st.timings;
     let mut lat = LatencyStats::default();
     for t in &timings {
         lat.record(t.latency_ns());
     }
+    // Per-tenant percentiles (only when tenants are configured).
+    let tenant_lat: Vec<TenantLat> = if tenants.is_empty() {
+        Vec::new()
+    } else {
+        (0..ntenants)
+            .map(|tn| {
+                let mut l = LatencyStats::default();
+                for (q, t) in timings.iter().enumerate() {
+                    if tenant(q) == tn {
+                        l.record(t.latency_ns());
+                    }
+                }
+                TenantLat {
+                    tenant: tn,
+                    name: tenants[tn].name.clone(),
+                    queries: l.len(),
+                    mean_latency_ns: l.mean(),
+                    p50_ns: l.p50(),
+                    p95_ns: l.p95(),
+                    p99_ns: l.p99(),
+                }
+            })
+            .collect()
+    };
     let report = ServeReport {
         depth,
         arrival_qps,
+        cpu_lanes,
         makespan_ns: makespan,
         mean_latency_ns: lat.mean(),
         p50_ns: lat.p50(),
         p95_ns: lat.p95(),
         p99_ns: lat.p99(),
+        tenants: tenant_lat,
         timings,
     };
-    (task_timing, report)
+    (st.task_timing, report)
 }
 
 // ---------------------------------------------------------------------
-// Re-schedulable batch profile (depth / arrival sweeps over one pass).
+// Re-schedulable batch profile (depth / arrival / lane / tenant sweeps
+// over one functional pass).
 // ---------------------------------------------------------------------
 
 /// One functional pass over a batch, reusable across `(depth,
-/// arrival_qps)` schedules: benches sweep the pipeline depth over one
-/// set of stage-cost profiles without re-running the functional pass.
-/// Profiles are deterministic functions of the functional results, so
-/// every schedule of the same batch is reproducible bit-for-bit.
+/// arrival_qps)` schedules — and, via the setters, across CPU-lane
+/// counts, arrival distributions/traces, stream-interleave modes and
+/// tenant configurations: benches sweep the whole scheduling space over
+/// one set of stage-cost profiles without re-running the functional
+/// pass. Profiles are deterministic functions of the functional results,
+/// so every schedule of the same batch is reproducible bit-for-bit.
 pub struct BatchProfile {
     sim: SimConfig,
     shared: bool,
+    /// Whether the functional pass captured far-memory streams (it does
+    /// exactly when it ran with the shared timeline on) — shared
+    /// scheduling cannot be turned on later without them.
+    streams_captured: bool,
+    cpu_lanes: usize,
+    tenants: Vec<TenantSpec>,
+    /// Per-query tenant tags (empty = all tenant 0).
+    tenant_of: Vec<usize>,
     outcomes: Vec<QueryOutcome>,
     profiles: Vec<TaskProfile>,
+    /// Dispatch rounds the functional pass took (1 for any nonempty
+    /// batch since the run-to-completion executor; tests pin the drop
+    /// from the old per-stage re-dispatch scheme).
+    waves: usize,
 }
 
 impl BatchProfile {
-    /// Capture a monolithic batch: one task per query.
+    /// Capture a monolithic batch: one task per query. Scheduling knobs
+    /// (lanes, tenants, arrival process) initialize from `cfg`; untagged
+    /// queries round-robin over the configured tenants.
     pub(crate) fn capture(
-        sim: &SimConfig,
+        cfg: &crate::config::SystemConfig,
         shared: bool,
         dim: usize,
         mode: RefineMode,
         results: Vec<(QueryOutcome, FarStream)>,
+        waves: usize,
     ) -> Self {
         let mut outcomes = Vec::with_capacity(results.len());
         let mut profiles = Vec::with_capacity(results.len());
@@ -557,11 +831,86 @@ impl BatchProfile {
             profiles.push(TaskProfile::from_outcome(&out, dim, mode, stream));
             outcomes.push(out);
         }
-        BatchProfile { sim: sim.clone(), shared, outcomes, profiles }
+        let tenants = cfg.serve.tenants.clone();
+        let tenant_of = if tenants.len() > 1 {
+            (0..outcomes.len()).map(|q| q % tenants.len()).collect()
+        } else {
+            Vec::new()
+        };
+        BatchProfile {
+            sim: cfg.sim.clone(),
+            shared,
+            streams_captured: shared,
+            cpu_lanes: cfg.serve.cpu_lanes,
+            tenants,
+            tenant_of,
+            outcomes,
+            profiles,
+            waves,
+        }
     }
 
     pub fn num_queries(&self) -> usize {
         self.outcomes.len()
+    }
+
+    /// Dispatch rounds the functional stage-graph pass took (1 for any
+    /// nonempty batch — each task runs all its stages in one dispatch).
+    pub fn waves(&self) -> usize {
+        self.waves
+    }
+
+    /// Override the CPU lane count for subsequent schedules (0 =
+    /// unbounded).
+    pub fn set_cpu_lanes(&mut self, lanes: usize) {
+        self.cpu_lanes = lanes;
+    }
+
+    /// Toggle the shared device queues for subsequent schedules (off =
+    /// private idle devices; only stage overlap and CPU lanes are
+    /// modeled). Turning sharing *on* requires a profile whose functional
+    /// pass captured far-memory streams (i.e. it ran with
+    /// `sim.shared_timeline = true`) — otherwise every stream would be
+    /// empty and the far stage would silently cost zero.
+    pub fn set_shared_timeline(&mut self, on: bool) {
+        assert!(
+            !on || self.streams_captured,
+            "cannot enable the shared timeline: this profile was captured without \
+             far-memory streams (sim.shared_timeline was off during the functional pass)"
+        );
+        self.shared = on;
+    }
+
+    /// Override the arrival distribution for subsequent schedules.
+    pub fn set_arrival_dist(&mut self, dist: crate::config::ArrivalDist) {
+        self.sim.arrival_dist = dist;
+    }
+
+    /// Override the Poisson arrival seed.
+    pub fn set_arrival_seed(&mut self, seed: u64) {
+        self.sim.arrival_seed = seed;
+    }
+
+    /// Replace the arrival trace (absolute ns offsets, sorted; empty =
+    /// none).
+    pub fn set_arrival_trace(&mut self, trace: Vec<f64>) {
+        self.sim.arrival_trace = trace;
+    }
+
+    /// Override the far-memory stream-interleave discipline.
+    pub fn set_stream_interleave(&mut self, mode: StreamInterleave) {
+        self.sim.stream_interleave = mode;
+    }
+
+    /// Configure tenants + per-query tags for subsequent schedules.
+    /// `tenant_of` must be one tag per query (or empty for all-tenant-0).
+    pub fn set_tenants(&mut self, tenants: Vec<TenantSpec>, tenant_of: Vec<usize>) {
+        assert!(
+            tenant_of.is_empty() || tenant_of.len() == self.outcomes.len(),
+            "one tenant tag per query"
+        );
+        self.tenants = tenants;
+        self.tenant_of = tenant_of;
     }
 
     fn run_sim(&self, depth: usize, arrival_qps: f64) -> (Vec<TaskTiming>, ServeReport) {
@@ -571,15 +920,18 @@ impl BatchProfile {
             shards: 1,
             depth,
             arrival_qps,
+            cpu_lanes: self.cpu_lanes,
             shared: self.shared,
             profiles: &self.profiles,
             merge_ns: &[],
+            tenants: &self.tenants,
+            tenant_of: &self.tenant_of,
         })
     }
 
     fn apply_queue(outs: &mut [QueryOutcome], task_t: &[TaskTiming]) {
         for (o, tt) in outs.iter_mut().zip(task_t) {
-            o.breakdown.queue_ns = tt.far_queue_ns + tt.ssd_queue_ns;
+            o.breakdown.queue_ns = tt.far_queue_ns + tt.ssd_queue_ns + tt.cpu_queue_ns;
         }
     }
 

@@ -60,10 +60,9 @@ pub struct ShardedEngine {
     queries: Vec<f32>,
     pool: ThreadPool,
     scratches: Vec<Mutex<QueryScratch>>,
-    /// Serializes whole serving calls: in-flight stage-graph slot state
-    /// spans waves with the slot mutex released, so concurrent `run*`
-    /// calls on one engine must not interleave (see
-    /// `QueryEngine::serve_gate`).
+    /// Serializes whole serving calls: concurrent `run*` calls on one
+    /// engine would contend for the same scratch slots and interleave
+    /// their pool dispatches (see `QueryEngine::serve_gate`).
     serve_gate: Mutex<()>,
     params: QueryParams,
     cfg: SystemConfig,
@@ -171,6 +170,18 @@ impl ShardedEngine {
         self.cfg.sim.arrival_qps = qps;
     }
 
+    /// Set the CPU lane count of the simulated clock (0 = unbounded)
+    /// without rebuilding shards.
+    pub fn set_cpu_lanes(&mut self, lanes: usize) {
+        self.cfg.serve.cpu_lanes = lanes;
+    }
+
+    /// Set the far-memory stream-interleave discipline without rebuilding
+    /// shards.
+    pub fn set_stream_interleave(&mut self, mode: crate::config::StreamInterleave) {
+        self.cfg.sim.stream_interleave = mode;
+    }
+
     pub fn params(&self) -> &QueryParams {
         &self.params
     }
@@ -224,6 +235,26 @@ impl ShardedEngine {
         params: &QueryParams,
         queries: &[f32],
     ) -> (Vec<QueryOutcome>, ServeReport) {
+        // Untagged queries round-robin over the configured tenants (the
+        // monolithic engine's default too).
+        let ntenants = self.cfg.serve.tenants.len();
+        let tags: Vec<usize> = if ntenants > 1 {
+            let nq = queries.len() / self.dim.max(1);
+            (0..nq).map(|q| q % ntenants).collect()
+        } else {
+            Vec::new()
+        };
+        self.run_serve_tagged(params, queries, &tags)
+    }
+
+    /// [`ShardedEngine::run_serve`] with explicit per-query tenant tags
+    /// (indices into `serve.tenants`; empty = all tenant 0).
+    pub fn run_serve_tagged(
+        &self,
+        params: &QueryParams,
+        queries: &[f32],
+        tenant_of: &[usize],
+    ) -> (Vec<QueryOutcome>, ServeReport) {
         let _gate = self.serve_gate.lock().unwrap();
         let dim = self.dim;
         assert_eq!(queries.len() % dim, 0, "queries must be nq * dim flattened");
@@ -234,10 +265,11 @@ impl ShardedEngine {
 
         // ---- scatter: every (query, shard) task through the stage
         // graph, ready stages interleaved across the pool ----
-        let results = execute_stage_graph(&self.pool, &self.scratches, params, tasks, shared, |t| {
-            let (q, s) = (t / ns, t % ns);
-            (&*self.shards[s], &queries[q * dim..(q + 1) * dim])
-        });
+        let (results, _waves) =
+            execute_stage_graph(&self.pool, &self.scratches, params, tasks, shared, |t| {
+                let (q, s) = (t / ns, t % ns);
+                (&*self.shards[s], &queries[q * dim..(q + 1) * dim])
+            });
 
         // Per-task profiles for the simulated clock. The engine traces
         // shard-local record addresses (`local_id * rec_bytes`); rebase
@@ -301,9 +333,12 @@ impl ShardedEngine {
             shards: ns,
             depth: self.cfg.serve.pipeline_depth,
             arrival_qps: self.cfg.sim.arrival_qps,
+            cpu_lanes: self.cfg.serve.cpu_lanes,
             shared,
             profiles: &profiles,
             merge_ns: &merge_ns,
+            tenants: &self.cfg.serve.tenants,
+            tenant_of,
         });
         if shared {
             for (q, out) in merged_outs.iter_mut().enumerate() {
@@ -315,10 +350,25 @@ impl ShardedEngine {
                 let slice = &task_t[q * ns..(q + 1) * ns];
                 let bd = &mut out.breakdown;
                 bd.far_ns = slice.iter().map(|t| t.far_solo_ns).fold(0.0f64, f64::max);
+                // The gather/merge runs serially after the slowest task,
+                // so its lane wait adds on top of the task-level max.
                 bd.queue_ns = slice
                     .iter()
-                    .map(|t| t.far_queue_ns + t.ssd_queue_ns)
-                    .fold(0.0f64, f64::max);
+                    .map(|t| t.far_queue_ns + t.ssd_queue_ns + t.cpu_queue_ns)
+                    .fold(0.0f64, f64::max)
+                    + report.timings[q].merge_queue_ns;
+            }
+        } else if self.cfg.serve.cpu_lanes > 0 {
+            // Private devices, bounded lanes: compute contention is still
+            // real — charge the slowest shard task's lane wait plus the
+            // serial merge stage's.
+            for (q, out) in merged_outs.iter_mut().enumerate() {
+                let slice = &task_t[q * ns..(q + 1) * ns];
+                out.breakdown.queue_ns = slice
+                    .iter()
+                    .map(|t| t.cpu_queue_ns)
+                    .fold(0.0f64, f64::max)
+                    + report.timings[q].merge_queue_ns;
             }
         }
         (merged_outs, report)

@@ -16,7 +16,10 @@
 //! ([`crate::coordinator::engine::execute_query`]) is the degenerate
 //! walk (run all four steps back to back on one thread); the pipelined
 //! scheduler ([`crate::coordinator::pipelined`]) admits a window of
-//! queries and runs every ready stage of every in-flight query per wave.
+//! queries across the pool, each dispatched query walking all its ready
+//! stages (no functional stage ever blocks on another query, so nothing
+//! is gained by re-dispatching per stage — stage-level *timing* overlap
+//! lives in the simulated clock, not the host walk).
 //!
 //! Functional results are a property of the query alone: no step reads
 //! another query's state, so any interleaving — any pipeline depth, any

@@ -25,12 +25,16 @@
 //! - [`simulator`] — DDR5 DRAM timing, CXL link, SSD queue models (Table I),
 //!   all resettable for scratch reuse. The devices emit per-access
 //!   **service profiles** (`DramAccess`/`LinkAccess`) whose occupancy
-//!   rules are shared with the contention schedulers: the batch timeline
-//!   ([`simulator::SharedTimeline`]), the admission-time timeline
-//!   ([`simulator::TimelineSched`]) and the shared per-shard SSD queue
-//!   ([`simulator::SsdQueue`]) all arbitrate in-flight queries over one
-//!   device state (`sim.shared_timeline`) without mirroring any device
-//!   arithmetic
+//!   rules are shared with the contention schedulers, and every contended
+//!   resource sits behind one generic deterministic **resource server**
+//!   ([`simulator::resource`]: k-server FCFS queue with exact idle
+//!   reduction): the batch timeline ([`simulator::SharedTimeline`]), the
+//!   admission-time timeline ([`simulator::TimelineSched`], FCFS bursts
+//!   or record-level round-robin via `sim.stream_interleave`), the shared
+//!   per-shard SSD queue ([`simulator::SsdQueue`]) and the CPU lane
+//!   server ([`simulator::LaneServer`], `serve.cpu_lanes`) all arbitrate
+//!   in-flight queries over one device state (`sim.shared_timeline`)
+//!   without mirroring any device arithmetic
 //! - [`accel`] — CXL Type-2 refinement accelerator cycle/area/power model,
 //!   including early-exit cycle accounting
 //! - [`runtime`] — PJRT client wrapper; loads `artifacts/*.hlo.txt` (L2/L1;
@@ -41,9 +45,11 @@
 //!   [`coordinator::QueryEngine`] (thread pool + per-slot reusable
 //!   scratch), the **pipelined serving scheduler**
 //!   ([`coordinator::pipelined`]: ready stages of a window of in-flight
-//!   queries interleaved across the pool, far-memory/SSD reservations at
-//!   admission time, `serve.pipeline_depth`, open-loop `sim.arrival_qps`
-//!   with p50/p95/p99 from the timeline — depth 1 is the sequential
+//!   queries interleaved across the pool, far-memory/SSD/CPU-lane
+//!   reservations at admission time, `serve.pipeline_depth`, open-loop
+//!   `sim.arrival_qps` with uniform/Poisson/trace arrivals and
+//!   p50/p95/p99 from the timeline, weighted-fair multi-tenant QoS via
+//!   `serve.tenants` — depth 1 is the sequential
 //!   engine, bit-identical), the per-call `Pipeline` façade, batch
 //!   driving, and the **shard layer**: [`coordinator::ShardedEngine`]
 //!   partitions the corpus into N contiguous-id-range shards (each a full

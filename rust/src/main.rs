@@ -28,10 +28,14 @@ COMMANDS:
   query   --config <toml> [--mode baseline|fatrq-sw|fatrq-hw]
           [--early-exit] [--margin-quantile Q] [--threads N]
           [--shards N] [--shared-timeline] [--pipeline-depth D]
-          [--arrival-qps R]
+          [--arrival-qps R] [--arrival-dist uniform|poisson]
+          [--arrival-trace FILE] [--cpu-lanes L]
+          [--stream-interleave burst|record] [--tenants SPECS]
   bench   --config <toml> [--threads N] [--early-exit] [--margin-quantile Q]
           [--shards N] [--shared-timeline] [--pipeline-depth D]
-          [--arrival-qps R]
+          [--arrival-qps R] [--arrival-dist uniform|poisson]
+          [--arrival-trace FILE] [--cpu-lanes L]
+          [--stream-interleave burst|record] [--tenants SPECS]
   xla     --artifacts <dir>          verify AOT artifacts vs native compute
   help
 
@@ -52,6 +56,21 @@ FLAGS:
   --arrival-qps R       open-loop arrivals at R queries/sec instead of the
                         all-at-t=0 batch; latency percentiles then include
                         admission wait (tail-latency-vs-load)
+  --arrival-dist D      arrival process at --arrival-qps: uniform spacing
+                        or seeded poisson bursts (default uniform)
+  --arrival-trace FILE  replay arrival offsets (ns, one per line, sorted)
+                        from FILE instead of a synthetic process; tiles
+                        past its end
+  --cpu-lanes L         bound the simulated clock's compute to L lanes:
+                        front/SW-refine/rerank/merge stages of in-flight
+                        queries contend for lanes (0 = unbounded, the
+                        throughput-device model)
+  --stream-interleave M far-memory sharing for co-admitted streams: burst
+                        (FCFS, default) or record (round-robin fairness)
+  --tenants SPECS       multi-tenant QoS: comma-separated name:weight[:quota]
+                        (e.g. latency:4,batch:1:8); queries round-robin over
+                        tenants, admission is weighted-fair + quota-capped,
+                        the report gains per-tenant p50/p95/p99
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
@@ -70,7 +89,30 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
         args.get_f64("margin-quantile", cfg.refine.margin_quantile)?;
     cfg.serve.pipeline_depth =
         args.get_usize("pipeline-depth", cfg.serve.pipeline_depth)?;
+    cfg.serve.cpu_lanes = args.get_usize("cpu-lanes", cfg.serve.cpu_lanes)?;
     cfg.sim.arrival_qps = args.get_f64("arrival-qps", cfg.sim.arrival_qps)?;
+    if let Some(d) = args.get("arrival-dist") {
+        cfg.sim.arrival_dist = fatrq::config::ArrivalDist::parse(d)?;
+    }
+    if let Some(path) = args.get("arrival-trace") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read arrival trace {path}: {e}"))?;
+        cfg.sim.arrival_trace = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .map(|l| {
+                l.parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("arrival trace entry `{l}`: {e}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+    }
+    if let Some(m) = args.get("stream-interleave") {
+        cfg.sim.stream_interleave = fatrq::config::StreamInterleave::parse(m)?;
+    }
+    if let Some(t) = args.get("tenants") {
+        cfg.serve.tenants = fatrq::config::TenantSpec::parse_list(t)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -120,14 +162,30 @@ fn print_report(rep: &BatchReport, k: usize, threads: usize, shards: usize) {
     );
     if rep.makespan_ns > 0.0 {
         println!(
-            "serving: depth {}  makespan {:.1} us  ({:.0} qps over the simulated timeline)",
+            "serving: depth {}  lanes {}  makespan {:.1} us  ({:.0} qps over the simulated timeline)",
             if rep.pipeline_depth == 0 {
                 "unbounded".to_string()
             } else {
                 rep.pipeline_depth.to_string()
             },
+            if rep.cpu_lanes == 0 {
+                "unbounded".to_string()
+            } else {
+                rep.cpu_lanes.to_string()
+            },
             rep.makespan_ns / 1e3,
             rep.queries as f64 * 1e9 / rep.makespan_ns
+        );
+    }
+    for t in &rep.tenants {
+        println!(
+            "tenant {:>10}: {:>4} queries  mean {:.1} us  p50 {:.1} us  p95 {:.1} us  p99 {:.1} us",
+            t.name,
+            t.queries,
+            t.mean_latency_ns / 1e3,
+            t.p50_ns / 1e3,
+            t.p95_ns / 1e3,
+            t.p99_ns / 1e3
         );
     }
     let bd = rep.breakdown;
@@ -186,6 +244,11 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         "shared-timeline",
         "pipeline-depth",
         "arrival-qps",
+        "arrival-dist",
+        "arrival-trace",
+        "cpu-lanes",
+        "stream-interleave",
+        "tenants",
     ])?;
     let cfg = load_config(args)?;
     let mode = match args.get("mode") {
@@ -210,6 +273,11 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "shared-timeline",
         "pipeline-depth",
         "arrival-qps",
+        "arrival-dist",
+        "arrival-trace",
+        "cpu-lanes",
+        "stream-interleave",
+        "tenants",
     ])?;
     let cfg = load_config(args)?;
     let threads = args.get_usize("threads", 4)?;

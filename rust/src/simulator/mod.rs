@@ -27,6 +27,12 @@
 //! shared IOPS token server per shard group for the survivor fetches of
 //! all in-flight queries.
 //!
+//! - [`resource`] — the generic deterministic **resource server**: the
+//!   one k-server FCFS admission queue (idle reduction, occupancy replay,
+//!   queue accounting) that the far-memory timeline, the SSD queue and
+//!   the CPU lane server ([`LaneServer`], `serve.cpu_lanes`) all run on;
+//!   devices only supply a [`resource::ServiceModel`].
+//!
 //! All simulators are *latency accounting* models driven by access streams;
 //! they return simulated nanoseconds and keep queue state so sustained
 //! throughput saturates realistically.
@@ -34,12 +40,14 @@
 pub mod cxl;
 pub mod device;
 pub mod dram;
+pub mod resource;
 pub mod ssd;
 pub mod timeline;
 
 pub use cxl::{CxlLink, LinkAccess};
 pub use device::FarMemoryDevice;
 pub use dram::{DramAccess, DramSim};
+pub use resource::{Grant, LaneServer, ResourceServer, ServiceModel};
 pub use ssd::{SsdGrant, SsdQueue, SsdSim};
 pub use timeline::{FarStream, SharedTimeline, StreamTiming, TimelineSched};
 

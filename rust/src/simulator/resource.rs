@@ -1,0 +1,348 @@
+//! The generic deterministic **resource server**: one k-server FCFS
+//! admission queue shared by every contended device in the simulated
+//! clock.
+//!
+//! Before this module the repo carried three ad-hoc shared schedulers —
+//! the far-memory [`TimelineSched`](crate::simulator::TimelineSched),
+//! the per-shard [`SsdQueue`](crate::simulator::SsdQueue), and the
+//! implicit infinite-capacity compute model in
+//! [`crate::coordinator::pipelined`] — each re-implementing the same
+//! pattern: admissions arrive in non-decreasing time order, an idle
+//! device serves a request in exactly its intrinsic (solo) time
+//! bit-for-bit, a busy device replays the request over shared occupancy
+//! state and charges the difference as queueing. [`ResourceServer`]
+//! factors that pattern out; the devices only supply a [`ServiceModel`]:
+//! what occupancy state looks like, how a request replays over it (the
+//! same device-emitted `DramAccess::schedule` / `LinkAccess::schedule`
+//! contract PR 4 established — the occupancy arithmetic stays in exactly
+//! one place per device), and how an idle admission's footprint
+//! translates onto the shared state.
+//!
+//! The invariants every server inherits from the shared core (property-
+//! tested in this module and in `tests/property_invariants.rs`):
+//!
+//! - **FCFS order** — requests are served in admission order; a later
+//!   admission never completes before an earlier one *started* work it
+//!   contends with.
+//! - **idle reduction / batch-1 exact** — a request admitted at or after
+//!   `busy_until` is served in exactly its solo time, `queue_ns == 0`,
+//!   and the occupancy it leaves behind is the solo replay's translated
+//!   to the admission instant in a single add per resource, so no
+//!   incremental float drift can fake a queue term (the depth-1 ==
+//!   sequential contract).
+//! - **work conservation** — greedy occupancy replay never does worse
+//!   than running the admitted requests fully serialized.
+//!
+//! The module also provides the one concrete model that is *new* in this
+//! PR: [`CpuLanes`] / [`LaneServer`], a bounded k-lane compute server for
+//! the front / SW-refine / rerank / merge stages. `lanes == 0` means
+//! unbounded (the throughput-device model the scheduler used before —
+//! reproduced bit-for-bit), any `k >= 1` makes pipeline depth and lane
+//! count trade off realistically while staying worker-count-deterministic
+//! (the server lives entirely inside the pure simulated clock).
+
+use crate::simulator::SimNs;
+
+/// Completion grant of one admitted request.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Grant {
+    /// Intrinsic service time on an idle private device (the independent
+    /// model — what the engine charges in the per-stage breakdown).
+    pub solo_ns: SimNs,
+    /// Absolute completion time on the shared server.
+    pub done_ns: SimNs,
+    /// `done − at − solo`: waiting caused by other in-flight requests.
+    pub queue_ns: SimNs,
+}
+
+/// A deterministic service device behind a shared FCFS queue.
+///
+/// Implementations supply the occupancy state and the replay rule; the
+/// queueing policy (idle reduction, FCFS, queue accounting) lives in
+/// [`ResourceServer`] so it cannot drift between devices.
+pub trait ServiceModel {
+    /// One admitted request (a profiled record stream, an SSD burst, a
+    /// compute-stage duration).
+    type Req: ?Sized;
+    /// Shared occupancy state (bank/channel/link clocks, the IOPS token
+    /// slot, per-lane busy times).
+    type Occ;
+
+    /// Fresh, fully idle occupancy.
+    fn fresh(&self) -> Self::Occ;
+
+    /// Replay `req` over `occ`, no work starting before `at`; returns the
+    /// completion time of the request's last unit. This is the *only*
+    /// mutation path of the occupancy state — both the solo replay and
+    /// the shared replay run it, which is what keeps them bit-consistent.
+    fn replay(&self, req: &Self::Req, occ: &mut Self::Occ, at: SimNs) -> SimNs;
+
+    /// Merge the footprint a solo replay (from t = 0) left in `private`
+    /// into the shared `occ`, translated to absolute time `at`. Called
+    /// only on the idle-admission path, where a single `at +` per
+    /// resource is exact.
+    fn absorb(&self, req: &Self::Req, private: &Self::Occ, occ: &mut Self::Occ, at: SimNs);
+
+    /// Whether `req` carries no work (served instantly, touching nothing).
+    fn is_empty(&self, req: &Self::Req) -> bool;
+
+    /// Instant until which the device counts as *busy* after a request
+    /// completing at `done` (the idle-admission criterion). Defaults to
+    /// the completion time; the SSD token server overrides it with its
+    /// next start slot — bursts contend on IOPS spacing, not on the
+    /// latency tail of in-flight reads.
+    fn busy_after(&self, _occ: &Self::Occ, done: SimNs) -> SimNs {
+        done
+    }
+}
+
+/// The shared k-server FCFS queue over a [`ServiceModel`] (see module
+/// docs). Admissions must come in non-decreasing `at` order — the
+/// deterministic event loop driving every instance guarantees it.
+pub struct ResourceServer<M: ServiceModel> {
+    model: M,
+    occ: M::Occ,
+    /// Latest instant any resource is still committed; admissions at or
+    /// after it see an idle device.
+    busy_until: SimNs,
+}
+
+impl<M: ServiceModel> ResourceServer<M> {
+    pub fn new(model: M) -> Self {
+        let occ = model.fresh();
+        ResourceServer { model, occ, busy_until: 0.0 }
+    }
+
+    pub fn model(&self) -> &M {
+        &self.model
+    }
+
+    /// Intrinsic (idle private device) service time of `req`.
+    pub fn solo(&self, req: &M::Req) -> SimNs {
+        let mut private = self.model.fresh();
+        self.model.replay(req, &mut private, 0.0)
+    }
+
+    /// Admit one request at time `at`; returns its intrinsic duration,
+    /// absolute completion, and queueing delay.
+    pub fn admit(&mut self, req: &M::Req, at: SimNs) -> Grant {
+        if self.model.is_empty(req) {
+            return Grant { solo_ns: 0.0, done_ns: at, queue_ns: 0.0 };
+        }
+        let mut private = self.model.fresh();
+        let solo = self.model.replay(req, &mut private, 0.0);
+        if at >= self.busy_until {
+            // Idle device: served in exactly the intrinsic time; the
+            // occupancy left behind is the solo replay's, translated by a
+            // single add per resource (no incremental drift).
+            self.model.absorb(req, &private, &mut self.occ, at);
+            self.busy_until = self.model.busy_after(&self.occ, at + solo);
+            Grant { solo_ns: solo, done_ns: at + solo, queue_ns: 0.0 }
+        } else {
+            let done = self.model.replay(req, &mut self.occ, at);
+            self.busy_until = self.busy_until.max(self.model.busy_after(&self.occ, done));
+            Grant { solo_ns: solo, done_ns: done, queue_ns: (done - at - solo).max(0.0) }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// CPU lanes: the bounded k-lane compute server.
+// ---------------------------------------------------------------------
+
+/// Service model of a bank of `k` identical compute lanes. A request is a
+/// stage duration (ns); it occupies the earliest-free lane (lowest index
+/// on ties — deterministic) from `max(at, lane_free)` for its duration.
+/// `k == 0` models unbounded lanes: every request starts at `at`, the
+/// throughput-device model the scheduler used before CPU-lane modeling —
+/// reproduced bit-for-bit (`start = at; done = at + dur`, the exact
+/// arithmetic of the old `now + stage_ns` pushes).
+pub struct CpuLanes {
+    lanes: usize,
+}
+
+impl CpuLanes {
+    pub fn new(lanes: usize) -> Self {
+        CpuLanes { lanes }
+    }
+
+    /// Lane count (0 = unbounded).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+}
+
+impl ServiceModel for CpuLanes {
+    type Req = SimNs;
+    type Occ = Vec<SimNs>;
+
+    fn fresh(&self) -> Vec<SimNs> {
+        vec![0.0; self.lanes]
+    }
+
+    fn replay(&self, dur: &SimNs, occ: &mut Vec<SimNs>, at: SimNs) -> SimNs {
+        if occ.is_empty() {
+            // Unbounded lanes: no shared resource, start immediately.
+            return at + *dur;
+        }
+        // Earliest-free lane, lowest index on ties.
+        let mut lane = 0usize;
+        for (i, &free) in occ.iter().enumerate() {
+            if free < occ[lane] {
+                lane = i;
+            }
+        }
+        let start = at.max(occ[lane]);
+        let done = start + *dur;
+        occ[lane] = done;
+        done
+    }
+
+    fn absorb(&self, dur: &SimNs, _private: &Vec<SimNs>, occ: &mut Vec<SimNs>, at: SimNs) {
+        if occ.is_empty() {
+            return;
+        }
+        // Idle admission: every lane is free at `at`; commit the earliest
+        // (lowest-index) lane for exactly the solo window.
+        let mut lane = 0usize;
+        for (i, &free) in occ.iter().enumerate() {
+            if free < occ[lane] {
+                lane = i;
+            }
+        }
+        occ[lane] = occ[lane].max(at + *dur);
+    }
+
+    fn is_empty(&self, dur: &SimNs) -> bool {
+        *dur <= 0.0
+    }
+}
+
+/// The bounded compute-lane server: `ResourceServer<CpuLanes>` with a
+/// duration-based `admit`. `serve.cpu_lanes == 0` (unbounded) makes every
+/// admission start at its request time — bit-for-bit the pre-lane clock.
+pub struct LaneServer {
+    server: ResourceServer<CpuLanes>,
+}
+
+impl LaneServer {
+    /// `lanes == 0` = unbounded.
+    pub fn new(lanes: usize) -> Self {
+        LaneServer { server: ResourceServer::new(CpuLanes::new(lanes)) }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.server.model().lanes()
+    }
+
+    /// Whether the server actually bounds compute (finite lanes).
+    pub fn bounded(&self) -> bool {
+        self.server.model().lanes() > 0
+    }
+
+    /// Admit a compute stage of `dur` ns at time `at`.
+    pub fn admit(&mut self, dur: SimNs, at: SimNs) -> Grant {
+        self.server.admit(&dur, at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_lanes_start_immediately() {
+        let mut s = LaneServer::new(0);
+        assert!(!s.bounded());
+        // Heavy co-admission: with unbounded lanes nothing ever queues and
+        // done == at + dur bit-for-bit.
+        for i in 0..64 {
+            let at = i as f64 * 0.5;
+            let g = s.admit(100.0, at);
+            assert_eq!(g.done_ns, at + 100.0, "request {i}");
+            assert_eq!(g.queue_ns, 0.0, "request {i}");
+            assert_eq!(g.solo_ns, 100.0);
+        }
+    }
+
+    #[test]
+    fn single_lane_serializes_fcfs() {
+        let mut s = LaneServer::new(1);
+        let a = s.admit(100.0, 0.0);
+        assert_eq!((a.done_ns, a.queue_ns), (100.0, 0.0));
+        // Admitted mid-service: waits for the lane.
+        let b = s.admit(50.0, 40.0);
+        assert_eq!(b.done_ns, 150.0);
+        assert_eq!(b.queue_ns, 60.0);
+        // Admitted after drain: idle reduction, exact solo.
+        let c = s.admit(10.0, 200.0);
+        assert_eq!((c.done_ns, c.queue_ns), (210.0, 0.0));
+    }
+
+    #[test]
+    fn k_lanes_admit_k_concurrent_without_queueing() {
+        let mut s = LaneServer::new(3);
+        for i in 0..3 {
+            let g = s.admit(100.0, i as f64);
+            assert_eq!(g.queue_ns, 0.0, "stage {i} must find a free lane");
+            assert_eq!(g.done_ns, i as f64 + 100.0);
+        }
+        // The 4th concurrent stage waits for the earliest lane (frees at
+        // 100).
+        let g = s.admit(10.0, 3.0);
+        assert_eq!(g.done_ns, 110.0);
+        assert_eq!(g.queue_ns, 110.0 - 3.0 - 10.0);
+    }
+
+    #[test]
+    fn zero_duration_requests_are_free() {
+        let mut s = LaneServer::new(1);
+        s.admit(100.0, 0.0);
+        let g = s.admit(0.0, 10.0);
+        assert_eq!((g.solo_ns, g.done_ns, g.queue_ns), (0.0, 10.0, 0.0));
+    }
+
+    #[test]
+    fn lane_grants_are_work_conserving_and_deterministic() {
+        // Makespan with k lanes never exceeds the fully serialized sum and
+        // never beats sum/k; repeated identical runs agree bit-for-bit.
+        let durs: Vec<f64> = (0..40).map(|i| 10.0 + (i * 7 % 13) as f64).collect();
+        let run = |lanes: usize| -> Vec<Grant> {
+            let mut s = LaneServer::new(lanes);
+            durs.iter().map(|&d| s.admit(d, 0.0)).collect()
+        };
+        let total: f64 = durs.iter().sum();
+        for lanes in [1usize, 2, 4] {
+            let g = run(lanes);
+            let makespan = g.iter().map(|x| x.done_ns).fold(0.0f64, f64::max);
+            assert!(makespan <= total + 1e-9, "{lanes} lanes: {makespan} > {total}");
+            assert!(
+                makespan >= total / lanes as f64 - 1e-9,
+                "{lanes} lanes beat the lower bound"
+            );
+            let g2 = run(lanes);
+            for (a, b) in g.iter().zip(&g2) {
+                assert_eq!(a.done_ns, b.done_ns);
+                assert_eq!(a.queue_ns, b.queue_ns);
+            }
+        }
+        // More lanes never slow anything down (monotone in k).
+        let g2 = run(2);
+        let g4 = run(4);
+        for (a, b) in g2.iter().zip(&g4) {
+            assert!(b.done_ns <= a.done_ns + 1e-9);
+        }
+    }
+
+    #[test]
+    fn fcfs_order_is_preserved_on_one_lane() {
+        // On a single lane, completion order == admission order.
+        let mut s = LaneServer::new(1);
+        let mut last_done = 0.0f64;
+        for i in 0..20 {
+            let g = s.admit(5.0 + (i % 3) as f64, i as f64 * 0.1);
+            assert!(g.done_ns >= last_done, "request {i} overtook FCFS order");
+            last_done = g.done_ns;
+        }
+    }
+}

@@ -8,6 +8,7 @@
 //! exactly the refinement I/O the paper eliminates.
 
 use crate::config::SimConfig;
+use crate::simulator::resource::{ResourceServer, ServiceModel};
 use crate::simulator::SimNs;
 
 /// IOPS-limited SSD.
@@ -94,6 +95,55 @@ pub struct SsdGrant {
     pub queue_ns: SimNs,
 }
 
+/// The SSD's [`ServiceModel`]: a burst of `reads` page fetches replays
+/// through the very same [`SsdSim::read`] loop the engine's SSD stage
+/// charges (so `solo_ns` is bit-identical to `Breakdown::ssd_ns`), and
+/// the idle-admission footprint is the private replay's token commitment
+/// translated in one add. The busy criterion is the IOPS token slot, not
+/// the completion time — bursts contend on request spacing, never on the
+/// 45 µs latency tail of in-flight reads.
+struct SsdModel {
+    cfg: SimConfig,
+}
+
+/// One admitted survivor-fetch burst.
+struct SsdBurst {
+    reads: usize,
+    bytes: usize,
+}
+
+impl ServiceModel for SsdModel {
+    type Req = SsdBurst;
+    type Occ = SsdSim;
+
+    fn fresh(&self) -> SsdSim {
+        SsdSim::new(&self.cfg)
+    }
+
+    fn replay(&self, req: &SsdBurst, occ: &mut SsdSim, at: SimNs) -> SimNs {
+        let mut done = at;
+        for _ in 0..req.reads {
+            done = occ.read(req.bytes, at).max(done);
+        }
+        done
+    }
+
+    fn absorb(&self, _req: &SsdBurst, private: &SsdSim, occ: &mut SsdSim, at: SimNs) {
+        // The token server stays committed for the same window the
+        // private replay consumed — translated to `at` in one add so no
+        // float drift can fake a queue term.
+        occ.next_slot = at + private.busy_until();
+    }
+
+    fn is_empty(&self, req: &SsdBurst) -> bool {
+        req.reads == 0
+    }
+
+    fn busy_after(&self, occ: &SsdSim, _done: SimNs) -> SimNs {
+        occ.busy_until()
+    }
+}
+
 /// One *shared* SSD serving every in-flight query of a shard group.
 ///
 /// The engine's per-query model resets a private [`SsdSim`] per query —
@@ -101,53 +151,33 @@ pub struct SsdGrant {
 /// fetches of many in-flight queries drain one device's IOPS budget.
 /// `SsdQueue` keeps the token-rate state across admissions: a burst of
 /// `reads` page fetches admitted at time `at` starts behind whatever the
-/// queue already committed to. The burst's *intrinsic* duration is
-/// replayed on a private scratch device (the same [`SsdSim::read`] loop
-/// the engine charges, so `solo_ns` is bit-identical to
-/// `Breakdown::ssd_ns`), and an idle queue serves it in exactly that time
-/// (`queue_ns == 0`), which is what keeps depth-1 pipelining bit-identical
-/// to the sequential engine.
+/// queue already committed to. Since the resource-server refactor it is
+/// the [`SsdModel`] behind the generic
+/// [`ResourceServer`](crate::simulator::resource::ResourceServer) — the
+/// FCFS idle-reduction policy (an idle queue serves a burst in exactly
+/// its intrinsic time, `queue_ns == 0`, which is what keeps depth-1
+/// pipelining bit-identical to the sequential engine) is the shared core,
+/// only the token-rate arithmetic lives here.
 pub struct SsdQueue {
-    shared: SsdSim,
-    scratch: SsdSim,
+    server: ResourceServer<SsdModel>,
 }
 
 impl SsdQueue {
     pub fn new(cfg: &SimConfig) -> Self {
-        SsdQueue { shared: SsdSim::new(cfg), scratch: SsdSim::new(cfg) }
+        SsdQueue { server: ResourceServer::new(SsdModel { cfg: cfg.clone() }) }
     }
 
-    /// Admit a burst of `reads` random reads of `bytes` each at time `at`.
+    /// Admit a burst of `reads` random reads of `bytes` each at time `at`
+    /// (admissions in non-decreasing `at` order, like every shared
+    /// scheduler in the simulated clock).
     pub fn admit(&mut self, reads: usize, bytes: usize, at: SimNs) -> SsdGrant {
-        // Intrinsic burst duration: private replay from t = 0 — the exact
-        // loop the engine's SSD stage runs.
-        self.scratch.reset();
-        let mut solo = 0.0f64;
-        for _ in 0..reads {
-            solo = self.scratch.read(bytes, 0.0).max(solo);
-        }
-        if reads == 0 {
-            return SsdGrant { solo_ns: 0.0, done_ns: at, queue_ns: 0.0 };
-        }
-        if at >= self.shared.busy_until() {
-            // Idle queue: the burst is served in its intrinsic time, and
-            // the token server stays committed for the same window the
-            // private replay consumed — translated to `at` in one add so
-            // no float drift can fake a queue term.
-            self.shared.next_slot = at + self.scratch.busy_until();
-            SsdGrant { solo_ns: solo, done_ns: at + solo, queue_ns: 0.0 }
-        } else {
-            let mut done = at;
-            for _ in 0..reads {
-                done = self.shared.read(bytes, at).max(done);
-            }
-            SsdGrant { solo_ns: solo, done_ns: done, queue_ns: (done - at - solo).max(0.0) }
-        }
+        let g = self.server.admit(&SsdBurst { reads, bytes }, at);
+        SsdGrant { solo_ns: g.solo_ns, done_ns: g.done_ns, queue_ns: g.queue_ns }
     }
 
     pub fn reset(&mut self) {
-        self.shared.reset();
-        self.scratch.reset();
+        let cfg = self.server.model().cfg.clone();
+        self.server = ResourceServer::new(SsdModel { cfg });
     }
 }
 

@@ -17,6 +17,23 @@
 //!   state persists across admissions, and each stream reserves the
 //!   device at the simulated instant its query reaches the far-refinement
 //!   stage, so front-stage work genuinely overlaps device occupancy.
+//!   Since the resource-server refactor it is a thin profile layer over
+//!   the generic [`ResourceServer`](crate::simulator::resource) — the
+//!   FCFS idle-reduction queueing policy is shared with the SSD queue and
+//!   the CPU lane server, only the far-memory [`ServiceModel`] lives
+//!   here. Two sharing disciplines (`sim.stream_interleave`):
+//!
+//!   - **burst** (default) — [`TimelineSched::admit`]: each stream is
+//!     served as one FCFS burst at its admission instant (the PR-4
+//!     model, unchanged bit-for-bit).
+//!   - **record** — [`TimelineSched::admit_interleaved`]: co-admitted
+//!     in-flight streams take turns record by record, the batch replay's
+//!     round-robin fairness ported to incremental admissions. Every
+//!     admission re-arbitrates all streams still in flight and returns
+//!     their updated completions; completions already *finalized* by the
+//!     event loop keep their committed slots (the driving loop pins them
+//!     with versioned completion events — see
+//!     [`crate::coordinator::pipelined`]).
 //!
 //! Both are built from the same two ingredients, and since the
 //! device-model service-profile refactor neither mirrors any device
@@ -45,11 +62,13 @@
 //!   than running the streams fully serialized;
 //! - **batch-1 reduction** — a stream admitted to an idle device is
 //!   served in exactly its intrinsic time: `shared == solo` bit-for-bit
-//!   and `queue_ns == 0` (the depth-1 == sequential contract).
+//!   and `queue_ns == 0` (the depth-1 == sequential contract) — in both
+//!   interleave modes.
 
 use crate::config::SimConfig;
 use crate::simulator::cxl::LinkAccess;
 use crate::simulator::dram::DramAccess;
+use crate::simulator::resource::{ResourceServer, ServiceModel};
 use crate::simulator::{CxlLink, DramSim, SimNs};
 
 /// One query's far-memory record stream, captured by the engine's
@@ -99,9 +118,17 @@ impl Occupancy {
     }
 }
 
+/// One stream's device-emitted service profile: its records' DRAM access
+/// profiles (phase A classification) plus the constant link profile.
+struct ProfiledStream {
+    recs: Vec<DramAccess>,
+    link: LinkAccess,
+    local: bool,
+}
+
 /// Phase A: classify `stream` on a private row-state machine and emit its
 /// per-record service profiles (plus the constant link profile).
-fn profile_stream(cfg: &SimConfig, stream: &FarStream) -> (Vec<DramAccess>, LinkAccess) {
+fn profile_stream(cfg: &SimConfig, stream: &FarStream) -> ProfiledStream {
     let mut dram = DramSim::new(cfg);
     let link = CxlLink::new(cfg).profile(stream.rec_bytes);
     let recs = stream
@@ -109,27 +136,125 @@ fn profile_stream(cfg: &SimConfig, stream: &FarStream) -> (Vec<DramAccess>, Link
         .iter()
         .map(|&addr| dram.profile(addr, stream.rec_bytes).0)
         .collect();
-    (recs, link)
+    ProfiledStream { recs, link, local: stream.local }
 }
 
-/// Replay one stream's profiles over `occ`, no record starting before
-/// `at`; returns the completion time of the last record.
-fn replay(
-    recs: &[DramAccess],
-    link: LinkAccess,
-    local: bool,
-    occ: &mut Occupancy,
-    at: SimNs,
-) -> SimNs {
-    let mut done_max = at;
-    for r in recs {
-        let dram_done =
-            r.schedule(&mut occ.bank_ready[r.bank], &mut occ.channel_free[r.channel], at);
-        let done = if local { dram_done } else { link.schedule(&mut occ.link_free, dram_done) };
-        done_max = done_max.max(done);
-    }
-    done_max
+/// The far-memory [`ServiceModel`]: replay = FCFS burst over the
+/// bank/channel/link occupancy, absorb = the solo footprint translated to
+/// the admission instant in one add per resource.
+struct FarModel {
+    cfg: SimConfig,
 }
+
+impl ServiceModel for FarModel {
+    type Req = ProfiledStream;
+    type Occ = Occupancy;
+
+    fn fresh(&self) -> Occupancy {
+        Occupancy::new(&self.cfg)
+    }
+
+    fn replay(&self, req: &ProfiledStream, occ: &mut Occupancy, at: SimNs) -> SimNs {
+        let mut done_max = at;
+        for r in &req.recs {
+            let dram_done =
+                r.schedule(&mut occ.bank_ready[r.bank], &mut occ.channel_free[r.channel], at);
+            let done = if req.local {
+                dram_done
+            } else {
+                req.link.schedule(&mut occ.link_free, dram_done)
+            };
+            done_max = done_max.max(done);
+        }
+        done_max
+    }
+
+    fn absorb(&self, req: &ProfiledStream, private: &Occupancy, occ: &mut Occupancy, at: SimNs) {
+        for r in &req.recs {
+            occ.bank_ready[r.bank] =
+                occ.bank_ready[r.bank].max(at + private.bank_ready[r.bank]);
+            occ.channel_free[r.channel] =
+                occ.channel_free[r.channel].max(at + private.channel_free[r.channel]);
+        }
+        if !req.local {
+            occ.link_free = occ.link_free.max(at + private.link_free);
+        }
+    }
+
+    fn is_empty(&self, req: &ProfiledStream) -> bool {
+        req.recs.is_empty()
+    }
+}
+
+/// Phase B core shared by the batch replay and the record-interleaved
+/// admission scheduler: streams take turns, one record per round in
+/// admission order, no record starting before its stream's arrival
+/// instant. A stream joins the rotation only once the device's virtual
+/// time (the latest committed completion) has reached its arrival — a
+/// late stream must never retroactively push records that were served
+/// before it arrived. With every arrival at t = 0 (the batch replay) the
+/// gate never filters, so this is bit-identical to the original batch
+/// round-robin. Returns each stream's absolute completion time.
+fn round_robin_replay(cfg: &SimConfig, entries: &[(&ProfiledStream, SimNs)]) -> Vec<SimNs> {
+    let mut occ = Occupancy::new(cfg);
+    let mut next = vec![0usize; entries.len()];
+    let mut done: Vec<SimNs> = entries.iter().map(|&(_, at)| at).collect();
+    let mut remaining: usize = entries.iter().map(|(p, _)| p.recs.len()).sum();
+    // Virtual device time: streams whose arrival is still in the future
+    // sit out the rotation until the device catches up to them.
+    let mut vt = entries
+        .iter()
+        .filter(|(p, _)| !p.recs.is_empty())
+        .map(|&(_, at)| at)
+        .fold(f64::INFINITY, f64::min);
+    while remaining > 0 {
+        let mut vt_round = vt;
+        let mut progressed = false;
+        for (q, (p, at)) in entries.iter().enumerate() {
+            if next[q] >= p.recs.len() || *at > vt {
+                continue;
+            }
+            let r = &p.recs[next[q]];
+            next[q] += 1;
+            remaining -= 1;
+            progressed = true;
+            let dram_done = r.schedule(
+                &mut occ.bank_ready[r.bank],
+                &mut occ.channel_free[r.channel],
+                *at,
+            );
+            let d = if p.local {
+                dram_done
+            } else {
+                p.link.schedule(&mut occ.link_free, dram_done)
+            };
+            done[q] = done[q].max(d);
+            vt_round = vt_round.max(d);
+        }
+        if progressed {
+            vt = vt_round;
+        } else {
+            // Every remaining stream arrives after vt: jump to the
+            // earliest future arrival (the device sits idle until then).
+            vt = entries
+                .iter()
+                .enumerate()
+                .filter(|(q, (p, _))| next[*q] < p.recs.len())
+                .map(|(_, &(_, at))| at)
+                .fold(f64::INFINITY, f64::min);
+        }
+    }
+    done
+}
+
+/// Snap threshold for an uncontended record-mode completion: recomputing
+/// a lone stream's schedule from its (nonzero) arrival instant can drift
+/// from `at + solo` by float-association ULPs, while genuine contention
+/// is quantized in device cycles (≥ ~7 ns of link serialization, ~14 ns
+/// of CAS). Anything within this window of the intrinsic completion *is*
+/// the intrinsic completion — which keeps the batch-1-exact / depth-1
+/// contracts bit-for-bit in record mode too.
+const RR_SNAP_EPS_NS: f64 = 0.01;
 
 /// The shared batch scheduler (see module docs).
 pub struct SharedTimeline {
@@ -146,114 +271,148 @@ impl SharedTimeline {
     /// (the same profile + occupancy rules `host_read`/`local_read`
     /// resolve to).
     pub fn solo(&self, stream: &FarStream) -> SimNs {
-        let (recs, link) = profile_stream(&self.cfg, stream);
-        replay(&recs, link, stream.local, &mut Occupancy::new(&self.cfg), 0.0)
+        let p = profile_stream(&self.cfg, stream);
+        let model = FarModel { cfg: self.cfg.clone() };
+        let mut occ = model.fresh();
+        model.replay(&p, &mut occ, 0.0)
     }
 
     /// Schedule a batch of streams all arriving at t = 0; returns one
     /// [`StreamTiming`] per stream, in input (arrival) order. Streams are
     /// interleaved round-robin record by record — the fairness model the
-    /// post-hoc batch replay established; the admission-time scheduler
-    /// ([`TimelineSched`]) instead serves each stream as an FCFS burst at
-    /// its arrival instant.
+    /// post-hoc batch replay established and the record-interleave
+    /// admission mode ([`TimelineSched::admit_interleaved`]) shares via
+    /// [`round_robin_replay`]; the burst admission mode
+    /// ([`TimelineSched::admit`]) instead serves each stream as an FCFS
+    /// burst at its arrival instant.
     pub fn schedule(&self, streams: &[FarStream]) -> Vec<StreamTiming> {
         // ---- Phase A: intrinsic profiles + private replay per stream ----
+        let model = FarModel { cfg: self.cfg.clone() };
         let mut profiles = Vec::with_capacity(streams.len());
         let mut timings: Vec<StreamTiming> = Vec::with_capacity(streams.len());
         for stream in streams {
-            let (recs, link) = profile_stream(&self.cfg, stream);
-            let solo = replay(&recs, link, stream.local, &mut Occupancy::new(&self.cfg), 0.0);
-            profiles.push((recs, link));
+            let p = profile_stream(&self.cfg, stream);
+            let solo = model.replay(&p, &mut model.fresh(), 0.0);
+            profiles.push(p);
             timings.push(StreamTiming { solo_ns: solo, shared_ns: 0.0, queue_ns: 0.0 });
         }
 
         // ---- Phase B: shared replay, round-robin in arrival order ----
-        let mut occ = Occupancy::new(&self.cfg);
-        let mut next = vec![0usize; streams.len()];
-        let mut remaining: usize = profiles.iter().map(|(recs, _)| recs.len()).sum();
-        while remaining > 0 {
-            for (q, (recs, link)) in profiles.iter().enumerate() {
-                if next[q] >= recs.len() {
-                    continue;
-                }
-                let r = &recs[next[q]];
-                next[q] += 1;
-                remaining -= 1;
-                let dram_done = r.schedule(
-                    &mut occ.bank_ready[r.bank],
-                    &mut occ.channel_free[r.channel],
-                    0.0,
-                );
-                let done = if streams[q].local {
-                    dram_done
-                } else {
-                    link.schedule(&mut occ.link_free, dram_done)
-                };
-                timings[q].shared_ns = timings[q].shared_ns.max(done);
+        let entries: Vec<(&ProfiledStream, SimNs)> =
+            profiles.iter().map(|p| (p, 0.0)).collect();
+        let done = round_robin_replay(&self.cfg, &entries);
+        for (t, d) in timings.iter_mut().zip(done) {
+            // Same uncontended snap as the record-interleave admissions
+            // (`RR_SNAP_EPS_NS`), so batch replay and record-mode
+            // co-admission agree by construction.
+            if (d - t.solo_ns).abs() <= RR_SNAP_EPS_NS {
+                t.shared_ns = t.solo_ns;
+                t.queue_ns = 0.0;
+            } else {
+                t.shared_ns = d;
+                t.queue_ns = (t.shared_ns - t.solo_ns).max(0.0);
             }
-        }
-        for t in timings.iter_mut() {
-            t.queue_ns = (t.shared_ns - t.solo_ns).max(0.0);
         }
         timings
     }
 }
 
-/// Admission-time shared-device scheduler: occupancy persists across
+/// One record-mode in-flight stream: profile + admission instant +
+/// intrinsic duration.
+struct RrEntry {
+    req: ProfiledStream,
+    at: SimNs,
+    solo: SimNs,
+}
+
+/// Admission-time shared-device scheduler: a far-memory profile layer
+/// over the generic [`ResourceServer`]. Occupancy persists across
 /// [`TimelineSched::admit`] calls, so a stream admitted while earlier
 /// streams still hold banks / the link waits for them (FCFS), while a
 /// stream admitted to an idle device is served in exactly its intrinsic
 /// time — bit-for-bit, which is what keeps depth-1 pipelining identical
 /// to the sequential engine's accounting.
+///
+/// The two admission entry points must not be mixed on one instance:
+/// [`TimelineSched::admit`] is the FCFS burst discipline
+/// (`sim.stream_interleave = "burst"`), [`TimelineSched::admit_interleaved`]
+/// the record-level round-robin discipline (`"record"`).
 pub struct TimelineSched {
     cfg: SimConfig,
-    occ: Occupancy,
-    /// Latest instant any resource is still committed; admissions at or
-    /// after it see an idle device.
-    busy_until: SimNs,
+    server: ResourceServer<FarModel>,
+    /// Record-interleave state: every admitted stream, admission order.
+    rr: Vec<RrEntry>,
 }
 
 impl TimelineSched {
     pub fn new(cfg: &SimConfig) -> Self {
-        TimelineSched { cfg: cfg.clone(), occ: Occupancy::new(cfg), busy_until: 0.0 }
+        TimelineSched {
+            cfg: cfg.clone(),
+            server: ResourceServer::new(FarModel { cfg: cfg.clone() }),
+            rr: Vec::new(),
+        }
     }
 
-    /// Admit one stream at time `at` (admissions must come in
-    /// non-decreasing `at` order — the event loop driving this guarantees
-    /// it). Returns the stream's intrinsic duration, absolute completion
-    /// and queueing delay.
+    /// Admit one stream at time `at` as an FCFS burst (admissions must
+    /// come in non-decreasing `at` order — the event loop driving this
+    /// guarantees it). Returns the stream's intrinsic duration, absolute
+    /// completion and queueing delay.
     pub fn admit(&mut self, stream: &FarStream, at: SimNs) -> StreamTiming {
         if stream.addrs.is_empty() {
             return StreamTiming { solo_ns: 0.0, shared_ns: at, queue_ns: 0.0 };
         }
-        let (recs, link) = profile_stream(&self.cfg, stream);
-        let mut private = Occupancy::new(&self.cfg);
-        let solo = replay(&recs, link, stream.local, &mut private, 0.0);
-        if at >= self.busy_until {
-            // Idle device: served in exactly the intrinsic time. The
-            // occupancy the stream leaves behind is the private replay's,
-            // translated to `at` in a single add per resource — no
-            // incremental float drift can fake a queue term here.
-            for r in &recs {
-                self.occ.bank_ready[r.bank] =
-                    self.occ.bank_ready[r.bank].max(at + private.bank_ready[r.bank]);
-                self.occ.channel_free[r.channel] =
-                    self.occ.channel_free[r.channel].max(at + private.channel_free[r.channel]);
-            }
-            if !stream.local {
-                self.occ.link_free = self.occ.link_free.max(at + private.link_free);
-            }
-            self.busy_until = at + solo;
-            StreamTiming { solo_ns: solo, shared_ns: at + solo, queue_ns: 0.0 }
-        } else {
-            let done = replay(&recs, link, stream.local, &mut self.occ, at);
-            self.busy_until = self.busy_until.max(done);
-            StreamTiming {
-                solo_ns: solo,
-                shared_ns: done,
-                queue_ns: (done - at - solo).max(0.0),
-            }
-        }
+        let p = profile_stream(&self.cfg, stream);
+        let g = self.server.admit(&p, at);
+        StreamTiming { solo_ns: g.solo_ns, shared_ns: g.done_ns, queue_ns: g.queue_ns }
+    }
+
+    /// Record-interleave admission: register `stream` at `at`, then
+    /// re-arbitrate *every* admitted stream with the round-robin
+    /// record-level replay (each stream's records starting no earlier
+    /// than its own admission instant). Returns the updated completion of
+    /// every admitted stream, in admission order — the newly admitted
+    /// stream is the last entry. Callers that already finalized an
+    /// earlier stream's completion (reported it downstream) simply ignore
+    /// its updated entry; the event loop enforces this with versioned
+    /// completion events.
+    ///
+    /// Cost note: every admission re-arbitrates the full admitted set
+    /// from t = 0 (including long-finished streams, whose committed
+    /// occupancy later records must still see), so a record-mode serve of
+    /// N streams is O(N² × records/stream). Fine at bench scale (tens of
+    /// queries, hundreds of records); checkpointing occupancy at
+    /// finalization boundaries is the known fix if serving sweeps ever
+    /// grow past that (see ROADMAP).
+    pub fn admit_interleaved(&mut self, stream: &FarStream, at: SimNs) -> Vec<StreamTiming> {
+        let p = profile_stream(&self.cfg, stream);
+        // The server's solo rule is the one source of intrinsic durations
+        // (an empty stream replays to 0 — no special case needed).
+        let solo = self.server.solo(&p);
+        self.rr.push(RrEntry { req: p, at, solo });
+        let entries: Vec<(&ProfiledStream, SimNs)> =
+            self.rr.iter().map(|e| (&e.req, e.at)).collect();
+        let done = round_robin_replay(&self.cfg, &entries);
+        self.rr
+            .iter()
+            .zip(done)
+            .map(|(e, d)| {
+                if e.req.recs.is_empty() {
+                    return StreamTiming { solo_ns: 0.0, shared_ns: e.at, queue_ns: 0.0 };
+                }
+                // Uncontended completion: snap to the intrinsic time (see
+                // `RR_SNAP_EPS_NS`) so an idle admission is exact.
+                let intrinsic = e.at + e.solo;
+                if (d - intrinsic).abs() <= RR_SNAP_EPS_NS {
+                    StreamTiming { solo_ns: e.solo, shared_ns: intrinsic, queue_ns: 0.0 }
+                } else {
+                    StreamTiming {
+                        solo_ns: e.solo,
+                        shared_ns: d,
+                        queue_ns: (d - e.at - e.solo).max(0.0),
+                    }
+                }
+            })
+            .collect()
     }
 }
 
@@ -435,5 +594,123 @@ mod tests {
         let mut sched = TimelineSched::new(&cfg);
         let t = sched.admit(&FarStream::default(), 42.0);
         assert_eq!((t.solo_ns, t.shared_ns, t.queue_ns), (0.0, 42.0, 0.0));
+    }
+
+    // ---- record-level interleave (`sim.stream_interleave = "record"`) ----
+
+    #[test]
+    fn interleaved_single_admission_is_exactly_solo() {
+        // Batch-1 exact in record mode: one stream on an idle device is
+        // served in its intrinsic time bit-for-bit at any admission
+        // instant.
+        let cfg = SimConfig::default();
+        let tl = SharedTimeline::new(&cfg);
+        let mut rng = Rng::new(53);
+        for &local in &[false, true] {
+            let s = random_stream(&mut rng, 150, local);
+            let solo = tl.solo(&s);
+            let mut sched = TimelineSched::new(&cfg);
+            let t = sched.admit_interleaved(&s, 1234.5);
+            assert_eq!(t.len(), 1);
+            assert_eq!(t[0].solo_ns, solo);
+            assert_eq!(
+                t[0].shared_ns,
+                1234.5 + solo,
+                "record-mode batch of 1 must reduce to the independent model (local={local})"
+            );
+            assert_eq!(t[0].queue_ns, 0.0);
+        }
+    }
+
+    #[test]
+    fn interleaved_coadmission_matches_batch_replay() {
+        // Streams all admitted at t = 0 in record mode must reproduce the
+        // batch replay's round-robin schedule bit-for-bit — it is the
+        // same arbiter.
+        let cfg = SimConfig::default();
+        let tl = SharedTimeline::new(&cfg);
+        let mut rng = Rng::new(61);
+        let streams: Vec<FarStream> =
+            (0..5).map(|i| random_stream(&mut rng, 90, i % 2 == 0)).collect();
+        let batch = tl.schedule(&streams);
+        let mut sched = TimelineSched::new(&cfg);
+        let mut last = Vec::new();
+        for s in &streams {
+            last = sched.admit_interleaved(s, 0.0);
+        }
+        assert_eq!(last.len(), batch.len());
+        for (q, (a, b)) in last.iter().zip(&batch).enumerate() {
+            assert_eq!(a.shared_ns, b.shared_ns, "stream {q}");
+            assert_eq!(a.solo_ns, b.solo_ns, "stream {q}");
+            assert_eq!(a.queue_ns, b.queue_ns, "stream {q}");
+        }
+    }
+
+    #[test]
+    fn interleaved_admissions_are_fairer_than_bursts_to_late_streams() {
+        // The point of record-level fairness: a stream admitted while an
+        // earlier long burst occupies the link completes no later than it
+        // would behind the whole FCFS burst.
+        let cfg = SimConfig::default();
+        let mut rng = Rng::new(67);
+        let a = random_stream(&mut rng, 300, false);
+        let b = random_stream(&mut rng, 40, false);
+        let mut burst = TimelineSched::new(&cfg);
+        let ba = burst.admit(&a, 0.0);
+        let bb = burst.admit(&b, ba.shared_ns * 0.25);
+        let mut rec = TimelineSched::new(&cfg);
+        rec.admit_interleaved(&a, 0.0);
+        let rt = rec.admit_interleaved(&b, ba.shared_ns * 0.25);
+        let rb = rt[1];
+        assert!(
+            rb.shared_ns <= bb.shared_ns + 1e-6,
+            "record interleave must not serve the late stream later than the FCFS burst \
+             ({} vs {})",
+            rb.shared_ns,
+            bb.shared_ns
+        );
+        assert!(
+            rb.queue_ns < bb.queue_ns,
+            "the short late stream must queue less under record interleave \
+             ({} vs {})",
+            rb.queue_ns,
+            bb.queue_ns
+        );
+    }
+
+    #[test]
+    fn interleaved_work_conservation_and_determinism() {
+        let cfg = SimConfig::default();
+        let mut rng = Rng::new(71);
+        let streams: Vec<FarStream> =
+            (0..6).map(|i| random_stream(&mut rng, 80, i % 3 == 0)).collect();
+        let ats: Vec<f64> = (0..streams.len()).map(|i| i as f64 * 5_000.0).collect();
+        let run = || {
+            let mut sched = TimelineSched::new(&cfg);
+            let mut last = Vec::new();
+            for (s, &at) in streams.iter().zip(&ats) {
+                last = sched.admit_interleaved(s, at);
+            }
+            last
+        };
+        let t = run();
+        // Work conservation: the last completion never exceeds the last
+        // arrival plus the fully serialized remaining work.
+        let serialized: f64 = t.iter().map(|x| x.solo_ns).sum();
+        let makespan = t.iter().map(|x| x.shared_ns).fold(0.0f64, f64::max);
+        let last_at = *ats.last().unwrap();
+        assert!(
+            makespan <= last_at + serialized * (1.0 + 1e-9) + 1.0,
+            "record-mode makespan {makespan} not work-conserving"
+        );
+        for (q, x) in t.iter().enumerate() {
+            assert!(x.shared_ns >= ats[q] + x.solo_ns - 1e-9, "stream {q} beat its solo");
+        }
+        // Determinism.
+        let t2 = run();
+        for (a, b) in t.iter().zip(&t2) {
+            assert_eq!(a.shared_ns, b.shared_ns);
+            assert_eq!(a.queue_ns, b.queue_ns);
+        }
     }
 }
