@@ -10,13 +10,15 @@
 //! canary); numbers are noisier but every kernel row still prints.
 
 use fatrq::accel::RefineEngine;
+use fatrq::bench_support::simd_ab;
 use fatrq::config::{
     DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
 };
 use fatrq::coordinator::{build_system, Pipeline, QueryEngine};
 use fatrq::index::{AnnIndex, IndexScratch};
-use fatrq::kernels::pqscan::adc_scan_topk;
+use fatrq::kernels::pqscan::{adc_scan_topk, l2_scan_topk};
 use fatrq::kernels::ternary::{qdot_packed_tab, TernaryQueryLut};
+use fatrq::kernels::{detected_tier, SimdTier};
 use fatrq::quant::pack::{pack_ternary, packed_len, unpack_ternary};
 use fatrq::quant::trq::{qdot_packed, ternary_encode, TrqStore};
 use fatrq::quant::ProductQuantizer;
@@ -219,6 +221,73 @@ fn main() {
     ) / scan_n as f64;
     println!("| IVF scan per-id gather + top-k (96 subq) | {per_id_ns:.0} | old front-stage inner loop |");
     println!("| IVF blocked scan + top-k (96 subq) | {blocked_ns:.0} | contiguous list_codes rows |");
+
+    // --- SIMD dispatch tiers: scalar reference vs runtime-dispatched ---
+    // Each hot kernel timed as dispatched, then with the scalar tier
+    // pinned (`force_scalar_scope`). The tiers are bit-identical, so the
+    // only thing allowed to differ is time: on AVX2 the ratio rows are
+    // runtime-asserted to never regress below the scalar reference. On a
+    // scalar-only process both runs take the same path (ratio ~1, no
+    // assert).
+    let tier = detected_tier();
+    println!("\n# SIMD dispatch (detected tier: {})\n", tier.name());
+    println!("| kernel | scalar ns | dispatched ns | ratio |");
+    println!("|---|---|---|---|");
+    let (adc_s, adc_d) = simd_ab(
+        || {
+            top_scratch.reset(100);
+            adc_scan_topk(
+                black_box(&lut),
+                pq.ksub,
+                pq.m,
+                black_box(&list_rows),
+                &list_ids,
+                &mut dist_scratch,
+                &mut top_scratch,
+            );
+            black_box(top_scratch.len());
+        },
+        (20 / scale).max(1),
+        reps,
+    );
+    let l2_rows = &small[..scan_n * dim];
+    let (l2_s, l2_d) = simd_ab(
+        || {
+            top_scratch.reset(100);
+            l2_scan_topk(black_box(&query), black_box(l2_rows), dim, &mut dist_scratch, &mut top_scratch);
+            black_box(top_scratch.len());
+        },
+        (20 / scale).max(1),
+        reps,
+    );
+    let (tern_s, tern_d) = simd_ab(
+        || {
+            let mut acc = 0.0f32;
+            let mut live = 0usize;
+            for p in &batch {
+                let (d, k) = qdot_packed_tab(black_box(&tab), p);
+                acc += d;
+                live += k;
+            }
+            black_box((acc, live));
+        },
+        (20 / scale).max(1),
+        reps,
+    );
+    for (name, s, d) in [
+        ("adc_scan_topk (500x96 codes)", adc_s, adc_d),
+        ("l2_scan_topk (500x768 f32)", l2_s, l2_d),
+        ("qdot_packed_tab (512x154 B)", tern_s, tern_d),
+    ] {
+        let ratio = s / d.max(1e-9);
+        println!("| {name} | {s:.0} | {d:.0} | {ratio:.2}x |");
+        if tier == SimdTier::Avx2 {
+            assert!(
+                ratio >= 1.0,
+                "{name}: dispatched AVX2 slower than pinned scalar ({ratio:.2}x)"
+            );
+        }
+    }
 
     let est = ProgressiveEstimator::new(&store, Calibration::analytic());
     let cands: Vec<Scored> = (0..320)

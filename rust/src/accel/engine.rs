@@ -15,6 +15,7 @@
 //! by the slowest stage, which for 768-D is the unpack/accumulate stream.
 
 use crate::accel::pqueue::HwPriorityQueue;
+use crate::kernels::dispatch::prefetch_lines;
 use crate::kernels::ternary::TernaryQueryLut;
 use crate::quant::pack::packed_len;
 use crate::quant::trq::TrqStore;
@@ -130,7 +131,14 @@ impl<'a> RefineEngine<'a> {
         queue.reset(queue_len.min(candidates.len()).max(1));
         let stream_cycles = self.cycles_per_candidate(dim);
         let mut cycles: u64 = 0;
-        for c in candidates {
+        for (ci, c) in candidates.iter().enumerate() {
+            // The software twin of the device's record streamer: pull the
+            // next TRQ record toward the cache while the current one is
+            // unpacked/accumulated (ids are arbitrary, so this gather is
+            // invisible to the hardware prefetcher).
+            if let Some(next) = candidates.get(ci + 1) {
+                prefetch_lines(self.est.store.packed_row(next.id as usize));
+            }
             let d = self.est.estimate_with(query, c.id as usize, c.dist, tlut);
             queue.insert(d, c.id);
             // Pipelined: per candidate the engine is busy for the unpack

@@ -213,6 +213,38 @@ pub fn bench_truth(sys: &BuiltSystem) -> Vec<Vec<Scored>> {
     ground_truth(sys, sys.cfg.refine.k)
 }
 
+/// Median wall-clock ns/op over `reps` runs of `iters` calls to `f` —
+/// the timing rule every harness row uses.
+pub fn time_median_ns<F: FnMut()>(mut f: F, iters: usize, reps: usize) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / iters.max(1) as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[reps / 2]
+}
+
+/// A/B a kernel across SIMD tiers: time `f` under the dispatched tier,
+/// then again with the scalar tier pinned
+/// ([`crate::kernels::force_scalar_scope`]). Returns
+/// `(scalar_ns, dispatched_ns)`; the microbench prints the ratio and —
+/// when the detected tier is AVX2 — asserts it never regresses below the
+/// scalar reference (the dispatch layer's perf contract). On a
+/// scalar-only process (non-x86, or `FATRQ_FORCE_SCALAR=1`) both runs
+/// take the same path and the ratio is ~1 by construction.
+pub fn simd_ab<F: FnMut()>(mut f: F, iters: usize, reps: usize) -> (f64, f64) {
+    let dispatched = time_median_ns(&mut f, iters, reps);
+    let scalar = {
+        let _guard = crate::kernels::force_scalar_scope();
+        time_median_ns(&mut f, iters, reps)
+    };
+    (scalar, dispatched)
+}
+
 /// Print a markdown-style table row.
 pub fn row(cells: &[String]) {
     println!("| {} |", cells.join(" | "));

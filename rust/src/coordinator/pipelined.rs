@@ -607,10 +607,13 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         st.push(at, EvKind::Arrival(q));
     }
 
-    // Record-interleave bookkeeping: registration order of tasks on the
-    // round-robin arbiter, per-task completion version, and the latest
-    // re-arbitrated timing (finalized when its FarDone fires).
-    let mut rr_tasks: Vec<usize> = Vec::new();
+    // Record-interleave bookkeeping: the task behind each arbiter
+    // registration (and the inverse map), per-task completion version,
+    // and the latest re-arbitrated timing (finalized when its FarDone
+    // fires — at which point the arbiter is told too, so it can
+    // checkpoint and drop the stream from the rotation).
+    let mut reg_task: Vec<usize> = Vec::new();
+    let mut far_reg = vec![usize::MAX; nq_shards];
     let mut far_ver = vec![0u32; nq_shards];
     let mut far_latest = vec![StreamTiming::default(); nq_shards];
     let mut far_finalized = vec![false; nq_shards];
@@ -635,18 +638,21 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
                 let pr = &profiles[t];
                 if record_mode && !pr.stream.addrs.is_empty() {
                     // Register on the round-robin arbiter and re-issue
-                    // tentative completions for every stream the
+                    // tentative completions for every live stream the
                     // re-arbitration may have shifted (never earlier than
-                    // `now` — fairness only delays).
+                    // `now` — fairness only delays). Finalized streams no
+                    // longer appear in the result.
                     let all = far.admit_interleaved(&pr.stream, now);
-                    rr_tasks.push(t);
-                    for (i, &rt) in rr_tasks.iter().enumerate() {
+                    far_reg[t] = reg_task.len();
+                    reg_task.push(t);
+                    for &(reg, timing) in &all {
+                        let rt = reg_task[reg];
                         if far_finalized[rt] {
                             continue;
                         }
                         far_ver[rt] += 1;
-                        far_latest[rt] = all[i];
-                        st.push(all[i].shared_ns.max(now), EvKind::FarDone(rt, far_ver[rt]));
+                        far_latest[rt] = timing;
+                        st.push(timing.shared_ns.max(now), EvKind::FarDone(rt, far_ver[rt]));
                     }
                 } else if shared {
                     let s = far.admit(&pr.stream, now);
@@ -663,6 +669,10 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
                     continue; // superseded by a later re-arbitration
                 }
                 far_finalized[t] = true;
+                // Tell the arbiter this completion is pinned: it drops
+                // the stream from re-arbitration and, once its records
+                // are committed, checkpoints it out of the rotation.
+                far.finalize(far_reg[t]);
                 let s = far_latest[t];
                 st.task_timing[t].far_solo_ns = s.solo_ns;
                 st.task_timing[t].far_queue_ns = s.queue_ns;

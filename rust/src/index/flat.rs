@@ -1,5 +1,9 @@
 //! Exact exhaustive index — ground truth oracle for recall measurement and
 //! the distortion experiments (Fig 7 uses top-100 exact neighbors).
+//!
+//! Scans go through the blocked, runtime-dispatched
+//! [`crate::kernels::pqscan::l2_scan_topk`] kernel (scalar / AVX2,
+//! bit-identical across tiers — [`crate::kernels::dispatch`]).
 
 use crate::index::{AnnIndex, CandidateList, IndexScratch};
 use crate::kernels::pqscan::l2_scan_topk;

@@ -4,7 +4,10 @@
 //! Codes are duplicated per list in **list order** (`list_codes`, the
 //! FAISS inverted-list layout) so a probe is one blocked
 //! [`crate::kernels::pqscan::adc_scan_topk`] over contiguous rows instead
-//! of a bounds-checked gather per id.
+//! of a bounds-checked gather per id. The scan kernel runtime-dispatches
+//! (scalar / AVX2, bit-identical — [`crate::kernels::dispatch`]) and
+//! software-prefetches upcoming `list_codes` rows while the current row
+//! folds, so the probe walks each list at streaming bandwidth.
 
 use crate::index::scorer::PqScorer;
 use crate::index::{AnnIndex, CandidateList, IndexScratch};

@@ -1,0 +1,189 @@
+//! Runtime SIMD tier selection + software-prefetch helpers.
+//!
+//! Every hot kernel in this crate compiles a scalar implementation on all
+//! targets and, on `x86_64`, an AVX2 twin behind
+//! `#[target_feature(enable = "avx2")]`. Which one runs is decided **once
+//! per process** by [`simd_tier`]:
+//!
+//! 1. `FATRQ_FORCE_SCALAR` — if the env var is set to anything non-empty
+//!    other than `"0"`, the scalar tier is pinned (read once, cached; CI
+//!    runs the whole suite under it on one matrix leg).
+//! 2. `is_x86_feature_detected!("avx2")` — cached in a `OnceLock`, so the
+//!    steady-state cost of dispatch is one relaxed atomic load plus a
+//!    pointer read.
+//!
+//! The AVX2 kernels are written to **mirror the scalar lane structure
+//! exactly** — lane `j` of the vector accumulator holds what scalar lane
+//! `j` holds, combined in the same fixed tree order, with no FMA and no
+//! reassociation — so every tier returns bit-identical f32 results and the
+//! tier choice can never change a ranking (see `kernels/pqscan.rs` and
+//! `kernels/ternary.rs` for the per-kernel contracts).
+//!
+//! Tests that want to compare tiers inside one process use
+//! [`force_scalar_scope`]: the env override is read-once, but the guard's
+//! depth counter is consulted on every [`simd_tier`] call, so a scope
+//! temporarily pins scalar even after AVX2 was detected. Because the tiers
+//! are bit-identical, a scope held by one test thread is harmless to
+//! concurrent tests.
+//!
+//! [`prefetch_read`] / [`prefetch_lines`] wrap `_mm_prefetch` (a baseline
+//! SSE instruction on `x86_64`, so no detection is needed) and compile to
+//! nothing elsewhere; the blocked PQ scan and the far-memory refine loops
+//! use them to overlap the next row/record fetch with the current fold.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// The kernel implementation tiers. `Scalar` is always compiled and always
+/// correct; `Avx2` exists only on `x86_64` builds and is selected at
+/// runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// Portable unrolled-scalar kernels (the reference implementations).
+    Scalar,
+    /// 256-bit `std::arch` kernels, lane-mirroring the scalar structure.
+    Avx2,
+}
+
+impl SimdTier {
+    /// Human-readable tier name (microbench rows print it).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Nesting depth of active [`force_scalar_scope`] guards.
+static FORCED_SCALAR_DEPTH: AtomicUsize = AtomicUsize::new(0);
+
+static TIER: OnceLock<SimdTier> = OnceLock::new();
+
+fn detect() -> SimdTier {
+    if std::env::var("FATRQ_FORCE_SCALAR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+    {
+        return SimdTier::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        return SimdTier::Avx2;
+    }
+    SimdTier::Scalar
+}
+
+/// The tier the dispatched kernels will run at *right now*: scalar while
+/// any [`force_scalar_scope`] guard is alive, otherwise the cached
+/// process-wide detection result.
+#[inline]
+pub fn simd_tier() -> SimdTier {
+    if FORCED_SCALAR_DEPTH.load(Ordering::Relaxed) > 0 {
+        return SimdTier::Scalar;
+    }
+    *TIER.get_or_init(detect)
+}
+
+/// The detection result alone (env override + CPUID), ignoring any active
+/// [`force_scalar_scope`] — what [`simd_tier`] returns outside scopes.
+#[inline]
+pub fn detected_tier() -> SimdTier {
+    *TIER.get_or_init(detect)
+}
+
+/// RAII guard pinning [`simd_tier`] to scalar; see [`force_scalar_scope`].
+pub struct ForceScalarGuard(());
+
+impl Drop for ForceScalarGuard {
+    fn drop(&mut self) {
+        FORCED_SCALAR_DEPTH.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Pin the scalar tier for the lifetime of the returned guard — the
+/// in-process complement of `FATRQ_FORCE_SCALAR` (which is read once and
+/// can't be toggled after the first kernel call). The guard is global, not
+/// thread-local: tiers are bit-identical, so forcing concurrent threads
+/// scalar is a performance detail, never a correctness one.
+pub fn force_scalar_scope() -> ForceScalarGuard {
+    FORCED_SCALAR_DEPTH.fetch_add(1, Ordering::Relaxed);
+    ForceScalarGuard(())
+}
+
+/// Hint the cache that the line holding `r` is about to be read (T0 hint;
+/// no-op off `x86_64`). Prefetch is architecturally a hint on any address,
+/// so taking a reference keeps the helper safe and clippy-clean.
+#[inline(always)]
+pub fn prefetch_read<T: ?Sized>(_r: &T) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch never faults; any address (here a valid reference)
+    // is allowed, and SSE is baseline on x86_64.
+    unsafe {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<{ _MM_HINT_T0 }>(_r as *const T as *const i8);
+    }
+}
+
+/// Prefetch every 64-byte cache line a slice spans (T0 hint; no-op off
+/// `x86_64`). Used for the next `list_codes` / vector row and the next
+/// TRQ record while the current one is being folded.
+#[inline(always)]
+pub fn prefetch_lines<T>(_slice: &[T]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let bytes = std::mem::size_of_val(_slice);
+        let base = _slice.as_ptr() as *const i8;
+        let mut off = 0usize;
+        while off < bytes {
+            // SAFETY: `off < bytes`, so the pointer is inside the slice;
+            // prefetch never faults regardless.
+            unsafe {
+                use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+                _mm_prefetch::<{ _MM_HINT_T0 }>(base.add(off));
+            }
+            off += 64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn force_scalar_scope_pins_and_restores() {
+        {
+            let _guard = force_scalar_scope();
+            assert_eq!(simd_tier(), SimdTier::Scalar);
+            {
+                let _inner = force_scalar_scope();
+                assert_eq!(simd_tier(), SimdTier::Scalar);
+            }
+            assert_eq!(simd_tier(), SimdTier::Scalar);
+        }
+        // Note: another test thread may still hold a guard here, in which
+        // case simd_tier() legitimately stays Scalar — so only assert that
+        // the cached detection result itself is unaffected by scopes.
+        assert_eq!(detected_tier(), detected_tier());
+    }
+
+    #[test]
+    fn detected_tier_is_stable() {
+        assert_eq!(detected_tier(), detected_tier());
+        assert!(!detected_tier().name().is_empty());
+    }
+
+    #[test]
+    fn prefetch_helpers_accept_any_shape() {
+        // Smoke: hints must be safe on tiny, unaligned, and empty inputs.
+        let bytes = [0u8; 200];
+        prefetch_lines(&bytes);
+        prefetch_lines(&bytes[3..7]);
+        prefetch_lines::<u8>(&[]);
+        prefetch_lines(&[1.5f32; 9][1..]);
+        prefetch_read(&bytes[13]);
+        let x = 1.25f32;
+        prefetch_read(&x);
+    }
+}

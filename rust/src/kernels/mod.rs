@@ -1,29 +1,50 @@
 //! Query-time compute kernels — the table-driven, allocation-free hot
-//! loops every per-query path routes through.
+//! loops every per-query path routes through, runtime-dispatched across
+//! SIMD tiers.
 //!
 //! FaTRQ's throughput claim rests on refinement being compute-trivial once
 //! residuals stream from far memory: the accelerator does `⟨q, ē⟩` with a
 //! 256-entry unpack LUT and adds/subs only (paper §IV). This module is the
 //! software twin of that philosophy for the whole query path, in the
-//! FusionANNS/HAVEN tradition of LUT-resident distance kernels and blocked
-//! scans:
+//! FusionANNS/HAVEN tradition of LUT-resident distance kernels, blocked
+//! scans, and vector-width inner loops:
 //!
+//! - [`dispatch`] — **runtime SIMD tier selection**: every kernel ships a
+//!   portable 8-lane scalar reference plus (on `x86_64`) an AVX2 twin
+//!   behind `#[target_feature]`, selected once per process via
+//!   `is_x86_feature_detected!("avx2")` and cached. `FATRQ_FORCE_SCALAR=1`
+//!   (read once) pins the scalar tier; `force_scalar_scope()` does the
+//!   same per-scope inside one process. Software-prefetch helpers
+//!   (`prefetch_lines`, `prefetch_read`) cover the streamed row/record
+//!   loops and compile to nothing off x86_64.
 //! - [`ternary`] — per-query **ternary ADC tables**: a `(dim/5) × 243`
 //!   table of byte-group dot contributions built by base-3 dynamic
 //!   programming turns [`crate::quant::trq::qdot_packed`]'s 5 multiply-adds
 //!   per packed byte into one lookup + add, bit-for-bit identical to the
-//!   byte-LUT fallback.
+//!   byte-LUT fallback; same-dim rebuilds skip the shape setup entirely.
 //! - [`pqscan`] — **blocked ADC / L2 scans**: distance kernels over
 //!   contiguous code (or vector) rows, writing into reusable scratch and
 //!   feeding a [`crate::util::topk::TopK`] per block, instead of per-id
-//!   scoring through slice bounds checks.
+//!   scoring through slice bounds checks; the next row is prefetched
+//!   while the current one folds.
 //!
-//! All kernels are exact drop-ins for the loops they replace: identical
-//! f32 results, so recall, early-exit walks, and determinism contracts are
-//! unaffected by which kernel a path picks.
+//! All kernels are exact drop-ins for the loops they replace **on every
+//! tier**: the AVX2 twins mirror the scalar lane structure (no FMA, no
+//! reassociation, same combine tree), so scalar and AVX2 return
+//! bit-identical f32 results — recall, early-exit walks, and determinism
+//! contracts are unaffected by which tier or kernel a path picks.
 
+pub mod dispatch;
 pub mod pqscan;
 pub mod ternary;
 
-pub use pqscan::{adc_row, adc_scan_block, adc_scan_topk, l2_scan_topk, SCAN_BLOCK};
-pub use ternary::{qdot_packed_tab, TernaryQueryLut, TERNARY_TAB_MIN_CANDIDATES};
+pub use dispatch::{
+    detected_tier, force_scalar_scope, prefetch_lines, prefetch_read, simd_tier, SimdTier,
+};
+pub use pqscan::{
+    adc_row, adc_row_scalar, adc_scan_block, adc_scan_topk, l2_row, l2_row_scalar, l2_scan_topk,
+    SCAN_BLOCK,
+};
+pub use ternary::{
+    qdot_packed_tab, qdot_packed_tab_scalar, TernaryQueryLut, TERNARY_TAB_MIN_CANDIDATES,
+};

@@ -1,4 +1,5 @@
-//! Blocked distance scans over contiguous rows.
+//! Blocked distance scans over contiguous rows, runtime-dispatched across
+//! SIMD tiers.
 //!
 //! The front stage used to score candidates one id at a time through
 //! `QueryScorer::score` — a slice-bounds-checked gather per candidate.
@@ -6,13 +7,34 @@
 //! write distances into reusable scratch, and feed a [`TopK`] per block:
 //! the structure FAISS-class scanners use to win the coarse stage.
 //!
+//! Every kernel here has two implementations selected once per process by
+//! [`crate::kernels::dispatch::simd_tier`]:
+//!
+//! - a portable **8-lane unrolled scalar** path (the reference), and
+//! - on `x86_64`, an **AVX2** path that mirrors the scalar lane structure
+//!   exactly: vector lane `j` accumulates precisely what scalar lane `j`
+//!   accumulates (insert-loads of the 8 LUT entries — gather-free — for
+//!   ADC; `loadu/sub/mul/add` with no FMA for L2), the 8 lanes are
+//!   combined in the same fixed tree order
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, and ragged tails fold
+//!   left-to-right in scalar on both tiers.
+//!
+//! Because the two paths perform the *same f32 operations in the same
+//! order*, they are **bit-identical** — zero ULP drift, not just id-set
+//! agreement — so `FATRQ_FORCE_SCALAR`, CPU generation, and the blocked
+//! vs per-id split can never change a distance or a ranking.
+//!
 //! [`adc_row`] is the one ADC inner loop shared by the per-id path
 //! ([`crate::quant::ProductQuantizer::adc_distance`] delegates here) and
 //! the blocked scans, so the two paths produce identical f32 distances by
-//! construction — blocked IVF/flat results match the per-id results
-//! exactly, candidate for candidate.
+//! construction. The blocked scans additionally software-prefetch the next
+//! code/vector row ([`crate::kernels::dispatch::prefetch_lines`]) while
+//! folding the current one; the AVX2 ADC scan processes rows pairwise
+//! (two independent accumulators) to cover the load latency.
 
-use crate::util::l2_sq;
+use crate::kernels::dispatch::prefetch_lines;
+#[cfg(target_arch = "x86_64")]
+use crate::kernels::dispatch::{simd_tier, SimdTier};
 use crate::util::topk::TopK;
 
 /// Rows per block: big enough to amortize loop overhead, small enough
@@ -20,22 +42,41 @@ use crate::util::topk::TopK;
 pub const SCAN_BLOCK: usize = 64;
 
 /// ADC distance of one `m`-byte code row against a per-query table
-/// (`m × ksub`, row-major). Four interleaved partial sums break the
-/// add-latency chain; the tail keeps the left fold.
+/// (`m × ksub`, row-major). Dispatches to the AVX2 twin when available;
+/// both tiers are bit-identical (see the module docs).
 #[inline]
 pub fn adc_row(lut: &[f32], ksub: usize, code: &[u8]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_tier() == SimdTier::Avx2 {
+        // SAFETY: AVX2 presence verified by simd_tier(); the kernel keeps
+        // bounds-checked indexing (codes may be corrupt), so no memory
+        // contract is delegated to the caller.
+        return unsafe { avx2::adc_row(lut, ksub, code) };
+    }
+    adc_row_scalar(lut, ksub, code)
+}
+
+/// The scalar reference for [`adc_row`]: eight interleaved partial sums
+/// break the add-latency chain; the tail keeps the left fold. Public so
+/// property tests and the microbench can pin the dispatched path to it.
+#[inline]
+pub fn adc_row_scalar(lut: &[f32], ksub: usize, code: &[u8]) -> f32 {
     let m = code.len();
-    let unrolled = m / 4 * 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let unrolled = m / 8 * 8;
+    let mut s = [0f32; 8];
     let mut sub = 0usize;
     while sub < unrolled {
-        s0 += lut[sub * ksub + code[sub] as usize];
-        s1 += lut[(sub + 1) * ksub + code[sub + 1] as usize];
-        s2 += lut[(sub + 2) * ksub + code[sub + 2] as usize];
-        s3 += lut[(sub + 3) * ksub + code[sub + 3] as usize];
-        sub += 4;
+        s[0] += lut[sub * ksub + code[sub] as usize];
+        s[1] += lut[(sub + 1) * ksub + code[sub + 1] as usize];
+        s[2] += lut[(sub + 2) * ksub + code[sub + 2] as usize];
+        s[3] += lut[(sub + 3) * ksub + code[sub + 3] as usize];
+        s[4] += lut[(sub + 4) * ksub + code[sub + 4] as usize];
+        s[5] += lut[(sub + 5) * ksub + code[sub + 5] as usize];
+        s[6] += lut[(sub + 6) * ksub + code[sub + 6] as usize];
+        s[7] += lut[(sub + 7) * ksub + code[sub + 7] as usize];
+        sub += 8;
     }
-    let mut acc = (s0 + s1) + (s2 + s3);
+    let mut acc = ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]));
     while sub < m {
         acc += lut[sub * ksub + code[sub] as usize];
         sub += 1;
@@ -43,12 +84,77 @@ pub fn adc_row(lut: &[f32], ksub: usize, code: &[u8]) -> f32 {
     acc
 }
 
+/// Squared L2 distance between two equal-length rows, dispatched like
+/// [`adc_row`]. This is the scan-row kernel (8 mirrored lanes on every
+/// tier); [`crate::util::l2_sq`] (4-lane) stays the general-purpose
+/// helper for build/encode paths that never touch the dispatcher.
+#[inline]
+pub fn l2_row(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_tier() == SimdTier::Avx2 {
+        // SAFETY: AVX2 verified by simd_tier(); equal lengths asserted
+        // above, which is the loadu bound the kernel relies on.
+        return unsafe { avx2::l2_row(a, b) };
+    }
+    l2_row_scalar(a, b)
+}
+
+/// The scalar reference for [`l2_row`].
+#[inline]
+pub fn l2_row_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let unrolled = n / 8 * 8;
+    let mut s = [0f32; 8];
+    let mut i = 0usize;
+    while i < unrolled {
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        let d4 = a[i + 4] - b[i + 4];
+        let d5 = a[i + 5] - b[i + 5];
+        let d6 = a[i + 6] - b[i + 6];
+        let d7 = a[i + 7] - b[i + 7];
+        s[0] += d0 * d0;
+        s[1] += d1 * d1;
+        s[2] += d2 * d2;
+        s[3] += d3 * d3;
+        s[4] += d4 * d4;
+        s[5] += d5 * d5;
+        s[6] += d6 * d6;
+        s[7] += d7 * d7;
+        i += 8;
+    }
+    let mut acc = ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]));
+    while i < n {
+        let d = a[i] - b[i];
+        acc += d * d;
+        i += 1;
+    }
+    acc
+}
+
 /// ADC-scan a contiguous code block (`out.len()` rows of `m` bytes),
-/// writing one distance per row.
+/// writing one distance per row. Dispatches once for the whole block; the
+/// AVX2 path folds rows pairwise and prefetches the next pair.
 pub fn adc_scan_block(lut: &[f32], ksub: usize, m: usize, codes: &[u8], out: &mut [f32]) {
     debug_assert_eq!(codes.len(), out.len() * m);
-    for (row, slot) in codes.chunks_exact(m).zip(out.iter_mut()) {
-        *slot = adc_row(lut, ksub, row);
+    #[cfg(target_arch = "x86_64")]
+    if simd_tier() == SimdTier::Avx2 {
+        // SAFETY: AVX2 verified by simd_tier(); row slicing stays checked.
+        unsafe { avx2::adc_scan_block(lut, ksub, m, codes, out) };
+        return;
+    }
+    let n = out.len();
+    let mut i = 0usize;
+    while i < n {
+        if i + 1 < n {
+            prefetch_lines(&codes[(i + 1) * m..(i + 2) * m]);
+        }
+        out[i] = adc_row_scalar(lut, ksub, &codes[i * m..(i + 1) * m]);
+        i += 1;
     }
 }
 
@@ -82,8 +188,9 @@ pub fn adc_scan_topk(
 }
 
 /// Blocked exact-L2 scan over contiguous `dim`-wide f32 rows feeding a
-/// [`TopK`]; ids are the row indices. Same per-row [`l2_sq`] and push
-/// order as the naive loop, so results are identical.
+/// [`TopK`]; ids are the row indices. Every row goes through [`l2_row`]
+/// (same kernel on both tiers, next row prefetched), so blocked results
+/// are identical to a per-row [`l2_row`] loop.
 pub fn l2_scan_topk(query: &[f32], data: &[f32], dim: usize, dists: &mut Vec<f32>, top: &mut TopK) {
     if dim == 0 {
         return;
@@ -94,10 +201,7 @@ pub fn l2_scan_topk(query: &[f32], data: &[f32], dim: usize, dists: &mut Vec<f32
     let mut start = 0usize;
     while start < n {
         let bn = (n - start).min(SCAN_BLOCK);
-        for (j, slot) in dists[..bn].iter_mut().enumerate() {
-            let i = start + j;
-            *slot = l2_sq(query, &data[i * dim..(i + 1) * dim]);
-        }
+        l2_scan_block(query, &data[start * dim..], dim, &mut dists[..bn]);
         for (j, &d) in dists[..bn].iter().enumerate() {
             top.push(d, (start + j) as u64);
         }
@@ -105,9 +209,191 @@ pub fn l2_scan_topk(query: &[f32], data: &[f32], dim: usize, dists: &mut Vec<f32
     }
 }
 
+/// One block of the L2 scan: `out.len()` rows starting at `rows[0]`,
+/// dispatched once per block.
+fn l2_scan_block(query: &[f32], rows: &[f32], dim: usize, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_tier() == SimdTier::Avx2 {
+        // SAFETY: AVX2 verified by simd_tier(); each row slice is exactly
+        // query.len() long by construction below.
+        unsafe { avx2::l2_scan_block(query, rows, dim, out) };
+        return;
+    }
+    let n = out.len();
+    let mut i = 0usize;
+    while i < n {
+        if i + 1 < n {
+            prefetch_lines(&rows[(i + 1) * dim..(i + 2) * dim]);
+        }
+        out[i] = l2_row_scalar(query, &rows[i * dim..(i + 1) * dim]);
+        i += 1;
+    }
+}
+
+/// AVX2 twins of the scalar kernels above. Each mirrors the scalar lane
+/// structure exactly (see the module docs), so results are bit-identical;
+/// `unsafe` here is only the `#[target_feature]` calling contract — all
+/// slice indexing stays bounds-checked.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::prefetch_lines;
+    use std::arch::x86_64::*;
+
+    /// Insert-load the 8 LUT entries for code positions `sub..sub+8`.
+    /// `_mm256_set_ps` takes lanes high-to-low, so vector lane `j` holds
+    /// entry `sub + j` — the slot scalar lane `j` accumulates. Indexing is
+    /// bounds-checked: corrupt code bytes (≥ ksub) panic exactly like the
+    /// scalar path instead of reading out of the table.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn lut_gather8(lut: &[f32], ksub: usize, code: &[u8], sub: usize) -> __m256 {
+        _mm256_set_ps(
+            lut[(sub + 7) * ksub + code[sub + 7] as usize],
+            lut[(sub + 6) * ksub + code[sub + 6] as usize],
+            lut[(sub + 5) * ksub + code[sub + 5] as usize],
+            lut[(sub + 4) * ksub + code[sub + 4] as usize],
+            lut[(sub + 3) * ksub + code[sub + 3] as usize],
+            lut[(sub + 2) * ksub + code[sub + 2] as usize],
+            lut[(sub + 1) * ksub + code[sub + 1] as usize],
+            lut[sub * ksub + code[sub] as usize],
+        )
+    }
+
+    /// Combine 8 lanes in the scalar tree order — the one reduction the
+    /// scalar path performs, applied to identical lane values.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn combine_lanes(v: __m256) -> f32 {
+        let mut s = [0f32; 8];
+        _mm256_storeu_ps(s.as_mut_ptr(), v);
+        ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))
+    }
+
+    /// AVX2 [`super::adc_row_scalar`] twin (bit-identical).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn adc_row(lut: &[f32], ksub: usize, code: &[u8]) -> f32 {
+        let m = code.len();
+        let unrolled = m / 8 * 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut sub = 0usize;
+        while sub < unrolled {
+            acc = _mm256_add_ps(acc, lut_gather8(lut, ksub, code, sub));
+            sub += 8;
+        }
+        let mut out = combine_lanes(acc);
+        while sub < m {
+            out += lut[sub * ksub + code[sub] as usize];
+            sub += 1;
+        }
+        out
+    }
+
+    /// Two rows folded in one loop (independent accumulators hide the
+    /// insert-load latency); each result is exactly [`adc_row`]'s.
+    #[target_feature(enable = "avx2")]
+    unsafe fn adc_row_pair(lut: &[f32], ksub: usize, a: &[u8], b: &[u8]) -> (f32, f32) {
+        let m = a.len();
+        debug_assert_eq!(b.len(), m);
+        let unrolled = m / 8 * 8;
+        let mut acc_a = _mm256_setzero_ps();
+        let mut acc_b = _mm256_setzero_ps();
+        let mut sub = 0usize;
+        while sub < unrolled {
+            acc_a = _mm256_add_ps(acc_a, lut_gather8(lut, ksub, a, sub));
+            acc_b = _mm256_add_ps(acc_b, lut_gather8(lut, ksub, b, sub));
+            sub += 8;
+        }
+        let mut da = combine_lanes(acc_a);
+        let mut db = combine_lanes(acc_b);
+        while sub < m {
+            da += lut[sub * ksub + a[sub] as usize];
+            db += lut[sub * ksub + b[sub] as usize];
+            sub += 1;
+        }
+        (da, db)
+    }
+
+    /// AVX2 block scan: rows pairwise, the next pair's lines prefetched
+    /// while the current pair folds.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn adc_scan_block(
+        lut: &[f32],
+        ksub: usize,
+        m: usize,
+        codes: &[u8],
+        out: &mut [f32],
+    ) {
+        let n = out.len();
+        let mut i = 0usize;
+        while i + 2 <= n {
+            if i + 2 < n {
+                let pf_end = codes.len().min((i + 4) * m);
+                prefetch_lines(&codes[(i + 2) * m..pf_end]);
+            }
+            let (d0, d1) =
+                adc_row_pair(lut, ksub, &codes[i * m..(i + 1) * m], &codes[(i + 1) * m..(i + 2) * m]);
+            out[i] = d0;
+            out[i + 1] = d1;
+            i += 2;
+        }
+        if i < n {
+            out[i] = adc_row(lut, ksub, &codes[i * m..(i + 1) * m]);
+        }
+    }
+
+    /// AVX2 [`super::l2_row_scalar`] twin (bit-identical): `loadu`, `sub`,
+    /// `mul`, `add` — deliberately no FMA, which would contract `d*d + s`
+    /// and change the rounding vs the scalar path.
+    ///
+    /// # Safety
+    /// Requires AVX2 and `a.len() == b.len()` (the unaligned loads read
+    /// `i..i+8` from both slices).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn l2_row(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let unrolled = n / 8 * 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i < unrolled {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            let d = _mm256_sub_ps(va, vb);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+            i += 8;
+        }
+        let mut out = combine_lanes(acc);
+        while i < n {
+            let d = a[i] - b[i];
+            out += d * d;
+            i += 1;
+        }
+        out
+    }
+
+    /// AVX2 L2 block scan with next-row prefetch.
+    ///
+    /// # Safety
+    /// Requires AVX2 and `query.len() == dim` with `rows` holding at least
+    /// `out.len() * dim` f32s.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn l2_scan_block(query: &[f32], rows: &[f32], dim: usize, out: &mut [f32]) {
+        let n = out.len();
+        let mut i = 0usize;
+        while i < n {
+            if i + 1 < n {
+                prefetch_lines(&rows[(i + 1) * dim..(i + 2) * dim]);
+            }
+            out[i] = l2_row(query, &rows[i * dim..(i + 1) * dim]);
+            i += 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::dispatch::force_scalar_scope;
     use crate::util::rng::Rng;
 
     fn fixture(n: usize, m: usize, ksub: usize, seed: u64) -> (Vec<f32>, Vec<u8>) {
@@ -128,6 +414,52 @@ mod tests {
                 "m {m}: {got} vs {seq}"
             );
         }
+    }
+
+    #[test]
+    fn dispatched_adc_row_is_bit_identical_to_scalar() {
+        // The tentpole contract: whatever tier simd_tier() picked, the
+        // dispatched kernel equals the scalar reference bit-for-bit.
+        for m in [1usize, 5, 7, 8, 9, 17, 64, 96, 101] {
+            let (lut, codes) = fixture(1, m, 16, 1000 + m as u64);
+            assert_eq!(
+                adc_row(&lut, 16, &codes),
+                adc_row_scalar(&lut, 16, &codes),
+                "m {m}"
+            );
+        }
+    }
+
+    #[test]
+    fn dispatched_l2_row_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(123);
+        for dim in [1usize, 5, 8, 17, 24, 64, 768, 769] {
+            let mut a = vec![0f32; dim + 3];
+            let mut b = vec![0f32; dim + 3];
+            rng.fill_gaussian(&mut a);
+            rng.fill_gaussian(&mut b);
+            // Unaligned starts: subslices at odd offsets.
+            assert_eq!(l2_row(&a[..dim], &b[..dim]), l2_row_scalar(&a[..dim], &b[..dim]));
+            assert_eq!(
+                l2_row(&a[3..3 + dim], &b[1..1 + dim]),
+                l2_row_scalar(&a[3..3 + dim], &b[1..1 + dim]),
+                "dim {dim} unaligned"
+            );
+        }
+    }
+
+    #[test]
+    fn force_scalar_scope_matches_dispatched_scans() {
+        let (n, m, ksub) = (150usize, 12usize, 16usize);
+        let (lut, codes) = fixture(n, m, ksub, 42);
+        let mut out_dispatched = vec![0f32; n];
+        adc_scan_block(&lut, ksub, m, &codes, &mut out_dispatched);
+        let mut out_forced = vec![0f32; n];
+        {
+            let _guard = force_scalar_scope();
+            adc_scan_block(&lut, ksub, m, &codes, &mut out_forced);
+        }
+        assert_eq!(out_dispatched, out_forced);
     }
 
     #[test]
@@ -186,8 +518,27 @@ mod tests {
         let blocked = top.take_sorted();
         let mut top2 = TopK::new(15);
         for i in 0..n {
-            top2.push(l2_sq(&q, &data[i * dim..(i + 1) * dim]), i as u64);
+            top2.push(l2_row(&q, &data[i * dim..(i + 1) * dim]), i as u64);
         }
         assert_eq!(blocked, top2.take_sorted());
+    }
+
+    #[test]
+    fn l2_row_agrees_with_util_l2_sq_within_ulp_budget() {
+        // l2_row regroups util::l2_sq's 4-lane sum into 8 lanes, so the two
+        // are not bit-equal in general — but they must agree to float
+        // tolerance (and exactly at dims < 8, where both take the same
+        // scalar tail fold with zero unrolled lanes... for dims < 4).
+        let mut rng = Rng::new(9);
+        for dim in [2usize, 3, 24, 768] {
+            let a: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            let b: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            let x = l2_row(&a, &b);
+            let y = crate::util::l2_sq(&a, &b);
+            assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0), "dim {dim}: {x} vs {y}");
+            if dim < 4 {
+                assert_eq!(x, y, "dim {dim}: tail-only paths must be identical");
+            }
+        }
     }
 }

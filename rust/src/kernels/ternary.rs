@@ -17,12 +17,28 @@
 //! **Build cost** is O(groups × 243) via base-3 dynamic programming — each
 //! entry extends a one-trit-shorter prefix with a single add, not 5 FMAs
 //! from scratch — so a 768-D table costs ~56k adds, amortized after a few
-//! dozen candidates ([`TERNARY_TAB_MIN_CANDIDATES`]). Below the threshold
-//! callers keep the byte-LUT fallback; because the two kernels follow the
-//! same summation-order contract (see `qdot_packed`), results are
-//! bit-for-bit identical in f32 either way and the threshold can never
-//! change a ranking.
+//! dozen candidates ([`TERNARY_TAB_MIN_CANDIDATES`]). Consecutive builds
+//! for the same `dim` (the steady serving state) skip the clear+resize
+//! entirely: the DP plus the dead-tail copies plus the 243..256 fill
+//! overwrite **every** entry, so [`TernaryQueryLut::build`] only fills
+//! values once the dim-dependent shape (group count, ragged-tail split) is
+//! cached in the struct. Below the candidate threshold callers keep the
+//! byte-LUT fallback; because the two kernels follow the same
+//! summation-order contract (see `qdot_packed`), results are bit-for-bit
+//! identical in f32 either way and the threshold can never change a
+//! ranking.
+//!
+//! The **fold** ([`qdot_packed_tab`]) is runtime-dispatched like the
+//! pqscan kernels: the scalar reference keeps eight interleaved
+//! accumulator lanes (`acc[i & 7]`), and the AVX2 twin mirrors those
+//! lanes in one 256-bit register — 8 packed bytes unpacked per iteration
+//! from a single `u64` load, lane `j` accumulating exactly what scalar
+//! lane `j` accumulates, same fixed combine tree, scalar tail continuing
+//! the stored lanes — so the tiers are **bit-identical** (zero ULP
+//! drift) and `FATRQ_FORCE_SCALAR` can never change a result.
 
+#[cfg(target_arch = "x86_64")]
+use crate::kernels::dispatch::{simd_tier, SimdTier};
 use crate::quant::pack::{decode_lut, packed_len, TRITS_PER_BYTE};
 
 /// Candidate count below which building the per-query table costs more
@@ -36,17 +52,24 @@ pub const TERNARY_TAB_MIN_CANDIDATES: usize = 32;
 const ROW: usize = 256;
 
 /// A per-query ternary ADC table, reusable across queries (lives in
-/// per-worker scratch; steady state allocates nothing).
+/// per-worker scratch; steady state allocates nothing, and same-dim
+/// rebuilds skip even the clear+resize — only table values are written).
 #[derive(Clone, Debug, Default)]
 pub struct TernaryQueryLut {
     dim: usize,
-    /// `packed_len(dim) × ROW` byte-group dot contributions.
+    /// `packed_len(dim)` — cached so same-dim rebuilds skip the shape
+    /// computation along with the resize.
+    groups: usize,
+    /// Live trits in the last group (`TRITS_PER_BYTE` when `dim` is a
+    /// multiple of 5; 0 only when `dim == 0`).
+    tail_live: usize,
+    /// `groups × ROW` byte-group dot contributions.
     table: Vec<f32>,
 }
 
 impl TernaryQueryLut {
     pub fn new() -> Self {
-        TernaryQueryLut { dim: 0, table: Vec::new() }
+        TernaryQueryLut::default()
     }
 
     /// Dimensionality of the query the table was last built for.
@@ -62,7 +85,11 @@ impl TernaryQueryLut {
         (self.table.as_ptr() as usize, self.table.capacity())
     }
 
-    /// (Re)build the table for `q`, reusing the existing allocation.
+    /// (Re)build the table for `q`, reusing the existing allocation. When
+    /// `q.len()` matches the previous build, the dim-dependent setup
+    /// (group count, tail split, clear+resize) is skipped entirely — the
+    /// fill loops below overwrite every entry, so `build` degenerates to
+    /// pure value writes on the steady path.
     ///
     /// Base-3 DP per 5-dim group: level `l` extends every length-`l`
     /// prefix sum with `(d − 1)·q[l]` for digit `d ∈ {0,1,2}` — the same
@@ -71,14 +98,17 @@ impl TernaryQueryLut {
     /// the two kernels bit-for-bit identical.
     pub fn build(&mut self, q: &[f32]) {
         let dim = q.len();
-        let groups = packed_len(dim);
-        self.dim = dim;
-        self.table.clear();
-        self.table.resize(groups * ROW, 0.0);
+        if dim != self.dim || self.table.len() != self.groups * ROW {
+            self.dim = dim;
+            self.groups = packed_len(dim);
+            self.tail_live = dim - (self.groups.saturating_sub(1)) * TRITS_PER_BYTE;
+            self.table.clear();
+            self.table.resize(self.groups * ROW, 0.0);
+        }
         let lut = decode_lut();
-        for g in 0..groups {
+        for g in 0..self.groups {
             let d0 = g * TRITS_PER_BYTE;
-            let live = (dim - d0).min(TRITS_PER_BYTE);
+            let live = if g + 1 == self.groups { self.tail_live } else { TRITS_PER_BYTE };
             let qs = &q[d0..d0 + live];
             let row = &mut self.table[g * ROW..(g + 1) * ROW];
             // Level 0: the three length-1 prefixes t·q0 (the same
@@ -134,10 +164,26 @@ impl TernaryQueryLut {
 /// prebuilt [`TernaryQueryLut`]. Bit-for-bit identical in f32 to
 /// [`crate::quant::trq::qdot_packed`] on valid codes (trailing trits of a
 /// ragged tail byte packed as 0) — same group contributions, same eight
-/// interleaved accumulator lanes, same final combine.
+/// interleaved accumulator lanes, same final combine — and bit-identical
+/// across SIMD tiers (the AVX2 twin mirrors the scalar lanes; see the
+/// module docs).
 #[inline]
 pub fn qdot_packed_tab(tab: &TernaryQueryLut, packed: &[u8]) -> (f32, usize) {
     debug_assert_eq!(packed.len(), packed_len(tab.dim));
+    #[cfg(target_arch = "x86_64")]
+    if simd_tier() == SimdTier::Avx2 {
+        // SAFETY: AVX2 verified by simd_tier(); the kernel slices the
+        // table to packed.len()·ROW up front, so its unchecked reads are
+        // provably in-bounds (byte < ROW).
+        return unsafe { avx2::qdot_packed_tab(tab, packed) };
+    }
+    qdot_packed_tab_scalar(tab, packed)
+}
+
+/// The scalar reference for [`qdot_packed_tab`]: eight interleaved
+/// accumulator lanes rotated per byte, fixed combine tree.
+#[inline]
+pub fn qdot_packed_tab_scalar(tab: &TernaryQueryLut, packed: &[u8]) -> (f32, usize) {
     let kcount = &decode_lut().kcount;
     let table = &tab.table[..];
     let mut acc = [0.0f32; 8];
@@ -152,9 +198,87 @@ pub fn qdot_packed_tab(tab: &TernaryQueryLut, packed: &[u8]) -> (f32, usize) {
     )
 }
 
+/// AVX2 twin of [`qdot_packed_tab_scalar`]: 8 packed bytes per iteration
+/// unpacked from one `u64` load, vector lane `j` accumulating exactly
+/// what scalar lane `acc[j]` accumulates (no reassociation, no FMA), so
+/// the result is bit-identical. The table is pre-sliced to
+/// `packed.len() × ROW`, which makes every `(i << 8) | byte` index
+/// provably in-bounds and lets the loads skip the per-access bounds check
+/// the scalar reference pays.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{TernaryQueryLut, ROW};
+    use crate::quant::pack::decode_lut;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Requires AVX2. Panics (before any unchecked read) unless
+    /// `tab.table.len() >= packed.len() * ROW`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn qdot_packed_tab(tab: &TernaryQueryLut, packed: &[u8]) -> (f32, usize) {
+        let kcount = &decode_lut().kcount;
+        // The in-bounds proof for every get_unchecked below: i < groups
+        // and byte < ROW, so (i << 8) | byte < groups * ROW == table.len().
+        let table = &tab.table[..packed.len() * ROW];
+        let groups = packed.len();
+        let unrolled = groups / 8 * 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut k = 0usize;
+        let mut i = 0usize;
+        while i < unrolled {
+            let w = u64::from_le_bytes(packed[i..i + 8].try_into().unwrap());
+            let b0 = (w & 0xff) as usize;
+            let b1 = ((w >> 8) & 0xff) as usize;
+            let b2 = ((w >> 16) & 0xff) as usize;
+            let b3 = ((w >> 24) & 0xff) as usize;
+            let b4 = ((w >> 32) & 0xff) as usize;
+            let b5 = ((w >> 40) & 0xff) as usize;
+            let b6 = ((w >> 48) & 0xff) as usize;
+            let b7 = ((w >> 56) & 0xff) as usize;
+            // High-to-low args: lane j = table row i+j — scalar acc[j]'s
+            // next addend.
+            let v = _mm256_set_ps(
+                *table.get_unchecked(((i + 7) << 8) | b7),
+                *table.get_unchecked(((i + 6) << 8) | b6),
+                *table.get_unchecked(((i + 5) << 8) | b5),
+                *table.get_unchecked(((i + 4) << 8) | b4),
+                *table.get_unchecked(((i + 3) << 8) | b3),
+                *table.get_unchecked(((i + 2) << 8) | b2),
+                *table.get_unchecked(((i + 1) << 8) | b1),
+                *table.get_unchecked((i << 8) | b0),
+            );
+            acc = _mm256_add_ps(acc, v);
+            k += kcount[b0] as usize
+                + kcount[b1] as usize
+                + kcount[b2] as usize
+                + kcount[b3] as usize
+                + kcount[b4] as usize
+                + kcount[b5] as usize
+                + kcount[b6] as usize
+                + kcount[b7] as usize;
+            i += 8;
+        }
+        let mut s = [0f32; 8];
+        _mm256_storeu_ps(s.as_mut_ptr(), acc);
+        // Tail continues the same lane rotation (unrolled ≡ 0 mod 8, so
+        // i & 7 picks up exactly where the vector loop left lane i & 7).
+        while i < groups {
+            let byte = packed[i] as usize;
+            s[i & 7] += *table.get_unchecked((i << 8) | byte);
+            k += kcount[byte] as usize;
+            i += 1;
+        }
+        (
+            ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])),
+            k,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::dispatch::force_scalar_scope;
     use crate::quant::pack::pack_ternary;
     use crate::quant::trq::{qdot_packed, ternary_encode};
     use crate::util::rng::Rng;
@@ -185,6 +309,42 @@ mod tests {
                 assert_eq!(k_tab, k_fb, "dim {dim}: k mismatch");
             }
         }
+    }
+
+    #[test]
+    fn dispatched_fold_is_bit_identical_to_scalar() {
+        // Whatever tier simd_tier() picked, the dispatched fold equals the
+        // scalar lane reference bit-for-bit — dot AND k*.
+        let mut rng = Rng::new(505);
+        let mut tab = TernaryQueryLut::new();
+        for dim in [5usize, 17, 40, 64, 768, 769] {
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            tab.build(&q);
+            for _case in 0..10 {
+                let packed = random_code(&mut rng, dim);
+                assert_eq!(
+                    qdot_packed_tab(&tab, &packed),
+                    qdot_packed_tab_scalar(&tab, &packed),
+                    "dim {dim}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn force_scalar_scope_matches_dispatched_fold() {
+        let mut rng = Rng::new(606);
+        let dim = 768;
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let mut tab = TernaryQueryLut::new();
+        tab.build(&q);
+        let packed = random_code(&mut rng, dim);
+        let dispatched = qdot_packed_tab(&tab, &packed);
+        let forced = {
+            let _guard = force_scalar_scope();
+            qdot_packed_tab(&tab, &packed)
+        };
+        assert_eq!(dispatched, forced);
     }
 
     #[test]
@@ -228,6 +388,29 @@ mod tests {
         // A smaller rebuild must still be correct (stale entries cleared).
         let packed = random_code(&mut rng, 64);
         assert_eq!(qdot_packed_tab(&tab, &packed), qdot_packed(&q2, &packed, 64));
+    }
+
+    #[test]
+    fn same_dim_rebuild_skips_resize_and_stays_exact() {
+        // The hoisted-setup satellite: a same-dim rebuild must keep the
+        // exact buffer (pointer AND capacity — no clear+resize churn) and
+        // still overwrite every entry, matching a from-scratch build
+        // bit-for-bit, ragged tail and corrupt bytes included.
+        let mut rng = Rng::new(31);
+        for dim in [64usize, 769] {
+            let mut tab = TernaryQueryLut::new();
+            let q1: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            tab.build(&q1);
+            let fp = tab.buf_fingerprint();
+            let q2: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            tab.build(&q2);
+            assert_eq!(tab.buf_fingerprint(), fp, "dim {dim}: rebuild reallocated");
+            let mut fresh = TernaryQueryLut::new();
+            fresh.build(&q2);
+            assert_eq!(tab.table, fresh.table, "dim {dim}: stale entries survived");
+            let packed = random_code(&mut rng, dim);
+            assert_eq!(qdot_packed_tab(&tab, &packed), qdot_packed(&q2, &packed, dim));
+        }
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //! - [`quant`] — k-means, PQ, scalar quantizers, TRQ ternary residual codec
 //! - [`kernels`] — query-time compute kernels: per-query ternary ADC
 //!   tables (one lookup+add per packed byte) and blocked ADC/L2 scans over
-//!   contiguous rows, all exact drop-ins for the loops they replace
+//!   contiguous rows, all exact drop-ins for the loops they replace.
+//!   Each kernel runtime-dispatches between a portable 8-lane scalar
+//!   reference and an AVX2 twin ([`kernels::dispatch`], detected once and
+//!   cached); the tiers are **bit-identical**, and `FATRQ_FORCE_SCALAR=1`
+//!   pins the scalar tier for A/B verification. Streamed row/record loops
+//!   software-prefetch the next row (`kernels::prefetch_lines`)
 //! - [`index`] — IVF, graph (CAGRA-style stand-in), and flat exact indexes
 //! - [`refine`] — L2 decomposition, progressive estimator (+ early-exit
 //!   walk), OLS calibration, filtering/cutoff policies

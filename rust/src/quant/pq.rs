@@ -167,7 +167,8 @@ impl ProductQuantizer {
     /// ADC distance of one code against a prebuilt table. Delegates to the
     /// shared [`crate::kernels::pqscan::adc_row`] kernel — the same inner
     /// loop the blocked scans use, so per-id and blocked paths agree
-    /// exactly.
+    /// exactly (on every runtime SIMD tier: the AVX2 twin is bit-identical
+    /// to the scalar reference, see [`crate::kernels::dispatch`]).
     #[inline]
     pub fn adc_distance(&self, lut: &[f32], code: &[u8]) -> f32 {
         debug_assert_eq!(code.len(), self.m);

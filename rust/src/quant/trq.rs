@@ -110,10 +110,12 @@ pub fn encode_record(x: &[f32], xc: &[f32]) -> TrqRecord {
 /// per byte with one table lookup, and falls back to this function when the
 /// candidate count is too small to amortize the table build.
 ///
-/// **Summation-order contract** (the table kernel reproduces it so the two
-/// paths are bit-for-bit identical in f32, keeping results independent of
-/// the fallback threshold): byte `i`'s group contribution is the strict
-/// left fold `t0·q0 + t1·q1 + … + t4·q4`, accumulated as
+/// **Summation-order contract** (the table kernel reproduces it — on every
+/// SIMD tier: the AVX2 fold mirrors the same eight lanes in one register —
+/// so all paths are bit-for-bit identical in f32, keeping results
+/// independent of the fallback threshold and of
+/// [`crate::kernels::dispatch::simd_tier`]): byte `i`'s group contribution
+/// is the strict left fold `t0·q0 + t1·q1 + … + t4·q4`, accumulated as
 /// `acc[i & 7] += g_i` into eight interleaved lanes combined at the end as
 /// `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`. The lanes also break the
 /// one-add-per-byte latency chain that bounded the previous

@@ -7,6 +7,7 @@
 //! `d̂ = W · [d̂₀, d̂_ip, ‖δ‖², ⟨x_c,δ⟩, 1]`, with
 //! `d̂_ip = −2·⟨q,ē⟩·scale/√k*` the multiplication-free residual term.
 
+use crate::kernels::dispatch::prefetch_lines;
 use crate::kernels::ternary::{qdot_packed_tab, TernaryQueryLut};
 use crate::quant::trq::{qdot_packed, TrqStore};
 use crate::refine::calib::{Calibration, NUM_FEATURES};
@@ -135,7 +136,10 @@ impl<'a> ProgressiveEstimator<'a> {
 
     /// [`ProgressiveEstimator::refine_into`] with an optional ternary
     /// ADC-table context for the residual dot (the engine passes one when
-    /// the candidate count amortizes the table build).
+    /// the candidate count amortizes the table build). The next
+    /// candidate's packed record is software-prefetched while the current
+    /// one folds — candidate ids are arbitrary, so the records are a
+    /// gather the hardware prefetcher can't predict.
     pub fn refine_into_with(
         &self,
         query: &[f32],
@@ -144,9 +148,15 @@ impl<'a> ProgressiveEstimator<'a> {
         tlut: Option<&TernaryQueryLut>,
     ) {
         out.clear();
-        out.extend(candidates.iter().map(|c| {
-            Scored::new(self.estimate_with(query, c.id as usize, c.dist, tlut), c.id)
-        }));
+        for (ci, c) in candidates.iter().enumerate() {
+            if let Some(next) = candidates.get(ci + 1) {
+                prefetch_lines(self.store.packed_row(next.id as usize));
+            }
+            out.push(Scored::new(
+                self.estimate_with(query, c.id as usize, c.dist, tlut),
+                c.id,
+            ));
+        }
         out.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
     }
 
@@ -210,12 +220,18 @@ impl<'a> ProgressiveEstimator<'a> {
         bound.reset(k.max(1));
         out.clear();
         let mut stats = ProgressiveOutcome::default();
-        for c in ordered {
+        for (ci, c) in ordered.iter().enumerate() {
             stats.considered += 1;
             if bound.is_full()
                 && c.d1 - margin_first > bound.threshold() + margin_refined
             {
                 break;
+            }
+            // Prefetch the next record in walk order: it is streamed
+            // unless this candidate trips the cutoff, and a wasted hint
+            // on the exit path is free.
+            if let Some(next) = ordered.get(ci + 1) {
+                prefetch_lines(self.store.packed_row(next.id as usize));
             }
             let d = self.estimate_with(query, c.id as usize, c.d0, tlut);
             bound.push(d, c.id);

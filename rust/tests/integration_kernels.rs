@@ -1,0 +1,216 @@
+//! Integration: the SIMD dispatch layer — scalar and dispatched kernels
+//! must be bit-identical on every input shape (the tiers mirror the same
+//! eight-lane reduction), the ternary fallback threshold must never
+//! change a result, and the whole `QueryEngine` must return identical
+//! answers with the scalar tier pinned vs the detected tier. The CI
+//! matrix additionally runs this entire suite under
+//! `FATRQ_FORCE_SCALAR=1`, which pins the process-wide tier at first use;
+//! in-process the same pin is exercised via `force_scalar_scope()`.
+
+use fatrq::config::{
+    DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
+};
+use fatrq::coordinator::{build_system, QueryEngine};
+use fatrq::kernels::{
+    adc_row, adc_row_scalar, adc_scan_topk, detected_tier, force_scalar_scope, l2_row,
+    l2_row_scalar, l2_scan_topk, qdot_packed_tab, qdot_packed_tab_scalar, TernaryQueryLut,
+    TERNARY_TAB_MIN_CANDIDATES,
+};
+use fatrq::quant::trq::qdot_packed;
+use fatrq::quant::{pack_ternary, packed_len};
+use fatrq::util::rng::Rng;
+use fatrq::util::topk::TopK;
+use std::sync::Arc;
+
+/// Dims exercising every dispatch shape: below one 8-lane round, one
+/// round + tail, exact multiples, the paper's 768, and 768 + ragged tail.
+const DIMS: [usize; 5] = [5, 17, 64, 768, 769];
+
+#[test]
+fn l2_row_scalar_and_dispatched_are_bit_identical_unaligned() {
+    let mut rng = Rng::new(101);
+    for &dim in &DIMS {
+        // Offsets 1 and 3 into a shared buffer force unaligned slices —
+        // the kernels use unaligned loads and must not care.
+        let buf_a: Vec<f32> = (0..dim + 4).map(|_| rng.gaussian_f32()).collect();
+        let buf_b: Vec<f32> = (0..dim + 4).map(|_| rng.gaussian_f32()).collect();
+        for (oa, ob) in [(0usize, 0usize), (1, 3), (3, 1)] {
+            let a = &buf_a[oa..oa + dim];
+            let b = &buf_b[ob..ob + dim];
+            let s = l2_row_scalar(a, b);
+            let d = l2_row(a, b);
+            assert_eq!(d, s, "dim {dim} offsets ({oa},{ob}): tiers diverged");
+            // Belt and braces on top of bit-identity: the documented
+            // numeric budget.
+            assert!((d - s).abs() <= 1e-5 * s.abs().max(1.0));
+        }
+    }
+}
+
+#[test]
+fn adc_row_scalar_and_dispatched_are_bit_identical() {
+    let mut rng = Rng::new(103);
+    let ksub = 64usize;
+    for &m in &DIMS {
+        let lut: Vec<f32> = (0..m * ksub).map(|_| rng.gaussian_f32()).collect();
+        for case in 0..4 {
+            let code: Vec<u8> = (0..m).map(|_| (rng.next_u64() % ksub as u64) as u8).collect();
+            let s = adc_row_scalar(&lut, ksub, &code);
+            let d = adc_row(&lut, ksub, &code);
+            assert_eq!(d, s, "m {m} case {case}: tiers diverged");
+        }
+    }
+}
+
+#[test]
+fn ternary_fold_is_bit_identical_across_tiers_and_fallback() {
+    let mut rng = Rng::new(107);
+    for &dim in &DIMS {
+        let mut tab = TernaryQueryLut::new();
+        for case in 0..4 {
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+            let trits: Vec<i8> =
+                (0..dim).map(|_| (rng.next_u64() % 3) as i8 - 1).collect();
+            let mut packed = vec![0u8; packed_len(dim)];
+            pack_ternary(&trits, &mut packed);
+            tab.build(&q);
+            let (dot_fb, k_fb) = qdot_packed(&q, &packed, dim);
+            let (dot_s, k_s) = qdot_packed_tab_scalar(&tab, &packed);
+            let (dot_d, k_d) = qdot_packed_tab(&tab, &packed);
+            // Fallback ≡ scalar table ≡ dispatched table, bit for bit:
+            // the threshold and the SIMD tier can never change a ranking.
+            assert_eq!(dot_s, dot_fb, "dim {dim} case {case}: table vs fallback");
+            assert_eq!(dot_d, dot_s, "dim {dim} case {case}: tiers diverged");
+            assert_eq!((k_s, k_d), (k_fb, k_fb), "dim {dim} case {case}: live-trit count");
+        }
+    }
+}
+
+#[test]
+fn scan_topk_results_identical_with_scalar_tier_pinned() {
+    let mut rng = Rng::new(109);
+    let (m, ksub) = (24usize, 64usize);
+    // Candidate counts straddling the ternary table threshold double as
+    // ragged / exact block sizes for the scans.
+    for &n in &[
+        TERNARY_TAB_MIN_CANDIDATES - 1,
+        TERNARY_TAB_MIN_CANDIDATES,
+        TERNARY_TAB_MIN_CANDIDATES + 1,
+        200,
+    ] {
+        let lut: Vec<f32> = (0..m * ksub).map(|_| rng.gaussian_f32()).collect();
+        let codes: Vec<u8> =
+            (0..n * m).map(|_| (rng.next_u64() % ksub as u64) as u8).collect();
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let dim = 96usize;
+        let query: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.gaussian_f32()).collect();
+
+        let run = || {
+            let mut dists = Vec::new();
+            let mut top = TopK::new(10);
+            adc_scan_topk(&lut, ksub, m, &codes, &ids, &mut dists, &mut top);
+            let adc = top.take_sorted();
+            let mut top = TopK::new(10);
+            l2_scan_topk(&query, &data, dim, &mut dists, &mut top);
+            (adc, top.take_sorted())
+        };
+        let dispatched = run();
+        let scalar = {
+            let _guard = force_scalar_scope();
+            run()
+        };
+        for ((a, b), what) in [(&dispatched.0, &scalar.0), (&dispatched.1, &scalar.1)]
+            .into_iter()
+            .zip(["adc", "l2"])
+        {
+            assert_eq!(a.len(), b.len(), "n {n} {what}");
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.id, y.id, "n {n} {what}: ranking changed across tiers");
+                assert_eq!(x.dist, y.dist, "n {n} {what}: distance changed across tiers");
+            }
+        }
+    }
+}
+
+fn engine_cfg(candidates: usize) -> SystemConfig {
+    SystemConfig {
+        dataset: DatasetConfig {
+            dim: 96,
+            count: 3000,
+            clusters: 24,
+            noise: 0.35,
+            query_noise: 1.0,
+            queries: 12,
+            seed: 91,
+        },
+        quant: QuantConfig { pq_m: 24, pq_nbits: 6, kmeans_iters: 5, train_sample: 2000 },
+        index: IndexConfig {
+            kind: IndexKind::Ivf,
+            nlist: 48,
+            nprobe: 12,
+            graph_degree: 20,
+            ef_search: 96,
+            ef_construction: 96,
+        },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates,
+            k: 10,
+            filter_ratio: 0.25,
+            calib_sample: 0.01,
+            early_exit: false,
+            margin_quantile: 0.98,
+        },
+        ..Default::default()
+    }
+}
+
+/// End-to-end contract from the dispatch layer: the full engine —
+/// build, IVF probe, PQ scans, ternary refinement, early exit — returns
+/// bit-identical answers with the scalar tier pinned and with the
+/// detected tier, at candidate counts on both sides of the ternary-table
+/// threshold (31 / 32 / 33).
+#[test]
+fn query_engine_identical_with_force_scalar_on_and_off() {
+    let sys = Arc::new(build_system(&engine_cfg(120)).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    println!("detected tier: {}", detected_tier().name());
+    for &candidates in &[
+        TERNARY_TAB_MIN_CANDIDATES - 1,
+        TERNARY_TAB_MIN_CANDIDATES,
+        TERNARY_TAB_MIN_CANDIDATES + 1,
+        120,
+    ] {
+        for &early_exit in &[false, true] {
+            let mut params = engine.params().with_early_exit(early_exit);
+            params.candidates = candidates;
+            let dispatched = engine.run_with(&params, &sys.dataset.queries);
+            let scalar = {
+                let _guard = force_scalar_scope();
+                engine.run_with(&params, &sys.dataset.queries)
+            };
+            assert_eq!(dispatched.len(), scalar.len());
+            for (q, (a, b)) in dispatched.iter().zip(&scalar).enumerate() {
+                assert_eq!(
+                    a.topk.len(),
+                    b.topk.len(),
+                    "query {q} cands {candidates} ee {early_exit}"
+                );
+                for (x, y) in a.topk.iter().zip(&b.topk) {
+                    assert_eq!(
+                        x.id, y.id,
+                        "query {q} cands {candidates} ee {early_exit}: ids diverged"
+                    );
+                    assert_eq!(
+                        x.dist, y.dist,
+                        "query {q} cands {candidates} ee {early_exit}: dists diverged"
+                    );
+                    // Documented fallback budget, trivially satisfied by
+                    // bit-identity.
+                    assert!((x.dist - y.dist).abs() <= 1e-5 * y.dist.abs().max(1.0));
+                }
+            }
+        }
+    }
+}

@@ -452,9 +452,9 @@ fn prop_record_interleave_batch1_exact_and_work_conserving() {
                 let mut sched = TimelineSched::new(&cfg);
                 let at = (i * 13_339) as f64;
                 let t = sched.admit_interleaved(s, at);
-                if t[0].solo_ns != solo
-                    || t[0].shared_ns != at + solo
-                    || t[0].queue_ns != 0.0
+                if t[0].1.solo_ns != solo
+                    || t[0].1.shared_ns != at + solo
+                    || t[0].1.queue_ns != 0.0
                 {
                     return false;
                 }
@@ -468,12 +468,12 @@ fn prop_record_interleave_batch1_exact_and_work_conserving() {
                 ats.push(at);
                 last = sched.admit_interleaved(s, at);
             }
-            let serialized: f64 = last.iter().map(|t| t.solo_ns).sum();
-            let makespan = last.iter().map(|t| t.shared_ns).fold(0.0f64, f64::max);
+            let serialized: f64 = last.iter().map(|(_, t)| t.solo_ns).sum();
+            let makespan = last.iter().map(|(_, t)| t.shared_ns).fold(0.0f64, f64::max);
             if makespan > ats.last().unwrap() + serialized * (1.0 + 1e-9) + 1.0 {
                 return false;
             }
-            for (q, t) in last.iter().enumerate() {
+            for &(q, t) in &last {
                 if t.shared_ns + 1e-6 < ats[q] + t.solo_ns {
                     return false;
                 }
