@@ -7,8 +7,8 @@
 
 use fatrq::bench_support as bs;
 use fatrq::config::{
-    ArrivalDist, DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode,
-    SystemConfig, TenantSpec,
+    ArrivalDist, DatasetConfig, FaultConfig, IndexConfig, IndexKind, OutageSpec, QuantConfig,
+    RefineConfig, RefineMode, SystemConfig, TenantSpec,
 };
 use fatrq::coordinator::{
     build_system_with, ground_truth_for, report_from_outcomes, QueryEngine, ShardedEngine,
@@ -46,6 +46,7 @@ fn main() {
     serving_section(quick);
     pipelined_section(quick);
     lanes_and_qos_section(quick);
+    faults_section(quick);
 }
 
 fn refinement_ratio_sweep() {
@@ -634,5 +635,146 @@ fn lanes_and_qos_section(quick: bool) {
          workload ({:.1} vs {:.1} us) — asserted at runtime.",
         wfq_light / 1e3,
         fifo_light / 1e3
+    );
+}
+
+/// Faults and degradation: the seeded fault plan against one captured
+/// stage profile (depth 4, closed batch). Runtime contracts, asserted on
+/// every run:
+///
+/// - a **zero-rate plan** (even with a nonzero seed) is structurally
+///   inert — timeline, queueing and top-k bit-identical to the fault-free
+///   schedule, availability reporting off;
+/// - a **flaky-read plan** (40% far + SSD failures, bounded retries)
+///   still serves every query with k results, surfacing retries and
+///   degrade levels in the availability columns, deterministically
+///   (re-scheduling reproduces the makespan bit-for-bit);
+/// - a **1 ns deadline** degrades every query to its coarse fallback —
+///   all k results, all deadlines reported missed;
+/// - a **whole-run outage** of the only shard drops everything, and the
+///   report says so.
+fn faults_section(quick: bool) {
+    println!("\n# Faults and degradation (seeded fault plan, degraded-mode serving)\n");
+    let mut cfg = serving_config(quick);
+    cfg.sim.shared_timeline = true;
+    let dataset = synthesize(&cfg.dataset);
+    let truth = ground_truth_for(&dataset, cfg.refine.k);
+    let nq = dataset.num_queries();
+    let k = cfg.refine.k;
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).expect("build"));
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 4);
+    let mut profile = engine.profile_with(engine.params(), &dataset.queries);
+
+    let (base_outs, base) = profile.schedule(4, 0.0);
+
+    // --- zero-fault plan is structurally inert ---
+    profile.set_fault(FaultConfig { seed: 0x5EED_FA17, ..Default::default() });
+    profile.set_deadline_us(0.0);
+    let (zero_outs, zero) = profile.schedule(4, 0.0);
+    assert!(!zero.availability.active, "zero-rate plan must not activate fault accounting");
+    assert_eq!(
+        zero.makespan_ns, base.makespan_ns,
+        "zero-fault makespan diverged from the fault-free schedule"
+    );
+    for q in 0..nq {
+        assert_eq!(
+            zero_outs[q].topk, base_outs[q].topk,
+            "zero-fault top-k diverged from the fault-free schedule (query {q})"
+        );
+        assert_eq!(zero_outs[q].breakdown.queue_ns, base_outs[q].breakdown.queue_ns, "query {q}");
+        assert_eq!(zero.timings[q].done_ns, base.timings[q].done_ns, "query {q}");
+    }
+
+    bs::header(&[
+        "plan",
+        "served",
+        "success%",
+        "degraded",
+        "dropped",
+        "retries",
+        "ddl-miss",
+        "recall@10",
+        "makespan(us)",
+    ]);
+    let print_row = |name: &str, outs: &[fatrq::coordinator::QueryOutcome],
+                     rep: &fatrq::coordinator::ServeReport| {
+        let recall: f64 = outs
+            .iter()
+            .enumerate()
+            .map(|(q, o)| recall_at_k(&o.topk, &truth[q], k))
+            .sum::<f64>()
+            / nq as f64;
+        let av = &rep.availability;
+        bs::row(&[
+            name.to_string(),
+            format!("{}/{}", av.served, av.queries),
+            format!("{:.1}", av.success_rate() * 100.0),
+            av.degraded.to_string(),
+            av.dropped.to_string(),
+            av.retries.to_string(),
+            av.deadline_missed.to_string(),
+            format!("{recall:.4}"),
+            format!("{:.1}", rep.makespan_ns / 1e3),
+        ]);
+    };
+    print_row("fault-free", &base_outs, &base);
+
+    // --- flaky reads with bounded retries: every query still answers ---
+    profile.set_fault(FaultConfig {
+        seed: 42,
+        far_fail_rate: 0.4,
+        ssd_fail_rate: 0.4,
+        retry_limit: 2,
+        retry_backoff_us: 25.0,
+        ..Default::default()
+    });
+    let (flaky_outs, flaky) = profile.schedule(4, 0.0);
+    assert!(flaky.availability.active, "seeded plan must activate fault accounting");
+    assert_eq!(flaky.availability.served, nq, "flaky reads must not drop queries");
+    assert!(flaky.availability.retries > 0, "a 40% failure rate must surface retries");
+    for (q, out) in flaky_outs.iter().enumerate() {
+        assert_eq!(
+            out.topk.len(),
+            k,
+            "query {q} degraded to {} but must still return k results",
+            out.breakdown.degrade.name()
+        );
+    }
+    let (_, again) = profile.schedule(4, 0.0);
+    assert_eq!(
+        flaky.makespan_ns, again.makespan_ns,
+        "the seeded fault schedule must be reproducible"
+    );
+    print_row("flaky-reads", &flaky_outs, &flaky);
+
+    // --- an impossible deadline degrades everything to the coarse path ---
+    profile.set_fault(FaultConfig::default());
+    profile.set_deadline_us(1e-3); // 1 ns: every query misses
+    let (ddl_outs, ddl) = profile.schedule(4, 0.0);
+    assert_eq!(ddl.availability.degraded, nq, "a 1 ns deadline must degrade every query");
+    assert_eq!(ddl.availability.deadline_missed, nq);
+    assert_eq!(ddl.availability.dropped, 0, "deadline misses degrade, never drop");
+    for (q, out) in ddl_outs.iter().enumerate() {
+        assert_eq!(out.topk.len(), k, "degraded query {q} must still return k results");
+    }
+    print_row("deadline-1ns", &ddl_outs, &ddl);
+
+    // --- whole-run outage of the only shard: dropped and reported ---
+    profile.set_deadline_us(0.0);
+    profile.set_fault(FaultConfig {
+        seed: 7,
+        outages: vec![OutageSpec { shard: 0, start_us: 0.0, end_us: 1e12 }],
+        ..Default::default()
+    });
+    let (out_outs, outage) = profile.schedule(4, 0.0);
+    assert_eq!(outage.availability.dropped, nq, "a whole-run outage must drop every query");
+    assert_eq!(outage.availability.served, 0);
+    assert!(out_outs.iter().all(|o| o.topk.is_empty()), "dropped queries must return nothing");
+    print_row("shard-outage", &out_outs, &outage);
+
+    println!(
+        "\nzero-rate plan bit-identical to fault-free, flaky reads retry to full answers, \
+         deadline misses fall back to coarse k-results, outages drop and report — \
+         asserted at runtime."
     );
 }

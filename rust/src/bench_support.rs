@@ -192,6 +192,7 @@ impl Pipelined<'_> {
             pipeline_depth: 0,
             cpu_lanes: 0,
             tenants: Vec::new(),
+            availability: Default::default(),
             breakdown: agg,
             mode: mode.name(),
         }
@@ -245,6 +246,80 @@ pub fn simd_ab<F: FnMut()>(mut f: F, iters: usize, reps: usize) -> (f64, f64) {
     (scalar, dispatched)
 }
 
+/// Generate an arrival trace (absolute ns offsets, sorted non-decreasing)
+/// for `sim.arrival_trace` / `--arrival-trace`: `n` arrivals at a mean
+/// rate of `qps`, shaped by `kind`:
+///
+/// - `"bursty"` — Markov-modulated on/off: seeded bursts arrive at 8×
+///   the mean rate, separated by idle gaps, preserving the overall mean.
+/// - `"diurnal"` — a sinusoidal rate profile (one full period over the
+///   trace): the load peak-to-trough ratio is 9:1, the daily cycle
+///   compressed onto the trace span.
+/// - `"mixed"` — the diurnal envelope with bursty arrivals inside it:
+///   per-tenant mixture traffic, the hardest case for the admission
+///   policies.
+///
+/// Pure function of `(kind, n, qps, seed)` — traces feeding the serving
+/// simulator must be reproducible across hosts. Unknown kinds are an
+/// `Err` (config/CLI hardening, not a panic).
+pub fn gen_arrival_trace(kind: &str, n: usize, qps: f64, seed: u64) -> crate::Result<Vec<f64>> {
+    anyhow::ensure!(n > 0, "arrival trace needs at least one arrival");
+    anyhow::ensure!(
+        qps.is_finite() && qps > 0.0,
+        "arrival trace needs a positive finite qps (got {qps})"
+    );
+    let mean_gap = 1e9 / qps;
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0x5EED_7ACE);
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    match kind {
+        "bursty" => {
+            // On/off process: bursts of 4-12 queries at 8x the mean rate,
+            // idle gaps sized so the long-run mean stays `qps`.
+            let burst_gap = mean_gap / 8.0;
+            let mut left_in_burst = 0usize;
+            while out.len() < n {
+                if left_in_burst == 0 {
+                    let burst = 4 + (rng.next_u64() % 9) as usize; // 4..=12
+                    left_in_burst = burst.min(n - out.len());
+                    // The idle gap returns the burst's saved time: burst
+                    // queries each saved (mean_gap - burst_gap).
+                    if !out.is_empty() {
+                        t += left_in_burst as f64 * (mean_gap - burst_gap);
+                    }
+                }
+                out.push(t);
+                t += burst_gap;
+                left_in_burst -= 1;
+            }
+        }
+        "diurnal" => {
+            // Rate r(x) = qps * (1 + 0.8 sin(2πx)) over trace position x:
+            // peak-to-trough 9:1; gaps are the inverse rate.
+            for i in 0..n {
+                out.push(t);
+                let x = i as f64 / n as f64;
+                let rate = 1.0 + 0.8 * (2.0 * std::f64::consts::PI * x).sin();
+                t += mean_gap / rate;
+            }
+        }
+        "mixed" => {
+            // Diurnal envelope, Poisson gaps inside it (seeded): what a
+            // multi-tenant mixture looks like on the wire.
+            for i in 0..n {
+                out.push(t);
+                let x = i as f64 / n as f64;
+                let rate = 1.0 + 0.8 * (2.0 * std::f64::consts::PI * x).sin();
+                t += -(mean_gap / rate) * (1.0 - rng.f64()).ln();
+            }
+        }
+        other => anyhow::bail!(
+            "unknown arrival-trace kind `{other}` (expected bursty, diurnal or mixed)"
+        ),
+    }
+    Ok(out)
+}
+
 /// Print a markdown-style table row.
 pub fn row(cells: &[String]) {
     println!("| {} |", cells.join(" | "));
@@ -273,5 +348,47 @@ mod tests {
     fn bench_config_is_valid() {
         bench_config(IndexKind::Ivf).validate().unwrap();
         bench_config(IndexKind::Graph).validate().unwrap();
+    }
+
+    #[test]
+    fn arrival_traces_are_sorted_deterministic_and_roughly_mean_rate() {
+        for kind in ["bursty", "diurnal", "mixed"] {
+            let a = gen_arrival_trace(kind, 200, 10_000.0, 7).unwrap();
+            let b = gen_arrival_trace(kind, 200, 10_000.0, 7).unwrap();
+            assert_eq!(a.len(), 200, "{kind}");
+            assert_eq!(a, b, "{kind}: trace must be a pure function of its inputs");
+            assert_eq!(a[0], 0.0, "{kind}: traces start at t = 0");
+            for w in a.windows(2) {
+                assert!(w[1] >= w[0], "{kind}: offsets must be non-decreasing");
+            }
+            // The span should be within 2x of the nominal n/qps duration
+            // (shapes redistribute arrivals, not the long-run rate).
+            let nominal = 200.0 * 1e9 / 10_000.0;
+            let span = *a.last().unwrap();
+            assert!(
+                span > nominal * 0.4 && span < nominal * 2.5,
+                "{kind}: span {span:.0} ns vs nominal {nominal:.0} ns"
+            );
+        }
+    }
+
+    #[test]
+    fn arrival_trace_bursty_is_actually_bursty() {
+        let tr = gen_arrival_trace("bursty", 300, 10_000.0, 3).unwrap();
+        let mean_gap = 1e9 / 10_000.0;
+        let gaps: Vec<f64> = tr.windows(2).map(|w| w[1] - w[0]).collect();
+        let short = gaps.iter().filter(|&&g| g < mean_gap * 0.25).count();
+        let long = gaps.iter().filter(|&&g| g > mean_gap * 2.0).count();
+        assert!(short > gaps.len() / 2, "most gaps should be intra-burst ({short})");
+        assert!(long > 5, "idle gaps between bursts expected ({long})");
+    }
+
+    #[test]
+    fn arrival_trace_rejects_bad_inputs() {
+        assert!(gen_arrival_trace("bursty", 0, 100.0, 1).is_err());
+        assert!(gen_arrival_trace("bursty", 10, 0.0, 1).is_err());
+        assert!(gen_arrival_trace("bursty", 10, f64::NAN, 1).is_err());
+        let err = gen_arrival_trace("nope", 10, 100.0, 1).unwrap_err();
+        assert!(err.to_string().contains("nope"), "error names the bad kind: {err}");
     }
 }

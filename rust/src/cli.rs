@@ -3,7 +3,7 @@
 //! Grammar: `fatrq <command> [--flag value]... [--bool-flag]...`
 
 use crate::Result;
-use anyhow::bail;
+use anyhow::{bail, Context};
 use std::collections::BTreeMap;
 
 /// Parsed command line.
@@ -48,14 +48,27 @@ impl Args {
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.flags.get(key) {
             None => Ok(default),
-            Some(v) => Ok(v.parse()?),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("flag --{key}: expected a non-negative integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("flag --{key}: expected a non-negative integer, got `{v}`")),
         }
     }
 
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.flags.get(key) {
             None => Ok(default),
-            Some(v) => Ok(v.parse()?),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("flag --{key}: expected a number, got `{v}`")),
         }
     }
 
@@ -118,5 +131,22 @@ mod tests {
     fn empty_argv_is_help() {
         let a = Args::parse(Vec::<String>::new()).unwrap();
         assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn numeric_parse_errors_name_flag_and_value() {
+        let a = parse("query --k ten --ratio much --seed -3");
+        let e = a.get_usize("k", 0).unwrap_err().to_string();
+        assert!(e.contains("--k") && e.contains("ten"), "{e}");
+        let e = a.get_f64("ratio", 0.0).unwrap_err().to_string();
+        assert!(e.contains("--ratio") && e.contains("much"), "{e}");
+        let e = a.get_u64("seed", 0).unwrap_err().to_string();
+        assert!(e.contains("--seed"), "{e}");
+    }
+
+    #[test]
+    fn empty_flag_name_rejected() {
+        let e = Args::parse(vec!["run".into(), "--".into()]).unwrap_err().to_string();
+        assert!(e.contains("empty flag"), "{e}");
     }
 }

@@ -249,6 +249,117 @@ impl StreamInterleave {
     }
 }
 
+/// One scheduled whole-shard outage window (`sim.fault_outages`): spec
+/// syntax `shard:start_us:end_us`. While the window is open, every
+/// far-memory read of that shard fails without retry — the sharded
+/// engine drops the shard's partial result and serves the survivors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutageSpec {
+    /// Shard index (monolithic engines have one shard, index 0).
+    pub shard: usize,
+    /// Window start on the simulated clock, microseconds.
+    pub start_us: f64,
+    /// Window end (exclusive), microseconds.
+    pub end_us: f64,
+}
+
+impl OutageSpec {
+    /// Parse `shard:start_us:end_us`, e.g. `1:0:500`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            bail!("outage spec `{s}`: expected shard:start_us:end_us");
+        }
+        let shard = parts[0]
+            .parse::<usize>()
+            .with_context(|| format!("outage spec `{s}`: shard must be an integer"))?;
+        let start_us = parts[1]
+            .parse::<f64>()
+            .ok()
+            .filter(|x| x.is_finite() && *x >= 0.0)
+            .with_context(|| {
+                format!("outage spec `{s}`: start_us must be a finite non-negative number")
+            })?;
+        let end_us = parts[2]
+            .parse::<f64>()
+            .ok()
+            .filter(|x| x.is_finite() && *x >= 0.0)
+            .with_context(|| {
+                format!("outage spec `{s}`: end_us must be a finite non-negative number")
+            })?;
+        if end_us < start_us {
+            bail!("outage spec `{s}`: end_us < start_us");
+        }
+        Ok(OutageSpec { shard, start_us, end_us })
+    }
+
+    /// Parse a comma-separated list of specs (the CLI form).
+    pub fn parse_list(s: &str) -> Result<Vec<OutageSpec>> {
+        s.split(',').filter(|p| !p.trim().is_empty()).map(|p| Self::parse(p.trim())).collect()
+    }
+}
+
+/// Seeded fault-injection knobs for the serving simulator
+/// (`sim.fault_*`). All rates default to zero — the fault layer is then
+/// structurally inert and the serving timeline is bit-identical to a
+/// build without it (runtime-asserted by the integration tests and the
+/// fig8 `--quick` smoke). Faults are drawn by a stateless hash of
+/// `(seed, device-channel, task, attempt)` ([`crate::simulator::fault::
+/// FaultPlan`]), so a nonzero plan is bit-reproducible across worker
+/// counts and hosts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Fault-plan seed (same seed + same knobs = same fault timeline).
+    pub seed: u64,
+    /// Probability a far-memory record-stream read attempt fails
+    /// (detected at admission; retried up to `retry_limit` times, then
+    /// the task degrades to its coarse PQ ranking).
+    pub far_fail_rate: f64,
+    /// Probability a far-memory read attempt completes but carries a
+    /// tail-latency spike of `far_spike_us`.
+    pub far_spike_rate: f64,
+    /// Tail-spike magnitude, microseconds.
+    pub far_spike_us: f64,
+    /// Probability an SSD survivor-fetch burst fails (retried, then the
+    /// task skips SSD verification and serves refined-unverified order).
+    pub ssd_fail_rate: f64,
+    /// Max retries per failed read before degrading (0 = degrade on the
+    /// first failure).
+    pub retry_limit: u32,
+    /// Base retry backoff, microseconds; attempt `a` waits
+    /// `retry_backoff_us * 2^a` before re-admission.
+    pub retry_backoff_us: f64,
+    /// Scheduled whole-shard outage windows.
+    pub outages: Vec<OutageSpec>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 1,
+            far_fail_rate: 0.0,
+            far_spike_rate: 0.0,
+            far_spike_us: 50.0,
+            ssd_fail_rate: 0.0,
+            retry_limit: 2,
+            retry_backoff_us: 100.0,
+            outages: Vec::new(),
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Whether any fault source is active. When false the fault hooks in
+    /// the scheduler are never taken and the timeline is bit-identical
+    /// to a zero-fault build.
+    pub fn enabled(&self) -> bool {
+        self.far_fail_rate > 0.0
+            || self.far_spike_rate > 0.0
+            || self.ssd_fail_rate > 0.0
+            || !self.outages.is_empty()
+    }
+}
+
 /// Table I device parameters for the far-memory / storage simulators.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
@@ -308,6 +419,8 @@ pub struct SimConfig {
     /// Sharing discipline for co-admitted far-memory record streams on
     /// the shared timeline: FCFS bursts or record-level round-robin.
     pub stream_interleave: StreamInterleave,
+    /// Seeded fault injection (all rates zero by default — inert).
+    pub fault: FaultConfig,
 }
 
 impl Default for SimConfig {
@@ -334,6 +447,7 @@ impl Default for SimConfig {
             arrival_seed: 1,
             arrival_trace: Vec::new(),
             stream_interleave: StreamInterleave::Burst,
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -411,6 +525,12 @@ pub struct ServeConfig {
     /// round-robin over the configured tenants) and the serve report
     /// gains per-tenant latency percentiles.
     pub tenants: Vec<TenantSpec>,
+    /// Per-query deadline on the simulated clock, microseconds (0 =
+    /// none). A query past its deadline when a device stage would start
+    /// degrades instead of waiting: far-memory refinement falls back to
+    /// the coarse PQ ranking, SSD verification is skipped. The miss is
+    /// counted in the serve report's availability columns.
+    pub deadline_us: f64,
 }
 
 /// Coordinator / serving parameters.
@@ -538,6 +658,42 @@ impl SystemConfig {
                 bail!("serve.tenants: tenant `{}` weight must be positive", t.name);
             }
         }
+        let f = &self.sim.fault;
+        for (rate, key) in [
+            (f.far_fail_rate, "fault_far_fail_rate"),
+            (f.far_spike_rate, "fault_far_spike_rate"),
+            (f.ssd_fail_rate, "fault_ssd_fail_rate"),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("sim.{key} must be a probability in [0,1]");
+            }
+        }
+        if !f.far_spike_us.is_finite() || f.far_spike_us < 0.0 {
+            bail!("sim.fault_far_spike_us must be finite and non-negative");
+        }
+        if !f.retry_backoff_us.is_finite() || f.retry_backoff_us < 0.0 {
+            bail!("sim.fault_retry_backoff_us must be finite and non-negative");
+        }
+        for o in &f.outages {
+            if o.end_us < o.start_us {
+                bail!(
+                    "sim.fault_outages: shard {} window end ({}) < start ({})",
+                    o.shard,
+                    o.end_us,
+                    o.start_us
+                );
+            }
+        }
+        if !self.serve.deadline_us.is_finite() || self.serve.deadline_us < 0.0 {
+            bail!("serve.deadline_us must be finite and non-negative");
+        }
+        if (f.enabled() || self.serve.deadline_us > 0.0) && !self.sim.shared_timeline {
+            bail!(
+                "fault injection / deadlines require sim.shared_timeline (the fault \
+                 plan and deadline policy act on the admission-time simulated clock; \
+                 without the shared timeline the knobs would be silently ignored)"
+            );
+        }
         Ok(())
     }
 }
@@ -664,6 +820,24 @@ fn apply_sim(c: &mut SimConfig, t: &Table) -> Result<()> {
                     v.as_str().context("sim.stream_interleave must be a string")?,
                 )?
             }
+            "fault_seed" => c.fault.seed = need_usize(v, k)? as u64,
+            "fault_far_fail_rate" => c.fault.far_fail_rate = need_f64(v, k)?,
+            "fault_far_spike_rate" => c.fault.far_spike_rate = need_f64(v, k)?,
+            "fault_far_spike_us" => c.fault.far_spike_us = need_f64(v, k)?,
+            "fault_ssd_fail_rate" => c.fault.ssd_fail_rate = need_f64(v, k)?,
+            "fault_retry_limit" => c.fault.retry_limit = need_usize(v, k)? as u32,
+            "fault_retry_backoff_us" => c.fault.retry_backoff_us = need_f64(v, k)?,
+            "fault_outages" => {
+                let arr = v.as_array().context("sim.fault_outages must be an array")?;
+                c.fault.outages = arr
+                    .iter()
+                    .map(|x| {
+                        OutageSpec::parse(
+                            x.as_str().context("sim.fault_outages entries must be strings")?,
+                        )
+                    })
+                    .collect::<Result<_>>()?;
+            }
             other => bail!("unknown key sim.{other}"),
         }
     }
@@ -693,6 +867,7 @@ fn apply_serve(c: &mut ServeConfig, t: &Table) -> Result<()> {
         match k.as_str() {
             "pipeline_depth" => c.pipeline_depth = need_usize(v, k)?,
             "cpu_lanes" => c.cpu_lanes = need_usize(v, k)?,
+            "deadline_us" => c.deadline_us = need_f64(v, k)?,
             "tenants" => {
                 let arr = v.as_array().context("serve.tenants must be an array")?;
                 c.tenants = arr
@@ -855,5 +1030,71 @@ mod tests {
         assert!(RefineMode::parse("fatrq-hw").is_ok());
         assert!(RefineMode::parse("wat").is_err());
         assert_eq!(RefineMode::FatrqHw.name(), "fatrq-hw");
+    }
+
+    #[test]
+    fn outage_spec_parsing() {
+        let o = OutageSpec::parse("1:0:500").unwrap();
+        assert_eq!((o.shard, o.start_us, o.end_us), (1, 0.0, 500.0));
+        assert!(OutageSpec::parse("").is_err());
+        assert!(OutageSpec::parse("1:0").is_err());
+        assert!(OutageSpec::parse("1:0:500:9").is_err());
+        assert!(OutageSpec::parse("x:0:500").is_err());
+        assert!(OutageSpec::parse("1:nope:500").is_err());
+        assert!(OutageSpec::parse("1:-5:500").is_err());
+        assert!(OutageSpec::parse("1:500:100").is_err());
+        let l = OutageSpec::parse_list("0:0:100, 2:50:80").unwrap();
+        assert_eq!(l.len(), 2);
+        assert_eq!(l[1].shard, 2);
+        // Error messages name the bad spec.
+        let msg = format!("{:#}", OutageSpec::parse("1:nope:500").unwrap_err());
+        assert!(msg.contains("1:nope:500"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn fault_config_roundtrip_and_validation() {
+        let doc = r#"
+            [sim]
+            shared_timeline = true
+            fault_seed = 7
+            fault_far_fail_rate = 0.05
+            fault_far_spike_rate = 0.1
+            fault_far_spike_us = 80.0
+            fault_ssd_fail_rate = 0.02
+            fault_retry_limit = 3
+            fault_retry_backoff_us = 50.0
+            fault_outages = ["0:0:200"]
+
+            [serve]
+            deadline_us = 2000.0
+        "#;
+        let cfg = SystemConfig::from_toml(doc).unwrap();
+        let f = &cfg.sim.fault;
+        assert_eq!(f.seed, 7);
+        assert_eq!(f.far_fail_rate, 0.05);
+        assert_eq!(f.far_spike_rate, 0.1);
+        assert_eq!(f.far_spike_us, 80.0);
+        assert_eq!(f.ssd_fail_rate, 0.02);
+        assert_eq!(f.retry_limit, 3);
+        assert_eq!(f.retry_backoff_us, 50.0);
+        assert_eq!(f.outages.len(), 1);
+        assert!(f.enabled());
+        assert_eq!(cfg.serve.deadline_us, 2000.0);
+        // Defaults are inert.
+        assert!(!FaultConfig::default().enabled());
+        // Rejection paths: rate out of range, negative spike/backoff/
+        // deadline, and fault knobs without the shared timeline.
+        for bad in [
+            "[sim]\nshared_timeline = true\nfault_far_fail_rate = 1.5",
+            "[sim]\nshared_timeline = true\nfault_ssd_fail_rate = -0.1",
+            "[sim]\nshared_timeline = true\nfault_far_spike_us = -1.0",
+            "[sim]\nshared_timeline = true\nfault_retry_backoff_us = -1.0",
+            "[serve]\ndeadline_us = -10.0",
+            "[sim]\nfault_far_fail_rate = 0.1",
+            "[serve]\ndeadline_us = 100.0",
+            "[sim]\nfault_outages = [\"0:50:10\"]",
+        ] {
+            assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
+        }
     }
 }

@@ -16,7 +16,7 @@ use crate::coordinator::pipeline::Breakdown;
 use crate::coordinator::pipelined::{ServeReport, TenantLat};
 use crate::coordinator::stage::QueryScratch;
 use crate::index::FlatIndex;
-use crate::metrics::{recall_at_k, LatencyStats};
+use crate::metrics::{recall_at_k, Availability, LatencyStats};
 use crate::util::threadpool::ThreadPool;
 use crate::util::topk::Scored;
 use std::sync::Mutex;
@@ -52,6 +52,9 @@ pub struct BatchReport {
     /// Per-tenant latency percentiles (empty unless `serve.tenants` is
     /// configured).
     pub tenants: Vec<TenantLat>,
+    /// Availability columns of the serving timeline (inactive/all-served
+    /// unless fault injection or a deadline was configured).
+    pub availability: Availability,
     /// Mean per-stage breakdown.
     pub breakdown: Breakdown,
     pub mode: &'static str,
@@ -163,9 +166,9 @@ pub fn report_with_serve(
             (lat.mean(), lat.p50(), lat.p95(), lat.p99(), 0.0, 0)
         }
     };
-    let (cpu_lanes, tenants) = match serve {
-        Some(s) => (s.cpu_lanes, s.tenants.clone()),
-        None => (0, Vec::new()),
+    let (cpu_lanes, tenants, availability) = match serve {
+        Some(s) => (s.cpu_lanes, s.tenants.clone(), s.availability),
+        None => (0, Vec::new(), Availability::default()),
     };
     BatchReport {
         queries: nq,
@@ -185,6 +188,7 @@ pub fn report_with_serve(
         pipeline_depth,
         cpu_lanes,
         tenants,
+        availability,
         breakdown: agg,
         mode,
     }

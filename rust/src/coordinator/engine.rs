@@ -398,7 +398,16 @@ mod tests {
         let run_all = |scratch: &mut QueryScratch| {
             for q in 0..nq {
                 let query = sys.dataset.query(q);
-                classic.query_with_scratch(query, scratch);
+                let out = classic.query_with_scratch(query, scratch);
+                // The retry/degrade counters are Copy scalars riding in the
+                // breakdown: they must stay inert (and allocation-free) on
+                // the fault-free path.
+                assert_eq!(out.breakdown.retries, 0, "fault-free query retried");
+                assert!(
+                    !out.breakdown.degrade.is_degraded(),
+                    "fault-free query degraded to {}",
+                    out.breakdown.degrade.name()
+                );
                 progressive.query_with_scratch(query, scratch);
                 sw.query_with_scratch(query, scratch);
             }

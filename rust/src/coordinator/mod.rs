@@ -26,6 +26,12 @@
 //!   (`sim.arrival_qps`, uniform/Poisson/trace) produce
 //!   tail-latency-vs-load reports, and `serve.tenants` adds
 //!   weighted-fair multi-tenant admission with per-tenant percentiles.
+//!   Seeded fault injection ([`crate::simulator::fault`], `sim.fault_*`)
+//!   and per-query deadlines (`serve.deadline_us`) add the degraded-mode
+//!   serving path: bounded retry with deterministic backoff, fallback to
+//!   coarse/unverified rankings under pressure (per-query
+//!   [`crate::simulator::DegradeLevel`]), shard-outage partial results,
+//!   and availability columns on the serve report.
 //! - [`pipeline`] — the stateless per-call façade over the same dataflow
 //!   (back-compat + ablations). Produces per-stage breakdowns.
 //! - [`batcher`] — batch query driving over the engine core for
@@ -50,4 +56,4 @@ pub use engine::{QueryEngine, QueryParams};
 pub use pipeline::{Breakdown, Pipeline, QueryOutcome};
 pub use pipelined::{BatchProfile, ServeReport, ServeTiming, TenantLat};
 pub use shard::ShardedEngine;
-pub use stage::{QueryScratch, Stage, StageState};
+pub use stage::{FallbackTopk, QueryScratch, Stage, StageState};

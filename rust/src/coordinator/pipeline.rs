@@ -31,6 +31,7 @@ use crate::coordinator::builder::BuiltSystem;
 use crate::coordinator::engine::{execute_query, QueryParams};
 use crate::coordinator::stage::QueryScratch;
 use crate::refine::{filter_top_ratio, Calibration, ProgressiveEstimator};
+use crate::simulator::DegradeLevel;
 use crate::util::topk::{Scored, TopK};
 use crate::util::l2_sq;
 use std::time::Instant;
@@ -65,6 +66,13 @@ pub struct Breakdown {
     /// early-exit refinement prunes the stream.
     pub far_reads: usize,
     pub ssd_reads: usize,
+    /// Failed read attempts the pipelined scheduler retried for this
+    /// query under fault injection (always 0 on fault-free runs).
+    pub retries: usize,
+    /// Degradation outcome under fault injection (`Full` on fault-free
+    /// runs — both counters are plain `Copy` scalars so the steady-state
+    /// allocation footprint is unchanged).
+    pub degrade: DegradeLevel,
 }
 
 impl Breakdown {

@@ -72,13 +72,15 @@
 //! in-flight query turn per concurrently-waiting query of that tenant —
 //! never by the flood's whole backlog.
 
-use crate::config::{RefineMode, SimConfig, StreamInterleave, TenantSpec};
+use crate::config::{FaultConfig, RefineMode, SimConfig, StreamInterleave, TenantSpec};
 use crate::coordinator::builder::BuiltSystem;
 use crate::coordinator::engine::QueryParams;
 use crate::coordinator::pipeline::QueryOutcome;
-use crate::coordinator::stage::{run_stage, QueryScratch, Stage, StageState};
-use crate::metrics::LatencyStats;
-use crate::simulator::{FarStream, LaneServer, SsdQueue, StreamTiming, TimelineSched};
+use crate::coordinator::stage::{run_stage, FallbackTopk, QueryScratch, Stage, StageState};
+use crate::metrics::{Availability, LatencyStats};
+use crate::simulator::{
+    DegradeLevel, FarStream, FaultPlan, LaneServer, SsdQueue, StreamTiming, TimelineSched,
+};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 use std::cmp::Ordering;
@@ -193,6 +195,13 @@ pub(crate) struct TaskTiming {
     /// Waiting for a free CPU lane across the task's compute stages
     /// (always 0 with unbounded lanes).
     pub cpu_queue_ns: f64,
+    /// Degradation outcome of this task under fault injection (`Full` on
+    /// every fault-free run).
+    pub degrade: DegradeLevel,
+    /// Failed read attempts this task retried (far + SSD).
+    pub retries: u32,
+    /// Injected tail-spike delay absorbed by this task's far stream.
+    pub fault_delay_ns: f64,
 }
 
 /// Simulated wall-clock of one query through the pipelined scheduler.
@@ -220,6 +229,16 @@ pub struct ServeTiming {
     /// queueing lives in the task timings; merge is the one per-query
     /// stage, so its lane wait is reported here.
     pub merge_queue_ns: f64,
+    /// Degradation outcome under fault injection: the max over the
+    /// query's shard tasks, lifted to `Partial` when some (but not all)
+    /// tasks were dropped by an outage, `Dropped` when all were. `Full`
+    /// on every fault-free run.
+    pub degrade: DegradeLevel,
+    /// Failed read attempts the query's tasks retried.
+    pub retries: u32,
+    /// Whether the query completed past its deadline (`serve.deadline_us`
+    /// > 0 only; always false without a deadline).
+    pub deadline_missed: bool,
 }
 
 impl ServeTiming {
@@ -265,6 +284,9 @@ pub struct ServeReport {
     /// Per-tenant `done − arrival` statistics (empty unless tenants are
     /// configured).
     pub tenants: Vec<TenantLat>,
+    /// Availability accounting (all-served / inactive on fault-free
+    /// runs).
+    pub availability: Availability,
 }
 
 impl ServeReport {
@@ -332,8 +354,9 @@ pub(crate) fn arrival_offsets(nq: usize, qps: f64, sim: &SimConfig) -> Vec<f64> 
 /// tests can pin the drop.
 ///
 /// `capture` records each task's far-memory stream (for admission-time
-/// scheduling). `task(t)` maps a task index to the system it runs
-/// against and its query slice.
+/// scheduling) and its degraded-fallback top-k prefixes (for the fault
+/// layer's graceful degradation). `task(t)` maps a task index to the
+/// system it runs against and its query slice.
 ///
 /// Functional results are independent of the claim order, the slot
 /// count and the worker count: each stage touches only its own task's
@@ -347,7 +370,7 @@ pub(crate) fn execute_stage_graph<'a, F>(
     ntasks: usize,
     capture: bool,
     task: F,
-) -> (Vec<(QueryOutcome, FarStream)>, usize)
+) -> (Vec<(QueryOutcome, FarStream, FallbackTopk)>, usize)
 where
     F: Fn(usize) -> (&'a BuiltSystem, &'a [f32]) + Sync,
 {
@@ -358,7 +381,7 @@ where
     if ntasks == 0 {
         return (Vec::new(), 0);
     }
-    let results: Vec<Mutex<Option<(QueryOutcome, FarStream)>>> =
+    let results: Vec<Mutex<Option<(QueryOutcome, FarStream, FallbackTopk)>>> =
         (0..ntasks).map(|_| Mutex::new(None)).collect();
     pool.dispatch(ntasks, |slot, t| {
         let mut scratch = scratches[slot].lock().unwrap();
@@ -375,8 +398,13 @@ where
                 if capture { Some(&mut stream) } else { None },
             );
         }
-        *results[t].lock().unwrap() =
-            Some((QueryOutcome { topk: std::mem::take(&mut st.topk), breakdown: st.bd }, stream));
+        let fallback =
+            if capture { st.fallback_topk(&scratch, params.k) } else { FallbackTopk::default() };
+        *results[t].lock().unwrap() = Some((
+            QueryOutcome { topk: std::mem::take(&mut st.topk), breakdown: st.bd },
+            stream,
+            fallback,
+        ));
     });
     (
         results
@@ -416,6 +444,14 @@ pub(crate) struct SimInput<'a> {
     /// Per-query tenant index (empty = all tenant 0; must index into
     /// `tenants` otherwise).
     pub tenant_of: &'a [usize],
+    /// Per-query completion deadline on the simulated clock, measured
+    /// from arrival (0 = none). Under deadline pressure tasks degrade at
+    /// device-stage boundaries instead of queueing further.
+    pub deadline_ns: f64,
+    /// Seeded fault plan. A `!enabled()` plan is never consulted — the
+    /// zero-fault schedule is bit-identical to one computed without the
+    /// fault layer.
+    pub fault: &'a FaultPlan,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -486,6 +522,14 @@ struct SimState<'a> {
     service_max: Vec<f64>,
     heap: BinaryHeap<std::cmp::Reverse<Ev>>,
     seq: u64,
+    /// Fault layer (inert — never drawn from — when `!faults_on`).
+    fault: &'a FaultPlan,
+    faults_on: bool,
+    deadline_ns: f64,
+    /// Per-task far-read / SSD-read attempt counters (attempt 0 = the
+    /// first try; bumped on each retry).
+    far_attempt: Vec<u32>,
+    ssd_attempt: Vec<u32>,
 }
 
 impl SimState<'_> {
@@ -506,6 +550,42 @@ impl SimState<'_> {
             // bit-for-bit.
             self.push(now + dur, EvKind::FarReady(t));
         }
+    }
+
+    /// Whether task `t`'s query is past its deadline at instant `now`
+    /// (always false without a deadline — no arithmetic on the fault-free
+    /// path).
+    fn past_deadline(&self, t: usize, now: f64) -> bool {
+        self.deadline_ns > 0.0
+            && now >= self.timings[t / self.shards].arrival_ns + self.deadline_ns
+    }
+
+    /// Degrade task `t` to `level` and complete it at `now`: the
+    /// remaining pipeline stages are skipped, so the fallback result
+    /// (coarse or unverified-refined prefix) is what the query serves for
+    /// this task.
+    fn degrade_task(&mut self, t: usize, level: DegradeLevel, now: f64) {
+        let tt = &mut self.task_timing[t];
+        tt.degrade = tt.degrade.max(level);
+        self.finish_task(t, now);
+    }
+
+    /// Task `t`'s far stream completed at `far_done`: inject any
+    /// configured tail spike (only for tasks that actually streamed far
+    /// records), then run refinement. With faults off this is exactly
+    /// [`SimState::after_far`].
+    fn after_far_faulted(&mut self, t: usize, mut far_done: f64) {
+        if self.faults_on {
+            let pr = &self.profiles[t];
+            if pr.far_solo_ns > 0.0 || !pr.stream.addrs.is_empty() {
+                let spike = self.fault.far_spike_ns(t, self.far_attempt[t]);
+                if spike > 0.0 {
+                    self.task_timing[t].fault_delay_ns += spike;
+                    far_done += spike;
+                }
+            }
+        }
+        self.after_far(t, far_done);
     }
 
     /// Task `t`'s far stream completed at `far_done`: run refinement.
@@ -534,8 +614,16 @@ impl SimState<'_> {
     fn finish_task(&mut self, t: usize, task_done: f64) {
         let pr = &self.profiles[t];
         let tt = self.task_timing[t];
-        let task_service =
-            pr.traversal_ns + tt.far_solo_ns + pr.refine_ns + tt.ssd_solo_ns + pr.rerank_ns;
+        // Idle-device service total of the stages the task actually ran.
+        // The `Full` arm is the pre-fault expression verbatim — the only
+        // one a fault-free run can take.
+        let task_service = match tt.degrade {
+            DegradeLevel::Full => {
+                pr.traversal_ns + tt.far_solo_ns + pr.refine_ns + tt.ssd_solo_ns + pr.rerank_ns
+            }
+            DegradeLevel::SkipVerify => pr.traversal_ns + tt.far_solo_ns + pr.refine_ns,
+            _ => pr.traversal_ns,
+        };
         let q = t / self.shards;
         self.task_done_max[q] = self.task_done_max[q].max(task_done);
         self.service_max[q] = self.service_max[q].max(task_service);
@@ -568,6 +656,8 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         merge_ns,
         tenants,
         tenant_of,
+        deadline_ns,
+        fault,
         ..
     } = *input;
     let nq_shards = nq * shards;
@@ -602,6 +692,11 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         service_max: vec![0.0f64; nq],
         heap: BinaryHeap::new(),
         seq: 0,
+        fault,
+        faults_on: fault.enabled(),
+        deadline_ns,
+        far_attempt: vec![0u32; nq_shards],
+        ssd_attempt: vec![0u32; nq_shards],
     };
     for (q, &at) in arrivals.iter().enumerate() {
         st.push(at, EvKind::Arrival(q));
@@ -636,7 +731,38 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
             }
             EvKind::FarReady(t) => {
                 let pr = &profiles[t];
-                if record_mode && !pr.stream.addrs.is_empty() {
+                // Fault policies at the far-stage boundary (consulted
+                // only when a fault plan or deadline is active; a
+                // fault-free run never enters this block). An outage
+                // drops the shard task; deadline pressure or a read
+                // failure past the retry budget degrades to the coarse
+                // ranking; a failure within budget re-admits after a
+                // deterministic backoff. Admission order stays FCFS:
+                // retries re-enter through the time-ordered heap.
+                let faulted = (st.faults_on || st.deadline_ns > 0.0) && {
+                    if st.faults_on && fault.shard_out(t % shards, now) {
+                        st.degrade_task(t, DegradeLevel::Dropped, now);
+                        true
+                    } else if st.past_deadline(t, now) {
+                        st.degrade_task(t, DegradeLevel::CoarseOnly, now);
+                        true
+                    } else if (pr.far_solo_ns > 0.0 || !pr.stream.addrs.is_empty())
+                        && fault.far_read_fails(t, st.far_attempt[t])
+                    {
+                        let a = st.far_attempt[t];
+                        if a < fault.retry_limit() {
+                            st.far_attempt[t] = a + 1;
+                            st.task_timing[t].retries += 1;
+                            st.push(now + fault.backoff_ns(a), EvKind::FarReady(t));
+                        } else {
+                            st.degrade_task(t, DegradeLevel::CoarseOnly, now);
+                        }
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if !faulted && record_mode && !pr.stream.addrs.is_empty() {
                     // Register on the round-robin arbiter and re-issue
                     // tentative completions for every live stream the
                     // re-arbitration may have shifted (never earlier than
@@ -654,14 +780,14 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
                         far_latest[rt] = timing;
                         st.push(timing.shared_ns.max(now), EvKind::FarDone(rt, far_ver[rt]));
                     }
-                } else if shared {
+                } else if !faulted && shared {
                     let s = far.admit(&pr.stream, now);
                     st.task_timing[t].far_solo_ns = s.solo_ns;
                     st.task_timing[t].far_queue_ns = s.queue_ns;
-                    st.after_far(t, s.shared_ns);
-                } else {
+                    st.after_far_faulted(t, s.shared_ns);
+                } else if !faulted {
                     st.task_timing[t].far_solo_ns = pr.far_solo_ns;
-                    st.after_far(t, now + pr.far_solo_ns);
+                    st.after_far_faulted(t, now + pr.far_solo_ns);
                 }
             }
             EvKind::FarDone(t, v) => {
@@ -676,7 +802,7 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
                 let s = far_latest[t];
                 st.task_timing[t].far_solo_ns = s.solo_ns;
                 st.task_timing[t].far_queue_ns = s.queue_ns;
-                st.after_far(t, now);
+                st.after_far_faulted(t, now);
             }
             EvKind::RefineReady(t) => {
                 let g = st.lanes.admit(profiles[t].refine_ns, now);
@@ -685,15 +811,44 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
             }
             EvKind::SsdReady(t) => {
                 let pr = &profiles[t];
-                let (ssd_done, ssd_solo) = if shared {
-                    let g = ssd[t % shards].admit(pr.ssd_reads, pr.ssd_bytes, now);
-                    st.task_timing[t].ssd_queue_ns = g.queue_ns;
-                    (g.done_ns, g.solo_ns)
-                } else {
-                    (now + pr.ssd_solo_ns, pr.ssd_solo_ns)
-                };
-                st.task_timing[t].ssd_solo_ns = ssd_solo;
-                st.after_ssd(t, ssd_done);
+                // Fault policies at the SSD-stage boundary: an outage or
+                // deadline pressure skips verification (serve the refined
+                // but unverified ranking); a read failure retries within
+                // budget, then skips. Only tasks that actually fetch from
+                // SSD can degrade here.
+                let faulted = (st.faults_on || st.deadline_ns > 0.0)
+                    && pr.ssd_reads > 0
+                    && {
+                        if (st.faults_on && fault.shard_out(t % shards, now))
+                            || st.past_deadline(t, now)
+                        {
+                            st.degrade_task(t, DegradeLevel::SkipVerify, now);
+                            true
+                        } else if fault.ssd_read_fails(t % shards, t, st.ssd_attempt[t]) {
+                            let a = st.ssd_attempt[t];
+                            if a < fault.retry_limit() {
+                                st.ssd_attempt[t] = a + 1;
+                                st.task_timing[t].retries += 1;
+                                st.push(now + fault.backoff_ns(a), EvKind::SsdReady(t));
+                            } else {
+                                st.degrade_task(t, DegradeLevel::SkipVerify, now);
+                            }
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                if !faulted {
+                    let (ssd_done, ssd_solo) = if shared {
+                        let g = ssd[t % shards].admit(pr.ssd_reads, pr.ssd_bytes, now);
+                        st.task_timing[t].ssd_queue_ns = g.queue_ns;
+                        (g.done_ns, g.solo_ns)
+                    } else {
+                        (now + pr.ssd_solo_ns, pr.ssd_solo_ns)
+                    };
+                    st.task_timing[t].ssd_solo_ns = ssd_solo;
+                    st.after_ssd(t, ssd_done);
+                }
             }
             EvKind::RerankReady(t) => {
                 let g = st.lanes.admit(profiles[t].rerank_ns, now);
@@ -748,6 +903,55 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
     }
     debug_assert!(waiting_total == 0 && in_flight == 0);
 
+    // Fold per-task fault outcomes into the per-query timeline and the
+    // availability columns. On a fault-free run every counter stays at
+    // its default and `active` is false.
+    let faults_active = st.faults_on || deadline_ns > 0.0;
+    let mut avail = Availability { active: faults_active, queries: nq, ..Default::default() };
+    if faults_active {
+        for q in 0..nq {
+            let mut level = DegradeLevel::Full;
+            let mut retries = 0u32;
+            let mut dropped = 0usize;
+            for s in 0..shards {
+                let tt = &st.task_timing[q * shards + s];
+                retries += tt.retries;
+                if tt.degrade == DegradeLevel::Dropped {
+                    dropped += 1;
+                } else {
+                    level = level.max(tt.degrade);
+                }
+            }
+            let degrade = if dropped == shards {
+                DegradeLevel::Dropped
+            } else if dropped > 0 {
+                level.max(DegradeLevel::Partial)
+            } else {
+                level
+            };
+            let tq = &mut st.timings[q];
+            tq.degrade = degrade;
+            tq.retries = retries;
+            tq.deadline_missed =
+                deadline_ns > 0.0 && tq.done_ns - tq.arrival_ns > deadline_ns;
+            avail.retries += retries as usize;
+            avail.dropped_tasks += dropped;
+            if degrade == DegradeLevel::Dropped {
+                avail.dropped += 1;
+            } else {
+                avail.served += 1;
+                if degrade.is_degraded() {
+                    avail.degraded += 1;
+                }
+            }
+            if tq.deadline_missed {
+                avail.deadline_missed += 1;
+            }
+        }
+    } else {
+        avail.served = nq;
+    }
+
     let timings = st.timings;
     let mut lat = LatencyStats::default();
     for t in &timings {
@@ -787,6 +991,7 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         p95_ns: lat.p95(),
         p99_ns: lat.p99(),
         tenants: tenant_lat,
+        availability: avail,
         timings,
     };
     (st.task_timing, report)
@@ -817,6 +1022,14 @@ pub struct BatchProfile {
     tenant_of: Vec<usize>,
     outcomes: Vec<QueryOutcome>,
     profiles: Vec<TaskProfile>,
+    /// Per-query degraded-fallback top-k prefixes (coarse + unverified
+    /// refined), captured alongside the streams — what a degraded
+    /// schedule serves instead of the full-pipeline top-k.
+    fallbacks: Vec<FallbackTopk>,
+    /// Fault plan for subsequent schedules (inert by default).
+    fault: FaultPlan,
+    /// Per-query deadline on the simulated clock (0 = none).
+    deadline_ns: f64,
     /// Dispatch rounds the functional pass took (1 for any nonempty
     /// batch since the run-to-completion executor; tests pin the drop
     /// from the old per-stage re-dispatch scheme).
@@ -832,14 +1045,16 @@ impl BatchProfile {
         shared: bool,
         dim: usize,
         mode: RefineMode,
-        results: Vec<(QueryOutcome, FarStream)>,
+        results: Vec<(QueryOutcome, FarStream, FallbackTopk)>,
         waves: usize,
     ) -> Self {
         let mut outcomes = Vec::with_capacity(results.len());
         let mut profiles = Vec::with_capacity(results.len());
-        for (out, stream) in results {
+        let mut fallbacks = Vec::with_capacity(results.len());
+        for (out, stream, fallback) in results {
             profiles.push(TaskProfile::from_outcome(&out, dim, mode, stream));
             outcomes.push(out);
+            fallbacks.push(fallback);
         }
         let tenants = cfg.serve.tenants.clone();
         let tenant_of = if tenants.len() > 1 {
@@ -856,6 +1071,9 @@ impl BatchProfile {
             tenant_of,
             outcomes,
             profiles,
+            fallbacks,
+            fault: FaultPlan::new(cfg.sim.fault.clone()),
+            deadline_ns: cfg.serve.deadline_us * 1e3,
             waves,
         }
     }
@@ -912,6 +1130,31 @@ impl BatchProfile {
         self.sim.stream_interleave = mode;
     }
 
+    /// Replace the fault plan for subsequent schedules. An enabled plan
+    /// requires a profile whose functional pass captured streams and
+    /// fallback prefixes (`sim.shared_timeline = true`) — degradation
+    /// serves the captured coarse/unverified prefixes.
+    pub fn set_fault(&mut self, cfg: FaultConfig) {
+        assert!(
+            !cfg.enabled() || self.streams_captured,
+            "cannot enable fault injection: this profile was captured without \
+             fallback prefixes (sim.shared_timeline was off during the functional pass)"
+        );
+        self.fault = FaultPlan::new(cfg);
+    }
+
+    /// Set the per-query deadline (µs, 0 = none) for subsequent
+    /// schedules. Like faults, deadlines degrade to captured fallback
+    /// prefixes, so they need a stream-capturing profile.
+    pub fn set_deadline_us(&mut self, us: f64) {
+        assert!(
+            us == 0.0 || self.streams_captured,
+            "cannot set a deadline: this profile was captured without fallback \
+             prefixes (sim.shared_timeline was off during the functional pass)"
+        );
+        self.deadline_ns = us * 1e3;
+    }
+
     /// Configure tenants + per-query tags for subsequent schedules.
     /// `tenant_of` must be one tag per query (or empty for all-tenant-0).
     pub fn set_tenants(&mut self, tenants: Vec<TenantSpec>, tenant_of: Vec<usize>) {
@@ -936,24 +1179,51 @@ impl BatchProfile {
             merge_ns: &[],
             tenants: &self.tenants,
             tenant_of: &self.tenant_of,
+            deadline_ns: self.deadline_ns,
+            fault: &self.fault,
         })
     }
 
-    fn apply_queue(outs: &mut [QueryOutcome], task_t: &[TaskTiming]) {
-        for (o, tt) in outs.iter_mut().zip(task_t) {
+    /// Charge the schedule's queueing to the outcomes and apply its
+    /// degradation verdicts: a degraded query's top-k is swapped for the
+    /// captured fallback prefix its `DegradeLevel` names (a fault-free
+    /// schedule is all-`Full` and leaves every outcome untouched).
+    fn apply_schedule(
+        outs: &mut [QueryOutcome],
+        fallbacks: &[FallbackTopk],
+        task_t: &[TaskTiming],
+        report: &ServeReport,
+    ) {
+        for (q, (o, tt)) in outs.iter_mut().zip(task_t).enumerate() {
             o.breakdown.queue_ns = tt.far_queue_ns + tt.ssd_queue_ns + tt.cpu_queue_ns;
+            let timing = &report.timings[q];
+            if timing.degrade.is_degraded() || timing.retries > 0 {
+                o.breakdown.degrade = timing.degrade;
+                o.breakdown.retries = timing.retries as usize;
+                match timing.degrade {
+                    DegradeLevel::Full => {}
+                    DegradeLevel::SkipVerify => o.topk = fallbacks[q].refined.clone(),
+                    DegradeLevel::CoarseOnly | DegradeLevel::Partial => {
+                        o.topk = fallbacks[q].coarse.clone()
+                    }
+                    DegradeLevel::Dropped => o.topk.clear(),
+                }
+            }
         }
     }
 
     /// Schedule the captured batch at (`depth`, `arrival_qps`): returns
     /// outcomes (query order, `queue_ns` charged by this schedule) and
-    /// the serve report. Top-k results are the captured ones — scheduling
-    /// can never change them. Borrowing variant for sweeps; the serving
-    /// path uses [`BatchProfile::into_schedule`] to avoid the clone.
+    /// the serve report. Top-k results are the captured ones — the
+    /// schedule never changes them *unless* fault injection or a deadline
+    /// degrades a query, in which case its top-k is the captured fallback
+    /// prefix its [`DegradeLevel`] names. Borrowing variant for sweeps;
+    /// the serving path uses [`BatchProfile::into_schedule`] to avoid the
+    /// clone.
     pub fn schedule(&self, depth: usize, arrival_qps: f64) -> (Vec<QueryOutcome>, ServeReport) {
         let (task_t, report) = self.run_sim(depth, arrival_qps);
         let mut outs = self.outcomes.clone();
-        Self::apply_queue(&mut outs, &task_t);
+        Self::apply_schedule(&mut outs, &self.fallbacks, &task_t, &report);
         (outs, report)
     }
 
@@ -967,7 +1237,7 @@ impl BatchProfile {
     ) -> (Vec<QueryOutcome>, ServeReport) {
         let (task_t, report) = self.run_sim(depth, arrival_qps);
         let mut outs = self.outcomes;
-        Self::apply_queue(&mut outs, &task_t);
+        Self::apply_schedule(&mut outs, &self.fallbacks, &task_t, &report);
         (outs, report)
     }
 }

@@ -41,6 +41,7 @@ use crate::coordinator::pipelined::{
     execute_stage_graph, modeled_merge_ns, simulate, ServeReport, SimInput, TaskProfile,
 };
 use crate::coordinator::stage::QueryScratch;
+use crate::simulator::{DegradeLevel, FaultPlan};
 use crate::util::threadpool::{default_threads, ThreadPool};
 use crate::util::topk::Scored;
 use crate::vecstore::Dataset;
@@ -182,6 +183,27 @@ impl ShardedEngine {
         self.cfg.sim.stream_interleave = mode;
     }
 
+    /// Replace the fault plan without rebuilding shards. An enabled plan
+    /// requires the shared timeline (degradation serves the functional
+    /// pass's captured fallback prefixes).
+    pub fn set_fault(&mut self, fault: crate::config::FaultConfig) {
+        assert!(
+            !fault.enabled() || self.cfg.sim.shared_timeline,
+            "fault injection requires sim.shared_timeline"
+        );
+        self.cfg.sim.fault = fault;
+    }
+
+    /// Set the per-query deadline (µs, 0 = none) without rebuilding
+    /// shards; requires the shared timeline like faults do.
+    pub fn set_deadline_us(&mut self, us: f64) {
+        assert!(
+            us == 0.0 || self.cfg.sim.shared_timeline,
+            "deadlines require sim.shared_timeline"
+        );
+        self.cfg.serve.deadline_us = us;
+    }
+
     pub fn params(&self) -> &QueryParams {
         &self.params
     }
@@ -279,7 +301,8 @@ impl ShardedEngine {
         // rec_bytes, the partitioned layout the module docs describe).
         let mut outs = Vec::with_capacity(tasks);
         let mut profiles = Vec::with_capacity(tasks);
-        for (t, (out, mut stream)) in results.into_iter().enumerate() {
+        let mut fallbacks = Vec::with_capacity(tasks);
+        for (t, (out, mut stream, fallback)) in results.into_iter().enumerate() {
             let base = self.base_ids[t % ns] * stream.rec_bytes as u64;
             if base != 0 {
                 for addr in stream.addrs.iter_mut() {
@@ -288,9 +311,37 @@ impl ShardedEngine {
             }
             profiles.push(TaskProfile::from_outcome(&out, dim, params.mode, stream));
             outs.push(out);
+            fallbacks.push(fallback);
         }
 
-        // ---- gather: remap to global ids, merge, aggregate breakdowns ----
+        // ---- simulated clock: admission-time schedule of every task's
+        // far-memory stream + shard-local SSD burst. Runs before the
+        // gather because its per-task degradation verdicts (fault
+        // injection / deadlines / outages) decide what each shard task
+        // contributes to the merge. ----
+        let merge_ns = vec![modeled_merge_ns(ns, params.k); nq];
+        let fault = FaultPlan::new(self.cfg.sim.fault.clone());
+        let (task_t, report) = simulate(&SimInput {
+            sim: &self.cfg.sim,
+            nq,
+            shards: ns,
+            depth: self.cfg.serve.pipeline_depth,
+            arrival_qps: self.cfg.sim.arrival_qps,
+            cpu_lanes: self.cfg.serve.cpu_lanes,
+            shared,
+            profiles: &profiles,
+            merge_ns: &merge_ns,
+            tenants: &self.cfg.serve.tenants,
+            tenant_of,
+            deadline_ns: self.cfg.serve.deadline_us * 1e3,
+            fault: &fault,
+        });
+
+        // ---- gather: remap to global ids, merge, aggregate breakdowns.
+        // Each task contributes the list its degradation level names:
+        // the full top-k, a captured fallback prefix, or (dropped by an
+        // outage) nothing — the query serves the surviving shards'
+        // partial merge. ----
         let mut merged_outs = Vec::with_capacity(nq);
         let mut merged: Vec<Scored> = Vec::with_capacity(ns * params.k);
         for q in 0..nq {
@@ -298,8 +349,19 @@ impl ShardedEngine {
             merged.clear();
             let mut bd = Breakdown::default();
             for (s, out) in outs[q * ns..(q + 1) * ns].iter().enumerate() {
+                let t = q * ns + s;
+                let list = match task_t[t].degrade {
+                    DegradeLevel::Full => &out.topk,
+                    DegradeLevel::SkipVerify => &fallbacks[t].refined,
+                    DegradeLevel::Dropped => {
+                        // No merge contribution and no stage accounting:
+                        // the shard never served this task.
+                        continue;
+                    }
+                    _ => &fallbacks[t].coarse,
+                };
                 merged.extend(
-                    out.topk.iter().map(|c| Scored::new(c.dist, c.id + self.base_ids[s])),
+                    list.iter().map(|c| Scored::new(c.dist, c.id + self.base_ids[s])),
                 );
                 let ob = &out.breakdown;
                 // Stages run concurrently across shards: time aggregates
@@ -321,25 +383,10 @@ impl ShardedEngine {
             // the simulated clock charges the deterministic merge model
             // instead (it must stay a pure function of the counts).
             bd.rerank_ns += t0.elapsed().as_nanos() as f64;
+            bd.degrade = report.timings[q].degrade;
+            bd.retries = report.timings[q].retries as usize;
             merged_outs.push(QueryOutcome { topk: merged.clone(), breakdown: bd });
         }
-
-        // ---- simulated clock: admission-time schedule of every task's
-        // far-memory stream + shard-local SSD burst ----
-        let merge_ns = vec![modeled_merge_ns(ns, params.k); nq];
-        let (task_t, report) = simulate(&SimInput {
-            sim: &self.cfg.sim,
-            nq,
-            shards: ns,
-            depth: self.cfg.serve.pipeline_depth,
-            arrival_qps: self.cfg.sim.arrival_qps,
-            cpu_lanes: self.cfg.serve.cpu_lanes,
-            shared,
-            profiles: &profiles,
-            merge_ns: &merge_ns,
-            tenants: &self.cfg.serve.tenants,
-            tenant_of,
-        });
         if shared {
             for (q, out) in merged_outs.iter_mut().enumerate() {
                 // The query's far stage completes when its slowest shard

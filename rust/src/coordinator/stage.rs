@@ -154,6 +154,39 @@ impl StageState {
         self.from_candidates = false;
         self.topk = Vec::new();
     }
+
+    /// Degraded-mode top-k prefixes, captured after the query's walk
+    /// completes (the scratch still holds this query's data). The
+    /// admission-time scheduler substitutes one of these when fault
+    /// injection or deadline pressure makes a query skip pipeline
+    /// stages: `coarse` is the front stage's PQ ranking (what the query
+    /// would return with far-memory refinement skipped), `refined` the
+    /// FaTRQ-refined but SSD-unverified ranking. Baseline mode has no
+    /// refined ranking — its fallback is the coarse order either way.
+    pub(crate) fn fallback_topk(&self, scratch: &QueryScratch, k: usize) -> FallbackTopk {
+        let coarse: Vec<Scored> =
+            scratch.front.cands[..k.min(scratch.front.cands.len())].to_vec();
+        let refined = if self.from_candidates {
+            coarse.clone()
+        } else {
+            let r = &scratch.refine.refined;
+            r[..k.min(r.len())].to_vec()
+        };
+        FallbackTopk { coarse, refined }
+    }
+}
+
+/// Degraded-mode result prefixes of one task (see
+/// [`StageState::fallback_topk`]). Captured only when the functional
+/// pass records far-memory streams (i.e. under the shared timeline) —
+/// the same passes that can be scheduled with faults.
+#[derive(Clone, Debug, Default)]
+pub struct FallbackTopk {
+    /// Coarse PQ ranking prefix (first k of the candidate list).
+    pub coarse: Vec<Scored>,
+    /// Refined-but-unverified ranking prefix (first k of the FaTRQ
+    /// refined order; equals `coarse` in Baseline mode).
+    pub refined: Vec<Scored>,
 }
 
 impl Default for StageState {

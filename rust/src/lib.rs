@@ -55,7 +55,17 @@
 //!   `sim.arrival_qps` with uniform/Poisson/trace arrivals and
 //!   p50/p95/p99 from the timeline, weighted-fair multi-tenant QoS via
 //!   `serve.tenants` — depth 1 is the sequential
-//!   engine, bit-identical), the per-call `Pipeline` façade, batch
+//!   engine, bit-identical), seeded **fault injection** with a
+//!   degraded-mode serving path ([`simulator::fault`]: a
+//!   [`simulator::FaultPlan`] that is a pure function of
+//!   `(seed, device, op)` injects far-memory read failures/latency
+//!   spikes, SSD errors and shard outage windows; the scheduler answers
+//!   with bounded deterministic-backoff retries, per-query deadlines
+//!   (`serve.deadline_us`) and graceful fallback to coarse/unverified
+//!   rankings tracked per query as [`simulator::DegradeLevel`], with
+//!   availability columns on the serve report — a zero-fault plan is
+//!   structurally inert and bit-identical to the fault-free timeline),
+//!   the per-call `Pipeline` façade, batch
 //!   driving, and the **shard layer**: [`coordinator::ShardedEngine`]
 //!   partitions the corpus into N contiguous-id-range shards (each a full
 //!   `BuiltSystem` with its own index, TRQ store and calibration) and

@@ -29,13 +29,21 @@ COMMANDS:
           [--early-exit] [--margin-quantile Q] [--threads N]
           [--shards N] [--shared-timeline] [--pipeline-depth D]
           [--arrival-qps R] [--arrival-dist uniform|poisson]
-          [--arrival-trace FILE] [--cpu-lanes L]
+          [--arrival-trace FILE] [--arrival-gen KIND] [--cpu-lanes L]
           [--stream-interleave burst|record] [--tenants SPECS]
+          [--deadline-us D] [--fault-seed S] [--fault-far-rate R]
+          [--fault-far-spike-rate R] [--fault-far-spike-us U]
+          [--fault-ssd-rate R] [--fault-retry-limit N]
+          [--fault-retry-backoff-us U] [--fault-outages SPECS]
   bench   --config <toml> [--threads N] [--early-exit] [--margin-quantile Q]
           [--shards N] [--shared-timeline] [--pipeline-depth D]
           [--arrival-qps R] [--arrival-dist uniform|poisson]
-          [--arrival-trace FILE] [--cpu-lanes L]
+          [--arrival-trace FILE] [--arrival-gen KIND] [--cpu-lanes L]
           [--stream-interleave burst|record] [--tenants SPECS]
+          [--deadline-us D] [--fault-seed S] [--fault-far-rate R]
+          [--fault-far-spike-rate R] [--fault-far-spike-us U]
+          [--fault-ssd-rate R] [--fault-retry-limit N]
+          [--fault-retry-backoff-us U] [--fault-outages SPECS]
   xla     --artifacts <dir>          verify AOT artifacts vs native compute
   help
 
@@ -71,6 +79,24 @@ FLAGS:
                         (e.g. latency:4,batch:1:8); queries round-robin over
                         tenants, admission is weighted-fair + quota-capped,
                         the report gains per-tenant p50/p95/p99
+  --arrival-gen KIND    synthesize the arrival trace instead of replaying a
+                        file: bursty | diurnal | mixed, at the --arrival-qps
+                        mean rate (seeded from the dataset seed)
+  --deadline-us D       per-query deadline: queries past it degrade to the
+                        coarse/unverified ranking instead of waiting
+                        (0 = off; requires --shared-timeline)
+  --fault-seed S        seed for the deterministic fault plan (faults fire
+                        only when a rate below is nonzero)
+  --fault-far-rate R        far-memory record-read failure probability
+  --fault-far-spike-rate R  far-memory tail-latency spike probability
+  --fault-far-spike-us U    spike magnitude, us (default 50)
+  --fault-ssd-rate R        SSD read failure/timeout probability
+  --fault-retry-limit N     bounded retries per read (default 2)
+  --fault-retry-backoff-us U  base of the deterministic exponential backoff
+  --fault-outages SPECS shard outage windows, comma-separated
+                        shard:start_us:end_us (e.g. 0:100:400,2:0:250);
+                        affected shard tasks drop, queries return partial
+                        results from surviving shards
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
@@ -107,11 +133,42 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
             })
             .collect::<anyhow::Result<_>>()?;
     }
+    if let Some(kind) = args.get("arrival-gen") {
+        anyhow::ensure!(
+            cfg.sim.arrival_trace.is_empty(),
+            "--arrival-gen conflicts with --arrival-trace (pick one arrival source)"
+        );
+        anyhow::ensure!(
+            cfg.sim.arrival_qps > 0.0,
+            "--arrival-gen needs --arrival-qps > 0 for the mean rate"
+        );
+        cfg.sim.arrival_trace = fatrq::bench_support::gen_arrival_trace(
+            kind,
+            cfg.dataset.queries,
+            cfg.sim.arrival_qps,
+            cfg.dataset.seed,
+        )?;
+    }
     if let Some(m) = args.get("stream-interleave") {
         cfg.sim.stream_interleave = fatrq::config::StreamInterleave::parse(m)?;
     }
     if let Some(t) = args.get("tenants") {
         cfg.serve.tenants = fatrq::config::TenantSpec::parse_list(t)?;
+    }
+    // Robust-serving knobs: per-query deadline + the seeded fault plan.
+    cfg.serve.deadline_us = args.get_f64("deadline-us", cfg.serve.deadline_us)?;
+    cfg.sim.fault.seed = args.get_u64("fault-seed", cfg.sim.fault.seed)?;
+    cfg.sim.fault.far_fail_rate = args.get_f64("fault-far-rate", cfg.sim.fault.far_fail_rate)?;
+    cfg.sim.fault.far_spike_rate =
+        args.get_f64("fault-far-spike-rate", cfg.sim.fault.far_spike_rate)?;
+    cfg.sim.fault.far_spike_us = args.get_f64("fault-far-spike-us", cfg.sim.fault.far_spike_us)?;
+    cfg.sim.fault.ssd_fail_rate = args.get_f64("fault-ssd-rate", cfg.sim.fault.ssd_fail_rate)?;
+    cfg.sim.fault.retry_limit =
+        args.get_usize("fault-retry-limit", cfg.sim.fault.retry_limit as usize)? as u32;
+    cfg.sim.fault.retry_backoff_us =
+        args.get_f64("fault-retry-backoff-us", cfg.sim.fault.retry_backoff_us)?;
+    if let Some(o) = args.get("fault-outages") {
+        cfg.sim.fault.outages = fatrq::config::OutageSpec::parse_list(o)?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -175,6 +232,20 @@ fn print_report(rep: &BatchReport, k: usize, threads: usize, shards: usize) {
             },
             rep.makespan_ns / 1e3,
             rep.queries as f64 * 1e9 / rep.makespan_ns
+        );
+    }
+    let av = &rep.availability;
+    if av.active {
+        println!(
+            "availability: {}/{} served ({:.1}%)  degraded {}  dropped {}  retries {}  deadline-missed {}  shard-tasks dropped {}",
+            av.served,
+            av.queries,
+            100.0 * av.success_rate(),
+            av.degraded,
+            av.dropped,
+            av.retries,
+            av.deadline_missed,
+            av.dropped_tasks
         );
     }
     for t in &rep.tenants {
@@ -249,6 +320,16 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         "cpu-lanes",
         "stream-interleave",
         "tenants",
+        "arrival-gen",
+        "deadline-us",
+        "fault-seed",
+        "fault-far-rate",
+        "fault-far-spike-rate",
+        "fault-far-spike-us",
+        "fault-ssd-rate",
+        "fault-retry-limit",
+        "fault-retry-backoff-us",
+        "fault-outages",
     ])?;
     let cfg = load_config(args)?;
     let mode = match args.get("mode") {
@@ -278,6 +359,16 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "cpu-lanes",
         "stream-interleave",
         "tenants",
+        "arrival-gen",
+        "deadline-us",
+        "fault-seed",
+        "fault-far-rate",
+        "fault-far-spike-rate",
+        "fault-far-spike-us",
+        "fault-ssd-rate",
+        "fault-retry-limit",
+        "fault-retry-backoff-us",
+        "fault-outages",
     ])?;
     let cfg = load_config(args)?;
     let threads = args.get_usize("threads", 4)?;

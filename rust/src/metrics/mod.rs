@@ -47,6 +47,58 @@ pub fn distance_mse(estimates: &[f32], truths: &[f32]) -> f64 {
         / estimates.len() as f64
 }
 
+/// Availability accounting of one serving run under fault injection
+/// (`sim.fault_*` / `serve.deadline_us`). All counters stay zero on a
+/// fault-free run; `active` distinguishes "no faults configured" from
+/// "faults configured but none fired".
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Availability {
+    /// Whether a fault plan or deadline was active for this run.
+    pub active: bool,
+    /// Total queries scheduled.
+    pub queries: usize,
+    /// Queries that returned a (possibly degraded) result.
+    pub served: usize,
+    /// Served queries that ran short of the full pipeline (any
+    /// `DegradeLevel` above `Full`).
+    pub degraded: usize,
+    /// Queries that returned nothing (every shard task dropped).
+    pub dropped: usize,
+    /// Total read retries across all queries.
+    pub retries: usize,
+    /// Queries whose deadline had passed at completion.
+    pub deadline_missed: usize,
+    /// Shard tasks dropped by outage windows (a query with surviving
+    /// tasks still counts as served).
+    pub dropped_tasks: usize,
+}
+
+impl Availability {
+    /// Fraction of queries that returned a result.
+    pub fn success_rate(&self) -> f64 {
+        if self.queries == 0 {
+            return 1.0;
+        }
+        self.served as f64 / self.queries as f64
+    }
+
+    /// Fraction of queries served below the full pipeline.
+    pub fn degraded_fraction(&self) -> f64 {
+        if self.queries == 0 {
+            return 0.0;
+        }
+        self.degraded as f64 / self.queries as f64
+    }
+
+    /// Fraction of queries past their deadline at completion.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        if self.queries == 0 {
+            return 0.0;
+        }
+        self.deadline_missed as f64 / self.queries as f64
+    }
+}
+
 /// Streaming latency statistics (nanoseconds).
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {
@@ -160,5 +212,27 @@ mod tests {
         l.record(1e6); // 1 ms
         l.record(1e6);
         assert!((l.throughput_qps() - 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn availability_rates() {
+        let a = Availability::default();
+        assert!(!a.active);
+        assert_eq!(a.success_rate(), 1.0);
+        assert_eq!(a.degraded_fraction(), 0.0);
+        assert_eq!(a.deadline_miss_rate(), 0.0);
+        let a = Availability {
+            active: true,
+            queries: 10,
+            served: 9,
+            degraded: 3,
+            dropped: 1,
+            retries: 7,
+            deadline_missed: 2,
+            dropped_tasks: 4,
+        };
+        assert!((a.success_rate() - 0.9).abs() < 1e-12);
+        assert!((a.degraded_fraction() - 0.3).abs() < 1e-12);
+        assert!((a.deadline_miss_rate() - 0.2).abs() < 1e-12);
     }
 }

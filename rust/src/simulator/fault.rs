@@ -1,0 +1,311 @@
+//! Seeded, deterministic fault injection for the serving simulator.
+//!
+//! Production far-memory and flash tiers fail in ways the contention
+//! models alone never produce: CXL device/link errors and tail-latency
+//! spikes (COSMOS-class pools), SSD read errors and timeouts
+//! (AiSAQ-class all-in-storage layouts), and whole-device outages. The
+//! [`FaultPlan`] injects all three into the admission-time scheduler
+//! ([`crate::coordinator`]'s `simulate`) while preserving the clock's
+//! core property: **the fault timeline is a pure function of the
+//! configuration**, never of event interleaving, worker counts or
+//! hosts.
+//!
+//! Every fault draw is a stateless hash of
+//! `(seed, device-channel, task, attempt)` — no RNG state is threaded
+//! through the event loop, so two schedulers that reach the same read
+//! attempt in different orders (1 worker vs 4, depth 1 vs 16) see the
+//! same verdict, and a re-run of the same plan reproduces the same
+//! faults bit-for-bit. Outage windows are pure wall-clock predicates
+//! (`shard`, `[start, end)` on the simulated clock).
+//!
+//! The scheduler's policies on a positive draw (bounded retry with
+//! deterministic exponential backoff, then graceful degradation) live
+//! in `coordinator/pipelined.rs`; the per-query outcome is reported as
+//! a [`DegradeLevel`]. With every rate at zero the plan is `!enabled()`
+//! and the scheduler never consults it — the zero-fault timeline is
+//! bit-identical to a build without the fault layer (runtime-asserted
+//! by `tests/fault_injection.rs` and the fig8 `--quick` smoke).
+
+use crate::config::FaultConfig;
+
+/// How much of the full pipeline a query (or one of its shard tasks)
+/// actually ran. Ordered by severity, so a query's level folds as the
+/// max over its tasks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DegradeLevel {
+    /// Full pipeline: far-memory refinement + SSD verification.
+    #[default]
+    Full,
+    /// SSD verification skipped (SSD failure past the retry budget, or
+    /// deadline pressure at the SSD stage): served the refined but
+    /// unverified ranking.
+    SkipVerify,
+    /// Far-memory refinement skipped (far read failure past the retry
+    /// budget, or deadline pressure at the far stage): served the
+    /// coarse PQ ranking.
+    CoarseOnly,
+    /// Some shard tasks were dropped (shard outage): served a partial
+    /// merge of the surviving shards.
+    Partial,
+    /// Every shard task was dropped — no result.
+    Dropped,
+}
+
+impl DegradeLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            DegradeLevel::Full => "full",
+            DegradeLevel::SkipVerify => "skip-verify",
+            DegradeLevel::CoarseOnly => "coarse-only",
+            DegradeLevel::Partial => "partial",
+            DegradeLevel::Dropped => "dropped",
+        }
+    }
+
+    /// Anything short of the full pipeline.
+    pub fn is_degraded(self) -> bool {
+        self != DegradeLevel::Full
+    }
+}
+
+// Device channels: independent fault streams per fault source, so e.g.
+// raising the spike rate never re-randomizes which reads *fail*.
+const DEV_FAR_FAIL: u64 = 0;
+const DEV_FAR_SPIKE: u64 = 1;
+const DEV_SSD_FAIL_BASE: u64 = 2;
+
+/// One splitmix64 scramble round (same finalizer as `util::rng`'s
+/// seeder; reimplemented here because the fault plan needs a *stateless*
+/// mixer, not a sequential generator).
+fn scramble(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless hash of `(seed, device, task, attempt)` to a uniform u64.
+fn mix(seed: u64, device: u64, task: u64, attempt: u64) -> u64 {
+    let mut h = scramble(seed ^ 0xA076_1D64_78BD_642F);
+    h = scramble(h ^ device);
+    h = scramble(h ^ task);
+    scramble(h ^ attempt)
+}
+
+/// Map a hash to a unit float in [0, 1) — the same 53-bit construction
+/// as `Rng::f64`.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// A deterministic fault schedule: wraps the configured rates and
+/// answers per-read-attempt fault queries by stateless hashing (see the
+/// module docs for the purity contract).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> Self {
+        FaultPlan { cfg }
+    }
+
+    /// The inert plan (all rates zero).
+    pub fn disabled() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Whether any fault source is active. The scheduler only consults
+    /// the plan when this is true, which is what keeps the zero-fault
+    /// timeline structurally identical to a fault-free build.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Max retries per failed read before degrading.
+    pub fn retry_limit(&self) -> u32 {
+        self.cfg.retry_limit
+    }
+
+    /// Deterministic exponential backoff before re-admitting attempt
+    /// `attempt + 1` (ns): `retry_backoff_us * 2^attempt`.
+    pub fn backoff_ns(&self, attempt: u32) -> f64 {
+        self.cfg.retry_backoff_us * 1e3 * f64::from(1u32 << attempt.min(20))
+    }
+
+    /// Does attempt `attempt` of task `task`'s far-memory record stream
+    /// fail?
+    pub fn far_read_fails(&self, task: usize, attempt: u32) -> bool {
+        self.cfg.far_fail_rate > 0.0
+            && unit(mix(self.cfg.seed, DEV_FAR_FAIL, task as u64, u64::from(attempt)))
+                < self.cfg.far_fail_rate
+    }
+
+    /// Tail-latency spike (ns) carried by attempt `attempt` of task
+    /// `task`'s far-memory stream (0.0 = no spike).
+    pub fn far_spike_ns(&self, task: usize, attempt: u32) -> f64 {
+        if self.cfg.far_spike_rate > 0.0
+            && unit(mix(self.cfg.seed, DEV_FAR_SPIKE, task as u64, u64::from(attempt)))
+                < self.cfg.far_spike_rate
+        {
+            self.cfg.far_spike_us * 1e3
+        } else {
+            0.0
+        }
+    }
+
+    /// Does attempt `attempt` of task `task`'s SSD survivor-fetch burst
+    /// on `shard` fail?
+    pub fn ssd_read_fails(&self, shard: usize, task: usize, attempt: u32) -> bool {
+        self.cfg.ssd_fail_rate > 0.0
+            && unit(mix(
+                self.cfg.seed,
+                DEV_SSD_FAIL_BASE + shard as u64,
+                task as u64,
+                u64::from(attempt),
+            )) < self.cfg.ssd_fail_rate
+    }
+
+    /// Is `shard` inside a scheduled outage window at simulated instant
+    /// `at_ns`?
+    pub fn shard_out(&self, shard: usize, at_ns: f64) -> bool {
+        self.cfg
+            .outages
+            .iter()
+            .any(|o| o.shard == shard && at_ns >= o.start_us * 1e3 && at_ns < o.end_us * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OutageSpec;
+
+    fn plan(far: f64, spike: f64, ssd: f64) -> FaultPlan {
+        FaultPlan::new(FaultConfig {
+            seed: 42,
+            far_fail_rate: far,
+            far_spike_rate: spike,
+            ssd_fail_rate: ssd,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn draws_are_pure_and_order_independent() {
+        let p = plan(0.3, 0.2, 0.1);
+        // Query the same attempts in two different orders: identical
+        // verdicts (no hidden state).
+        let fwd: Vec<bool> =
+            (0..200).map(|t| p.far_read_fails(t, 0)).collect();
+        let bwd: Vec<bool> =
+            (0..200).rev().map(|t| p.far_read_fails(t, 0)).collect();
+        assert_eq!(fwd, bwd.into_iter().rev().collect::<Vec<_>>());
+        // Interleaving other channels between draws changes nothing.
+        let mixed: Vec<bool> = (0..200)
+            .map(|t| {
+                let _ = p.far_spike_ns(t, 0);
+                let _ = p.ssd_read_fails(0, t, 1);
+                p.far_read_fails(t, 0)
+            })
+            .collect();
+        assert_eq!(fwd, mixed);
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let never = plan(0.0, 0.0, 0.0);
+        assert!(!never.enabled());
+        for t in 0..100 {
+            assert!(!never.far_read_fails(t, 0));
+            assert_eq!(never.far_spike_ns(t, 0), 0.0);
+            assert!(!never.ssd_read_fails(0, t, 0));
+        }
+        let always = plan(1.0, 1.0, 1.0);
+        assert!(always.enabled());
+        for t in 0..100 {
+            assert!(always.far_read_fails(t, 3));
+            assert!(always.far_spike_ns(t, 0) > 0.0);
+            assert!(always.ssd_read_fails(2, t, 0));
+        }
+    }
+
+    #[test]
+    fn rate_matches_empirical_frequency() {
+        let p = plan(0.25, 0.0, 0.0);
+        let hits = (0..10_000).filter(|&t| p.far_read_fails(t, 0)).count();
+        let freq = hits as f64 / 10_000.0;
+        assert!((freq - 0.25).abs() < 0.02, "empirical {freq} vs rate 0.25");
+    }
+
+    #[test]
+    fn channels_and_seed_are_independent() {
+        let p = plan(0.5, 0.5, 0.5);
+        // Fail and spike channels must not be the same draw.
+        let same = (0..500)
+            .filter(|&t| p.far_read_fails(t, 0) == (p.far_spike_ns(t, 0) > 0.0))
+            .count();
+        assert!(same > 100 && same < 400, "channels look correlated: {same}/500");
+        // Different seeds give different fault sets.
+        let q = FaultPlan::new(FaultConfig {
+            seed: 43,
+            far_fail_rate: 0.5,
+            ..Default::default()
+        });
+        let differ = (0..500)
+            .filter(|&t| p.far_read_fails(t, 0) != q.far_read_fails(t, 0))
+            .count();
+        assert!(differ > 100, "seed change barely moved the plan: {differ}/500");
+        // Attempts are independent draws: a failed attempt's retry is
+        // not doomed to fail too.
+        let retried_ok = (0..500)
+            .filter(|&t| p.far_read_fails(t, 0) && !p.far_read_fails(t, 1))
+            .count();
+        assert!(retried_ok > 50, "retries correlated with first attempts");
+    }
+
+    #[test]
+    fn backoff_is_exponential() {
+        let p = FaultPlan::new(FaultConfig {
+            retry_backoff_us: 100.0,
+            far_fail_rate: 0.1,
+            ..Default::default()
+        });
+        assert_eq!(p.backoff_ns(0), 100_000.0);
+        assert_eq!(p.backoff_ns(1), 200_000.0);
+        assert_eq!(p.backoff_ns(2), 400_000.0);
+    }
+
+    #[test]
+    fn outage_windows() {
+        let p = FaultPlan::new(FaultConfig {
+            outages: vec![
+                OutageSpec { shard: 1, start_us: 10.0, end_us: 20.0 },
+                OutageSpec { shard: 0, start_us: 0.0, end_us: 5.0 },
+            ],
+            ..Default::default()
+        });
+        assert!(p.enabled());
+        assert!(p.shard_out(1, 10_000.0));
+        assert!(p.shard_out(1, 19_999.0));
+        assert!(!p.shard_out(1, 20_000.0)); // end is exclusive
+        assert!(!p.shard_out(1, 9_999.0));
+        assert!(!p.shard_out(2, 15_000.0));
+        assert!(p.shard_out(0, 0.0));
+        assert!(!p.shard_out(0, 5_000.0));
+    }
+
+    #[test]
+    fn degrade_level_orders_by_severity() {
+        use DegradeLevel::*;
+        assert!(Full < SkipVerify);
+        assert!(SkipVerify < CoarseOnly);
+        assert!(CoarseOnly < Partial);
+        assert!(Partial < Dropped);
+        assert_eq!(DegradeLevel::default(), Full);
+        assert!(!Full.is_degraded());
+        assert!(Dropped.is_degraded());
+        assert_eq!(CoarseOnly.name(), "coarse-only");
+    }
+}

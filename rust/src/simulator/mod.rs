@@ -32,6 +32,12 @@
 //!   queue accounting) that the far-memory timeline, the SSD queue and
 //!   the CPU lane server ([`LaneServer`], `serve.cpu_lanes`) all run on;
 //!   devices only supply a [`resource::ServiceModel`].
+//! - [`fault`] — seeded deterministic fault injection ([`FaultPlan`]):
+//!   far-memory read failures and tail spikes, SSD read errors, and
+//!   whole-shard outage windows, each drawn by a stateless hash of
+//!   `(seed, device, task, attempt)` so the fault timeline is
+//!   bit-reproducible across worker counts and hosts; the scheduler's
+//!   degradation policies report per-query [`DegradeLevel`]s.
 //!
 //! All simulators are *latency accounting* models driven by access streams;
 //! they return simulated nanoseconds and keep queue state so sustained
@@ -40,6 +46,7 @@
 pub mod cxl;
 pub mod device;
 pub mod dram;
+pub mod fault;
 pub mod resource;
 pub mod ssd;
 pub mod timeline;
@@ -47,6 +54,7 @@ pub mod timeline;
 pub use cxl::{CxlLink, LinkAccess};
 pub use device::FarMemoryDevice;
 pub use dram::{DramAccess, DramSim};
+pub use fault::{DegradeLevel, FaultPlan};
 pub use resource::{Grant, LaneServer, ResourceServer, ServiceModel};
 pub use ssd::{SsdGrant, SsdQueue, SsdSim};
 pub use timeline::{FarStream, SharedTimeline, StreamTiming, TimelineSched};

@@ -1,0 +1,364 @@
+//! Seeded fault injection + degraded-mode serving — end-to-end contracts.
+//!
+//! - **zero-fault bit-identity**: a configured-but-disabled fault plan
+//!   (all rates zero, no outages) and a zero deadline leave the serving
+//!   timeline, top-k, queue_ns and I/O accounting bit-identical to a run
+//!   that never heard of faults — across flat/IVF front stages × all
+//!   refine modes × pipeline depths {1, 4, 16}.
+//! - **worker-count determinism under faults**: a nonzero seeded plan
+//!   produces the same timeline, retry counts and degrade levels across
+//!   1 vs 4 pool workers and repeated runs (the plan is a pure function
+//!   of (seed, device, op), never of host scheduling).
+//! - **graceful degradation**: every non-dropped query still returns k
+//!   results, with its `DegradeLevel` reported; latency spikes delay but
+//!   never change results; deadlines convert waiting into coarse
+//!   fallbacks.
+//! - **shard outages**: queries keep serving partial results from the
+//!   surviving shards, and the partial recall stays within the bound
+//!   implied by the dropped shard's share of the ground truth.
+
+use fatrq::config::{
+    DatasetConfig, FaultConfig, IndexConfig, IndexKind, OutageSpec, QuantConfig, RefineConfig,
+    RefineMode, SystemConfig,
+};
+use fatrq::coordinator::{
+    build_system_with, ground_truth_for, QueryEngine, QueryParams, ShardedEngine,
+};
+use fatrq::metrics::recall_at_k;
+use fatrq::simulator::DegradeLevel;
+use fatrq::vecstore::synthesize;
+use std::sync::Arc;
+
+fn cfg(kind: IndexKind) -> SystemConfig {
+    let mut cfg = SystemConfig {
+        dataset: DatasetConfig {
+            dim: 32,
+            count: 1600,
+            clusters: 12,
+            noise: 0.3,
+            query_noise: 0.8,
+            queries: 10,
+            seed: 23,
+        },
+        quant: QuantConfig { pq_m: 8, pq_nbits: 5, kmeans_iters: 6, train_sample: 1200 },
+        index: IndexConfig { kind, nlist: 16, nprobe: 16, ..Default::default() },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 120,
+            k: 10,
+            filter_ratio: 0.3,
+            calib_sample: 0.02,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.sim.shared_timeline = true;
+    cfg
+}
+
+/// A plan with every failure channel hot (rates high enough that a
+/// 10-query batch reliably hits each).
+fn hot_plan(seed: u64) -> FaultConfig {
+    FaultConfig {
+        seed,
+        far_fail_rate: 0.4,
+        far_spike_rate: 0.3,
+        far_spike_us: 40.0,
+        ssd_fail_rate: 0.4,
+        retry_limit: 2,
+        retry_backoff_us: 25.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn zero_fault_plan_is_bit_identical_to_fault_free() {
+    for kind in [IndexKind::Flat, IndexKind::Ivf] {
+        let cfg = cfg(kind);
+        let dataset = synthesize(&cfg.dataset);
+        let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+        let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+        for (mode, early_exit) in [
+            (RefineMode::Baseline, false),
+            (RefineMode::FatrqSw, false),
+            (RefineMode::FatrqHw, false),
+            (RefineMode::FatrqHw, true),
+        ] {
+            let params =
+                QueryParams::from_config(&cfg).with_mode(mode).with_early_exit(early_exit);
+            let baseline = engine.profile_with(&params, &dataset.queries);
+            let mut gated = engine.profile_with(&params, &dataset.queries);
+            // A plan with a nonzero seed but zero rates is disabled: the
+            // fault branches must be structurally inert.
+            gated.set_fault(FaultConfig { seed: 0xDEAD_BEEF, ..Default::default() });
+            gated.set_deadline_us(0.0);
+            for depth in [1usize, 4, 16] {
+                let (a, ra) = baseline.schedule(depth, 0.0);
+                let (b, rb) = gated.schedule(depth, 0.0);
+                let tag = format!("{}/{mode:?}/ee={early_exit}/depth={depth}", kind.name());
+                assert_eq!(ra.makespan_ns, rb.makespan_ns, "{tag}: makespan");
+                assert_eq!(ra.p99_ns, rb.p99_ns, "{tag}: p99");
+                assert!(!rb.availability.active, "{tag}: zero plan flagged active");
+                for q in 0..a.len() {
+                    assert_eq!(a[q].topk, b[q].topk, "{tag}: query {q} top-k");
+                    assert_eq!(
+                        a[q].breakdown.queue_ns, b[q].breakdown.queue_ns,
+                        "{tag}: query {q} queue"
+                    );
+                    assert_eq!(a[q].breakdown.far_ns, b[q].breakdown.far_ns, "{tag}: {q}");
+                    assert_eq!(a[q].breakdown.ssd_reads, b[q].breakdown.ssd_reads, "{tag}: {q}");
+                    assert_eq!(b[q].breakdown.retries, 0, "{tag}: query {q} retried");
+                    assert_eq!(
+                        ra.timings[q].done_ns, rb.timings[q].done_ns,
+                        "{tag}: query {q} done"
+                    );
+                    assert_eq!(
+                        ra.timings[q].admit_ns, rb.timings[q].admit_ns,
+                        "{tag}: query {q} admit"
+                    );
+                    assert_eq!(rb.timings[q].degrade, DegradeLevel::Full, "{tag}: {q}");
+                    assert_eq!(rb.timings[q].retries, 0, "{tag}: query {q}");
+                    assert!(!rb.timings[q].deadline_missed, "{tag}: query {q}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_faults_are_deterministic_across_worker_counts() {
+    let mut cfg = cfg(IndexKind::Ivf);
+    cfg.sim.fault = hot_plan(11);
+    cfg.serve.pipeline_depth = 4;
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let e1 = QueryEngine::with_threads(Arc::clone(&sys), 1);
+    let e4 = QueryEngine::with_threads(Arc::clone(&sys), 4);
+    let (a, ra) = e1.run_serve(e1.params(), &dataset.queries);
+    let (b, rb) = e4.run_serve(e4.params(), &dataset.queries);
+    let (_, rc) = e4.run_serve(e4.params(), &dataset.queries);
+    assert!(ra.availability.active);
+    assert!(
+        ra.availability.retries > 0 || ra.availability.degraded > 0,
+        "a hot plan over 10 queries should fire at least once"
+    );
+    for q in 0..a.len() {
+        assert_eq!(a[q].topk, b[q].topk, "query {q}: 1 vs 4 workers under faults");
+        assert_eq!(a[q].breakdown.retries, b[q].breakdown.retries, "query {q}");
+        assert_eq!(a[q].breakdown.degrade, b[q].breakdown.degrade, "query {q}");
+        for (x, y) in [(&ra, &rb), (&rb, &rc)] {
+            assert_eq!(x.timings[q].done_ns, y.timings[q].done_ns, "query {q}");
+            assert_eq!(x.timings[q].admit_ns, y.timings[q].admit_ns, "query {q}");
+            assert_eq!(x.timings[q].degrade, y.timings[q].degrade, "query {q}");
+            assert_eq!(x.timings[q].retries, y.timings[q].retries, "query {q}");
+        }
+    }
+    assert_eq!(ra.makespan_ns, rb.makespan_ns);
+    assert_eq!(ra.availability.retries, rb.availability.retries);
+    assert_eq!(ra.availability.degraded, rb.availability.degraded);
+    // Every non-dropped query still returns its full k.
+    let k = cfg.refine.k;
+    for (q, out) in a.iter().enumerate() {
+        if ra.timings[q].degrade != DegradeLevel::Dropped {
+            assert_eq!(out.topk.len(), k, "query {q} lost results while degrading");
+        }
+    }
+}
+
+#[test]
+fn latency_spikes_delay_but_never_change_results() {
+    let cfg = cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let baseline = engine.profile_with(engine.params(), &dataset.queries);
+    let mut spiky = engine.profile_with(engine.params(), &dataset.queries);
+    spiky.set_fault(FaultConfig {
+        seed: 5,
+        far_spike_rate: 0.8,
+        far_spike_us: 100.0,
+        ..Default::default()
+    });
+    let (a, ra) = baseline.schedule(4, 0.0);
+    let (b, rb) = spiky.schedule(4, 0.0);
+    for q in 0..a.len() {
+        assert_eq!(a[q].topk, b[q].topk, "query {q}: spikes must not change results");
+        assert_eq!(rb.timings[q].degrade, DegradeLevel::Full, "query {q}");
+    }
+    // Spikes only add simulated time. (Per-query completions may reorder
+    // — a delayed stream frees the device for a neighbor — but the 100 us
+    // spikes dwarf any such queueing savings in aggregate.)
+    assert!(
+        rb.makespan_ns > ra.makespan_ns,
+        "an 80% spike rate must stretch the makespan: {} !> {}",
+        rb.makespan_ns,
+        ra.makespan_ns
+    );
+    assert!(rb.mean_latency_ns > ra.mean_latency_ns);
+    assert!(rb.availability.active);
+    assert_eq!(rb.availability.served, a.len());
+    assert_eq!(rb.availability.degraded, 0);
+}
+
+#[test]
+fn deadlines_degrade_to_coarse_but_keep_k_results() {
+    let cfg = cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let mut profile = engine.profile_with(engine.params(), &dataset.queries);
+    let (_, full) = profile.schedule(0, 0.0);
+    // 1 ns deadline over a closed batch: everything past the first far
+    // admission is late, so queries fall back to the coarse ranking
+    // instead of waiting out the pipeline.
+    profile.set_deadline_us(1e-3);
+    let (outs, rep) = profile.schedule(0, 0.0);
+    let k = cfg.refine.k;
+    assert!(rep.availability.active);
+    assert!(
+        rep.availability.degraded > 0,
+        "a 1 ns deadline must degrade at least one query"
+    );
+    assert_eq!(rep.availability.dropped, 0, "deadlines degrade, never drop");
+    assert!(rep.availability.deadline_missed > 0);
+    for (q, out) in outs.iter().enumerate() {
+        assert_eq!(out.topk.len(), k, "query {q} lost results while degrading");
+        assert!(
+            rep.timings[q].degrade <= DegradeLevel::CoarseOnly,
+            "query {q}: deadline produced {}",
+            rep.timings[q].degrade.name()
+        );
+        assert_eq!(out.breakdown.degrade, rep.timings[q].degrade, "query {q}");
+    }
+    // The degraded schedule finishes no later than the full pipeline:
+    // skipped stages only remove simulated work.
+    assert!(rep.makespan_ns <= full.makespan_ns * (1.0 + 1e-9));
+}
+
+#[test]
+fn monolithic_outage_drops_queries_and_reports_them() {
+    let cfg = cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let mut profile = engine.profile_with(engine.params(), &dataset.queries);
+    // The monolithic engine is one "shard": a whole-run outage window on
+    // it drops every query that reaches far memory inside the window.
+    profile.set_fault(FaultConfig {
+        seed: 3,
+        outages: vec![OutageSpec { shard: 0, start_us: 0.0, end_us: 1e12 }],
+        ..Default::default()
+    });
+    let (outs, rep) = profile.schedule(1, 0.0);
+    assert!(rep.availability.active);
+    assert_eq!(
+        rep.availability.dropped,
+        outs.len(),
+        "a whole-run outage must drop every query"
+    );
+    assert_eq!(rep.availability.served, 0);
+    for (q, out) in outs.iter().enumerate() {
+        assert_eq!(rep.timings[q].degrade, DegradeLevel::Dropped, "query {q}");
+        assert!(out.topk.is_empty(), "query {q}: dropped query returned results");
+    }
+}
+
+#[test]
+fn shard_outage_serves_partial_results_within_the_recall_bound() {
+    let mut cfg = cfg(IndexKind::Ivf);
+    // Deep candidates relative to each shard keep the merge unambiguous
+    // (the sharded bit-identity test's setting).
+    cfg.refine.candidates = 300;
+    cfg.refine.filter_ratio = 1.0;
+    let dataset = synthesize(&cfg.dataset);
+    let k = cfg.refine.k;
+    let truth = ground_truth_for(&dataset, k);
+    let shards = 4usize;
+    let mut engine = ShardedEngine::from_dataset_with_threads(&cfg, &dataset, shards, 2).unwrap();
+    engine.set_pipeline_depth(4);
+    let full = engine.run(&dataset.queries);
+
+    // Take shard 1 out for the whole run: its tasks drop, every query is
+    // served partial from the three survivors.
+    let down = 1usize;
+    engine.set_fault(FaultConfig {
+        seed: 9,
+        outages: vec![OutageSpec { shard: down, start_us: 0.0, end_us: 1e12 }],
+        ..Default::default()
+    });
+    let params = *engine.params();
+    let (partial, rep) = engine.run_serve(&params, &dataset.queries);
+
+    // Shards hold contiguous id ranges in order; recover shard `down`'s
+    // global range from the per-shard counts.
+    let mut lo = 0usize;
+    for s in 0..down {
+        lo += engine.shard(s).dataset.count();
+    }
+    let hi = lo + engine.shard(down).dataset.count();
+
+    assert!(rep.availability.active);
+    assert_eq!(rep.availability.dropped, 0, "survivors must keep every query alive");
+    assert_eq!(rep.availability.served, partial.len());
+    assert_eq!(rep.availability.dropped_tasks, partial.len(), "one dropped task per query");
+    for (q, out) in partial.iter().enumerate() {
+        assert_eq!(rep.timings[q].degrade, DegradeLevel::Partial, "query {q}");
+        assert_eq!(out.topk.len(), k, "query {q}: partial result must still fill k");
+        // Nothing from the dead shard can appear...
+        for c in &out.topk {
+            assert!(
+                (c.id as usize) < lo || (c.id as usize) >= hi,
+                "query {q}: result id {} came from the down shard",
+                c.id
+            );
+        }
+        // ...and the recall loss is bounded by the dead shard's share of
+        // the ground truth: every surviving true neighbor stays findable.
+        let lost =
+            truth[q].iter().take(k).filter(|c| (c.id as usize) >= lo && (c.id as usize) < hi).count();
+        let bound = recall_at_k(&full[q].topk, &truth[q], k) - lost as f64 / k as f64;
+        let got = recall_at_k(&out.topk, &truth[q], k);
+        assert!(
+            got + 1e-9 >= bound,
+            "query {q}: partial recall {got} below the surviving-shard bound {bound}"
+        );
+    }
+}
+
+#[test]
+fn retries_recover_reads_without_changing_results() {
+    let cfg = cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let baseline = engine.profile_with(engine.params(), &dataset.queries);
+    let (a, _) = baseline.schedule(4, 0.0);
+    let mut flaky = engine.profile_with(engine.params(), &dataset.queries);
+    // Failures at a rate the retry budget mostly absorbs: with p = 0.3
+    // and 4 attempts, exhausting a budget takes four consecutive fails
+    // (p^4 < 1%) — most queries recover with retries > 0.
+    flaky.set_fault(FaultConfig {
+        seed: 21,
+        far_fail_rate: 0.3,
+        ssd_fail_rate: 0.3,
+        retry_limit: 3,
+        retry_backoff_us: 10.0,
+        ..Default::default()
+    });
+    let (b, rb) = flaky.schedule(4, 0.0);
+    assert!(rb.availability.retries > 0, "a 30% failure rate must retry");
+    for q in 0..a.len() {
+        if rb.timings[q].degrade == DegradeLevel::Full {
+            assert_eq!(
+                a[q].topk, b[q].topk,
+                "query {q}: recovered retries must not change results"
+            );
+            if rb.timings[q].retries > 0 {
+                assert!(
+                    rb.timings[q].done_ns > 0.0 && b[q].breakdown.retries > 0,
+                    "query {q}: retry count must surface in the breakdown"
+                );
+            }
+        }
+    }
+}

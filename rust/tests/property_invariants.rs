@@ -2,12 +2,12 @@
 //! (routing, ranking, filtering, codecs), via the in-repo mini property
 //! harness (`fatrq::util::prop` — no proptest crate offline).
 
-use fatrq::config::SimConfig;
+use fatrq::config::{FaultConfig, SimConfig};
 use fatrq::kernels::ternary::{qdot_packed_tab, TernaryQueryLut};
 use fatrq::quant::pack::{pack_ternary, packed_len, unpack_ternary};
 use fatrq::quant::trq::{encode_record, estimate_qdot, qdot_packed, ternary_encode};
 use fatrq::refine::filter::{filter_top_ratio, provable_cutoff};
-use fatrq::simulator::{FarStream, LaneServer, SharedTimeline, SsdQueue, TimelineSched};
+use fatrq::simulator::{FarStream, FaultPlan, LaneServer, SharedTimeline, SsdQueue, TimelineSched};
 use fatrq::util::prop::{forall, vec_gauss, Config};
 use fatrq::util::rng::Rng;
 use fatrq::util::topk::{Scored, TopK};
@@ -479,6 +479,114 @@ fn prop_record_interleave_batch1_exact_and_work_conserving() {
                 }
             }
             true
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Seeded fault injection: plan purity and retry scheduling.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_fault_plan_draws_are_pure_across_worker_interleavings() {
+    // The worker-count determinism contract at its root: a fault draw is
+    // a stateless hash, so 1 worker walking the tasks in order and 4
+    // workers walking them strided (with other channels consulted in
+    // between, as a real event interleaving would) see identical
+    // verdicts, and a fresh plan from the same config replays them.
+    forall(
+        Config { cases: 60, seed: 37, max_size: 300 },
+        |rng: &mut Rng, size: usize| -> (u64, f64, f64, usize) {
+            (rng.next_u64(), rng.f64(), rng.f64(), size.max(10))
+        },
+        |&(seed, far_rate, ssd_rate, n)| {
+            let cfg = FaultConfig {
+                seed,
+                far_fail_rate: far_rate,
+                ssd_fail_rate: ssd_rate,
+                ..Default::default()
+            };
+            let plan = FaultPlan::new(cfg.clone());
+            let seq: Vec<bool> = (0..n).map(|t| plan.far_read_fails(t, 0)).collect();
+            let mut strided = vec![false; n];
+            for w in 0..4usize {
+                let mut t = w;
+                while t < n {
+                    let _ = plan.ssd_read_fails(w, t, 1);
+                    let _ = plan.far_spike_ns(t, 0);
+                    strided[t] = plan.far_read_fails(t, 0);
+                    t += 4;
+                }
+            }
+            if seq != strided {
+                return false;
+            }
+            let replay = FaultPlan::new(cfg);
+            (0..n).all(|t| replay.far_read_fails(t, 0) == seq[t])
+        },
+    );
+}
+
+#[test]
+fn prop_retry_readmissions_preserve_fcfs_and_work_conservation() {
+    // The scheduler's retry policy re-enters a failed read through the
+    // time-ordered event heap after a deterministic backoff — to the
+    // shared device it is just a later admission. Replaying that exact
+    // pattern (retry chains expanded per the plan's draws, admissions
+    // delivered in time order like the heap does) must keep the resource
+    // server's FCFS completion order and work conservation.
+    forall(
+        Config { cases: 60, seed: 38, max_size: 40 },
+        |rng: &mut Rng, size: usize| -> Vec<(usize, f64, u32)> {
+            (0..size.max(1))
+                .map(|_| {
+                    (1 + rng.below(40), rng.below(50_000) as f64, rng.below(3) as u32)
+                })
+                .collect()
+        },
+        |bursts| {
+            let cfg = SimConfig::default();
+            let plan = FaultPlan::new(FaultConfig {
+                seed: 77,
+                ssd_fail_rate: 0.5,
+                retry_backoff_us: 20.0,
+                ..Default::default()
+            });
+            // Expand every burst into its retry chain: attempt a + 1
+            // re-enters backoff(a) after a failed draw of attempt a.
+            let mut events: Vec<(f64, usize)> = Vec::new();
+            let mut at = 0.0f64;
+            for (t, &(reads, gap, budget)) in bursts.iter().enumerate() {
+                at += gap;
+                let mut when = at;
+                events.push((when, reads));
+                for a in 0..budget {
+                    if !plan.ssd_read_fails(0, t, a) {
+                        break;
+                    }
+                    when += plan.backoff_ns(a);
+                    events.push((when, reads));
+                }
+            }
+            events.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+            let mut q = SsdQueue::new(&cfg);
+            let mut last_done = 0.0f64;
+            let mut total = 0.0f64;
+            for &(when, reads) in &events {
+                let g = q.admit(reads, 3072, when);
+                // FCFS, never beating the intrinsic burst, sane queueing.
+                if g.done_ns + 1e-9 < last_done
+                    || g.done_ns + 1e-9 < when + g.solo_ns
+                    || g.queue_ns < 0.0
+                {
+                    return false;
+                }
+                last_done = g.done_ns;
+                total += g.solo_ns;
+            }
+            // Work conservation across the whole retry-laden schedule.
+            let last_at = events.last().unwrap().0;
+            last_done <= last_at + total * (1.0 + 1e-9) + 1e-6
         },
     );
 }
