@@ -47,6 +47,7 @@ fn main() {
     pipelined_section(quick);
     lanes_and_qos_section(quick);
     faults_section(quick);
+    outofcore_section(quick);
 }
 
 fn refinement_ratio_sweep() {
@@ -586,8 +587,8 @@ fn lanes_and_qos_section(quick: bool) {
     // Weighted-fair: flood weight 1, light tenant weight 8.
     profile.set_tenants(
         vec![
-            TenantSpec { name: "flood".into(), weight: 1.0, quota: 0 },
-            TenantSpec { name: "latency".into(), weight: 8.0, quota: 0 },
+            TenantSpec { name: "flood".into(), weight: 1.0, quota: 0, trace: None },
+            TenantSpec { name: "latency".into(), weight: 8.0, quota: 0, trace: None },
         ],
         tags,
     );
@@ -775,6 +776,141 @@ fn faults_section(quick: bool) {
     println!(
         "\nzero-rate plan bit-identical to fault-free, flaky reads retry to full answers, \
          deadline misses fall back to coarse k-results, outages drop and report — \
+         asserted at runtime."
+    );
+}
+
+/// Out-of-core serving: the cold PQ/IVF code structures paged behind an
+/// SSD page cache (`cache.out_of_core`). One streaming build serves every
+/// row (PQ training is not bit-reproducible across builds). Runtime
+/// contracts, asserted on every run:
+///
+/// - the streaming build materializes no reconstruction matrix;
+/// - a **warm cache** (`pages = 0`) is bit-identical to the same build
+///   with its page tier detached — timeline, top-k and makespan;
+/// - a **thrashing frame budget** misses, evicts, and queues page-in
+///   bursts on the shard's shared SSD (`pagein-q > 0` under overlap),
+///   while the top-k never changes — paging is a timing concern only;
+/// - at **depth 1** the SSD is idle at every page-in: cold misses cost
+///   service time but zero queue time.
+fn outofcore_section(quick: bool) {
+    println!("\n# Out-of-core serving (paged cold tier behind an SSD page cache)\n");
+    let mut cfg = serving_config(quick);
+    cfg.sim.shared_timeline = true;
+    cfg.cache.out_of_core = true;
+    cfg.cache.page_kb = 4;
+    cfg.cache.pages = 0; // warm by default; swept below
+    cfg.cache.pin_pages = 2;
+    cfg.validate().expect("out-of-core config");
+    let dataset = synthesize(&cfg.dataset);
+    let truth = ground_truth_for(&dataset, cfg.refine.k);
+    let nq = dataset.num_queries();
+    let k = cfg.refine.k;
+    let mut sys = build_system_with(&cfg, dataset.clone()).expect("build");
+    assert!(sys.recon.is_empty(), "streaming build must not materialize the recon matrix");
+    let total_pages = sys.paged.as_ref().expect("out-of-core build pages the cold tier").total_pages;
+
+    // One serving pass, returning the system so the cache budget can be
+    // swept over the single build.
+    let run = |sys: fatrq::coordinator::BuiltSystem, pages: usize, depth: usize| {
+        let mut sys = sys;
+        sys.cfg.cache.pages = pages;
+        let sys = Arc::new(sys);
+        let (outs, rep) = {
+            let engine = QueryEngine::with_threads(Arc::clone(&sys), 4);
+            let profile = engine.profile_with(engine.params(), &dataset.queries);
+            profile.schedule(depth, 0.0)
+        };
+        let sys = Arc::try_unwrap(sys).ok().expect("engine dropped: sole owner");
+        (outs, rep, sys)
+    };
+
+    // In-memory reference: same build, page tier detached.
+    let paged = sys.paged.take().unwrap();
+    let (ref_outs, ref_rep, s) = run(sys, 0, 8);
+    sys = s;
+    assert!(!ref_rep.cache.active, "no page tier, no cache columns");
+    sys.paged = Some(paged);
+
+    bs::header(&[
+        "cache(pages)",
+        "hit%",
+        "misses",
+        "evictions",
+        "pagein-q(us)",
+        "mean(us)",
+        "p99(us)",
+        "makespan(us)",
+        "recall@10",
+    ]);
+    let row = |label: String, outs: &[fatrq::coordinator::QueryOutcome],
+               rep: &fatrq::coordinator::ServeReport| {
+        let recall: f64 = outs
+            .iter()
+            .enumerate()
+            .map(|(q, o)| recall_at_k(&o.topk, &truth[q], k))
+            .sum::<f64>()
+            / nq as f64;
+        let c = &rep.cache;
+        bs::row(&[
+            label,
+            format!("{:.1}", 100.0 * c.hit_rate()),
+            c.misses.to_string(),
+            c.evictions.to_string(),
+            format!("{:.2}", rep.mean_pagein_queue_ns / 1e3),
+            format!("{:.1}", rep.mean_latency_ns / 1e3),
+            format!("{:.1}", rep.p99_ns / 1e3),
+            format!("{:.1}", rep.makespan_ns / 1e3),
+            format!("{recall:.4}"),
+        ]);
+    };
+
+    // --- warm cache: bit-identical to in-memory ---
+    let (warm_outs, warm_rep, s) = run(sys, 0, 8);
+    sys = s;
+    assert!(warm_rep.cache.active && warm_rep.cache.misses == 0, "pages=0 must be warm");
+    assert_eq!(
+        warm_rep.makespan_ns, ref_rep.makespan_ns,
+        "warm out-of-core makespan diverged from the in-memory schedule"
+    );
+    for q in 0..nq {
+        assert_eq!(
+            warm_outs[q].topk, ref_outs[q].topk,
+            "warm out-of-core top-k diverged from in-memory (query {q})"
+        );
+        assert_eq!(warm_rep.timings[q].done_ns, ref_rep.timings[q].done_ns, "query {q}");
+    }
+    row(format!("warm ({total_pages} resident)"), &warm_outs, &warm_rep);
+
+    // --- thrashing budget: misses queue on the SSD, results unchanged ---
+    let (solo_outs, solo_rep, s) = run(sys, 4, 1);
+    sys = s;
+    assert!(solo_rep.cache.misses > 0, "4 frames must miss");
+    assert_eq!(
+        solo_rep.mean_pagein_queue_ns, 0.0,
+        "depth 1: page-ins land on an idle SSD, zero queue time"
+    );
+    row("4 @ depth 1".to_string(), &solo_outs, &solo_rep);
+
+    let (cold_outs, cold_rep, _sys) = run(sys, 4, 8);
+    let c = &cold_rep.cache;
+    assert!(c.misses > 0 && c.evictions > 0 && c.hit_rate() < 1.0, "4 frames must thrash: {c:?}");
+    assert!(
+        cold_rep.mean_pagein_queue_ns > 0.0,
+        "overlapping page-in bursts must queue on the shared SSD"
+    );
+    assert!(cold_rep.makespan_ns > warm_rep.makespan_ns, "paging must cost simulated time");
+    for q in 0..nq {
+        assert_eq!(
+            cold_outs[q].topk, warm_outs[q].topk,
+            "paging changed the top-k (query {q}) — it may only change timing"
+        );
+    }
+    row("4 @ depth 8".to_string(), &cold_outs, &cold_rep);
+
+    println!(
+        "\nstreaming build holds no recon matrix, warm cache bit-identical to in-memory, \
+         cold misses surface as SSD page-in queue time without touching the top-k — \
          asserted at runtime."
     );
 }

@@ -193,6 +193,8 @@ impl Pipelined<'_> {
             cpu_lanes: 0,
             tenants: Vec::new(),
             availability: Default::default(),
+            cache: Default::default(),
+            mean_pagein_queue_ns: 0.0,
             breakdown: agg,
             mode: mode.name(),
         }

@@ -453,7 +453,7 @@ impl Default for SimConfig {
 }
 
 /// One tenant of the multi-tenant serving scheduler (`serve.tenants`):
-/// spec syntax `name:weight[:quota]`.
+/// spec syntax `name:weight[:quota][:trace=SOURCE]`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TenantSpec {
     pub name: String,
@@ -466,10 +466,18 @@ pub struct TenantSpec {
     /// tenant from monopolizing the window even between completions of
     /// other tenants.
     pub quota: usize,
+    /// Per-tenant arrival trace (`trace=SOURCE`, must be the last part):
+    /// a generator kind (`bursty` | `diurnal` | `mixed`, synthesized at
+    /// the global mean rate) or a file of newline-separated ns offsets.
+    /// The tenant's queries then replay this trace instead of the global
+    /// arrival process (arrival-trace mixtures per tenant). `None` = ride
+    /// the global process.
+    pub trace: Option<String>,
 }
 
 impl TenantSpec {
-    /// Parse `name:weight[:quota]`, e.g. `latency:4` or `batch:1:8`.
+    /// Parse `name:weight[:quota][:trace=SOURCE]`, e.g. `latency:4`,
+    /// `batch:1:8`, or `burst:2:trace=bursty`.
     pub fn parse(s: &str) -> Result<Self> {
         let mut parts = s.split(':');
         let name = parts
@@ -477,24 +485,41 @@ impl TenantSpec {
             .filter(|n| !n.is_empty())
             .with_context(|| format!("tenant spec `{s}`: empty name"))?
             .to_string();
-        let weight = match parts.next() {
-            None => 1.0,
-            Some(w) => w
-                .parse::<f64>()
-                .ok()
-                .filter(|w| w.is_finite() && *w > 0.0)
-                .with_context(|| format!("tenant spec `{s}`: weight must be a positive number"))?,
-        };
-        let quota = match parts.next() {
-            None => 0,
-            Some(q) => q
-                .parse::<usize>()
-                .with_context(|| format!("tenant spec `{s}`: quota must be an integer"))?,
-        };
-        if parts.next().is_some() {
-            bail!("tenant spec `{s}`: expected name:weight[:quota]");
+        let mut weight = 1.0;
+        let mut quota = 0usize;
+        let mut trace = None;
+        let mut numeric = 0usize;
+        for part in parts {
+            if trace.is_some() {
+                bail!("tenant spec `{s}`: trace=SOURCE must be the last part");
+            }
+            if let Some(t) = part.strip_prefix("trace=") {
+                if t.is_empty() {
+                    bail!("tenant spec `{s}`: empty trace source");
+                }
+                trace = Some(t.to_string());
+                continue;
+            }
+            match numeric {
+                0 => {
+                    weight = part
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|w| w.is_finite() && *w > 0.0)
+                        .with_context(|| {
+                            format!("tenant spec `{s}`: weight must be a positive number")
+                        })?
+                }
+                1 => {
+                    quota = part
+                        .parse::<usize>()
+                        .with_context(|| format!("tenant spec `{s}`: quota must be an integer"))?
+                }
+                _ => bail!("tenant spec `{s}`: expected name:weight[:quota][:trace=SOURCE]"),
+            }
+            numeric += 1;
         }
-        Ok(TenantSpec { name, weight, quota })
+        Ok(TenantSpec { name, weight, quota, trace })
     }
 
     /// Parse a comma-separated list of specs (the CLI form).
@@ -533,6 +558,46 @@ pub struct ServeConfig {
     pub deadline_us: f64,
 }
 
+/// Out-of-core paged corpus tier (`[cache]`, `--out-of-core`): the cold
+/// query-path structures — flattened PQ codes in IVF `list_codes` order,
+/// or the flat index's scan region — live on the simulated SSD in
+/// fixed-size pages behind a deterministic CLOCK page cache
+/// ([`crate::simulator::pagecache`]). Each task's cache misses are
+/// batched into one page-in burst on the shard's shared SSD queue, so
+/// misses surface as simulated queue time in the serve report. A warm
+/// cache (`pages = 0`, or frames + pins covering every page) never
+/// misses and the serving timeline is bit-identical to the in-memory
+/// engine by construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheConfig {
+    /// Enable the paged layout (requires `sim.shared_timeline` — page-in
+    /// bursts queue on the admission-time SSD timeline).
+    pub out_of_core: bool,
+    /// Cache frames available to unpinned pages. 0 = unbounded (every
+    /// page resident after first touch — the warm, bit-identity
+    /// configuration; also what `--cache-mb 0` means).
+    pub pages: usize,
+    /// Page size in KiB (must be positive).
+    pub page_kb: usize,
+    /// Pages pinned permanently resident outside the frame budget, by
+    /// hot-list priority: largest IVF lists first (whole lists only), or
+    /// a prefix of the region for the flat index.
+    pub pin_pages: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { out_of_core: false, pages: 0, page_kb: 64, pin_pages: 0 }
+    }
+}
+
+impl CacheConfig {
+    /// Page size in bytes.
+    pub fn page_bytes(&self) -> usize {
+        self.page_kb * 1024
+    }
+}
+
 /// Coordinator / serving parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PipelineConfig {
@@ -568,6 +633,7 @@ pub struct SystemConfig {
     pub sim: SimConfig,
     pub pipeline: PipelineConfig,
     pub serve: ServeConfig,
+    pub cache: CacheConfig,
 }
 
 impl SystemConfig {
@@ -588,6 +654,7 @@ impl SystemConfig {
                 "sim" => apply_sim(&mut cfg.sim, sub)?,
                 "pipeline" => apply_pipeline(&mut cfg.pipeline, sub)?,
                 "serve" => apply_serve(&mut cfg.serve, sub)?,
+                "cache" => apply_cache(&mut cfg.cache, sub)?,
                 other => bail!("unknown config section [{other}]"),
             }
         }
@@ -692,6 +759,23 @@ impl SystemConfig {
                 "fault injection / deadlines require sim.shared_timeline (the fault \
                  plan and deadline policy act on the admission-time simulated clock; \
                  without the shared timeline the knobs would be silently ignored)"
+            );
+        }
+        if self.cache.page_kb == 0 {
+            bail!("cache.page_kb must be positive");
+        }
+        if self.cache.out_of_core && !self.sim.shared_timeline {
+            bail!(
+                "cache.out_of_core requires sim.shared_timeline (page-in bursts for \
+                 cache misses queue on the admission-time SSD timeline; without the \
+                 shared timeline the paged layout would be silently ignored)"
+            );
+        }
+        if self.cache.out_of_core && self.index.kind == IndexKind::Graph {
+            bail!(
+                "cache.out_of_core supports index kinds ivf|flat (the graph front \
+                 stage's per-node access pattern has no list structure to page \
+                 against; the knob would be silently ignored)"
             );
         }
         Ok(())
@@ -885,6 +969,21 @@ fn apply_serve(c: &mut ServeConfig, t: &Table) -> Result<()> {
     Ok(())
 }
 
+fn apply_cache(c: &mut CacheConfig, t: &Table) -> Result<()> {
+    for (k, v) in t {
+        match k.as_str() {
+            "out_of_core" => {
+                c.out_of_core = v.as_bool().context("cache.out_of_core must be a bool")?
+            }
+            "pages" => c.pages = need_usize(v, k)?,
+            "page_kb" => c.page_kb = need_usize(v, k)?,
+            "pin_pages" => c.pin_pages = need_usize(v, k)?,
+            other => bail!("unknown key cache.{other}"),
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -968,6 +1067,7 @@ mod tests {
     fn tenant_spec_parsing() {
         let t = TenantSpec::parse("lat").unwrap();
         assert_eq!((t.name.as_str(), t.weight, t.quota), ("lat", 1.0, 0));
+        assert_eq!(t.trace, None);
         let t = TenantSpec::parse("flood:0.5:3").unwrap();
         assert_eq!((t.weight, t.quota), (0.5, 3));
         assert!(TenantSpec::parse("").is_err());
@@ -977,6 +1077,25 @@ mod tests {
         let l = TenantSpec::parse_list("a:2, b:1:4").unwrap();
         assert_eq!(l.len(), 2);
         assert_eq!(l[1].name, "b");
+    }
+
+    #[test]
+    fn tenant_spec_trace_parsing() {
+        // trace= after weight, after quota, and directly after the name.
+        let t = TenantSpec::parse("burst:2:trace=bursty").unwrap();
+        assert_eq!((t.weight, t.quota), (2.0, 0));
+        assert_eq!(t.trace.as_deref(), Some("bursty"));
+        let t = TenantSpec::parse("b:1:8:trace=traces/b.txt").unwrap();
+        assert_eq!((t.weight, t.quota), (1.0, 8));
+        assert_eq!(t.trace.as_deref(), Some("traces/b.txt"));
+        let t = TenantSpec::parse("solo:trace=diurnal").unwrap();
+        assert_eq!((t.weight, t.quota), (1.0, 0));
+        assert_eq!(t.trace.as_deref(), Some("diurnal"));
+        // trace= must be last; empty sources and extra numeric parts
+        // after it are rejected, and the 4-numeric form stays rejected.
+        assert!(TenantSpec::parse("x:trace=bursty:2").is_err());
+        assert!(TenantSpec::parse("x:1:trace=").is_err());
+        assert!(TenantSpec::parse("x:1:2:3:trace=bursty").is_err());
     }
 
     #[test]
@@ -1023,6 +1142,40 @@ mod tests {
         assert!(SystemConfig::from_toml(bad7).is_err());
         let ok7 = "[sim]\nstream_interleave = \"record\"\nshared_timeline = true";
         assert!(SystemConfig::from_toml(ok7).is_ok());
+    }
+
+    #[test]
+    fn cache_config_roundtrip_and_validation() {
+        let doc = r#"
+            [sim]
+            shared_timeline = true
+
+            [cache]
+            out_of_core = true
+            pages = 128
+            page_kb = 32
+            pin_pages = 4
+        "#;
+        let cfg = SystemConfig::from_toml(doc).unwrap();
+        assert!(cfg.cache.out_of_core);
+        assert_eq!(cfg.cache.pages, 128);
+        assert_eq!(cfg.cache.page_kb, 32);
+        assert_eq!(cfg.cache.pin_pages, 4);
+        assert_eq!(cfg.cache.page_bytes(), 32 * 1024);
+        // Defaults are inert: out-of-core off, warm sizing, 64 KiB pages.
+        let d = CacheConfig::default();
+        assert!(!d.out_of_core);
+        assert_eq!((d.pages, d.page_kb, d.pin_pages), (0, 64, 0));
+        // Out-of-core without the shared timeline would be silently
+        // inert — rejected; zero page size and unknown keys likewise.
+        for bad in [
+            "[cache]\nout_of_core = true",
+            "[cache]\npage_kb = 0",
+            "[cache]\nbogus = 1",
+            "[index]\nkind = \"graph\"\n[sim]\nshared_timeline = true\n[cache]\nout_of_core = true",
+        ] {
+            assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

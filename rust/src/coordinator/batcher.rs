@@ -16,7 +16,7 @@ use crate::coordinator::pipeline::Breakdown;
 use crate::coordinator::pipelined::{ServeReport, TenantLat};
 use crate::coordinator::stage::QueryScratch;
 use crate::index::FlatIndex;
-use crate::metrics::{recall_at_k, Availability, LatencyStats};
+use crate::metrics::{recall_at_k, Availability, CacheStats, LatencyStats};
 use crate::util::threadpool::ThreadPool;
 use crate::util::topk::Scored;
 use std::sync::Mutex;
@@ -55,6 +55,12 @@ pub struct BatchReport {
     /// Availability columns of the serving timeline (inactive/all-served
     /// unless fault injection or a deadline was configured).
     pub availability: Availability,
+    /// Page-cache counters of the serving timeline, summed across shards
+    /// (inactive unless the system was built with `cache.out_of_core`).
+    pub cache: CacheStats,
+    /// Mean simulated page-in queue time per (query, shard) task, ns
+    /// (0 with the cache off or warm).
+    pub mean_pagein_queue_ns: f64,
     /// Mean per-stage breakdown.
     pub breakdown: Breakdown,
     pub mode: &'static str,
@@ -170,6 +176,10 @@ pub fn report_with_serve(
         Some(s) => (s.cpu_lanes, s.tenants.clone(), s.availability),
         None => (0, Vec::new(), Availability::default()),
     };
+    let (cache, mean_pagein_queue_ns) = match serve {
+        Some(s) => (s.cache, s.mean_pagein_queue_ns),
+        None => (CacheStats::default(), 0.0),
+    };
     BatchReport {
         queries: nq,
         mean_recall: recall_sum / n,
@@ -189,6 +199,8 @@ pub fn report_with_serve(
         cpu_lanes,
         tenants,
         availability,
+        cache,
+        mean_pagein_queue_ns,
         breakdown: agg,
         mode,
     }

@@ -8,6 +8,7 @@ use crate::quant::trq::TrqStore;
 use crate::quant::ProductQuantizer;
 use crate::refine::calib::NUM_FEATURES;
 use crate::refine::{filter::margin_from_residuals, Calibration, ProgressiveEstimator};
+use crate::simulator::PagedLayout;
 use crate::util::{l2_sq, rng::Rng};
 use crate::vecstore::Dataset;
 use crate::Result;
@@ -51,8 +52,14 @@ pub struct BuiltSystem {
     pub scorer: PqScorer,
     pub index: FrontIndex,
     /// Coarse reconstructions x_c (kept for tests; not on the query path).
+    /// Empty when `cache.out_of_core` — the streaming build derives each
+    /// row on demand instead of materializing the full matrix.
     pub recon: Vec<f32>,
     pub trq: TrqStore,
+    /// Out-of-core page layout of the cold query-path structures
+    /// (`cache.out_of_core`): IVF `list_codes` paged list-by-list, or the
+    /// flat index's scan region as one span. `None` = fully in-memory.
+    pub paged: Option<PagedLayout>,
     pub cal: Calibration,
     /// |refined estimate − truth| at the configured `margin_quantile` over
     /// calibration pairs — the provable-cutoff margin for the second-order
@@ -111,15 +118,48 @@ pub fn build_system_with(cfg: &SystemConfig, dataset: Dataset) -> Result<BuiltSy
         IndexKind::Flat => FrontIndex::Flat(FlatIndex::new(dataset.base.clone(), dim)),
     };
 
-    // 3. TRQ residual store (far memory).
-    let mut recon = vec![0f32; n * dim];
-    for i in 0..n {
-        pq.decode_one(
-            &codes[i * pq.m..(i + 1) * pq.m],
-            &mut recon[i * dim..(i + 1) * dim],
-        );
-    }
-    let trq = TrqStore::build(&dataset.base, &recon, dim);
+    // 3. TRQ residual store (far memory). Out-of-core builds stream: the
+    // coarse reconstruction is re-derived per row from the PQ codes inside
+    // the encode workers (same chunking — bit-identical, including
+    // mean_alignment) instead of materializing the n x dim matrix.
+    let (recon, trq) = if cfg.cache.out_of_core {
+        let m = pq.m;
+        let trq = TrqStore::build_with(&dataset.base, dim, |i, out| {
+            pq.decode_one(&codes[i * m..(i + 1) * m], out);
+        });
+        (Vec::new(), trq)
+    } else {
+        let mut recon = vec![0f32; n * dim];
+        for i in 0..n {
+            pq.decode_one(
+                &codes[i * pq.m..(i + 1) * pq.m],
+                &mut recon[i * dim..(i + 1) * dim],
+            );
+        }
+        let trq = TrqStore::build(&dataset.base, &recon, dim);
+        (recon, trq)
+    };
+
+    // Page the cold query-path structures when out-of-core: the IVF
+    // blocked-scan code duplicate list-by-list (each list starts on a
+    // fresh page, largest lists pinned first), or the flat index's raw
+    // scan region as one span. Graph adjacency is rejected at config
+    // validation — its per-node access pattern has no list structure to
+    // page against.
+    let paged = if cfg.cache.out_of_core {
+        let pb = cfg.cache.page_bytes();
+        let pin = cfg.cache.pin_pages;
+        match &index {
+            FrontIndex::Ivf(ivf) => {
+                let sizes: Vec<usize> = ivf.list_codes.iter().map(|c| c.len()).collect();
+                Some(PagedLayout::from_lists(&sizes, pb, pin))
+            }
+            FrontIndex::Flat(_) => Some(PagedLayout::from_region(n * dim * 4, pb, pin)),
+            FrontIndex::Graph(_) => None,
+        }
+    } else {
+        None
+    };
 
     // 4. Calibration (paper §III-E): sample ~calib_sample of the corpus,
     // harvest neighbors from the existing index, fit OLS on the refined-
@@ -135,6 +175,7 @@ pub fn build_system_with(cfg: &SystemConfig, dataset: Dataset) -> Result<BuiltSy
         index,
         recon,
         trq,
+        paged,
         cal,
         margin,
         margin_first,
@@ -237,6 +278,7 @@ mod tests {
         let sys = build_system(&small_cfg(IndexKind::Ivf)).unwrap();
         assert_eq!(sys.trq.count, 3000);
         assert_eq!(sys.codes.len(), 3000 * 16);
+        assert!(sys.paged.is_none(), "in-memory build has no page layout");
         assert!(sys.cal.pairs > 100);
         assert!(sys.margin > 0.0);
         assert!(sys.margin_first > 0.0);
@@ -244,6 +286,44 @@ mod tests {
         // first-order one, so its error margin must not be (much) larger.
         assert!(sys.margin <= sys.margin_first * 1.5);
         assert!(sys.cal.rmse.is_finite());
+    }
+
+    #[test]
+    fn out_of_core_build_matches_in_memory() {
+        // Streaming build (recon derived per row inside the encode workers)
+        // must produce the same TRQ store bit-for-bit as the materialized
+        // path, and a page layout covering the cold structure. PQ training
+        // is not bit-reproducible across builds (parallel k-means merges
+        // partial sums in completion order), so the comparison rebuilds the
+        // materialized TRQ from this build's own codebooks and codes.
+        let mut oc = small_cfg(IndexKind::Ivf);
+        oc.sim.shared_timeline = true;
+        oc.cache.out_of_core = true;
+        oc.cache.page_kb = 4;
+        oc.cache.pin_pages = 2;
+        oc.validate().unwrap();
+        let sys = build_system(&oc).unwrap();
+        assert!(sys.recon.is_empty(), "out-of-core keeps no recon matrix");
+
+        let (dim, n, m) = (sys.dataset.dim, sys.dataset.count(), sys.pq.m);
+        let mut recon = vec![0f32; n * dim];
+        for i in 0..n {
+            sys.pq.decode_one(&sys.codes[i * m..(i + 1) * m], &mut recon[i * dim..(i + 1) * dim]);
+        }
+        let mat = TrqStore::build(&sys.dataset.base, &recon, dim);
+        assert_eq!(sys.trq.packed, mat.packed);
+        assert_eq!(sys.trq.cross, mat.cross);
+        assert_eq!(sys.trq.scale, mat.scale);
+        assert_eq!(sys.trq.mean_alignment.to_bits(), mat.mean_alignment.to_bits());
+
+        let paged = sys.paged.as_ref().unwrap();
+        let cold: usize = match &sys.index {
+            FrontIndex::Ivf(i) => i.list_codes.iter().map(|c| c.len()).sum(),
+            _ => unreachable!(),
+        };
+        assert_eq!(paged.cold_bytes, cold as u64);
+        assert_eq!(paged.page_bytes, 4 * 1024);
+        assert_eq!(paged.pinned.len(), 2);
     }
 
     #[test]

@@ -36,7 +36,7 @@
 //! `far_reads < candidates` observable in the per-stage breakdown.
 
 use crate::config::{RefineMode, SystemConfig};
-use crate::coordinator::builder::BuiltSystem;
+use crate::coordinator::builder::{BuiltSystem, FrontIndex};
 use crate::coordinator::pipeline::QueryOutcome;
 use crate::coordinator::pipelined::{execute_stage_graph, BatchProfile, ServeReport};
 use crate::coordinator::stage::{run_stage, QueryScratch, Stage, StageState};
@@ -229,6 +229,12 @@ impl QueryEngine {
         let mut profile = self.profile_with(params, queries);
         profile
             .set_tenants(self.sys.cfg.serve.tenants.clone(), tenant_of.to_vec());
+        let nq = queries.len() / self.sys.dataset.dim.max(1);
+        if let Some(traces) = resolve_tenant_traces(&self.sys.cfg, nq)
+            .expect("resolve per-tenant arrival traces")
+        {
+            profile.set_tenant_traces(traces);
+        }
         profile.into_schedule(self.sys.cfg.serve.pipeline_depth, self.sys.cfg.sim.arrival_qps)
     }
 
@@ -248,8 +254,109 @@ impl QueryEngine {
             execute_stage_graph(&self.pool, &self.scratches, params, nq, shared, |q| {
                 (sys, &queries[q * dim..(q + 1) * dim])
             });
-        BatchProfile::capture(&sys.cfg, shared, dim, params.mode, results, waves)
+        let mut profile =
+            BatchProfile::capture(&sys.cfg, shared, dim, params.mode, results, waves);
+        attach_cache(sys, queries, &mut profile);
+        profile
     }
+}
+
+/// The pages of `sys`'s paged layout this query touches, in probe order:
+/// the page spans of every probed IVF list, or the whole scan region for
+/// the flat index. `out` is cleared first. Panics on a non-paged system
+/// (callers gate on `sys.paged`).
+pub(crate) fn query_pages(sys: &BuiltSystem, query: &[f32], out: &mut Vec<u64>) {
+    out.clear();
+    let paged = sys.paged.as_ref().expect("query_pages needs an out-of-core system");
+    match &sys.index {
+        FrontIndex::Ivf(ivf) => {
+            for l in ivf.probe_lists(query) {
+                paged.span_pages(l, out);
+            }
+        }
+        // Flat scans every record; Graph is rejected at config validation.
+        _ => paged.all_pages(out),
+    }
+}
+
+/// When `sys` was built out-of-core (`cache.out_of_core`), attach the
+/// page-cache plan and each query's page working set to `profile`, so the
+/// simulated clock replays page-ins at admission
+/// ([`BatchProfile::set_cache`]). No-op for in-memory systems.
+pub(crate) fn attach_cache(sys: &BuiltSystem, queries: &[f32], profile: &mut BatchProfile) {
+    let Some(paged) = &sys.paged else { return };
+    let dim = sys.dataset.dim;
+    let nq = queries.len() / dim.max(1);
+    let mut task_pages = Vec::with_capacity(nq);
+    for q in 0..nq {
+        let mut pages = Vec::new();
+        query_pages(sys, &queries[q * dim..(q + 1) * dim], &mut pages);
+        task_pages.push(pages);
+    }
+    profile.set_cache(vec![paged.plan(sys.cfg.cache.pages)], task_pages);
+}
+
+/// Resolve the configured per-tenant arrival-trace sources
+/// (`name:weight[:quota][:trace=SOURCE]`): the generator kinds `bursty` /
+/// `diurnal` / `mixed` synthesize a seeded trace at the `sim.arrival_qps`
+/// mean rate ([`crate::bench_support::gen_arrival_trace`], seeded
+/// per-tenant off the dataset seed so tenants never share a trace);
+/// anything else is a file of newline-separated ns offsets. Tenants
+/// without a `trace=` get an empty trace (they ride the global arrival
+/// process). `Ok(None)` when no tenant names a source.
+pub(crate) fn resolve_tenant_traces(
+    cfg: &SystemConfig,
+    nq: usize,
+) -> crate::Result<Option<Vec<Vec<f64>>>> {
+    let tenants = &cfg.serve.tenants;
+    if tenants.iter().all(|t| t.trace.is_none()) {
+        return Ok(None);
+    }
+    let qps = cfg.sim.arrival_qps;
+    let mut out = Vec::with_capacity(tenants.len());
+    for (i, t) in tenants.iter().enumerate() {
+        let tr = match t.trace.as_deref() {
+            None => Vec::new(),
+            Some(kind @ ("bursty" | "diurnal" | "mixed")) => {
+                anyhow::ensure!(
+                    qps > 0.0,
+                    "tenant `{}`: generated arrival trace `{kind}` needs sim.arrival_qps > 0",
+                    t.name
+                );
+                crate::bench_support::gen_arrival_trace(
+                    kind,
+                    nq.max(1),
+                    qps,
+                    cfg.dataset.seed.wrapping_add(i as u64 + 1),
+                )?
+            }
+            Some(path) => {
+                let text = std::fs::read_to_string(path).map_err(|e| {
+                    anyhow::anyhow!("tenant `{}`: read arrival trace {path}: {e}", t.name)
+                })?;
+                let tr: Vec<f64> = text
+                    .lines()
+                    .map(str::trim)
+                    .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                    .map(|l| {
+                        l.parse::<f64>().map_err(|e| {
+                            anyhow::anyhow!("tenant `{}`: trace entry `{l}`: {e}", t.name)
+                        })
+                    })
+                    .collect::<crate::Result<_>>()?;
+                for w in tr.windows(2) {
+                    anyhow::ensure!(
+                        w[1] >= w[0],
+                        "tenant `{}`: trace offsets must be sorted non-decreasing",
+                        t.name
+                    );
+                }
+                tr
+            }
+        };
+        out.push(tr);
+    }
+    Ok(Some(out))
 }
 
 /// The one batch-orchestration core shared by [`QueryEngine::run_serve`]
@@ -274,8 +381,9 @@ pub(crate) fn run_on_pool(
     let (results, waves) = execute_stage_graph(pool, scratches, params, nq, shared, |q| {
         (sys, &queries[q * dim..(q + 1) * dim])
     });
-    BatchProfile::capture(&sys.cfg, shared, dim, params.mode, results, waves)
-        .into_schedule(depth, arrival_qps)
+    let mut profile = BatchProfile::capture(&sys.cfg, shared, dim, params.mode, results, waves);
+    attach_cache(sys, queries, &mut profile);
+    profile.into_schedule(depth, arrival_qps)
 }
 
 #[cfg(test)]

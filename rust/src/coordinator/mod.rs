@@ -3,7 +3,10 @@
 //!
 //! - [`builder`] — trains PQ, encodes codes, builds the front-stage index,
 //!   the TRQ far-memory store, and the calibration model (+ the provable-
-//!   cutoff error margins).
+//!   cutoff error margins). With `cache.out_of_core` the TRQ store is
+//!   built streaming (no materialized reconstruction matrix) and the cold
+//!   PQ/IVF code structures get a [`crate::simulator::PagedLayout`] page
+//!   map for the SSD-resident tier.
 //! - [`stage`] — the per-query **stage graph**: front-stage traversal →
 //!   far-memory (progressive) refinement → SSD fetch of survivors →
 //!   exact rerank, as four resumable steps over per-query state, each
@@ -25,7 +28,14 @@
 //!   (1 = the sequential engine, bit-identical), open-loop arrivals
 //!   (`sim.arrival_qps`, uniform/Poisson/trace) produce
 //!   tail-latency-vs-load reports, and `serve.tenants` adds
-//!   weighted-fair multi-tenant admission with per-tenant percentiles.
+//!   weighted-fair multi-tenant admission with per-tenant percentiles
+//!   (each tenant optionally riding its own arrival trace,
+//!   `name:weight[:quota][:trace=SOURCE]`). The out-of-core page tier
+//!   (`cache.out_of_core`, [`crate::simulator::pagecache`]) replays each
+//!   task's page working set against its shard's deterministic CLOCK
+//!   cache at admission and batches the misses into one page-in burst on
+//!   that shard's SSD queue — cold-cache misses surface as simulated
+//!   queue time and first-class cache columns on the serve report.
 //!   Seeded fault injection ([`crate::simulator::fault`], `sim.fault_*`)
 //!   and per-query deadlines (`serve.deadline_us`) add the degraded-mode
 //!   serving path: bounded retry with deterministic backoff, fallback to

@@ -77,9 +77,10 @@ use crate::coordinator::builder::BuiltSystem;
 use crate::coordinator::engine::QueryParams;
 use crate::coordinator::pipeline::QueryOutcome;
 use crate::coordinator::stage::{run_stage, FallbackTopk, QueryScratch, Stage, StageState};
-use crate::metrics::{Availability, LatencyStats};
+use crate::metrics::{Availability, CacheStats, LatencyStats};
 use crate::simulator::{
-    DegradeLevel, FarStream, FaultPlan, LaneServer, SsdQueue, StreamTiming, TimelineSched,
+    CachePlan, DegradeLevel, FarStream, FaultPlan, LaneServer, PageCache, SsdQueue,
+    StreamTiming, TimelineSched,
 };
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
@@ -195,6 +196,15 @@ pub(crate) struct TaskTiming {
     /// Waiting for a free CPU lane across the task's compute stages
     /// (always 0 with unbounded lanes).
     pub cpu_queue_ns: f64,
+    /// Page-in burst duration on an idle SSD for this task's cold-page
+    /// misses (out-of-core only; 0 with the cache off or warm).
+    pub pagein_ns: f64,
+    /// SSD queue wait of the page-in burst.
+    pub pagein_queue_ns: f64,
+    /// Page-cache hits / misses of this task's admission-time page
+    /// replay.
+    pub page_hits: u32,
+    pub page_misses: u32,
     /// Degradation outcome of this task under fault injection (`Full` on
     /// every fault-free run).
     pub degrade: DegradeLevel,
@@ -287,6 +297,11 @@ pub struct ServeReport {
     /// Availability accounting (all-served / inactive on fault-free
     /// runs).
     pub availability: Availability,
+    /// Out-of-core page-cache accounting, summed over the shard caches
+    /// (inactive when the corpus is fully in memory).
+    pub cache: CacheStats,
+    /// Mean SSD page-in queue wait per task (0 without out-of-core).
+    pub mean_pagein_queue_ns: f64,
 }
 
 impl ServeReport {
@@ -452,12 +467,29 @@ pub(crate) struct SimInput<'a> {
     /// zero-fault schedule is bit-identical to one computed without the
     /// fault layer.
     pub fault: &'a FaultPlan,
+    /// Per-shard page-cache plans of the out-of-core tier (empty = the
+    /// corpus is fully in memory and no page replay happens).
+    pub cache_plans: &'a [CachePlan],
+    /// Per-task cold-page lists, replayed against the shard's cache at
+    /// the task's admission instant (empty = off; else one list per
+    /// task). Misses become one SSD page-in burst ahead of the front
+    /// stage.
+    pub task_pages: &'a [Vec<u64>],
+    /// Per-tenant arrival-trace overrides (one entry per tenant when
+    /// non-empty; an empty inner trace leaves that tenant on the global
+    /// arrival process). The j-th query of tenant `tn` arrives at
+    /// `tr[j % len] + (j / len) * span` — same tiling as the global
+    /// trace.
+    pub tenant_traces: &'a [Vec<f64>],
 }
 
 #[derive(Clone, Copy, Debug)]
 enum EvKind {
     /// A query entered the open-loop arrival queue.
     Arrival(usize),
+    /// A task's cold-page SSD page-in burst completed: launch the front
+    /// stage (out-of-core only).
+    PageReady(usize),
     /// A task's front stage completed: reserve the far-memory timeline.
     FarReady(usize),
     /// Record-interleave mode: tentative completion of a task's far
@@ -513,6 +545,8 @@ struct SimState<'a> {
     profiles: &'a [TaskProfile],
     shards: usize,
     merge_ns: &'a [f64],
+    /// Per-task cold-page lists (empty = out-of-core off).
+    task_pages: &'a [Vec<u64>],
     lanes: LaneServer,
     task_timing: Vec<TaskTiming>,
     timings: Vec<ServeTiming>,
@@ -536,6 +570,47 @@ impl SimState<'_> {
     fn push(&mut self, t: f64, kind: EvKind) {
         self.heap.push(std::cmp::Reverse(Ev { t, seq: self.seq, kind }));
         self.seq += 1;
+    }
+
+    /// Start task `t` at admission instant `now`: replay its cold-page
+    /// list against the shard's page cache first (out-of-core only). The
+    /// replay happens at the admission instant, and admissions are
+    /// totally ordered by the event loop, so hit/miss/eviction sequences
+    /// are deterministic across worker counts. Misses become one SSD
+    /// page-in burst and the front stage launches when it lands; a warm
+    /// cache (or cache off) never misses, adds no events and launches the
+    /// front stage at `now` — the bit-identity path.
+    fn start_task(
+        &mut self,
+        t: usize,
+        now: f64,
+        caches: &mut [PageCache],
+        ssd: &mut [SsdQueue],
+    ) {
+        if !caches.is_empty() && !self.task_pages.is_empty() {
+            let shard = t % self.shards;
+            let cache = &mut caches[shard];
+            let mut hits = 0u32;
+            let mut misses = 0usize;
+            for &p in &self.task_pages[t] {
+                if cache.access(p) {
+                    hits += 1;
+                } else {
+                    misses += 1;
+                }
+            }
+            let tt = &mut self.task_timing[t];
+            tt.page_hits = hits;
+            tt.page_misses = misses as u32;
+            if misses > 0 {
+                let g = ssd[shard].admit(misses, cache.page_bytes(), now);
+                tt.pagein_ns = g.solo_ns;
+                tt.pagein_queue_ns = g.queue_ns;
+                self.push(g.done_ns, EvKind::PageReady(t));
+                return;
+            }
+        }
+        self.launch_front(t, now);
     }
 
     /// Launch task `t`'s front stage at admission instant `now`.
@@ -616,14 +691,21 @@ impl SimState<'_> {
         let tt = self.task_timing[t];
         // Idle-device service total of the stages the task actually ran.
         // The `Full` arm is the pre-fault expression verbatim — the only
-        // one a fault-free run can take.
-        let task_service = match tt.degrade {
-            DegradeLevel::Full => {
-                pr.traversal_ns + tt.far_solo_ns + pr.refine_ns + tt.ssd_solo_ns + pr.rerank_ns
-            }
-            DegradeLevel::SkipVerify => pr.traversal_ns + tt.far_solo_ns + pr.refine_ns,
-            _ => pr.traversal_ns,
-        };
+        // one a fault-free run can take. The page-in burst (0 unless an
+        // out-of-core task missed) precedes the front stage, so every
+        // arm carries it.
+        let task_service = tt.pagein_ns
+            + match tt.degrade {
+                DegradeLevel::Full => {
+                    pr.traversal_ns
+                        + tt.far_solo_ns
+                        + pr.refine_ns
+                        + tt.ssd_solo_ns
+                        + pr.rerank_ns
+                }
+                DegradeLevel::SkipVerify => pr.traversal_ns + tt.far_solo_ns + pr.refine_ns,
+                _ => pr.traversal_ns,
+            };
         let q = t / self.shards;
         self.task_done_max[q] = self.task_done_max[q].max(task_done);
         self.service_max[q] = self.service_max[q].max(task_service);
@@ -675,8 +757,39 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         }
     };
     let depth_cap = if depth == 0 { nq.max(1) } else { depth.min(nq.max(1)) };
-    let arrivals = arrival_offsets(nq, arrival_qps, input.sim);
+    let mut arrivals = arrival_offsets(nq, arrival_qps, input.sim);
+    // Per-tenant arrival-trace mixtures: a traced tenant's j-th query
+    // replays its own trace (tiling past the end like the global trace)
+    // instead of the global arrival process. The merged order is decided
+    // by the (time, sequence)-ordered event heap, so it is deterministic.
+    if !input.tenant_traces.is_empty() {
+        assert_eq!(
+            input.tenant_traces.len(),
+            ntenants,
+            "one (possibly empty) trace per tenant"
+        );
+        let mut seen = vec![0usize; ntenants];
+        for (q, at) in arrivals.iter_mut().enumerate() {
+            let tn = tenant(q);
+            let j = seen[tn];
+            seen[tn] += 1;
+            let tr = &input.tenant_traces[tn];
+            if tr.is_empty() {
+                continue;
+            }
+            let span = *tr.last().unwrap();
+            *at = tr[j % tr.len()] + (j / tr.len()) as f64 * span;
+        }
+    }
     let record_mode = shared && input.sim.stream_interleave == StreamInterleave::Record;
+
+    // Out-of-core page caches, one per shard. Empty plans = the corpus is
+    // fully in memory: no replay, no page-in events, timeline untouched.
+    let mut caches: Vec<PageCache> = input.cache_plans.iter().map(PageCache::new).collect();
+    assert!(
+        caches.is_empty() || (caches.len() == shards && input.task_pages.len() == nq_shards),
+        "cache plans need one cache per shard and one page list per task"
+    );
 
     let mut far = TimelineSched::new(input.sim);
     let mut ssd: Vec<SsdQueue> = (0..shards).map(|_| SsdQueue::new(input.sim)).collect();
@@ -684,6 +797,7 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         profiles,
         shards,
         merge_ns,
+        task_pages: if caches.is_empty() { &[] } else { input.task_pages },
         lanes: LaneServer::new(cpu_lanes),
         task_timing: vec![TaskTiming::default(); nq_shards],
         timings: vec![ServeTiming::default(); nq],
@@ -728,6 +842,10 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
                 st.timings[q].arrival_ns = now;
                 waiting[tenant(q)].push_back(q);
                 waiting_total += 1;
+            }
+            EvKind::PageReady(t) => {
+                // The task's cold pages are resident: run the front stage.
+                st.launch_front(t, now);
             }
             EvKind::FarReady(t) => {
                 let pr = &profiles[t];
@@ -897,7 +1015,7 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
             in_flight += 1;
             st.timings[q].admit_ns = now;
             for s in 0..shards {
-                st.launch_front(q * shards + s, now);
+                st.start_task(q * shards + s, now, &mut caches, &mut ssd);
             }
         }
     }
@@ -981,6 +1099,18 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
             })
             .collect()
     };
+    // Fold the shard caches into one report-level accounting row, and
+    // average the page-in queue wait over the tasks (0 with the cache
+    // off).
+    let mut cache_stats = CacheStats::default();
+    for c in &caches {
+        cache_stats.absorb(&c.stats);
+    }
+    let mean_pagein_queue_ns = if caches.is_empty() || nq_shards == 0 {
+        0.0
+    } else {
+        st.task_timing.iter().map(|tt| tt.pagein_queue_ns).sum::<f64>() / nq_shards as f64
+    };
     let report = ServeReport {
         depth,
         arrival_qps,
@@ -992,6 +1122,8 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         p99_ns: lat.p99(),
         tenants: tenant_lat,
         availability: avail,
+        cache: cache_stats,
+        mean_pagein_queue_ns,
         timings,
     };
     (st.task_timing, report)
@@ -1030,6 +1162,15 @@ pub struct BatchProfile {
     fault: FaultPlan,
     /// Per-query deadline on the simulated clock (0 = none).
     deadline_ns: f64,
+    /// Out-of-core cache plan (one shard for a monolithic profile; empty
+    /// = the corpus is fully in memory).
+    cache_plans: Vec<CachePlan>,
+    /// Per-task cold-page lists replayed at admission (parallel to
+    /// `cache_plans`; empty = off).
+    task_pages: Vec<Vec<u64>>,
+    /// Per-tenant arrival-trace overrides (empty = all tenants ride the
+    /// global arrival process).
+    tenant_traces: Vec<Vec<f64>>,
     /// Dispatch rounds the functional pass took (1 for any nonempty
     /// batch since the run-to-completion executor; tests pin the drop
     /// from the old per-stage re-dispatch scheme).
@@ -1074,6 +1215,9 @@ impl BatchProfile {
             fallbacks,
             fault: FaultPlan::new(cfg.sim.fault.clone()),
             deadline_ns: cfg.serve.deadline_us * 1e3,
+            cache_plans: Vec::new(),
+            task_pages: Vec::new(),
+            tenant_traces: Vec::new(),
             waves,
         }
     }
@@ -1166,6 +1310,38 @@ impl BatchProfile {
         self.tenant_of = tenant_of;
     }
 
+    /// Configure the out-of-core page tier for subsequent schedules: one
+    /// cache plan (monolithic profiles have one shard) plus each task's
+    /// cold-page list, replayed at the task's admission instant. Empty
+    /// plans disable the tier. Page-in bursts queue on the shared SSD
+    /// timeline, so the tier requires a shared-scheduling profile.
+    pub fn set_cache(&mut self, cache_plans: Vec<CachePlan>, task_pages: Vec<Vec<u64>>) {
+        assert!(
+            cache_plans.is_empty() || self.shared,
+            "out-of-core paging needs the shared timeline (page-ins queue on the \
+             shared SSD); this profile schedules private idle devices"
+        );
+        assert!(
+            cache_plans.is_empty() || task_pages.len() == self.outcomes.len(),
+            "one page list per task"
+        );
+        self.cache_plans = cache_plans;
+        self.task_pages = task_pages;
+    }
+
+    /// Per-tenant arrival-trace mixtures for subsequent schedules: one
+    /// trace per configured tenant (an empty inner trace leaves that
+    /// tenant on the global arrival process); empty disables the
+    /// override. Traced tenants replay their own arrival offsets, tiling
+    /// past the trace end like the global trace does.
+    pub fn set_tenant_traces(&mut self, traces: Vec<Vec<f64>>) {
+        assert!(
+            traces.is_empty() || traces.len() == self.tenants.len().max(1),
+            "one (possibly empty) trace per tenant"
+        );
+        self.tenant_traces = traces;
+    }
+
     fn run_sim(&self, depth: usize, arrival_qps: f64) -> (Vec<TaskTiming>, ServeReport) {
         simulate(&SimInput {
             sim: &self.sim,
@@ -1181,6 +1357,9 @@ impl BatchProfile {
             tenant_of: &self.tenant_of,
             deadline_ns: self.deadline_ns,
             fault: &self.fault,
+            cache_plans: &self.cache_plans,
+            task_pages: &self.task_pages,
+            tenant_traces: &self.tenant_traces,
         })
     }
 
@@ -1195,7 +1374,8 @@ impl BatchProfile {
         report: &ServeReport,
     ) {
         for (q, (o, tt)) in outs.iter_mut().zip(task_t).enumerate() {
-            o.breakdown.queue_ns = tt.far_queue_ns + tt.ssd_queue_ns + tt.cpu_queue_ns;
+            o.breakdown.queue_ns =
+                tt.far_queue_ns + tt.ssd_queue_ns + tt.cpu_queue_ns + tt.pagein_queue_ns;
             let timing = &report.timings[q];
             if timing.degrade.is_degraded() || timing.retries > 0 {
                 o.breakdown.degrade = timing.degrade;

@@ -35,13 +35,13 @@
 
 use crate::config::SystemConfig;
 use crate::coordinator::builder::{build_system_with, BuiltSystem};
-use crate::coordinator::engine::QueryParams;
+use crate::coordinator::engine::{query_pages, resolve_tenant_traces, QueryParams};
 use crate::coordinator::pipeline::{Breakdown, QueryOutcome};
 use crate::coordinator::pipelined::{
     execute_stage_graph, modeled_merge_ns, simulate, ServeReport, SimInput, TaskProfile,
 };
 use crate::coordinator::stage::QueryScratch;
-use crate::simulator::{DegradeLevel, FaultPlan};
+use crate::simulator::{CachePlan, DegradeLevel, FaultPlan};
 use crate::util::threadpool::{default_threads, ThreadPool};
 use crate::util::topk::Scored;
 use crate::vecstore::Dataset;
@@ -204,6 +204,14 @@ impl ShardedEngine {
         self.cfg.serve.deadline_us = us;
     }
 
+    /// Set the page-cache frame budget (`cache.pages`, 0 = warm) without
+    /// rebuilding shards — benches sweep cache sizes over one out-of-core
+    /// build. Only meaningful when the shards were built with
+    /// `cache.out_of_core` (the paged layouts exist per shard).
+    pub fn set_cache_pages(&mut self, pages: usize) {
+        self.cfg.cache.pages = pages;
+    }
+
     pub fn params(&self) -> &QueryParams {
         &self.params
     }
@@ -321,6 +329,32 @@ impl ShardedEngine {
         // contributes to the merge. ----
         let merge_ns = vec![modeled_merge_ns(ns, params.k); nq];
         let fault = FaultPlan::new(self.cfg.sim.fault.clone());
+
+        // Out-of-core tier: one page cache per shard, and each (query,
+        // shard) task's page working set against its own shard's layout
+        // (task t = q*ns + s drives cache t % ns = s in the clock).
+        let (cache_plans, task_pages): (Vec<CachePlan>, Vec<Vec<u64>>) =
+            if self.shards.iter().all(|sh| sh.paged.is_some()) && self.cfg.cache.out_of_core {
+                let plans = self
+                    .shards
+                    .iter()
+                    .map(|sh| sh.paged.as_ref().unwrap().plan(self.cfg.cache.pages))
+                    .collect();
+                let mut pages = vec![Vec::new(); tasks];
+                for q in 0..nq {
+                    let query = &queries[q * dim..(q + 1) * dim];
+                    for s in 0..ns {
+                        query_pages(&self.shards[s], query, &mut pages[q * ns + s]);
+                    }
+                }
+                (plans, pages)
+            } else {
+                (Vec::new(), Vec::new())
+            };
+        let tenant_traces = resolve_tenant_traces(&self.cfg, nq)
+            .expect("resolve per-tenant arrival traces")
+            .unwrap_or_default();
+
         let (task_t, report) = simulate(&SimInput {
             sim: &self.cfg.sim,
             nq,
@@ -335,6 +369,9 @@ impl ShardedEngine {
             tenant_of,
             deadline_ns: self.cfg.serve.deadline_us * 1e3,
             fault: &fault,
+            cache_plans: &cache_plans,
+            task_pages: &task_pages,
+            tenant_traces: &tenant_traces,
         });
 
         // ---- gather: remap to global ids, merge, aggregate breakdowns.
@@ -401,7 +438,9 @@ impl ShardedEngine {
                 // so its lane wait adds on top of the task-level max.
                 bd.queue_ns = slice
                     .iter()
-                    .map(|t| t.far_queue_ns + t.ssd_queue_ns + t.cpu_queue_ns)
+                    .map(|t| {
+                        t.far_queue_ns + t.ssd_queue_ns + t.cpu_queue_ns + t.pagein_queue_ns
+                    })
                     .fold(0.0f64, f64::max)
                     + report.timings[q].merge_queue_ns;
             }

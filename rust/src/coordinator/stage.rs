@@ -28,7 +28,12 @@
 //! what moves out of here: steps charge the private/idle device model
 //! (`far_ns`, `ssd_ns`) and capture the access streams
 //! ([`FarStream`], SSD read counts), and the pipelined scheduler replays
-//! those on shared admission-time device queues.
+//! those on shared admission-time device queues. The same split carries
+//! the out-of-core tier (`cache.out_of_core`): the front stage scans the
+//! same in-memory `list_codes` bytes either way — *which pages were
+//! cold* is decided by replaying the task's page working set against the
+//! shard's [`crate::simulator::PageCache`] at admission, so paging can
+//! change timing but never results.
 
 use crate::accel::pqueue::HwPriorityQueue;
 use crate::accel::RefineEngine;

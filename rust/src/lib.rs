@@ -39,7 +39,11 @@
 //!   per-shard SSD queue ([`simulator::SsdQueue`]) and the CPU lane
 //!   server ([`simulator::LaneServer`], `serve.cpu_lanes`) all arbitrate
 //!   in-flight queries over one device state (`sim.shared_timeline`)
-//!   without mirroring any device arithmetic
+//!   without mirroring any device arithmetic. The **out-of-core page
+//!   tier** ([`simulator::pagecache`], `cache.out_of_core`) pages the
+//!   cold query-path code structures behind a deterministic CLOCK
+//!   [`simulator::PageCache`] with hot-list pinning; misses become
+//!   page-in bursts on the shard's SSD queue
 //! - [`accel`] — CXL Type-2 refinement accelerator cycle/area/power model,
 //!   including early-exit cycle accounting
 //! - [`runtime`] — PJRT client wrapper; loads `artifacts/*.hlo.txt` (L2/L1;
@@ -54,8 +58,10 @@
 //!   reservations at admission time, `serve.pipeline_depth`, open-loop
 //!   `sim.arrival_qps` with uniform/Poisson/trace arrivals and
 //!   p50/p95/p99 from the timeline, weighted-fair multi-tenant QoS via
-//!   `serve.tenants` — depth 1 is the sequential
-//!   engine, bit-identical), seeded **fault injection** with a
+//!   `serve.tenants` with optional per-tenant arrival-trace mixtures
+//!   (`name:weight[:quota][:trace=SRC]`), out-of-core page-in
+//!   scheduling with cache/page-in columns on the serve report — depth
+//!   1 is the sequential engine, bit-identical), seeded **fault injection** with a
 //!   degraded-mode serving path ([`simulator::fault`]: a
 //!   [`simulator::FaultPlan`] that is a pure function of
 //!   `(seed, device, op)` injects far-memory read failures/latency

@@ -31,6 +31,7 @@ COMMANDS:
           [--arrival-qps R] [--arrival-dist uniform|poisson]
           [--arrival-trace FILE] [--arrival-gen KIND] [--cpu-lanes L]
           [--stream-interleave burst|record] [--tenants SPECS]
+          [--out-of-core] [--cache-mb M]
           [--deadline-us D] [--fault-seed S] [--fault-far-rate R]
           [--fault-far-spike-rate R] [--fault-far-spike-us U]
           [--fault-ssd-rate R] [--fault-retry-limit N]
@@ -40,6 +41,7 @@ COMMANDS:
           [--arrival-qps R] [--arrival-dist uniform|poisson]
           [--arrival-trace FILE] [--arrival-gen KIND] [--cpu-lanes L]
           [--stream-interleave burst|record] [--tenants SPECS]
+          [--out-of-core] [--cache-mb M]
           [--deadline-us D] [--fault-seed S] [--fault-far-rate R]
           [--fault-far-spike-rate R] [--fault-far-spike-us U]
           [--fault-ssd-rate R] [--fault-retry-limit N]
@@ -75,10 +77,24 @@ FLAGS:
                         throughput-device model)
   --stream-interleave M far-memory sharing for co-admitted streams: burst
                         (FCFS, default) or record (round-robin fairness)
-  --tenants SPECS       multi-tenant QoS: comma-separated name:weight[:quota]
-                        (e.g. latency:4,batch:1:8); queries round-robin over
-                        tenants, admission is weighted-fair + quota-capped,
-                        the report gains per-tenant p50/p95/p99
+  --tenants SPECS       multi-tenant QoS: comma-separated
+                        name:weight[:quota][:trace=SRC]
+                        (e.g. latency:4,batch:1:8:trace=bursty); queries
+                        round-robin over tenants, admission is weighted-fair
+                        + quota-capped, the report gains per-tenant
+                        p50/p95/p99. trace=SRC gives that tenant its own
+                        arrival process: bursty | diurnal | mixed
+                        (synthesized at the --arrival-qps mean rate), or a
+                        file of ns offsets, tiled past its end
+  --out-of-core         page the cold query-path structures (IVF list PQ
+                        codes / the flat scan region) out to the simulated
+                        SSD behind an explicit page cache; misses queue as
+                        page-in bursts on the shard's SSD timeline
+                        (requires --shared-timeline; ivf|flat index kinds)
+  --cache-mb M          page-cache frame budget in MiB (0 = warm cache:
+                        everything resident, bit-identical to in-memory);
+                        page size and hot-list pinning come from the
+                        [cache] config section
   --arrival-gen KIND    synthesize the arrival trace instead of replaying a
                         file: bursty | diurnal | mixed, at the --arrival-qps
                         mean rate (seeded from the dataset seed)
@@ -154,6 +170,15 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
     }
     if let Some(t) = args.get("tenants") {
         cfg.serve.tenants = fatrq::config::TenantSpec::parse_list(t)?;
+    }
+    // Out-of-core paging knobs (the [cache] config section).
+    if args.has("out-of-core") {
+        cfg.cache.out_of_core = true;
+    }
+    let cache_mb = args.get_f64("cache-mb", 0.0)?;
+    if cache_mb > 0.0 {
+        anyhow::ensure!(cfg.cache.page_kb > 0, "cache.page_kb must be positive");
+        cfg.cache.pages = ((cache_mb * 1024.0) / cfg.cache.page_kb as f64).ceil() as usize;
     }
     // Robust-serving knobs: per-query deadline + the seeded fault plan.
     cfg.serve.deadline_us = args.get_f64("deadline-us", cfg.serve.deadline_us)?;
@@ -248,6 +273,20 @@ fn print_report(rep: &BatchReport, k: usize, threads: usize, shards: usize) {
             av.dropped_tasks
         );
     }
+    let c = &rep.cache;
+    if c.active {
+        println!(
+            "page cache: {:.1}% hit ({} accesses, {} misses, {} evictions)  {} frames + {} pinned / {} pages  page-in queue {:.1} us/task",
+            100.0 * c.hit_rate(),
+            c.accesses,
+            c.misses,
+            c.evictions,
+            c.frames,
+            c.pinned,
+            c.total_pages,
+            rep.mean_pagein_queue_ns / 1e3
+        );
+    }
     for t in &rep.tenants {
         println!(
             "tenant {:>10}: {:>4} queries  mean {:.1} us  p50 {:.1} us  p95 {:.1} us  p99 {:.1} us",
@@ -321,6 +360,8 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         "stream-interleave",
         "tenants",
         "arrival-gen",
+        "out-of-core",
+        "cache-mb",
         "deadline-us",
         "fault-seed",
         "fault-far-rate",
@@ -360,6 +401,8 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "stream-interleave",
         "tenants",
         "arrival-gen",
+        "out-of-core",
+        "cache-mb",
         "deadline-us",
         "fault-seed",
         "fault-far-rate",

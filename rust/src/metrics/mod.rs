@@ -6,17 +6,24 @@ use std::collections::HashSet;
 
 /// recall@k of `result` against ground-truth `truth` (both sorted lists;
 /// only the first k of each are considered).
+///
+/// Duplicate ids are counted once on both sides: each result id can hit
+/// at most once (a result repeating one truth id k times scores k·(1/k),
+/// not k/k), and the denominator is `min(k, truth.len())` so duplicate
+/// truth entries cannot shrink it. Recall is therefore always in [0, 1].
 pub fn recall_at_k(result: &[Scored], truth: &[Scored], k: usize) -> f64 {
     let truth_ids: HashSet<u64> = truth.iter().take(k).map(|s| s.id).collect();
-    if truth_ids.is_empty() {
+    let denom = k.min(truth.len());
+    if denom == 0 {
         return 1.0;
     }
+    let mut seen = HashSet::new();
     let hits = result
         .iter()
         .take(k)
-        .filter(|s| truth_ids.contains(&s.id))
+        .filter(|s| truth_ids.contains(&s.id) && seen.insert(s.id))
         .count();
-    hits as f64 / truth_ids.len() as f64
+    hits as f64 / denom as f64
 }
 
 /// Mean recall@k over query batches.
@@ -96,6 +103,54 @@ impl Availability {
             return 0.0;
         }
         self.deadline_missed as f64 / self.queries as f64
+    }
+}
+
+/// Page-cache accounting of one serving run under the out-of-core layout
+/// (`cache.out_of_core` / `--out-of-core`). All counters stay zero when
+/// the cold structures are memory-resident; `active` distinguishes "no
+/// cache configured" from "cache configured but never missed".
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Whether an out-of-core page cache was active for this run.
+    pub active: bool,
+    /// Cache frames (0 = warm/unbounded: every page resident).
+    pub frames: usize,
+    /// Total pages of the paged cold structures.
+    pub total_pages: usize,
+    /// Pages pinned resident (hot-list pinning), never evicted.
+    pub pinned: usize,
+    /// Page lookups by the serving timeline.
+    pub accesses: u64,
+    /// Lookups served from a resident frame.
+    pub hits: u64,
+    /// Lookups that queued a page-in on the simulated SSD.
+    pub misses: u64,
+    /// Resident pages evicted to make room.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Fraction of page lookups served from fast memory (1.0 when the
+    /// timeline never touched the cache).
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            return 1.0;
+        }
+        self.hits as f64 / self.accesses as f64
+    }
+
+    /// Fold another shard's counters into this one (frames/pages sum —
+    /// each shard fronts its own paged structures).
+    pub fn absorb(&mut self, other: &CacheStats) {
+        self.active |= other.active;
+        self.frames += other.frames;
+        self.total_pages += other.total_pages;
+        self.pinned += other.pinned;
+        self.accesses += other.accesses;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
     }
 }
 
@@ -185,6 +240,72 @@ mod tests {
         let result = mk(&[1, 9, 9, 9, 9]);
         assert_eq!(recall_at_k(&result, &truth, 1), 1.0);
         assert_eq!(recall_at_k(&result, &truth, 2), 0.5);
+    }
+
+    #[test]
+    fn recall_duplicate_result_ids_count_once() {
+        // Regression: a result repeating one truth id used to score a hit
+        // per repetition, pushing recall to 1.0 (or above k/denom) for a
+        // list that found a single true neighbor.
+        let truth = mk(&[1, 2, 3, 4, 5]);
+        let dup_result = mk(&[1, 1, 1, 1, 1]);
+        assert_eq!(recall_at_k(&dup_result, &truth, 5), 0.2);
+        // Duplicates of a non-truth id stay at zero.
+        let dup_miss = mk(&[9, 9, 9, 9, 9]);
+        assert_eq!(recall_at_k(&dup_miss, &truth, 5), 0.0);
+        // Mixed: {1, 2} hit once each.
+        let mixed = mk(&[1, 1, 2, 2, 9]);
+        assert!((recall_at_k(&mixed, &truth, 5) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recall_duplicate_truth_ids_keep_denominator() {
+        // Regression: duplicate truth ids used to shrink the denominator
+        // to the deduped set size, so a result missing most of the truth
+        // list could still score 1.0 (recall could even exceed 1.0 when
+        // combined with duplicated result hits).
+        let truth = mk(&[1, 1, 1, 2, 2]);
+        let result = mk(&[1, 2, 9, 9, 9]);
+        // Denominator is min(k, truth.len()) = 5, not |{1, 2}| = 2.
+        assert!((recall_at_k(&result, &truth, 5) - 0.4).abs() < 1e-12);
+        // Recall can never exceed 1.0, even with duplicates on both sides.
+        let both = mk(&[1, 1, 2, 2, 1]);
+        assert!(recall_at_k(&both, &truth, 5) <= 1.0);
+        assert!((recall_at_k(&both, &truth, 5) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_stats_rates_and_absorb() {
+        let c = CacheStats::default();
+        assert!(!c.active);
+        assert_eq!(c.hit_rate(), 1.0);
+        let mut a = CacheStats {
+            active: true,
+            frames: 8,
+            total_pages: 32,
+            pinned: 2,
+            accesses: 10,
+            hits: 7,
+            misses: 3,
+            evictions: 1,
+        };
+        assert!((a.hit_rate() - 0.7).abs() < 1e-12);
+        a.absorb(&CacheStats {
+            active: true,
+            frames: 8,
+            total_pages: 32,
+            pinned: 2,
+            accesses: 10,
+            hits: 3,
+            misses: 7,
+            evictions: 5,
+        });
+        assert_eq!(a.accesses, 20);
+        assert_eq!(a.hits, 10);
+        assert_eq!(a.misses, 10);
+        assert_eq!(a.evictions, 6);
+        assert_eq!(a.frames, 16);
+        assert!((a.hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]

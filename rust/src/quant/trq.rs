@@ -197,13 +197,34 @@ impl TrqStore {
     /// Encode every row of `data` (`n x dim`) against its reconstruction in
     /// `recon` (`n x dim`), in parallel.
     ///
+    /// Delegates to [`TrqStore::build_with`] with a closure that copies the
+    /// row out of the materialized `recon` matrix — same chunking, same
+    /// fold order, bit-identical output.
+    pub fn build(data: &[f32], recon: &[f32], dim: usize) -> TrqStore {
+        assert_eq!(data.len(), recon.len());
+        Self::build_with(data, dim, |i, out| {
+            out.copy_from_slice(&recon[i * dim..(i + 1) * dim]);
+        })
+    }
+
+    /// Streaming build: encode every row of `data` against a reconstruction
+    /// produced on demand by `recon_for(row, out)` into a worker-local
+    /// buffer — the out-of-core build path, which never materializes the
+    /// full `n x dim` reconstruction matrix in fast memory (the coarse
+    /// reconstruction is re-derived per row from the PQ codes instead).
+    ///
     /// Workers write their chunk's rows straight into the preallocated
     /// output columns (disjoint ranges, no locks) and
     /// [`parallel_map`] collects the per-chunk alignment sums in order —
     /// the previous version funneled five `Mutex`-guarded vectors through a
-    /// write-local-then-copy double buffer (EXPERIMENTS.md §Perf).
-    pub fn build(data: &[f32], recon: &[f32], dim: usize) -> TrqStore {
-        assert_eq!(data.len(), recon.len());
+    /// write-local-then-copy double buffer (EXPERIMENTS.md §Perf). The
+    /// chunk formula and the per-chunk alignment fold are shared with
+    /// [`TrqStore::build`], so both paths are bit-identical — including
+    /// `mean_alignment`.
+    pub fn build_with<F>(data: &[f32], dim: usize, recon_for: F) -> TrqStore
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
         let n = data.len() / dim;
         let plen = packed_len(dim);
         let mut packed = vec![0u8; n * plen];
@@ -236,16 +257,17 @@ impl TrqStore {
             };
             let mut la = 0.0f64;
             let mut delta = vec![0f32; dim];
+            let mut xc = vec![0f32; dim];
             for (j, i) in (start..end).enumerate() {
                 let x = &data[i * dim..(i + 1) * dim];
-                let xc = &recon[i * dim..(i + 1) * dim];
+                recon_for(i, &mut xc);
                 for d in 0..dim {
                     delta[d] = x[d] - xc[d];
                 }
                 let code = ternary_encode(&delta);
                 pack_ternary(&code.trits, &mut lp[j * plen..(j + 1) * plen]);
                 let dn = norm(&delta);
-                lc[j] = dot(xc, &delta);
+                lc[j] = dot(&xc, &delta);
                 ls[j] = dn * code.alignment;
                 ld[j] = dn * dn;
                 la += code.alignment as f64;
@@ -418,6 +440,29 @@ mod tests {
             assert!((store.scale[i] - single.scale).abs() < 1e-5);
         }
         assert!(store.mean_alignment > 0.0 && store.mean_alignment <= 1.0);
+    }
+
+    #[test]
+    fn streaming_build_is_bit_identical_to_materialized() {
+        // build_with (the out-of-core path: reconstruction derived per row
+        // on demand) must reproduce build (full recon matrix) bit-for-bit,
+        // including the mean_alignment fold.
+        let mut rng = Rng::new(11);
+        let (n, dim) = (530usize, 40usize);
+        let mut data = vec![0f32; n * dim];
+        rng.fill_gaussian(&mut data);
+        let recon: Vec<f32> = data.iter().map(|d| d * 0.85).collect();
+        let a = TrqStore::build(&data, &recon, dim);
+        let b = TrqStore::build_with(&data, dim, |i, out| {
+            for (o, d) in out.iter_mut().zip(&data[i * dim..(i + 1) * dim]) {
+                *o = d * 0.85;
+            }
+        });
+        assert_eq!(a.packed, b.packed);
+        assert_eq!(a.cross, b.cross);
+        assert_eq!(a.scale, b.scale);
+        assert_eq!(a.dnorm_sq, b.dnorm_sq);
+        assert_eq!(a.mean_alignment.to_bits(), b.mean_alignment.to_bits());
     }
 
     #[test]

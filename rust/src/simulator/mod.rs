@@ -32,6 +32,14 @@
 //!   queue accounting) that the far-memory timeline, the SSD queue and
 //!   the CPU lane server ([`LaneServer`], `serve.cpu_lanes`) all run on;
 //!   devices only supply a [`resource::ServiceModel`].
+//! - [`pagecache`] — the out-of-core page tier ([`PagedLayout`] +
+//!   [`PageCache`], `cache.out_of_core`): cold PQ/IVF `list_codes` split
+//!   into fixed-size SSD-resident pages behind a deterministic CLOCK
+//!   cache with hot-list pinning; the scheduler batches each task's
+//!   misses into one page-in burst on the shard's [`SsdQueue`], so cache
+//!   misses surface as simulated SSD queue time. A warm cache (frames 0
+//!   or covering every page) never misses — bit-identical to the
+//!   in-memory engine by construction.
 //! - [`fault`] — seeded deterministic fault injection ([`FaultPlan`]):
 //!   far-memory read failures and tail spikes, SSD read errors, and
 //!   whole-shard outage windows, each drawn by a stateless hash of
@@ -47,6 +55,7 @@ pub mod cxl;
 pub mod device;
 pub mod dram;
 pub mod fault;
+pub mod pagecache;
 pub mod resource;
 pub mod ssd;
 pub mod timeline;
@@ -55,6 +64,7 @@ pub use cxl::{CxlLink, LinkAccess};
 pub use device::FarMemoryDevice;
 pub use dram::{DramAccess, DramSim};
 pub use fault::{DegradeLevel, FaultPlan};
+pub use pagecache::{CachePlan, PageCache, PagedLayout};
 pub use resource::{Grant, LaneServer, ResourceServer, ServiceModel};
 pub use ssd::{SsdGrant, SsdQueue, SsdSim};
 pub use timeline::{FarStream, SharedTimeline, StreamTiming, TimelineSched};

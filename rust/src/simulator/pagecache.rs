@@ -1,0 +1,353 @@
+//! Out-of-core page cache for the cold query-path structures.
+//!
+//! The AiSAQ direction (PAPERS.md): PQ codes and IVF `list_codes` do not
+//! have to be memory-resident — split them into fixed-size pages that
+//! live on the simulated SSD and fault them in on demand through an
+//! explicit cache. Two pieces live here:
+//!
+//! - [`PagedLayout`] — the static page map of one shard's cold
+//!   structures: per-IVF-list page spans (every list starts on a fresh
+//!   page so a probe touches exactly its own span; the flat index is one
+//!   span covering the whole scan region), plus the deterministic
+//!   **hot-list pinning** set (largest lists first, ties by list index,
+//!   whole lists only, up to `cache.pin_pages`).
+//! - [`PageCache`] — the runtime cache the serving timeline drives: a
+//!   deterministic CLOCK (second-chance) replacement policy over
+//!   `cache.pages` frames, with pinned pages always resident outside the
+//!   frame budget. `access()` answers hit/miss and evolves the clock
+//!   hand; the *timing* of a miss is not modeled here — the scheduler
+//!   ([`crate::coordinator::pipelined`]) batches a task's misses into one
+//!   page-in burst on the shard's shared [`crate::simulator::SsdQueue`]
+//!   (itself a client of the generic
+//!   [`crate::simulator::resource::ResourceServer`]), so cache misses
+//!   show up as simulated SSD queue time, not magic.
+//!
+//! Determinism: the cache is a pure function of its access sequence. The
+//! scheduler replays each task's page list at the task's *admission*
+//! instant, and admissions are totally ordered by the simulated clock —
+//! so hit/miss/eviction sequences are bit-identical across worker counts
+//! and hosts. A **warm** cache (`frames == 0`, or frames + pins covering
+//! every page) holds everything resident: zero misses, zero SSD
+//! admissions, and therefore a serving timeline bit-identical to the
+//! in-memory engine by construction — the contract the out-of-core
+//! integration tests pin.
+
+use crate::metrics::CacheStats;
+use std::collections::{HashMap, HashSet};
+
+/// Static page map of one shard's cold structures (PQ codes flattened
+/// into IVF `list_codes` order, or the flat index's scan region).
+#[derive(Clone, Debug)]
+pub struct PagedLayout {
+    /// Page size in bytes.
+    pub page_bytes: usize,
+    /// Total pages across every span.
+    pub total_pages: usize,
+    /// `(first page, page count)` per IVF list; a single span for the
+    /// flat index.
+    spans: Vec<(u64, u32)>,
+    /// Pages pinned resident (sorted ascending).
+    pub pinned: Vec<u64>,
+    /// Bytes of cold structure this layout pages out of fast memory.
+    pub cold_bytes: u64,
+}
+
+impl PagedLayout {
+    /// Page map for per-list cold data (IVF `list_codes`): every list
+    /// starts on a fresh page, so probing a list touches exactly its own
+    /// span. Pinning is hot-list greedy: largest span first (ties by list
+    /// index), whole lists only, until `pin_pages` is spent.
+    pub fn from_lists(list_bytes: &[usize], page_bytes: usize, pin_pages: usize) -> Self {
+        assert!(page_bytes > 0, "page_bytes must be positive");
+        let mut spans = Vec::with_capacity(list_bytes.len());
+        let mut next = 0u64;
+        let mut cold = 0u64;
+        for &b in list_bytes {
+            let pages = b.div_ceil(page_bytes) as u32;
+            spans.push((next, pages));
+            next += pages as u64;
+            cold += b as u64;
+        }
+        let mut order: Vec<usize> = (0..spans.len()).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(spans[i].1), i));
+        let mut pinned = Vec::new();
+        for i in order {
+            let (start, pages) = spans[i];
+            if pages == 0 || pinned.len() + pages as usize > pin_pages {
+                continue;
+            }
+            pinned.extend((0..pages as u64).map(|p| start + p));
+        }
+        pinned.sort_unstable();
+        PagedLayout {
+            page_bytes,
+            total_pages: next as usize,
+            spans,
+            pinned,
+            cold_bytes: cold,
+        }
+    }
+
+    /// Page map for one contiguous cold region (the flat index's scan
+    /// data): a single span; pinning keeps a prefix of `pin_pages` pages
+    /// resident.
+    pub fn from_region(total_bytes: usize, page_bytes: usize, pin_pages: usize) -> Self {
+        let mut l = Self::from_lists(&[total_bytes], page_bytes, 0);
+        l.pinned = (0..l.total_pages.min(pin_pages) as u64).collect();
+        l
+    }
+
+    /// Number of spans (IVF lists; 1 for a region layout).
+    pub fn num_spans(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Append span `i`'s pages to `out` in address order.
+    pub fn span_pages(&self, i: usize, out: &mut Vec<u64>) {
+        let (start, pages) = self.spans[i];
+        out.extend((0..pages as u64).map(|p| start + p));
+    }
+
+    /// Append every page to `out` in address order.
+    pub fn all_pages(&self, out: &mut Vec<u64>) {
+        for i in 0..self.spans.len() {
+            self.span_pages(i, out);
+        }
+    }
+
+    /// The runtime cache plan for this layout with `frames` cache frames
+    /// (0 = warm: everything resident).
+    pub fn plan(&self, frames: usize) -> CachePlan {
+        CachePlan {
+            page_bytes: self.page_bytes,
+            frames,
+            total_pages: self.total_pages,
+            pinned: self.pinned.clone(),
+        }
+    }
+}
+
+/// Everything the serving timeline needs to instantiate one shard's
+/// [`PageCache`]: sizes plus the pinned set, no references into the
+/// built system.
+#[derive(Clone, Debug, Default)]
+pub struct CachePlan {
+    pub page_bytes: usize,
+    /// Cache frames for unpinned pages (0 = warm/unbounded).
+    pub frames: usize,
+    pub total_pages: usize,
+    /// Pages resident outside the frame budget, never evicted.
+    pub pinned: Vec<u64>,
+}
+
+impl CachePlan {
+    /// Whether this plan pages anything at all.
+    pub fn enabled(&self) -> bool {
+        self.total_pages > 0
+    }
+
+    /// Warm cache: every page fits resident, so the timeline can never
+    /// miss — the bit-identity-to-in-memory configuration.
+    pub fn warm(&self) -> bool {
+        self.frames == 0 || self.frames + self.pinned.len() >= self.total_pages
+    }
+
+    /// Fast-memory footprint of the cache (frames + pins), bytes.
+    pub fn resident_bytes(&self) -> u64 {
+        let pages = if self.warm() {
+            self.total_pages
+        } else {
+            self.frames + self.pinned.len()
+        };
+        pages as u64 * self.page_bytes as u64
+    }
+}
+
+/// Deterministic CLOCK (second-chance) page cache.
+pub struct PageCache {
+    page_bytes: usize,
+    frames: usize,
+    warm: bool,
+    pinned: HashSet<u64>,
+    /// Resident page per frame slot (grows up to `frames`).
+    slots: Vec<u64>,
+    /// Second-chance bit per frame slot.
+    referenced: Vec<bool>,
+    /// page -> frame slot.
+    map: HashMap<u64, usize>,
+    hand: usize,
+    pub stats: CacheStats,
+}
+
+impl PageCache {
+    pub fn new(plan: &CachePlan) -> Self {
+        PageCache {
+            page_bytes: plan.page_bytes,
+            frames: plan.frames,
+            warm: plan.warm(),
+            pinned: plan.pinned.iter().copied().collect(),
+            slots: Vec::new(),
+            referenced: Vec::new(),
+            map: HashMap::new(),
+            hand: 0,
+            stats: CacheStats {
+                active: plan.enabled(),
+                frames: plan.frames,
+                total_pages: plan.total_pages,
+                pinned: plan.pinned.len(),
+                ..Default::default()
+            },
+        }
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.page_bytes
+    }
+
+    /// Touch `page`; returns `true` on a hit (resident), `false` on a
+    /// miss. A miss installs the page, evicting the CLOCK victim when the
+    /// frame budget is full. Pure function of the access sequence.
+    pub fn access(&mut self, page: u64) -> bool {
+        self.stats.accesses += 1;
+        if self.warm || self.pinned.contains(&page) {
+            self.stats.hits += 1;
+            return true;
+        }
+        if let Some(&slot) = self.map.get(&page) {
+            self.referenced[slot] = true;
+            self.stats.hits += 1;
+            return true;
+        }
+        self.stats.misses += 1;
+        if self.slots.len() < self.frames {
+            let slot = self.slots.len();
+            self.slots.push(page);
+            self.referenced.push(false);
+            self.map.insert(page, slot);
+        } else {
+            // Second-chance scan: clear referenced bits until an
+            // unreferenced victim comes under the hand.
+            loop {
+                let h = self.hand;
+                self.hand = (self.hand + 1) % self.frames;
+                if self.referenced[h] {
+                    self.referenced[h] = false;
+                } else {
+                    self.map.remove(&self.slots[h]);
+                    self.stats.evictions += 1;
+                    self.slots[h] = page;
+                    self.map.insert(page, h);
+                    break;
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_spans_are_page_aligned_and_disjoint() {
+        let l = PagedLayout::from_lists(&[100, 5000, 0, 4096], 4096, 0);
+        assert_eq!(l.total_pages, 1 + 2 + 0 + 1);
+        let mut a = Vec::new();
+        l.span_pages(0, &mut a);
+        assert_eq!(a, vec![0]);
+        a.clear();
+        l.span_pages(1, &mut a);
+        assert_eq!(a, vec![1, 2]);
+        a.clear();
+        l.span_pages(2, &mut a);
+        assert!(a.is_empty());
+        l.span_pages(3, &mut a);
+        assert_eq!(a, vec![3]);
+        assert_eq!(l.cold_bytes, 100 + 5000 + 4096);
+    }
+
+    #[test]
+    fn pinning_is_largest_lists_first_and_deterministic() {
+        // Lists of 3, 1, 3, 2 pages; budget 5 -> pin list 0 (3 pages),
+        // then list 2 is skipped (3 > 2 left), then list 3 (2 pages).
+        let l = PagedLayout::from_lists(&[3 * 64, 64, 3 * 64, 2 * 64], 64, 5);
+        assert_eq!(l.pinned, vec![0, 1, 2, 7, 8]);
+        let l2 = PagedLayout::from_lists(&[3 * 64, 64, 3 * 64, 2 * 64], 64, 5);
+        assert_eq!(l.pinned, l2.pinned);
+        // Region layout pins a prefix.
+        let r = PagedLayout::from_region(10 * 64, 64, 3);
+        assert_eq!(r.pinned, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn warm_cache_never_misses() {
+        let l = PagedLayout::from_lists(&[4096; 8], 4096, 0);
+        for frames in [0usize, 8, 100] {
+            let mut c = PageCache::new(&l.plan(frames));
+            for round in 0..3 {
+                for p in 0..8u64 {
+                    assert!(c.access(p), "frames {frames} round {round} page {p}");
+                }
+            }
+            assert_eq!(c.stats.misses, 0);
+            assert_eq!(c.stats.evictions, 0);
+            assert_eq!(c.stats.hit_rate(), 1.0);
+        }
+    }
+
+    #[test]
+    fn clock_evicts_unreferenced_first_and_is_deterministic() {
+        let l = PagedLayout::from_lists(&[4096; 16], 4096, 0);
+        let run = || {
+            let mut c = PageCache::new(&l.plan(2));
+            let mut log = Vec::new();
+            for &p in &[0u64, 1, 0, 2, 0, 3, 0, 1, 2, 3] {
+                log.push(c.access(p));
+            }
+            (log, c.stats)
+        };
+        let (log, stats) = run();
+        // 0 miss, 1 miss, 0 hit (sets ref), 2 miss (evicts 1: slot 0 has
+        // ref from the 0-hit, second chance passes to slot 1), 0 hit, ...
+        assert!(!log[0] && !log[1] && log[2]);
+        assert!(!log[3], "capacity miss must install by eviction");
+        assert!(log[4], "referenced page 0 must survive the 2-insert");
+        assert_eq!(stats.accesses, 10);
+        assert_eq!(stats.hits + stats.misses, 10);
+        assert!(stats.evictions > 0);
+        let (log2, stats2) = run();
+        assert_eq!(log, log2, "cache must be a pure function of its accesses");
+        assert_eq!(stats, stats2);
+    }
+
+    #[test]
+    fn pinned_pages_never_evict_and_bypass_frames() {
+        let mut l = PagedLayout::from_lists(&[4096; 8], 4096, 0);
+        l.pinned = vec![0, 1];
+        let mut c = PageCache::new(&l.plan(1));
+        // Pins hit without touching the single frame.
+        assert!(c.access(0) && c.access(1));
+        assert!(!c.access(5));
+        assert!(c.access(5), "frame-resident page must hit");
+        assert!(!c.access(6), "second cold page evicts the first");
+        assert!(c.access(0) && c.access(1), "pins stay resident throughout");
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn plan_warm_and_resident_bytes() {
+        let l = PagedLayout::from_lists(&[4096; 10], 4096, 2);
+        assert_eq!(l.pinned.len(), 2);
+        let p = l.plan(0);
+        assert!(p.warm() && p.enabled());
+        assert_eq!(p.resident_bytes(), 10 * 4096);
+        let p = l.plan(8);
+        assert!(p.warm(), "frames + pins covering everything is warm");
+        let p = l.plan(4);
+        assert!(!p.warm());
+        assert_eq!(p.resident_bytes(), 6 * 4096);
+        let empty = CachePlan::default();
+        assert!(!empty.enabled());
+    }
+}

@@ -134,6 +134,49 @@ impl TieredMemory {
         Ok(&self.regions[name])
     }
 
+    /// Release a named region: its bytes return to the tier's `used`
+    /// budget, and when the region is the tier's most recent (top-of-bump)
+    /// allocation its address range is reclaimed for reuse — so a cache
+    /// that registers and releases in stack order leaks no address space.
+    /// Returns the released region.
+    pub fn release(&mut self, name: &str) -> Result<Region> {
+        let region = match self.regions.remove(name) {
+            Some(r) => r,
+            None => bail!("release of unknown region `{name}`"),
+        };
+        *self.used.get_mut(&region.tier).unwrap() -= region.bytes;
+        let nb = self.next_base.get_mut(&region.tier).unwrap();
+        if *nb == region.base + region.bytes {
+            *nb = region.base;
+        }
+        Ok(region)
+    }
+
+    /// Move a region to another tier, preserving its name. The target tier
+    /// is capacity-checked *before* the source side is touched, so a
+    /// failed migration leaves the placement unchanged.
+    pub fn migrate(&mut self, name: &str, to: Tier) -> Result<&Region> {
+        let (bytes, from) = match self.regions.get(name) {
+            Some(r) => (r.bytes, r.tier),
+            None => bail!("migrate of unknown region `{name}`"),
+        };
+        if from == to {
+            return Ok(&self.regions[name]);
+        }
+        let cap = self.capacity(to);
+        if cap > 0 && self.used[&to] + bytes > cap {
+            bail!(
+                "tier {} over capacity: {} + {} > {}",
+                to.name(),
+                self.used[&to],
+                bytes,
+                cap
+            );
+        }
+        self.release(name)?;
+        self.place(name, to, bytes)
+    }
+
     pub fn region(&self, name: &str) -> Option<&Region> {
         self.regions.get(name)
     }
@@ -212,6 +255,63 @@ mod tests {
         tm.place("vectors", Tier::Storage, 1 << 40).unwrap(); // unlimited
         assert_eq!(tm.used(Tier::Fast), 800);
         assert!(tm.place("codes", Tier::Far, 1).is_err()); // duplicate
+    }
+
+    #[test]
+    fn release_returns_capacity_and_reclaims_top_of_bump() {
+        let mut tm = TieredMemory::new(
+            &SimConfig::default(),
+            TierCapacities { fast: 1000, far: 0, storage: 0 },
+        );
+        // Fill the tier, release, and refill across several cycles: `used`
+        // must return to zero each time and the top-of-bump address range
+        // must be reclaimed (a leaking release would exhaust the bump
+        // space even though `used` says the tier is empty).
+        for cycle in 0..4 {
+            let a = tm.place("a", Tier::Fast, 600).unwrap().base;
+            let b = tm.place("b", Tier::Fast, 400).unwrap().base;
+            assert_eq!(tm.used(Tier::Fast), 1000);
+            assert!(tm.place("c", Tier::Fast, 1).is_err(), "cycle {cycle}: full");
+            // Stack-order release reclaims both address ranges.
+            assert_eq!(tm.release("b").unwrap().base, b);
+            assert_eq!(tm.release("a").unwrap().base, a);
+            assert_eq!(tm.used(Tier::Fast), 0);
+            assert_eq!(a, 0, "cycle {cycle}: bump space must be reclaimed");
+        }
+        // Out-of-order release still refunds `used` (address space of the
+        // hole is not reclaimed — bump allocation — but capacity is).
+        tm.place("x", Tier::Fast, 500).unwrap();
+        tm.place("y", Tier::Fast, 500).unwrap();
+        tm.release("x").unwrap();
+        assert_eq!(tm.used(Tier::Fast), 500);
+        assert!(tm.release("x").is_err(), "double release must fail");
+        assert!(tm.release("nosuch").is_err());
+        // Reads against a released region must fail.
+        assert!(tm.read("x", 0, 1, false).is_err());
+    }
+
+    #[test]
+    fn migrate_moves_between_tiers_and_checks_target_capacity() {
+        let mut tm = TieredMemory::new(
+            &SimConfig::default(),
+            TierCapacities { fast: 1000, far: 700, storage: 0 },
+        );
+        tm.place("codes", Tier::Fast, 600).unwrap();
+        let r = tm.migrate("codes", Tier::Far).unwrap();
+        assert_eq!(r.tier, Tier::Far);
+        assert_eq!(tm.used(Tier::Fast), 0);
+        assert_eq!(tm.used(Tier::Far), 600);
+        // Same-tier migrate is a no-op.
+        tm.migrate("codes", Tier::Far).unwrap();
+        assert_eq!(tm.used(Tier::Far), 600);
+        // Over-capacity target: the migration fails and the placement is
+        // untouched (capacity checked before release).
+        tm.place("big", Tier::Fast, 900).unwrap();
+        assert!(tm.migrate("big", Tier::Far).is_err());
+        assert_eq!(tm.region("big").unwrap().tier, Tier::Fast);
+        assert_eq!(tm.used(Tier::Fast), 900);
+        assert_eq!(tm.used(Tier::Far), 600);
+        assert!(tm.migrate("nosuch", Tier::Far).is_err());
     }
 
     #[test]

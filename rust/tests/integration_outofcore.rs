@@ -1,0 +1,416 @@
+//! Out-of-core paged corpus tier — end-to-end invariants.
+//!
+//! - **warm-cache bit-identity**: with the page tier attached but the
+//!   cache warm (`cache.pages = 0`), the serving timeline, top-k,
+//!   device accounting and makespan are bit-identical to the same
+//!   build served fully in memory, across flat/IVF front stages ×
+//!   every refine mode × pipeline depths. (One build serves both sides:
+//!   PQ training
+//!   is not bit-reproducible across builds — parallel k-means merges
+//!   partial sums in completion order — and the contract is about
+//!   serving, not training.)
+//! - **cold-cache accounting**: a frame budget smaller than the working
+//!   set pages in over the shard's shared SSD queue — misses and
+//!   evictions show up in the cache columns, page-in *queue* time
+//!   appears only when tasks overlap (depth > 1), the makespan grows,
+//!   and the top-k never changes (paging is a timing concern only).
+//! - **worker-count determinism**: cache counters, page-in queueing and
+//!   the full timeline are identical across 1 vs 4 pool workers.
+//! - **load monotonicity**: mean page-in queue time never decreases as
+//!   the offered arrival rate grows, and the closed batch bounds every
+//!   open-loop rate from above.
+//! - **sharded serving**: per-shard caches and SSD queues keep the same
+//!   warm/cold contracts over a scatter/gather engine.
+//! - **per-tenant arrival traces**: a `trace=bursty` tenant replays
+//!   exactly the generated trace while untraced tenants ride the
+//!   global arrival process, deterministically across worker counts.
+//! - **10M-vector scale** (`#[ignore]`d): the streaming build holds no
+//!   reconstruction matrix and the cold tier serves from a cache
+//!   budgeted at ≤ 25% of the paged bytes.
+
+use fatrq::bench_support::gen_arrival_trace;
+use fatrq::config::{
+    DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode, SystemConfig,
+    TenantSpec,
+};
+use fatrq::coordinator::{
+    build_system_with, BuiltSystem, QueryEngine, QueryOutcome, QueryParams, ServeReport,
+    ServeTiming, ShardedEngine,
+};
+use fatrq::vecstore::synthesize;
+use std::sync::Arc;
+
+fn base_cfg(kind: IndexKind) -> SystemConfig {
+    let mut cfg = SystemConfig {
+        dataset: DatasetConfig {
+            dim: 32,
+            count: 1600,
+            clusters: 12,
+            noise: 0.3,
+            query_noise: 0.8,
+            queries: 10,
+            seed: 29,
+        },
+        quant: QuantConfig { pq_m: 8, pq_nbits: 5, kmeans_iters: 6, train_sample: 1200 },
+        index: IndexConfig { kind, nlist: 16, nprobe: 16, ..Default::default() },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 120,
+            k: 10,
+            filter_ratio: 0.3,
+            calib_sample: 0.02,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.sim.shared_timeline = true;
+    cfg
+}
+
+fn oc_cfg(kind: IndexKind) -> SystemConfig {
+    let mut cfg = base_cfg(kind);
+    cfg.cache.out_of_core = true;
+    cfg.cache.page_kb = 4;
+    cfg.cache.pages = 0; // warm: everything resident
+    cfg.cache.pin_pages = 2;
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// One serving pass through the pipelined engine, returning ownership of
+/// the system so tests can flip its page tier / cache budget between
+/// runs (the whole point: compare configurations over ONE build).
+fn serve_once(
+    sys: BuiltSystem,
+    mode: RefineMode,
+    workers: usize,
+    depth: usize,
+    qps: f64,
+) -> (Vec<QueryOutcome>, ServeReport, BuiltSystem) {
+    let queries = sys.dataset.queries.clone();
+    let params = QueryParams::from_config(&sys.cfg).with_mode(mode);
+    let sys = Arc::new(sys);
+    let (outs, rep) = {
+        let engine = QueryEngine::with_threads(Arc::clone(&sys), workers);
+        let profile = engine.profile_with(&params, &queries);
+        profile.schedule(depth, qps)
+    };
+    let sys = Arc::try_unwrap(sys).ok().expect("engine dropped: sole owner");
+    (outs, rep, sys)
+}
+
+fn assert_timings_bit_equal(a: &[ServeTiming], b: &[ServeTiming], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: timeline length");
+    for (q, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.arrival_ns.to_bits(), y.arrival_ns.to_bits(), "{ctx}: q{q} arrival");
+        assert_eq!(x.admit_ns.to_bits(), y.admit_ns.to_bits(), "{ctx}: q{q} admit");
+        assert_eq!(x.done_ns.to_bits(), y.done_ns.to_bits(), "{ctx}: q{q} done");
+        assert_eq!(x.service_ns.to_bits(), y.service_ns.to_bits(), "{ctx}: q{q} service");
+    }
+}
+
+fn assert_outcomes_bit_equal(a: &[QueryOutcome], b: &[QueryOutcome], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: outcome count");
+    for (q, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.topk, y.topk, "{ctx}: q{q} top-k diverged");
+        assert_eq!(x.breakdown.far_reads, y.breakdown.far_reads, "{ctx}: q{q} far reads");
+        assert_eq!(x.breakdown.ssd_reads, y.breakdown.ssd_reads, "{ctx}: q{q} ssd reads");
+        assert_eq!(x.breakdown.far_ns.to_bits(), y.breakdown.far_ns.to_bits(), "{ctx}: q{q} far ns");
+        assert_eq!(x.breakdown.ssd_ns.to_bits(), y.breakdown.ssd_ns.to_bits(), "{ctx}: q{q} ssd ns");
+        assert_eq!(
+            x.breakdown.queue_ns.to_bits(),
+            y.breakdown.queue_ns.to_bits(),
+            "{ctx}: q{q} queue ns"
+        );
+    }
+}
+
+#[test]
+fn warm_cache_bit_identical_to_in_memory() {
+    const MODES: [RefineMode; 3] = [RefineMode::Baseline, RefineMode::FatrqSw, RefineMode::FatrqHw];
+    const DEPTHS: [usize; 3] = [1, 4, 16];
+    for kind in [IndexKind::Flat, IndexKind::Ivf] {
+        let cfg = oc_cfg(kind);
+        let dataset = synthesize(&cfg.dataset);
+        let mut sys = build_system_with(&cfg, dataset).unwrap();
+        let paged = sys.paged.take().expect("out-of-core build pages the cold tier");
+
+        // In-memory reference: same build, page tier detached.
+        let mut refs = Vec::new();
+        for mode in MODES {
+            for depth in DEPTHS {
+                let (outs, rep, s) = serve_once(sys, mode, 2, depth, 0.0);
+                sys = s;
+                assert!(!rep.cache.active, "{}: no page tier, no cache columns", kind.name());
+                assert_eq!(rep.cache.accesses, 0);
+                refs.push((outs, rep));
+            }
+        }
+
+        // Warm out-of-core: the replay runs, never misses, changes nothing
+        // — for every refine mode at every depth.
+        sys.paged = Some(paged);
+        let mut refs = refs.iter();
+        for mode in MODES {
+            for depth in DEPTHS {
+                let ctx = format!("{}/{mode:?}/depth {depth}", kind.name());
+                let (outs, rep, s) = serve_once(sys, mode, 2, depth, 0.0);
+                sys = s;
+                let (ref_outs, ref_rep) = refs.next().unwrap();
+                assert_outcomes_bit_equal(&outs, ref_outs, &ctx);
+                assert_timings_bit_equal(&rep.timings, &ref_rep.timings, &ctx);
+                assert_eq!(
+                    rep.makespan_ns.to_bits(),
+                    ref_rep.makespan_ns.to_bits(),
+                    "{ctx}: makespan"
+                );
+                assert!(rep.cache.active, "{ctx}: warm cache still reports its columns");
+                assert!(rep.cache.accesses > 0, "{ctx}: the page replay must run");
+                assert_eq!(rep.cache.misses, 0, "{ctx}: warm cache can never miss");
+                assert_eq!(rep.cache.evictions, 0, "{ctx}: warm cache never evicts");
+                assert_eq!(rep.cache.hits, rep.cache.accesses);
+                assert_eq!(rep.cache.hit_rate(), 1.0);
+                assert_eq!(rep.mean_pagein_queue_ns, 0.0, "{ctx}: no misses, no page-in traffic");
+            }
+        }
+    }
+}
+
+#[test]
+fn cold_cache_misses_queue_on_the_shared_ssd() {
+    let cfg = oc_cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let mut sys = build_system_with(&cfg, dataset).unwrap();
+    let paged_pages = sys.paged.as_ref().unwrap().total_pages;
+    let paged_pinned = sys.paged.as_ref().unwrap().pinned.len();
+
+    // Warm reference over the same build.
+    let (warm_outs, warm_rep, s) = serve_once(sys, RefineMode::FatrqHw, 2, 8, 0.0);
+    sys = s;
+
+    // Frame budget far below the per-query working set (nprobe covers
+    // every list, one page per list).
+    sys.cfg.cache.pages = 4;
+    assert!(4 + paged_pinned < paged_pages, "budget must be cold for this test");
+
+    // Depth 1: one task in flight ⇒ page-ins land on an idle SSD — cold
+    // misses cost service time but never queue time.
+    let (solo_outs, solo_rep, s) = serve_once(sys, RefineMode::FatrqHw, 2, 1, 0.0);
+    sys = s;
+    for (q, (c, w)) in solo_outs.iter().zip(&warm_outs).enumerate() {
+        assert_eq!(c.topk, w.topk, "q{q}: paging must never change results");
+    }
+    assert!(solo_rep.cache.misses > 0, "cold cache must miss");
+    assert_eq!(solo_rep.mean_pagein_queue_ns, 0.0, "depth 1: idle SSD, zero page-in queueing");
+    assert!(
+        solo_rep.makespan_ns > warm_rep.makespan_ns,
+        "page-in service must stretch the cold makespan ({} vs warm {})",
+        solo_rep.makespan_ns,
+        warm_rep.makespan_ns
+    );
+
+    // Depth 8: overlapping tasks contend for the shard's SSD queue — the
+    // misses now also show up as page-in queue time.
+    let (cold_outs, cold_rep, _sys) = serve_once(sys, RefineMode::FatrqHw, 2, 8, 0.0);
+    for (q, (c, w)) in cold_outs.iter().zip(&warm_outs).enumerate() {
+        assert_eq!(c.topk, w.topk, "q{q}: paging must never change results");
+    }
+    let c = &cold_rep.cache;
+    assert!(c.active);
+    assert_eq!(c.frames, 4);
+    assert_eq!(c.total_pages, paged_pages);
+    assert_eq!(c.pinned, paged_pinned);
+    assert!(c.misses > 0 && c.evictions > 0, "thrashing budget: {c:?}");
+    assert!(c.hit_rate() < 1.0, "cold cache cannot be all hits: {c:?}");
+    assert_eq!(c.hits + c.misses, c.accesses);
+    assert!(
+        cold_rep.mean_pagein_queue_ns > 0.0,
+        "overlapping page-in bursts must queue on the shared SSD"
+    );
+    assert!(cold_rep.makespan_ns >= warm_rep.makespan_ns, "paging only adds time");
+}
+
+#[test]
+fn paging_deterministic_across_worker_counts() {
+    let cfg = oc_cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let mut sys = build_system_with(&cfg, dataset).unwrap();
+    sys.cfg.cache.pages = 4; // cold: the interesting regime
+    let sys = Arc::new(sys);
+    let params = QueryParams::from_config(&sys.cfg);
+    let run = |workers: usize| {
+        let engine = QueryEngine::with_threads(Arc::clone(&sys), workers);
+        let profile = engine.profile_with(&params, &sys.dataset.queries);
+        profile.schedule(8, 15_000.0)
+    };
+    let (a_outs, a_rep) = run(1);
+    let (b_outs, b_rep) = run(4);
+    assert_outcomes_bit_equal(&a_outs, &b_outs, "1 vs 4 workers");
+    assert_timings_bit_equal(&a_rep.timings, &b_rep.timings, "1 vs 4 workers");
+    assert_eq!(a_rep.cache, b_rep.cache, "cache counters are part of the deterministic timeline");
+    assert_eq!(a_rep.mean_pagein_queue_ns.to_bits(), b_rep.mean_pagein_queue_ns.to_bits());
+    assert_eq!(a_rep.makespan_ns.to_bits(), b_rep.makespan_ns.to_bits());
+}
+
+#[test]
+fn pagein_queue_time_monotone_in_offered_load() {
+    // Lindley-style monotonicity observed end to end: admission order is
+    // arrival order for a single tenant, so the miss pattern is
+    // load-invariant — compressing the uniform arrival process only
+    // increases overlap, and page-in queue time can only grow. The closed
+    // batch (everything arrives at t = 0) is the densest arrival pattern
+    // and upper-bounds every open-loop rate.
+    let cfg = oc_cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let mut sys = build_system_with(&cfg, dataset).unwrap();
+    sys.cfg.cache.pages = 4; // cold budget, fixed across the sweep
+    let sys = Arc::new(sys);
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let profile = engine.profile_with(engine.params(), &sys.dataset.queries);
+
+    // Saturation rate from the fully serialized schedule.
+    let (_, solo) = profile.schedule(1, 0.0);
+    assert!(solo.cache.misses > 0, "the budget must be cold for this sweep");
+    let sat_qps = sys.dataset.num_queries() as f64 * 1e9 / solo.makespan_ns;
+
+    let mut prev = 0.0f64;
+    for load in [0.25, 1.0, 4.0] {
+        let (_, rep) = profile.schedule(8, sat_qps * load);
+        assert!(
+            rep.mean_pagein_queue_ns >= prev,
+            "page-in queue time must be monotone in offered load: {} at {load}x sat < {prev}",
+            rep.mean_pagein_queue_ns
+        );
+        prev = rep.mean_pagein_queue_ns;
+    }
+    let (_, closed) = profile.schedule(8, 0.0);
+    assert!(closed.mean_pagein_queue_ns >= prev, "closed batch is the densest arrival pattern");
+    assert!(closed.mean_pagein_queue_ns > 0.0, "depth 8 over 4 frames must queue page-ins");
+}
+
+#[test]
+fn sharded_out_of_core_warm_vs_cold() {
+    let cfg = oc_cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    // One shard build, swept over cache budgets (shard builds are not
+    // bit-reproducible, so the warm/cold comparison shares the build).
+    let mut engine = ShardedEngine::from_dataset_with_threads(&cfg, &dataset, 2, 2).unwrap();
+    engine.set_pipeline_depth(8);
+
+    let (warm_outs, warm_rep) = engine.run_serve(engine.params(), &dataset.queries);
+    assert!(warm_rep.cache.active, "per-shard page tiers must report cache columns");
+    assert_eq!(warm_rep.cache.misses, 0, "pages=0 is warm on every shard");
+    assert_eq!(warm_rep.mean_pagein_queue_ns, 0.0);
+
+    engine.set_cache_pages(3);
+    let (cold_outs, cold_rep) = engine.run_serve(engine.params(), &dataset.queries);
+    for (q, (c, w)) in cold_outs.iter().zip(&warm_outs).enumerate() {
+        assert_eq!(c.topk, w.topk, "q{q}: shard paging must never change merged results");
+    }
+    assert!(cold_rep.cache.misses > 0, "3 frames per shard must thrash");
+    assert!(cold_rep.cache.hit_rate() < 1.0);
+    assert!(
+        cold_rep.mean_pagein_queue_ns > 0.0,
+        "overlapping (query, shard) page-ins must queue per shard"
+    );
+    assert!(cold_rep.makespan_ns > warm_rep.makespan_ns, "cold shards pay page-in time");
+}
+
+#[test]
+fn traced_tenant_replays_its_own_arrival_trace() {
+    let mut cfg = base_cfg(IndexKind::Ivf);
+    cfg.sim.arrival_qps = 20_000.0;
+    cfg.serve.tenants = vec![
+        TenantSpec { name: "burst".into(), weight: 1.0, quota: 0, trace: Some("bursty".into()) },
+        TenantSpec { name: "steady".into(), weight: 1.0, quota: 0, trace: None },
+    ];
+    cfg.validate().unwrap();
+    let dataset = synthesize(&cfg.dataset);
+    let nq = dataset.num_queries();
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let tenant_of: Vec<usize> = (0..nq).map(|q| q % 2).collect();
+
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let (_outs, rep) = engine.run_serve_tagged(engine.params(), &dataset.queries, &tenant_of);
+
+    // Tenant 0 replays the generated bursty trace exactly (seeded off the
+    // dataset seed + tenant index, at the global mean rate).
+    let tr = gen_arrival_trace("bursty", nq, cfg.sim.arrival_qps, cfg.dataset.seed.wrapping_add(1))
+        .unwrap();
+    for (j, q) in (0..nq).step_by(2).enumerate() {
+        assert_eq!(
+            rep.timings[q].arrival_ns.to_bits(),
+            tr[j].to_bits(),
+            "traced tenant query {q} (its {j}-th) must arrive per its trace"
+        );
+    }
+    // Tenant 1 rides the global uniform process untouched: evenly spaced
+    // at the configured rate.
+    let gap = 1e9 / cfg.sim.arrival_qps;
+    for q in (1..nq).step_by(2) {
+        assert_eq!(
+            rep.timings[q].arrival_ns.to_bits(),
+            (q as f64 * gap).to_bits(),
+            "untraced tenant query {q} must keep its global arrival slot"
+        );
+    }
+
+    // The mixture is deterministic across worker counts.
+    let engine4 = QueryEngine::with_threads(Arc::clone(&sys), 4);
+    let (_outs4, rep4) = engine4.run_serve_tagged(engine4.params(), &dataset.queries, &tenant_of);
+    assert_timings_bit_equal(&rep.timings, &rep4.timings, "traced tenants, 2 vs 4 workers");
+}
+
+/// 10M-vector out-of-core build + serve. Ignored by default: synthesis,
+/// PQ/IVF training and the streamed TRQ build take minutes of wall clock
+/// and ~1.5 GB of RAM. Run with `cargo test --release -- --ignored`.
+#[test]
+#[ignore = "10M-vector build: minutes of wall clock; run with --ignored"]
+fn ten_million_vectors_serve_from_a_bounded_cache() {
+    let mut cfg = oc_cfg(IndexKind::Ivf);
+    cfg.dataset = DatasetConfig {
+        dim: 16,
+        count: 10_000_000,
+        clusters: 64,
+        noise: 0.3,
+        query_noise: 0.8,
+        queries: 4,
+        seed: 41,
+    };
+    cfg.quant = QuantConfig { pq_m: 8, pq_nbits: 4, kmeans_iters: 3, train_sample: 50_000 };
+    cfg.index = IndexConfig { kind: IndexKind::Ivf, nlist: 64, nprobe: 4, ..Default::default() };
+    cfg.refine.candidates = 64;
+    cfg.refine.calib_sample = 0.0001;
+    cfg.cache.page_kb = 64;
+    cfg.cache.pin_pages = 64;
+    cfg.validate().unwrap();
+
+    let dataset = synthesize(&cfg.dataset);
+    let mut sys = build_system_with(&cfg, dataset).unwrap();
+    assert!(sys.recon.is_empty(), "streaming build must not materialize the recon matrix");
+    let (total_pages, cold_bytes) = {
+        let paged = sys.paged.as_ref().unwrap();
+        (paged.total_pages, paged.cold_bytes)
+    };
+
+    // Budget the cache at an eighth of the pages — resident footprint
+    // (frames + pins) must stay under a quarter of the paged cold bytes.
+    let frames = (total_pages / 8).max(1);
+    sys.cfg.cache.pages = frames;
+    let plan = sys.paged.as_ref().unwrap().plan(frames);
+    assert!(!plan.warm(), "the 10M-scale cache must actually page");
+    assert!(
+        plan.resident_bytes() <= cold_bytes / 4,
+        "resident {} must be ≤ 25% of cold {}",
+        plan.resident_bytes(),
+        cold_bytes
+    );
+
+    let (outs, rep, _sys) = serve_once(sys, RefineMode::FatrqHw, 4, 8, 0.0);
+    assert_eq!(outs.len(), 4);
+    for (q, o) in outs.iter().enumerate() {
+        assert_eq!(o.topk.len(), cfg.refine.k, "q{q}: full top-k from the cold tier");
+    }
+    assert!(rep.cache.active && rep.cache.misses > 0, "cold start must page in");
+    assert!(rep.makespan_ns > 0.0);
+}

@@ -553,8 +553,8 @@ fn weighted_fair_tenants_isolate_a_flooded_batch_from_a_light_tenant() {
     // so each of its queries wins the next freed slot.
     profile.set_tenants(
         vec![
-            TenantSpec { name: "flood".into(), weight: 1.0, quota: 0 },
-            TenantSpec { name: "latency".into(), weight: 8.0, quota: 0 },
+            TenantSpec { name: "flood".into(), weight: 1.0, quota: 0, trace: None },
+            TenantSpec { name: "latency".into(), weight: 8.0, quota: 0, trace: None },
         ],
         tags,
     );
@@ -605,8 +605,8 @@ fn tenant_quota_caps_inflight_concurrency() {
     // exists so the schedule is genuinely multi-tenant.
     profile.set_tenants(
         vec![
-            TenantSpec { name: "capped".into(), weight: 1.0, quota: 1 },
-            TenantSpec { name: "other".into(), weight: 1.0, quota: 0 },
+            TenantSpec { name: "capped".into(), weight: 1.0, quota: 1, trace: None },
+            TenantSpec { name: "other".into(), weight: 1.0, quota: 0, trace: None },
         ],
         vec![0; nq],
     );
@@ -640,8 +640,8 @@ fn weighted_fair_admission_never_starves_low_weight_tenants() {
     let tags: Vec<usize> = (0..nq).map(|q| q % 2).collect();
     profile.set_tenants(
         vec![
-            TenantSpec { name: "heavy".into(), weight: 8.0, quota: 0 },
-            TenantSpec { name: "low".into(), weight: 1.0, quota: 0 },
+            TenantSpec { name: "heavy".into(), weight: 8.0, quota: 0, trace: None },
+            TenantSpec { name: "low".into(), weight: 1.0, quota: 0, trace: None },
         ],
         tags.clone(),
     );
