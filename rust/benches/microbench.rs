@@ -274,10 +274,25 @@ fn main() {
         (20 / scale).max(1),
         reps,
     );
+    // Encode-side distance helper: `util::l2_sq` delegates into the
+    // dispatched scan-row kernel, so k-means/TRQ-encode/ground-truth
+    // loops ride the same tier — this row pins the delegation's win.
+    let (l2sq_s, l2sq_d) = simd_ab(
+        || {
+            let mut acc = 0.0f32;
+            for r in l2_rows.chunks_exact(dim) {
+                acc += fatrq::util::l2_sq(black_box(&query), r);
+            }
+            black_box(acc);
+        },
+        (20 / scale).max(1),
+        reps,
+    );
     for (name, s, d) in [
         ("adc_scan_topk (500x96 codes)", adc_s, adc_d),
         ("l2_scan_topk (500x768 f32)", l2_s, l2_d),
         ("qdot_packed_tab (512x154 B)", tern_s, tern_d),
+        ("util::l2_sq encode-side (500x768 f32)", l2sq_s, l2sq_d),
     ] {
         let ratio = s / d.max(1e-9);
         println!("| {name} | {s:.0} | {d:.0} | {ratio:.2}x |");

@@ -323,6 +323,10 @@ pub struct FaultConfig {
     /// Probability an SSD survivor-fetch burst fails (retried, then the
     /// task skips SSD verification and serves refined-unverified order).
     pub ssd_fail_rate: f64,
+    /// Probability an accelerator batch launch fails (`accel.rerank =
+    /// batch` only). The whole batch retries *as a batch* up to
+    /// `retry_limit` times, then every member skips verification.
+    pub accel_fail_rate: f64,
     /// Max retries per failed read before degrading (0 = degrade on the
     /// first failure).
     pub retry_limit: u32,
@@ -341,6 +345,7 @@ impl Default for FaultConfig {
             far_spike_rate: 0.0,
             far_spike_us: 50.0,
             ssd_fail_rate: 0.0,
+            accel_fail_rate: 0.0,
             retry_limit: 2,
             retry_backoff_us: 100.0,
             outages: Vec::new(),
@@ -356,6 +361,7 @@ impl FaultConfig {
         self.far_fail_rate > 0.0
             || self.far_spike_rate > 0.0
             || self.ssd_fail_rate > 0.0
+            || self.accel_fail_rate > 0.0
             || !self.outages.is_empty()
     }
 }
@@ -528,6 +534,98 @@ impl TenantSpec {
     }
 }
 
+/// CPU-lane admission policy (`serve.lane_policy`) for same-instant
+/// ready compute stages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum LanePolicy {
+    /// Stages occupy the earliest-free lane in ready order — the
+    /// original lane clock, reproduced bit-for-bit.
+    #[default]
+    Fcfs,
+    /// Shortest-service-first: among stages waiting for a lane, the one
+    /// with the smallest expected duration is admitted when a lane
+    /// frees (FIFO on exact duration ties, so equal-cost workloads
+    /// reproduce the FCFS schedule). Cuts head-of-line blocking at
+    /// small lane counts, where one long SW-refine stage can otherwise
+    /// stall a queue of short merges.
+    Ssf,
+}
+
+impl LanePolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fcfs" => LanePolicy::Fcfs,
+            "ssf" => LanePolicy::Ssf,
+            other => bail!("unknown lane policy `{other}` (fcfs|ssf)"),
+        })
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            LanePolicy::Fcfs => "fcfs",
+            LanePolicy::Ssf => "ssf",
+        }
+    }
+}
+
+/// Rerank placement (`accel.rerank`): the host CPU lanes, or the
+/// batch-coalescing accelerator tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AccelRerank {
+    /// Final exact rerank runs on the host CPU lanes (the original
+    /// clock, reproduced bit-for-bit).
+    #[default]
+    Cpu,
+    /// Final exact rerank is staged over the PCIe/CXL transfer queue
+    /// and coalesced into device batches at admission time
+    /// ([`crate::simulator::accel_batch`]).
+    Batch,
+}
+
+impl AccelRerank {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cpu" => AccelRerank::Cpu,
+            "batch" => AccelRerank::Batch,
+            other => bail!("unknown accel rerank mode `{other}` (cpu|batch)"),
+        })
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            AccelRerank::Cpu => "cpu",
+            AccelRerank::Batch => "batch",
+        }
+    }
+}
+
+/// Batch-oriented accelerator rerank tier (`[accel]`): a GPU-class
+/// device with a fixed launch overhead plus per-item cycle cost, fronted
+/// by a PCIe/CXL staging queue. The pipelined scheduler coalesces the
+/// rerank stages of concurrent in-flight queries into device batches at
+/// admission time: an open batch launches when it reaches `batch_max`
+/// members or when `batch_window_us` of simulated time elapses from its
+/// first joiner. `batch_max = 1` (or a zero window with no concurrent
+/// joiners) degenerates to per-query launches — bit-identical to the
+/// sequential accel timeline, runtime-asserted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccelConfig {
+    /// Rerank placement: CPU lanes (default, original clock) or the
+    /// batch accelerator.
+    pub rerank: AccelRerank,
+    /// Members at which an open batch seals and launches (>= 1).
+    pub batch_max: usize,
+    /// Max simulated time an open batch waits for more joiners before
+    /// launching, microseconds (0 = launch immediately; with
+    /// `batch_max = 1` this is the per-query bit-identity
+    /// configuration).
+    pub batch_window_us: f64,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig { rerank: AccelRerank::Cpu, batch_max: 8, batch_window_us: 50.0 }
+    }
+}
+
 /// Serving-scheduler parameters (the pipelined batch path).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServeConfig {
@@ -556,6 +654,9 @@ pub struct ServeConfig {
     /// the coarse PQ ranking, SSD verification is skipped. The miss is
     /// counted in the serve report's availability columns.
     pub deadline_us: f64,
+    /// CPU-lane admission policy: FCFS (default, bit-identical to the
+    /// original lane clock) or shortest-service-first.
+    pub lane_policy: LanePolicy,
 }
 
 /// Out-of-core paged corpus tier (`[cache]`, `--out-of-core`): the cold
@@ -634,6 +735,7 @@ pub struct SystemConfig {
     pub pipeline: PipelineConfig,
     pub serve: ServeConfig,
     pub cache: CacheConfig,
+    pub accel: AccelConfig,
 }
 
 impl SystemConfig {
@@ -655,6 +757,7 @@ impl SystemConfig {
                 "pipeline" => apply_pipeline(&mut cfg.pipeline, sub)?,
                 "serve" => apply_serve(&mut cfg.serve, sub)?,
                 "cache" => apply_cache(&mut cfg.cache, sub)?,
+                "accel" => apply_accel(&mut cfg.accel, sub)?,
                 other => bail!("unknown config section [{other}]"),
             }
         }
@@ -730,6 +833,7 @@ impl SystemConfig {
             (f.far_fail_rate, "fault_far_fail_rate"),
             (f.far_spike_rate, "fault_far_spike_rate"),
             (f.ssd_fail_rate, "fault_ssd_fail_rate"),
+            (f.accel_fail_rate, "fault_accel_fail_rate"),
         ] {
             if !(0.0..=1.0).contains(&rate) {
                 bail!("sim.{key} must be a probability in [0,1]");
@@ -776,6 +880,26 @@ impl SystemConfig {
                 "cache.out_of_core supports index kinds ivf|flat (the graph front \
                  stage's per-node access pattern has no list structure to page \
                  against; the knob would be silently ignored)"
+            );
+        }
+        if self.accel.batch_max == 0 {
+            bail!("accel.batch_max must be at least 1 (a batch needs a member to launch)");
+        }
+        if !self.accel.batch_window_us.is_finite() || self.accel.batch_window_us < 0.0 {
+            bail!("accel.batch_window_us must be finite and non-negative");
+        }
+        if f.accel_fail_rate > 0.0 && self.accel.rerank != AccelRerank::Batch {
+            bail!(
+                "sim.fault_accel_fail_rate requires accel.rerank = \"batch\" (there is \
+                 no device launch to fail on the CPU rerank path; the knob would be \
+                 silently ignored)"
+            );
+        }
+        if self.serve.lane_policy == LanePolicy::Ssf && self.serve.cpu_lanes == 0 {
+            bail!(
+                "serve.lane_policy = \"ssf\" requires serve.cpu_lanes >= 1 (unbounded \
+                 lanes never queue, so an admission-order policy would be silently \
+                 ignored)"
             );
         }
         Ok(())
@@ -909,6 +1033,7 @@ fn apply_sim(c: &mut SimConfig, t: &Table) -> Result<()> {
             "fault_far_spike_rate" => c.fault.far_spike_rate = need_f64(v, k)?,
             "fault_far_spike_us" => c.fault.far_spike_us = need_f64(v, k)?,
             "fault_ssd_fail_rate" => c.fault.ssd_fail_rate = need_f64(v, k)?,
+            "fault_accel_fail_rate" => c.fault.accel_fail_rate = need_f64(v, k)?,
             "fault_retry_limit" => c.fault.retry_limit = need_usize(v, k)? as u32,
             "fault_retry_backoff_us" => c.fault.retry_backoff_us = need_f64(v, k)?,
             "fault_outages" => {
@@ -952,6 +1077,10 @@ fn apply_serve(c: &mut ServeConfig, t: &Table) -> Result<()> {
             "pipeline_depth" => c.pipeline_depth = need_usize(v, k)?,
             "cpu_lanes" => c.cpu_lanes = need_usize(v, k)?,
             "deadline_us" => c.deadline_us = need_f64(v, k)?,
+            "lane_policy" => {
+                c.lane_policy =
+                    LanePolicy::parse(v.as_str().context("serve.lane_policy must be a string")?)?
+            }
             "tenants" => {
                 let arr = v.as_array().context("serve.tenants must be an array")?;
                 c.tenants = arr
@@ -964,6 +1093,21 @@ fn apply_serve(c: &mut ServeConfig, t: &Table) -> Result<()> {
                     .collect::<Result<_>>()?;
             }
             other => bail!("unknown key serve.{other}"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_accel(c: &mut AccelConfig, t: &Table) -> Result<()> {
+    for (k, v) in t {
+        match k.as_str() {
+            "rerank" => {
+                c.rerank =
+                    AccelRerank::parse(v.as_str().context("accel.rerank must be a string")?)?
+            }
+            "batch_max" => c.batch_max = need_usize(v, k)?,
+            "batch_window_us" => c.batch_window_us = need_f64(v, k)?,
+            other => bail!("unknown key accel.{other}"),
         }
     }
     Ok(())
@@ -1183,6 +1327,58 @@ mod tests {
         assert!(RefineMode::parse("fatrq-hw").is_ok());
         assert!(RefineMode::parse("wat").is_err());
         assert_eq!(RefineMode::FatrqHw.name(), "fatrq-hw");
+    }
+
+    #[test]
+    fn accel_config_roundtrip_and_validation() {
+        let doc = r#"
+            [accel]
+            rerank = "batch"
+            batch_max = 4
+            batch_window_us = 25.0
+        "#;
+        let cfg = SystemConfig::from_toml(doc).unwrap();
+        assert_eq!(cfg.accel.rerank, AccelRerank::Batch);
+        assert_eq!(cfg.accel.batch_max, 4);
+        assert_eq!(cfg.accel.batch_window_us, 25.0);
+        // Defaults keep the tier off (CPU rerank — the original clock).
+        let d = AccelConfig::default();
+        assert_eq!(d.rerank, AccelRerank::Cpu);
+        assert_eq!((d.batch_max, d.batch_window_us), (8, 50.0));
+        assert_eq!(AccelRerank::parse("cpu").unwrap(), AccelRerank::Cpu);
+        assert!(AccelRerank::parse("gpu").is_err());
+        assert_eq!(AccelRerank::Batch.name(), "batch");
+        // Rejection paths: memberless batches, negative windows, unknown
+        // keys, and a fault rate for a tier that is not enabled.
+        for bad in [
+            "[accel]\nbatch_max = 0",
+            "[accel]\nbatch_window_us = -1.0",
+            "[accel]\nbogus = 1",
+            "[sim]\nshared_timeline = true\nfault_accel_fail_rate = 0.1",
+            "[sim]\nshared_timeline = true\nfault_accel_fail_rate = 1.5\n[accel]\nrerank = \"batch\"",
+        ] {
+            assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
+        }
+        // The accel fault channel parses and enables the plan when the
+        // tier is on.
+        let ok = "[sim]\nshared_timeline = true\nfault_accel_fail_rate = 0.1\n\
+                  [accel]\nrerank = \"batch\"";
+        let cfg = SystemConfig::from_toml(ok).unwrap();
+        assert_eq!(cfg.sim.fault.accel_fail_rate, 0.1);
+        assert!(cfg.sim.fault.enabled());
+    }
+
+    #[test]
+    fn lane_policy_roundtrip_and_validation() {
+        let doc = "[serve]\nlane_policy = \"ssf\"\ncpu_lanes = 2";
+        let cfg = SystemConfig::from_toml(doc).unwrap();
+        assert_eq!(cfg.serve.lane_policy, LanePolicy::Ssf);
+        assert_eq!(ServeConfig::default().lane_policy, LanePolicy::Fcfs);
+        assert_eq!(LanePolicy::parse("fcfs").unwrap(), LanePolicy::Fcfs);
+        assert!(LanePolicy::parse("srpt").is_err());
+        assert_eq!(LanePolicy::Ssf.name(), "ssf");
+        // SSF with unbounded lanes would be silently inert — rejected.
+        assert!(SystemConfig::from_toml("[serve]\nlane_policy = \"ssf\"").is_err());
     }
 
     #[test]

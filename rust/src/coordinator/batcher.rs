@@ -16,7 +16,7 @@ use crate::coordinator::pipeline::Breakdown;
 use crate::coordinator::pipelined::{ServeReport, TenantLat};
 use crate::coordinator::stage::QueryScratch;
 use crate::index::FlatIndex;
-use crate::metrics::{recall_at_k, Availability, CacheStats, LatencyStats};
+use crate::metrics::{recall_at_k, AccelStats, Availability, CacheStats, LatencyStats};
 use crate::util::threadpool::ThreadPool;
 use crate::util::topk::Scored;
 use std::sync::Mutex;
@@ -61,6 +61,9 @@ pub struct BatchReport {
     /// Mean simulated page-in queue time per (query, shard) task, ns
     /// (0 with the cache off or warm).
     pub mean_pagein_queue_ns: f64,
+    /// Batch-accelerator occupancy + transfer-queue columns of the
+    /// serving timeline (inactive with the CPU rerank).
+    pub accel: AccelStats,
     /// Mean per-stage breakdown.
     pub breakdown: Breakdown,
     pub mode: &'static str,
@@ -180,6 +183,10 @@ pub fn report_with_serve(
         Some(s) => (s.cache, s.mean_pagein_queue_ns),
         None => (CacheStats::default(), 0.0),
     };
+    let accel = match serve {
+        Some(s) => s.accel,
+        None => AccelStats::default(),
+    };
     BatchReport {
         queries: nq,
         mean_recall: recall_sum / n,
@@ -201,6 +208,7 @@ pub fn report_with_serve(
         availability,
         cache,
         mean_pagein_queue_ns,
+        accel,
         breakdown: agg,
         mode,
     }

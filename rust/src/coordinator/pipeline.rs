@@ -73,6 +73,10 @@ pub struct Breakdown {
     /// runs — both counters are plain `Copy` scalars so the steady-state
     /// allocation footprint is unchanged).
     pub degrade: DegradeLevel,
+    /// Occupancy of the device batch the query's exact rerank launched
+    /// in under the batch accelerator tier (max across shard tasks;
+    /// 0 = CPU rerank, no survivors, or degraded before launch).
+    pub accel_batch: usize,
 }
 
 impl Breakdown {

@@ -71,16 +71,45 @@
 //! flooding tenant can delay an idle tenant's query by at most one
 //! in-flight query turn per concurrently-waiting query of that tenant —
 //! never by the flood's whole backlog.
+//!
+//! Batch-coalescing accelerator rerank tier (`accel.rerank = batch`,
+//! FusionANNS direction): instead of occupying a CPU lane, a task's
+//! exact rerank stages its fetched survivors over the shared PCIe/CXL
+//! transfer queue ([`XferQueue`]) and then *joins an open device batch*.
+//! The open batch seals and launches on the batch accelerator
+//! ([`AccelServer`]: fixed launch overhead + per-item cycle cost) when
+//! it reaches `accel.batch_max` members or when `accel.batch_window_us`
+//! of simulated time has passed since its first joiner — a deterministic
+//! `(time, seq)`-ordered decision inside this event loop, not a post-hoc
+//! merge. Per-member completion times are carved out of the launch
+//! (launch overhead once, then members' kernel slices in join order), so
+//! per-query latency stays honest inside a batch. `batch_max = 1` with a
+//! zero window degenerates to per-query launches — bit-identical to the
+//! sequential accel timeline (runtime-asserted) — while larger batches
+//! amortize the launch overhead, the coalescing throughput win fig8
+//! sweeps. A failed launch (`sim.fault_accel_fail_rate`) retries *as a
+//! batch* with the same membership, then degrades every member to its
+//! unverified ranking.
+//!
+//! CPU-lane admission policy (`serve.lane_policy`): FCFS admits compute
+//! stages in ready order (the original clock, reproduced bit-for-bit);
+//! `ssf` parks ready stages in a pending pool and admits
+//! shortest-expected-service first whenever a lane frees (FIFO on exact
+//! duration ties), cutting head-of-line blocking at small lane counts.
 
-use crate::config::{FaultConfig, RefineMode, SimConfig, StreamInterleave, TenantSpec};
+use crate::config::{
+    AccelConfig, AccelRerank, FaultConfig, LanePolicy, RefineMode, SimConfig, StreamInterleave,
+    TenantSpec,
+};
 use crate::coordinator::builder::BuiltSystem;
 use crate::coordinator::engine::QueryParams;
 use crate::coordinator::pipeline::QueryOutcome;
 use crate::coordinator::stage::{run_stage, FallbackTopk, QueryScratch, Stage, StageState};
-use crate::metrics::{Availability, CacheStats, LatencyStats};
+use crate::metrics::{AccelStats, Availability, CacheStats, LatencyStats};
 use crate::simulator::{
-    CachePlan, DegradeLevel, FarStream, FaultPlan, LaneServer, PageCache, SsdQueue,
-    StreamTiming, TimelineSched,
+    accel_item_ns, AccelBatch, AccelServer, CachePlan, DegradeLevel, FarStream, FaultPlan,
+    LaneServer, PageCache, SsdQueue, StreamTiming, TimelineSched, XferQueue,
+    ACCEL_LAUNCH_OVERHEAD_NS,
 };
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
@@ -141,6 +170,11 @@ pub(crate) struct TaskProfile {
     pub ssd_solo_ns: f64,
     /// Exact-rerank duration (modeled host rate × survivors).
     pub rerank_ns: f64,
+    /// Exact-rerank duration on the batch accelerator: the device
+    /// cycle model per fetched vector × survivors. The fixed launch
+    /// overhead is charged per *batch*, not per task — coalescing is
+    /// what amortizes it.
+    pub accel_rerank_ns: f64,
     /// The far-memory record stream (empty when tracing was off or the
     /// mode never touches far memory).
     pub stream: FarStream,
@@ -175,6 +209,7 @@ impl TaskProfile {
             ssd_bytes: dim * 4,
             ssd_solo_ns: bd.ssd_ns,
             rerank_ns: (bd.ssd_reads * dim) as f64 * RERANK_NS_PER_READ_DIM,
+            accel_rerank_ns: bd.ssd_reads as f64 * accel_item_ns(dim),
             stream,
         }
     }
@@ -212,6 +247,20 @@ pub(crate) struct TaskTiming {
     pub retries: u32,
     /// Injected tail-spike delay absorbed by this task's far stream.
     pub fault_delay_ns: f64,
+    /// Host→device staging transfer of the fetched survivors on an idle
+    /// link (batch accel tier only; 0 on the CPU rerank path).
+    pub accel_xfer_solo_ns: f64,
+    /// Transfer-queue wait of the staging transfer.
+    pub accel_xfer_queue_ns: f64,
+    /// Device launch overhead + this task's own kernel slice (batch
+    /// accel tier only).
+    pub accel_solo_ns: f64,
+    /// Device wait: batchmate kernel slices serialized ahead of this
+    /// task inside its batch, plus launch queueing behind other batches.
+    pub accel_queue_ns: f64,
+    /// Occupancy of the device batch this task launched in (0 = CPU
+    /// rerank, no survivors, or degraded before launch).
+    pub accel_batch: u32,
 }
 
 /// Simulated wall-clock of one query through the pipelined scheduler.
@@ -302,6 +351,9 @@ pub struct ServeReport {
     pub cache: CacheStats,
     /// Mean SSD page-in queue wait per task (0 without out-of-core).
     pub mean_pagein_queue_ns: f64,
+    /// Batch-accelerator occupancy + transfer-queue accounting (inactive
+    /// when the rerank runs on CPU lanes).
+    pub accel: AccelStats,
 }
 
 impl ServeReport {
@@ -481,6 +533,13 @@ pub(crate) struct SimInput<'a> {
     /// `tr[j % len] + (j / len) * span` — same tiling as the global
     /// trace.
     pub tenant_traces: &'a [Vec<f64>],
+    /// Batch-accelerator rerank tier (placement + coalescing knobs;
+    /// `rerank = cpu` leaves the schedule bit-identical to a build
+    /// without the tier).
+    pub accel: &'a AccelConfig,
+    /// CPU-lane admission policy (`Fcfs` reproduces the original clock
+    /// bit-for-bit; `Ssf` admits shortest-expected-service first).
+    pub lane_policy: LanePolicy,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -509,6 +568,23 @@ enum EvKind {
     MergeReady(usize),
     /// A query's slowest task + merge completed: free its admission slot.
     QueryDone(usize),
+    /// A task's SSD burst completed and its survivors stage over the
+    /// PCIe/CXL transfer queue toward the batch accelerator (accel tier
+    /// only).
+    AccelXfer(usize),
+    /// A task's staging transfer landed on the device: join the open
+    /// batch.
+    AccelJoin(usize),
+    /// The coalescing window of open batch `id` expired: seal and launch
+    /// whatever joined. Stale ids (the batch already sealed at
+    /// `batch_max`) are ignored.
+    AccelWindow(u64),
+    /// (Re-)launch sealed batch `b` — pushed by the retry path after a
+    /// seeded launch failure's backoff.
+    AccelLaunch(usize),
+    /// A CPU lane freed under the SSF policy: drain the pending pool
+    /// shortest-first.
+    LaneWake,
 }
 
 struct Ev {
@@ -539,6 +615,33 @@ impl Ord for Ev {
     }
 }
 
+/// Which pipeline stage a parked compute request belongs to (SSF lane
+/// policy only): where its grant is routed once a lane admits it.
+#[derive(Clone, Copy, Debug)]
+enum PendKind {
+    /// Front stage of task `t` → `FarReady`.
+    Front(usize),
+    /// SW refinement of task `t` → `SsdReady`.
+    Refine(usize),
+    /// Exact rerank of task `t` → task completion.
+    Rerank(usize),
+    /// Gather/merge of query `q` → `QueryDone`.
+    Merge(usize),
+}
+
+/// A compute stage waiting for a lane under the SSF policy.
+#[derive(Clone, Copy, Debug)]
+struct Pend {
+    dur: f64,
+    /// Instant the stage became ready — its wait until admission is
+    /// charged as lane queueing.
+    ready: f64,
+    /// Global event sequence at park time: FIFO tie-break on exact
+    /// duration ties, so equal-cost stages replay the FCFS order.
+    seq: u64,
+    kind: PendKind,
+}
+
 /// Mutable event-loop state bundled so stage-transition helpers can be
 /// methods instead of closures fighting over borrows.
 struct SimState<'a> {
@@ -564,6 +667,43 @@ struct SimState<'a> {
     /// first try; bumped on each retry).
     far_attempt: Vec<u32>,
     ssd_attempt: Vec<u32>,
+    // -- Batch-accelerator rerank tier (`accel.rerank = batch`) --
+    /// Whether the rerank runs on the batch accelerator. Off = the CPU
+    /// rerank path, bit-for-bit.
+    accel_on: bool,
+    /// Seal threshold (>= 1; 1 = per-query launches).
+    batch_max: usize,
+    /// Coalescing window after the first joiner (ns; <= 0 = launch
+    /// immediately).
+    window_ns: f64,
+    /// Fixed per-launch device overhead.
+    launch_ns: f64,
+    /// PCIe/CXL staging queue in front of the device.
+    xfer: XferQueue,
+    /// The batch accelerator itself.
+    accel: AccelServer,
+    /// Members of the currently open (unsealed) batch, in join order.
+    open_batch: Vec<usize>,
+    /// Identity of the open batch — bumped at each seal so a stale
+    /// window event can recognize itself.
+    open_id: u64,
+    /// Sealed batches' memberships (retries re-launch the same
+    /// membership) and per-batch launch attempt counters.
+    batches: Vec<Vec<usize>>,
+    batch_attempt: Vec<u32>,
+    /// Instant each task's staging transfer landed (its batch-join
+    /// time) — the base its device wait is measured from.
+    accel_ready: Vec<f64>,
+    /// Successful device launches / largest occupancy (report columns).
+    batches_launched: usize,
+    max_batch: usize,
+    // -- SSF lane policy (`serve.lane_policy = ssf`) --
+    /// Whether shortest-expected-service-first admission is on (requires
+    /// bounded lanes; FCFS otherwise).
+    ssf: bool,
+    /// Ready compute stages waiting for a lane (SSF only; FCFS admits
+    /// inline and never parks).
+    pending: Vec<Pend>,
 }
 
 impl SimState<'_> {
@@ -617,13 +757,74 @@ impl SimState<'_> {
     fn launch_front(&mut self, t: usize, now: f64) {
         let dur = self.profiles[t].traversal_ns;
         if self.lanes.bounded() && dur > 0.0 {
-            let g = self.lanes.admit(dur, now);
-            self.task_timing[t].cpu_queue_ns += g.queue_ns;
-            self.push(g.done_ns, EvKind::FarReady(t));
+            self.lane_request(dur, now, PendKind::Front(t));
         } else {
             // Unbounded lanes: the pre-lane throughput-device arithmetic,
             // bit-for-bit.
             self.push(now + dur, EvKind::FarReady(t));
+        }
+    }
+
+    /// Route a compute stage of `dur` ns, ready at `now`, to the lane
+    /// server. FCFS admits inline — the original clock, bit-for-bit.
+    /// SSF parks the stage and drains the pending pool shortest-first
+    /// against free lanes.
+    fn lane_request(&mut self, dur: f64, now: f64, kind: PendKind) {
+        if self.ssf {
+            let seq = self.seq;
+            self.seq += 1;
+            self.pending.push(Pend { dur, ready: now, seq, kind });
+            self.drain_lanes(now);
+        } else {
+            let g = self.lanes.admit(dur, now);
+            self.lane_granted(g.queue_ns, g.done_ns, kind);
+        }
+    }
+
+    /// A lane admitted a compute stage: charge its queueing and route
+    /// the completion to the stage's next event.
+    fn lane_granted(&mut self, queue_ns: f64, done_ns: f64, kind: PendKind) {
+        match kind {
+            PendKind::Front(t) => {
+                self.task_timing[t].cpu_queue_ns += queue_ns;
+                self.push(done_ns, EvKind::FarReady(t));
+            }
+            PendKind::Refine(t) => {
+                self.task_timing[t].cpu_queue_ns += queue_ns;
+                self.push(done_ns, EvKind::SsdReady(t));
+            }
+            PendKind::Rerank(t) => {
+                self.task_timing[t].cpu_queue_ns += queue_ns;
+                self.finish_task(t, done_ns);
+            }
+            PendKind::Merge(q) => {
+                self.timings[q].merge_queue_ns = queue_ns;
+                self.push(done_ns, EvKind::QueryDone(q));
+            }
+        }
+    }
+
+    /// SSF policy: while a lane is free, admit the shortest pending
+    /// stage (FIFO on exact duration ties via the park sequence). Every
+    /// admission schedules a `LaneWake` at its completion, so every
+    /// busy→free lane transition re-enters this drain — the pool can
+    /// never stall with a free lane.
+    fn drain_lanes(&mut self, now: f64) {
+        while !self.pending.is_empty() && self.lanes.earliest_free() <= now {
+            let mut best = 0usize;
+            for i in 1..self.pending.len() {
+                let (a, b) = (&self.pending[i], &self.pending[best]);
+                if a.dur < b.dur || (a.dur == b.dur && a.seq < b.seq) {
+                    best = i;
+                }
+            }
+            let p = self.pending.swap_remove(best);
+            let g = self.lanes.admit(p.dur, now);
+            // A free lane serves immediately, so the stage's whole wait
+            // since it became ready is lane queueing (`g.queue_ns` only
+            // mops up float residue).
+            self.lane_granted((now - p.ready).max(0.0) + g.queue_ns, g.done_ns, p.kind);
+            self.push(g.done_ns, EvKind::LaneWake);
         }
     }
 
@@ -674,14 +875,103 @@ impl SimState<'_> {
         }
     }
 
-    /// Task `t`'s SSD burst completed at `ssd_done`: run the rerank.
+    /// Task `t`'s SSD burst completed at `ssd_done`: run the rerank —
+    /// on the batch accelerator when the tier is on (stage the fetched
+    /// survivors over the transfer queue, then join the open device
+    /// batch), on CPU lanes otherwise.
     fn after_ssd(&mut self, t: usize, ssd_done: f64) {
+        if self.accel_on && self.profiles[t].ssd_reads > 0 {
+            self.push(ssd_done, EvKind::AccelXfer(t));
+            return;
+        }
         let rerank_ns = self.profiles[t].rerank_ns;
         if self.lanes.bounded() && rerank_ns > 0.0 {
             self.push(ssd_done, EvKind::RerankReady(t));
         } else {
             self.finish_task(t, ssd_done + rerank_ns);
         }
+    }
+
+    /// Task `t`'s staging transfer landed on the device at `now`: join
+    /// the open batch. The batch seals at `batch_max` members (or
+    /// immediately with a zero window — per-query launches, the
+    /// bit-identity contract); otherwise the first joiner arms the
+    /// coalescing window.
+    fn accel_join(&mut self, t: usize, now: f64) {
+        self.accel_ready[t] = now;
+        self.open_batch.push(t);
+        if self.open_batch.len() >= self.batch_max || self.window_ns <= 0.0 {
+            self.seal_batch(now);
+        } else if self.open_batch.len() == 1 {
+            let id = self.open_id;
+            self.push(now + self.window_ns, EvKind::AccelWindow(id));
+        }
+    }
+
+    /// Seal the open batch at `now` and launch it. The open-batch
+    /// identity bumps so the sealed batch's (now stale) window event is
+    /// ignored when it fires.
+    fn seal_batch(&mut self, now: f64) {
+        let members = std::mem::take(&mut self.open_batch);
+        self.open_id += 1;
+        let b = self.batches.len();
+        self.batches.push(members);
+        self.batch_attempt.push(0);
+        self.launch_batch(b, now);
+    }
+
+    /// (Re-)launch sealed batch `b` at `now`. A seeded launch failure
+    /// retries the *whole batch* — same membership, deterministic
+    /// backoff — then degrades every member to its unverified ranking
+    /// once past the retry budget. A successful launch pays the launch
+    /// overhead once and carves per-member completions out of it: the
+    /// kernel drains members' item slices in join order, so per-query
+    /// latency stays honest inside the batch.
+    fn launch_batch(&mut self, b: usize, now: f64) {
+        let members = self.batches[b].clone();
+        // Launch-fault channel keyed by the batch's first joiner: one
+        // draw per launch attempt, shared by the whole batch.
+        if self.faults_on && self.fault.accel_launch_fails(members[0], self.batch_attempt[b]) {
+            let a = self.batch_attempt[b];
+            if a < self.fault.retry_limit() {
+                self.batch_attempt[b] = a + 1;
+                for &t in &members {
+                    self.task_timing[t].retries += 1;
+                }
+                self.push(now + self.fault.backoff_ns(a), EvKind::AccelLaunch(b));
+            } else {
+                for &t in &members {
+                    self.degrade_task(t, DegradeLevel::SkipVerify, now);
+                }
+            }
+            return;
+        }
+        let items: Vec<f64> =
+            members.iter().map(|&t| self.profiles[t].accel_rerank_ns).collect();
+        let batch = AccelBatch { launch_ns: self.launch_ns, items };
+        let g = self.accel.admit(&batch, now);
+        // Kernel start: an idle device starts at `now` exactly (the
+        // grant's queue is the constant 0.0 on that path — no float
+        // residue on the bit-identity contract); a queued launch starts
+        // where its service window begins.
+        let start = if g.queue_ns == 0.0 { now } else { g.done_ns - batch.total_ns() };
+        let occupancy = members.len() as u32;
+        let mut done = start + batch.launch_ns;
+        let mut ahead = 0.0f64;
+        for (j, &t) in members.iter().enumerate() {
+            done += batch.items[j];
+            let tt = &mut self.task_timing[t];
+            tt.accel_solo_ns = batch.launch_ns + batch.items[j];
+            // Device wait = launch queueing since the join instant +
+            // batchmate slices serialized ahead — summed this way (not
+            // `done - ready - solo`) so the idle singleton is exactly 0.
+            tt.accel_queue_ns = ((start - self.accel_ready[t]) + ahead).max(0.0);
+            tt.accel_batch = occupancy;
+            ahead += batch.items[j];
+            self.finish_task(t, done);
+        }
+        self.batches_launched += 1;
+        self.max_batch = self.max_batch.max(members.len());
     }
 
     /// Task `t` fully completed at `task_done`: fold into its query, and
@@ -697,11 +987,20 @@ impl SimState<'_> {
         let task_service = tt.pagein_ns
             + match tt.degrade {
                 DegradeLevel::Full => {
+                    // With the batch tier on, the rerank leaves the
+                    // host: its service term is the staging transfer +
+                    // the device launch + kernel slice (both 0 when the
+                    // task fetched nothing — matching a 0 `rerank_ns`).
+                    let rerank = if self.accel_on {
+                        tt.accel_xfer_solo_ns + tt.accel_solo_ns
+                    } else {
+                        pr.rerank_ns
+                    };
                     pr.traversal_ns
                         + tt.far_solo_ns
                         + pr.refine_ns
                         + tt.ssd_solo_ns
-                        + pr.rerank_ns
+                        + rerank
                 }
                 DegradeLevel::SkipVerify => pr.traversal_ns + tt.far_solo_ns + pr.refine_ns,
                 _ => pr.traversal_ns,
@@ -793,6 +1092,7 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
 
     let mut far = TimelineSched::new(input.sim);
     let mut ssd: Vec<SsdQueue> = (0..shards).map(|_| SsdQueue::new(input.sim)).collect();
+    let accel_on = input.accel.rerank == AccelRerank::Batch;
     let mut st = SimState {
         profiles,
         shards,
@@ -811,6 +1111,21 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         deadline_ns,
         far_attempt: vec![0u32; nq_shards],
         ssd_attempt: vec![0u32; nq_shards],
+        accel_on,
+        batch_max: input.accel.batch_max.max(1),
+        window_ns: input.accel.batch_window_us * 1e3,
+        launch_ns: ACCEL_LAUNCH_OVERHEAD_NS,
+        xfer: XferQueue::new(input.sim),
+        accel: AccelServer::new(),
+        open_batch: Vec::new(),
+        open_id: 0,
+        batches: Vec::new(),
+        batch_attempt: Vec::new(),
+        accel_ready: vec![0.0f64; nq_shards],
+        batches_launched: 0,
+        max_batch: 0,
+        ssf: input.lane_policy == LanePolicy::Ssf && cpu_lanes > 0,
+        pending: Vec::new(),
     };
     for (q, &at) in arrivals.iter().enumerate() {
         st.push(at, EvKind::Arrival(q));
@@ -923,9 +1238,7 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
                 st.after_far_faulted(t, now);
             }
             EvKind::RefineReady(t) => {
-                let g = st.lanes.admit(profiles[t].refine_ns, now);
-                st.task_timing[t].cpu_queue_ns += g.queue_ns;
-                st.push(g.done_ns, EvKind::SsdReady(t));
+                st.lane_request(profiles[t].refine_ns, now, PendKind::Refine(t));
             }
             EvKind::SsdReady(t) => {
                 let pr = &profiles[t];
@@ -969,21 +1282,38 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
                 }
             }
             EvKind::RerankReady(t) => {
-                let g = st.lanes.admit(profiles[t].rerank_ns, now);
-                st.task_timing[t].cpu_queue_ns += g.queue_ns;
-                st.finish_task(t, g.done_ns);
+                st.lane_request(profiles[t].rerank_ns, now, PendKind::Rerank(t));
             }
             EvKind::MergeReady(q) => {
                 let merge = if merge_ns.is_empty() { 0.0 } else { merge_ns[q] };
-                let g = st.lanes.admit(merge, now);
-                st.timings[q].merge_queue_ns = g.queue_ns;
-                st.push(g.done_ns, EvKind::QueryDone(q));
+                st.lane_request(merge, now, PendKind::Merge(q));
             }
             EvKind::QueryDone(q) => {
                 st.timings[q].done_ns = now;
                 makespan = makespan.max(now);
                 in_flight -= 1;
                 tn_inflight[tenant(q)] -= 1;
+            }
+            EvKind::AccelXfer(t) => {
+                let pr = &profiles[t];
+                let g = st.xfer.admit(pr.ssd_reads * pr.ssd_bytes, now);
+                st.task_timing[t].accel_xfer_solo_ns = g.solo_ns;
+                st.task_timing[t].accel_xfer_queue_ns = g.queue_ns;
+                st.push(g.done_ns, EvKind::AccelJoin(t));
+            }
+            EvKind::AccelJoin(t) => {
+                st.accel_join(t, now);
+            }
+            EvKind::AccelWindow(id) => {
+                if id == st.open_id && !st.open_batch.is_empty() {
+                    st.seal_batch(now);
+                }
+            }
+            EvKind::AccelLaunch(b) => {
+                st.launch_batch(b, now);
+            }
+            EvKind::LaneWake => {
+                st.drain_lanes(now);
             }
         }
         // Admit waiting queries into free slots: weighted-fair across
@@ -1020,6 +1350,7 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         }
     }
     debug_assert!(waiting_total == 0 && in_flight == 0);
+    debug_assert!(st.open_batch.is_empty() && st.pending.is_empty());
 
     // Fold per-task fault outcomes into the per-query timeline and the
     // availability columns. On a fault-free run every counter stays at
@@ -1111,6 +1442,20 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
     } else {
         st.task_timing.iter().map(|tt| tt.pagein_queue_ns).sum::<f64>() / nq_shards as f64
     };
+    // Batch-accelerator occupancy + transfer-queue accounting (inactive
+    // with the CPU rerank — every column stays at its default).
+    let mut accel_stats = AccelStats { active: st.accel_on, ..Default::default() };
+    if st.accel_on {
+        accel_stats.batches = st.batches_launched;
+        accel_stats.max_batch = st.max_batch;
+        for tt in &st.task_timing {
+            if tt.accel_batch > 0 {
+                accel_stats.tasks += 1;
+                accel_stats.xfer_queue_ns += tt.accel_xfer_queue_ns;
+                accel_stats.accel_queue_ns += tt.accel_queue_ns;
+            }
+        }
+    }
     let report = ServeReport {
         depth,
         arrival_qps,
@@ -1124,6 +1469,7 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         availability: avail,
         cache: cache_stats,
         mean_pagein_queue_ns,
+        accel: accel_stats,
         timings,
     };
     (st.task_timing, report)
@@ -1171,6 +1517,11 @@ pub struct BatchProfile {
     /// Per-tenant arrival-trace overrides (empty = all tenants ride the
     /// global arrival process).
     tenant_traces: Vec<Vec<f64>>,
+    /// Batch-accelerator rerank tier for subsequent schedules
+    /// (`rerank = cpu` by default — the CPU path, bit-for-bit).
+    accel: AccelConfig,
+    /// CPU-lane admission policy for subsequent schedules.
+    lane_policy: LanePolicy,
     /// Dispatch rounds the functional pass took (1 for any nonempty
     /// batch since the run-to-completion executor; tests pin the drop
     /// from the old per-stage re-dispatch scheme).
@@ -1218,6 +1569,8 @@ impl BatchProfile {
             cache_plans: Vec::new(),
             task_pages: Vec::new(),
             tenant_traces: Vec::new(),
+            accel: cfg.accel.clone(),
+            lane_policy: cfg.serve.lane_policy,
             waves,
         }
     }
@@ -1342,6 +1695,34 @@ impl BatchProfile {
         self.tenant_traces = traces;
     }
 
+    /// Select the rerank placement (CPU lanes or the batch accelerator)
+    /// for subsequent schedules.
+    pub fn set_accel_rerank(&mut self, mode: AccelRerank) {
+        self.accel.rerank = mode;
+    }
+
+    /// Override the device batch seal threshold (>= 1; 1 = per-query
+    /// launches, the bit-identity contract) for subsequent schedules.
+    pub fn set_accel_batch_max(&mut self, max: usize) {
+        assert!(max >= 1, "accel.batch_max must be at least 1");
+        self.accel.batch_max = max;
+    }
+
+    /// Override the batch coalescing window (µs; 0 = launch on every
+    /// join) for subsequent schedules.
+    pub fn set_accel_batch_window_us(&mut self, us: f64) {
+        assert!(
+            us.is_finite() && us >= 0.0,
+            "accel.batch_window_us must be finite and non-negative"
+        );
+        self.accel.batch_window_us = us;
+    }
+
+    /// Override the CPU-lane admission policy for subsequent schedules.
+    pub fn set_lane_policy(&mut self, policy: LanePolicy) {
+        self.lane_policy = policy;
+    }
+
     fn run_sim(&self, depth: usize, arrival_qps: f64) -> (Vec<TaskTiming>, ServeReport) {
         simulate(&SimInput {
             sim: &self.sim,
@@ -1360,6 +1741,8 @@ impl BatchProfile {
             cache_plans: &self.cache_plans,
             task_pages: &self.task_pages,
             tenant_traces: &self.tenant_traces,
+            accel: &self.accel,
+            lane_policy: self.lane_policy,
         })
     }
 
@@ -1374,8 +1757,13 @@ impl BatchProfile {
         report: &ServeReport,
     ) {
         for (q, (o, tt)) in outs.iter_mut().zip(task_t).enumerate() {
-            o.breakdown.queue_ns =
-                tt.far_queue_ns + tt.ssd_queue_ns + tt.cpu_queue_ns + tt.pagein_queue_ns;
+            o.breakdown.queue_ns = tt.far_queue_ns
+                + tt.ssd_queue_ns
+                + tt.cpu_queue_ns
+                + tt.pagein_queue_ns
+                + tt.accel_xfer_queue_ns
+                + tt.accel_queue_ns;
+            o.breakdown.accel_batch = tt.accel_batch as usize;
             let timing = &report.timings[q];
             if timing.degrade.is_degraded() || timing.retries > 0 {
                 o.breakdown.degrade = timing.degrade;

@@ -212,6 +212,34 @@ impl ShardedEngine {
         self.cfg.cache.pages = pages;
     }
 
+    /// Select the rerank placement (CPU lanes or the batch accelerator)
+    /// without rebuilding shards.
+    pub fn set_accel_rerank(&mut self, mode: crate::config::AccelRerank) {
+        self.cfg.accel.rerank = mode;
+    }
+
+    /// Set the device batch seal threshold (>= 1) without rebuilding
+    /// shards.
+    pub fn set_accel_batch_max(&mut self, max: usize) {
+        assert!(max >= 1, "accel.batch_max must be at least 1");
+        self.cfg.accel.batch_max = max;
+    }
+
+    /// Set the batch coalescing window (µs; 0 = launch on every join)
+    /// without rebuilding shards.
+    pub fn set_accel_batch_window_us(&mut self, us: f64) {
+        assert!(
+            us.is_finite() && us >= 0.0,
+            "accel.batch_window_us must be finite and non-negative"
+        );
+        self.cfg.accel.batch_window_us = us;
+    }
+
+    /// Set the CPU-lane admission policy without rebuilding shards.
+    pub fn set_lane_policy(&mut self, policy: crate::config::LanePolicy) {
+        self.cfg.serve.lane_policy = policy;
+    }
+
     pub fn params(&self) -> &QueryParams {
         &self.params
     }
@@ -372,6 +400,8 @@ impl ShardedEngine {
             cache_plans: &cache_plans,
             task_pages: &task_pages,
             tenant_traces: &tenant_traces,
+            accel: &self.cfg.accel,
+            lane_policy: self.cfg.serve.lane_policy,
         });
 
         // ---- gather: remap to global ids, merge, aggregate breakdowns.
@@ -422,6 +452,11 @@ impl ShardedEngine {
             bd.rerank_ns += t0.elapsed().as_nanos() as f64;
             bd.degrade = report.timings[q].degrade;
             bd.retries = report.timings[q].retries as usize;
+            bd.accel_batch = task_t[q * ns..(q + 1) * ns]
+                .iter()
+                .map(|t| t.accel_batch as usize)
+                .max()
+                .unwrap_or(0);
             merged_outs.push(QueryOutcome { topk: merged.clone(), breakdown: bd });
         }
         if shared {
@@ -439,20 +474,28 @@ impl ShardedEngine {
                 bd.queue_ns = slice
                     .iter()
                     .map(|t| {
-                        t.far_queue_ns + t.ssd_queue_ns + t.cpu_queue_ns + t.pagein_queue_ns
+                        t.far_queue_ns
+                            + t.ssd_queue_ns
+                            + t.cpu_queue_ns
+                            + t.pagein_queue_ns
+                            + t.accel_xfer_queue_ns
+                            + t.accel_queue_ns
                     })
                     .fold(0.0f64, f64::max)
                     + report.timings[q].merge_queue_ns;
             }
-        } else if self.cfg.serve.cpu_lanes > 0 {
-            // Private devices, bounded lanes: compute contention is still
-            // real — charge the slowest shard task's lane wait plus the
-            // serial merge stage's.
+        } else if self.cfg.serve.cpu_lanes > 0
+            || self.cfg.accel.rerank == crate::config::AccelRerank::Batch
+        {
+            // Private devices, bounded lanes (or the batch accel tier,
+            // whose transfer queue + device are always shared): compute
+            // contention is still real — charge the slowest shard task's
+            // lane + device waits plus the serial merge stage's.
             for (q, out) in merged_outs.iter_mut().enumerate() {
                 let slice = &task_t[q * ns..(q + 1) * ns];
                 out.breakdown.queue_ns = slice
                     .iter()
-                    .map(|t| t.cpu_queue_ns)
+                    .map(|t| t.cpu_queue_ns + t.accel_xfer_queue_ns + t.accel_queue_ns)
                     .fold(0.0f64, f64::max)
                     + report.timings[q].merge_queue_ns;
             }

@@ -86,8 +86,8 @@ pub fn adc_row_scalar(lut: &[f32], ksub: usize, code: &[u8]) -> f32 {
 
 /// Squared L2 distance between two equal-length rows, dispatched like
 /// [`adc_row`]. This is the scan-row kernel (8 mirrored lanes on every
-/// tier); [`crate::util::l2_sq`] (4-lane) stays the general-purpose
-/// helper for build/encode paths that never touch the dispatcher.
+/// tier); [`crate::util::l2_sq`] delegates here, so build/encode paths
+/// ride the same tier as the query path.
 #[inline]
 pub fn l2_row(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
@@ -524,21 +524,17 @@ mod tests {
     }
 
     #[test]
-    fn l2_row_agrees_with_util_l2_sq_within_ulp_budget() {
-        // l2_row regroups util::l2_sq's 4-lane sum into 8 lanes, so the two
-        // are not bit-equal in general — but they must agree to float
-        // tolerance (and exactly at dims < 8, where both take the same
-        // scalar tail fold with zero unrolled lanes... for dims < 4).
+    fn l2_row_is_exactly_util_l2_sq() {
+        // util::l2_sq delegates here, so the two entry points must be
+        // bit-equal at every dim and on every tier — encode-side and
+        // query-side distances can never disagree.
         let mut rng = Rng::new(9);
-        for dim in [2usize, 3, 24, 768] {
+        for dim in [1usize, 2, 3, 7, 8, 24, 768, 769] {
             let a: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
             let b: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
-            let x = l2_row(&a, &b);
-            let y = crate::util::l2_sq(&a, &b);
-            assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0), "dim {dim}: {x} vs {y}");
-            if dim < 4 {
-                assert_eq!(x, y, "dim {dim}: tail-only paths must be identical");
-            }
+            assert_eq!(l2_row(&a, &b), crate::util::l2_sq(&a, &b), "dim {dim}");
+            let _scalar = crate::kernels::dispatch::force_scalar_scope();
+            assert_eq!(l2_row(&a, &b), crate::util::l2_sq(&a, &b), "dim {dim} scalar");
         }
     }
 }

@@ -31,20 +31,26 @@ COMMANDS:
           [--arrival-qps R] [--arrival-dist uniform|poisson]
           [--arrival-trace FILE] [--arrival-gen KIND] [--cpu-lanes L]
           [--stream-interleave burst|record] [--tenants SPECS]
+          [--lane-policy fcfs|ssf] [--accel-rerank cpu|batch]
+          [--accel-batch-max N] [--accel-batch-window-us U]
           [--out-of-core] [--cache-mb M]
           [--deadline-us D] [--fault-seed S] [--fault-far-rate R]
           [--fault-far-spike-rate R] [--fault-far-spike-us U]
-          [--fault-ssd-rate R] [--fault-retry-limit N]
+          [--fault-ssd-rate R] [--fault-accel-rate R]
+          [--fault-retry-limit N]
           [--fault-retry-backoff-us U] [--fault-outages SPECS]
   bench   --config <toml> [--threads N] [--early-exit] [--margin-quantile Q]
           [--shards N] [--shared-timeline] [--pipeline-depth D]
           [--arrival-qps R] [--arrival-dist uniform|poisson]
           [--arrival-trace FILE] [--arrival-gen KIND] [--cpu-lanes L]
           [--stream-interleave burst|record] [--tenants SPECS]
+          [--lane-policy fcfs|ssf] [--accel-rerank cpu|batch]
+          [--accel-batch-max N] [--accel-batch-window-us U]
           [--out-of-core] [--cache-mb M]
           [--deadline-us D] [--fault-seed S] [--fault-far-rate R]
           [--fault-far-spike-rate R] [--fault-far-spike-us U]
-          [--fault-ssd-rate R] [--fault-retry-limit N]
+          [--fault-ssd-rate R] [--fault-accel-rate R]
+          [--fault-retry-limit N]
           [--fault-retry-backoff-us U] [--fault-outages SPECS]
   xla     --artifacts <dir>          verify AOT artifacts vs native compute
   help
@@ -77,6 +83,20 @@ FLAGS:
                         throughput-device model)
   --stream-interleave M far-memory sharing for co-admitted streams: burst
                         (FCFS, default) or record (round-robin fairness)
+  --lane-policy P       CPU-lane admission under --cpu-lanes: fcfs (ready
+                        order, default) or ssf (shortest expected service
+                        first; FIFO on ties) — cuts head-of-line blocking
+                        at small lane counts
+  --accel-rerank M      exact-rerank placement: cpu (lanes, default) or
+                        batch (the batch accelerator behind a PCIe/CXL
+                        transfer queue; launches amortize a fixed overhead
+                        across coalesced queries)
+  --accel-batch-max N   seal a device batch at N joined queries (default 8;
+                        1 = per-query launches, bit-identical to the
+                        sequential accel timeline)
+  --accel-batch-window-us U  seal an open batch U us after its first joiner
+                        even if below --accel-batch-max (default 50; 0 =
+                        launch on every join)
   --tenants SPECS       multi-tenant QoS: comma-separated
                         name:weight[:quota][:trace=SRC]
                         (e.g. latency:4,batch:1:8:trace=bursty); queries
@@ -107,6 +127,10 @@ FLAGS:
   --fault-far-spike-rate R  far-memory tail-latency spike probability
   --fault-far-spike-us U    spike magnitude, us (default 50)
   --fault-ssd-rate R        SSD read failure/timeout probability
+  --fault-accel-rate R      accelerator batch-launch failure probability
+                            (failed batches retry as a batch, then degrade
+                            to the unverified ranking; needs --accel-rerank
+                            batch)
   --fault-retry-limit N     bounded retries per read (default 2)
   --fault-retry-backoff-us U  base of the deterministic exponential backoff
   --fault-outages SPECS shard outage windows, comma-separated
@@ -171,6 +195,16 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
     if let Some(t) = args.get("tenants") {
         cfg.serve.tenants = fatrq::config::TenantSpec::parse_list(t)?;
     }
+    if let Some(p) = args.get("lane-policy") {
+        cfg.serve.lane_policy = fatrq::config::LanePolicy::parse(p)?;
+    }
+    // Batch-accelerator rerank tier (the [accel] config section).
+    if let Some(m) = args.get("accel-rerank") {
+        cfg.accel.rerank = fatrq::config::AccelRerank::parse(m)?;
+    }
+    cfg.accel.batch_max = args.get_usize("accel-batch-max", cfg.accel.batch_max)?;
+    cfg.accel.batch_window_us =
+        args.get_f64("accel-batch-window-us", cfg.accel.batch_window_us)?;
     // Out-of-core paging knobs (the [cache] config section).
     if args.has("out-of-core") {
         cfg.cache.out_of_core = true;
@@ -188,6 +222,8 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
         args.get_f64("fault-far-spike-rate", cfg.sim.fault.far_spike_rate)?;
     cfg.sim.fault.far_spike_us = args.get_f64("fault-far-spike-us", cfg.sim.fault.far_spike_us)?;
     cfg.sim.fault.ssd_fail_rate = args.get_f64("fault-ssd-rate", cfg.sim.fault.ssd_fail_rate)?;
+    cfg.sim.fault.accel_fail_rate =
+        args.get_f64("fault-accel-rate", cfg.sim.fault.accel_fail_rate)?;
     cfg.sim.fault.retry_limit =
         args.get_usize("fault-retry-limit", cfg.sim.fault.retry_limit as usize)? as u32;
     cfg.sim.fault.retry_backoff_us =
@@ -271,6 +307,18 @@ fn print_report(rep: &BatchReport, k: usize, threads: usize, shards: usize) {
             av.retries,
             av.deadline_missed,
             av.dropped_tasks
+        );
+    }
+    let a = &rep.accel;
+    if a.active {
+        println!(
+            "accel: {} batches ({} tasks, mean {:.1}/batch, max {})  xfer queue {:.1} us/task  device queue {:.1} us/task",
+            a.batches,
+            a.tasks,
+            a.mean_batch(),
+            a.max_batch,
+            a.mean_xfer_queue_ns() / 1e3,
+            a.mean_accel_queue_ns() / 1e3
         );
     }
     let c = &rep.cache;
@@ -359,6 +407,10 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         "cpu-lanes",
         "stream-interleave",
         "tenants",
+        "lane-policy",
+        "accel-rerank",
+        "accel-batch-max",
+        "accel-batch-window-us",
         "arrival-gen",
         "out-of-core",
         "cache-mb",
@@ -368,6 +420,7 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         "fault-far-spike-rate",
         "fault-far-spike-us",
         "fault-ssd-rate",
+        "fault-accel-rate",
         "fault-retry-limit",
         "fault-retry-backoff-us",
         "fault-outages",
@@ -400,6 +453,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "cpu-lanes",
         "stream-interleave",
         "tenants",
+        "lane-policy",
+        "accel-rerank",
+        "accel-batch-max",
+        "accel-batch-window-us",
         "arrival-gen",
         "out-of-core",
         "cache-mb",
@@ -409,6 +466,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "fault-far-spike-rate",
         "fault-far-spike-us",
         "fault-ssd-rate",
+        "fault-accel-rate",
         "fault-retry-limit",
         "fault-retry-backoff-us",
         "fault-outages",

@@ -154,6 +154,56 @@ impl CacheStats {
     }
 }
 
+/// Batch-accelerator accounting of one serving run with the device
+/// rerank tier (`accel.rerank = batch` / `--accel-rerank batch`). All
+/// counters stay zero on the CPU rerank path; `active` distinguishes "no
+/// accelerator configured" from "accelerator configured but never used"
+/// (e.g. a workload with no survivor fetches).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AccelStats {
+    /// Whether the batch rerank tier was active for this run.
+    pub active: bool,
+    /// Device batches launched (retried launches count once).
+    pub batches: usize,
+    /// Rerank tasks served by the device (degraded tasks excluded).
+    pub tasks: usize,
+    /// Largest batch occupancy observed.
+    pub max_batch: usize,
+    /// Total host→device transfer-queue wait across device tasks, ns.
+    pub xfer_queue_ns: f64,
+    /// Total device wait (batch formation + launch queue) across device
+    /// tasks, ns.
+    pub accel_queue_ns: f64,
+}
+
+impl AccelStats {
+    /// Mean batch occupancy (tasks per launch; 0.0 when nothing
+    /// launched). The amortization lever: the launch overhead is paid
+    /// once per batch, so device cost per task shrinks as this grows.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.tasks as f64 / self.batches as f64
+    }
+
+    /// Mean transfer-queue wait per device task, ns.
+    pub fn mean_xfer_queue_ns(&self) -> f64 {
+        if self.tasks == 0 {
+            return 0.0;
+        }
+        self.xfer_queue_ns / self.tasks as f64
+    }
+
+    /// Mean device wait per device task, ns.
+    pub fn mean_accel_queue_ns(&self) -> f64 {
+        if self.tasks == 0 {
+            return 0.0;
+        }
+        self.accel_queue_ns / self.tasks as f64
+    }
+}
+
 /// Streaming latency statistics (nanoseconds).
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {
@@ -306,6 +356,26 @@ mod tests {
         assert_eq!(a.evictions, 6);
         assert_eq!(a.frames, 16);
         assert!((a.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accel_stats_means() {
+        let a = AccelStats::default();
+        assert!(!a.active);
+        assert_eq!(a.mean_batch(), 0.0);
+        assert_eq!(a.mean_xfer_queue_ns(), 0.0);
+        assert_eq!(a.mean_accel_queue_ns(), 0.0);
+        let a = AccelStats {
+            active: true,
+            batches: 4,
+            tasks: 10,
+            max_batch: 4,
+            xfer_queue_ns: 50.0,
+            accel_queue_ns: 200.0,
+        };
+        assert!((a.mean_batch() - 2.5).abs() < 1e-12);
+        assert!((a.mean_xfer_queue_ns() - 5.0).abs() < 1e-12);
+        assert!((a.mean_accel_queue_ns() - 20.0).abs() < 1e-12);
     }
 
     #[test]

@@ -73,6 +73,9 @@ impl DegradeLevel {
 const DEV_FAR_FAIL: u64 = 0;
 const DEV_FAR_SPIKE: u64 = 1;
 const DEV_SSD_FAIL_BASE: u64 = 2;
+// SSD channels occupy `DEV_SSD_FAIL_BASE + shard` (unbounded above), so
+// the accelerator launch channel sits at the top of the id space.
+const DEV_ACCEL_LAUNCH: u64 = u64::MAX;
 
 /// One splitmix64 scramble round (same finalizer as `util::rng`'s
 /// seeder; reimplemented here because the fault plan needs a *stateless*
@@ -165,6 +168,17 @@ impl FaultPlan {
                 task as u64,
                 u64::from(attempt),
             )) < self.cfg.ssd_fail_rate
+    }
+
+    /// Does launch attempt `attempt` of the device batch *led by* task
+    /// `task` fail? The draw is keyed by the batch's first joiner, so a
+    /// failed batch retries *as a batch* (same membership, next attempt)
+    /// and the verdict stays a pure function of batch composition —
+    /// which is itself deterministic — not of event interleaving.
+    pub fn accel_launch_fails(&self, task: usize, attempt: u32) -> bool {
+        self.cfg.accel_fail_rate > 0.0
+            && unit(mix(self.cfg.seed, DEV_ACCEL_LAUNCH, task as u64, u64::from(attempt)))
+                < self.cfg.accel_fail_rate
     }
 
     /// Is `shard` inside a scheduled outage window at simulated instant
@@ -263,6 +277,41 @@ mod tests {
             .filter(|&t| p.far_read_fails(t, 0) && !p.far_read_fails(t, 1))
             .count();
         assert!(retried_ok > 50, "retries correlated with first attempts");
+    }
+
+    #[test]
+    fn accel_launch_channel_is_seeded_and_independent() {
+        let p = FaultPlan::new(FaultConfig {
+            seed: 42,
+            accel_fail_rate: 0.5,
+            ..Default::default()
+        });
+        assert!(p.enabled(), "accel_fail_rate alone must enable the plan");
+        // Pure: repeated queries agree bit-for-bit.
+        let fwd: Vec<bool> = (0..500).map(|t| p.accel_launch_fails(t, 0)).collect();
+        let again: Vec<bool> = (0..500).map(|t| p.accel_launch_fails(t, 0)).collect();
+        assert_eq!(fwd, again);
+        // Attempts are independent draws: a failed launch's retry is not
+        // doomed to fail too.
+        let retried_ok = (0..500)
+            .filter(|&t| p.accel_launch_fails(t, 0) && !p.accel_launch_fails(t, 1))
+            .count();
+        assert!(retried_ok > 50, "launch retries correlated with first attempts");
+        // Zero rate: inert and disabled.
+        let z = FaultPlan::new(FaultConfig { seed: 42, ..Default::default() });
+        assert!(!z.enabled());
+        assert!((0..100).all(|t| !z.accel_launch_fails(t, 0)));
+        // Independent channel: does not mirror the far-failure draws.
+        let both = FaultPlan::new(FaultConfig {
+            seed: 42,
+            far_fail_rate: 0.5,
+            accel_fail_rate: 0.5,
+            ..Default::default()
+        });
+        let same = (0..500)
+            .filter(|&t| both.far_read_fails(t, 0) == both.accel_launch_fails(t, 0))
+            .count();
+        assert!(same > 100 && same < 400, "accel channel correlated with far: {same}/500");
     }
 
     #[test]

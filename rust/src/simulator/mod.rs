@@ -40,6 +40,13 @@
 //!   misses surface as simulated SSD queue time. A warm cache (frames 0
 //!   or covering every page) never misses — bit-identical to the
 //!   in-memory engine by construction.
+//! - [`accel_batch`] — the batch-oriented accelerator rerank tier
+//!   ([`AccelServer`] + [`XferQueue`], `accel.rerank = batch`): a
+//!   GPU-class device with fixed launch overhead plus per-item cycle
+//!   cost (amortizes above the batch threshold), fronted by a PCIe/CXL
+//!   staging queue reusing the [`cxl`] profile machinery; the pipelined
+//!   scheduler coalesces concurrent rerank stages into device batches at
+//!   admission time.
 //! - [`fault`] — seeded deterministic fault injection ([`FaultPlan`]):
 //!   far-memory read failures and tail spikes, SSD read errors, and
 //!   whole-shard outage windows, each drawn by a stateless hash of
@@ -51,6 +58,7 @@
 //! they return simulated nanoseconds and keep queue state so sustained
 //! throughput saturates realistically.
 
+pub mod accel_batch;
 pub mod cxl;
 pub mod device;
 pub mod dram;
@@ -60,6 +68,7 @@ pub mod resource;
 pub mod ssd;
 pub mod timeline;
 
+pub use accel_batch::{accel_item_ns, AccelBatch, AccelServer, XferQueue, ACCEL_LAUNCH_OVERHEAD_NS};
 pub use cxl::{CxlLink, LinkAccess};
 pub use device::FarMemoryDevice;
 pub use dram::{DramAccess, DramSim};

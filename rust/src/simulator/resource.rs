@@ -117,6 +117,14 @@ impl<M: ServiceModel> ResourceServer<M> {
         &self.model
     }
 
+    /// Read-only view of the shared occupancy state (for policy layers
+    /// that need to know *when* a resource frees — e.g. the SSF lane
+    /// policy's "is any lane free now?" test — without a mutation path
+    /// outside [`ServiceModel::replay`]).
+    pub fn occ(&self) -> &M::Occ {
+        &self.occ
+    }
+
     /// Intrinsic (idle private device) service time of `req`.
     pub fn solo(&self, req: &M::Req) -> SimNs {
         let mut private = self.model.fresh();
@@ -244,6 +252,18 @@ impl LaneServer {
     pub fn admit(&mut self, dur: SimNs, at: SimNs) -> Grant {
         self.server.admit(&dur, at)
     }
+
+    /// Earliest instant any lane is free (0.0 when unbounded — a lane is
+    /// always free). An admission at `t >= earliest_free()` starts
+    /// immediately with `queue_ns == 0`; the SSF lane policy drains its
+    /// pending pool against this.
+    pub fn earliest_free(&self) -> SimNs {
+        let occ = self.server.occ();
+        if occ.is_empty() {
+            return 0.0;
+        }
+        occ.iter().copied().fold(f64::INFINITY, f64::min)
+    }
 }
 
 #[cfg(test)]
@@ -332,6 +352,18 @@ mod tests {
         for (a, b) in g2.iter().zip(&g4) {
             assert!(b.done_ns <= a.done_ns + 1e-9);
         }
+    }
+
+    #[test]
+    fn earliest_free_tracks_lane_occupancy() {
+        let mut s = LaneServer::new(2);
+        assert_eq!(s.earliest_free(), 0.0);
+        s.admit(100.0, 0.0);
+        assert_eq!(s.earliest_free(), 0.0, "second lane still free");
+        s.admit(60.0, 0.0);
+        assert_eq!(s.earliest_free(), 60.0, "shorter lane frees first");
+        // Unbounded lanes: a lane is always free.
+        assert_eq!(LaneServer::new(0).earliest_free(), 0.0);
     }
 
     #[test]

@@ -12,32 +12,15 @@ pub use threadpool::{parallel_for, ThreadPool};
 pub use topk::TopK;
 
 /// Squared Euclidean distance between two equal-length slices.
+///
+/// Delegates to the runtime-dispatched scan-row kernel
+/// ([`crate::kernels::pqscan::l2_row`]), so build/encode paths (k-means,
+/// TRQ encoding, ground truth) ride the same AVX2/scalar tier as the
+/// query path. The tiers are bit-identical by construction, so builds
+/// stay reproducible across hosts and under `FATRQ_FORCE_SCALAR`.
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    // 4-wide manual unroll; the compiler vectorizes this reliably.
-    let chunks = a.len() / 4 * 4;
-    let mut i = 0;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    while i < chunks {
-        let d0 = a[i] - b[i];
-        let d1 = a[i + 1] - b[i + 1];
-        let d2 = a[i + 2] - b[i + 2];
-        let d3 = a[i + 3] - b[i + 3];
-        s0 += d0 * d0;
-        s1 += d1 * d1;
-        s2 += d2 * d2;
-        s3 += d3 * d3;
-        i += 4;
-    }
-    acc += (s0 + s1) + (s2 + s3);
-    while i < a.len() {
-        let d = a[i] - b[i];
-        acc += d * d;
-        i += 1;
-    }
-    acc
+    crate::kernels::pqscan::l2_row(a, b)
 }
 
 /// Inner product of two equal-length slices.

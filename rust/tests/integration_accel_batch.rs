@@ -1,0 +1,378 @@
+//! Batch-coalescing accelerator rerank tier — end-to-end contracts.
+//!
+//! - **batch-1 bit-identity**: `batch_max = 1` seals every device batch
+//!   at its first joiner, so the batch window is structurally inert —
+//!   zero window, a huge window, and `batch_max = 8` with a zero window
+//!   all produce bit-identical serving timelines. This is the per-query
+//!   accelerator baseline every coalescing run is measured against.
+//! - **functional invariance**: where the rerank runs (host lanes vs
+//!   device batches) never changes the returned top-k — only the clock.
+//! - **depth-1 idle accounting**: one query in flight means an idle
+//!   transfer link and an idle device — queue_ns stays exactly 0.0.
+//! - **worker-count determinism**: the coalesced timeline, including
+//!   batch occupancies and both accel queue columns, is a pure function
+//!   of the stage profiles — identical across 1 vs 4 pool workers.
+//! - **coalescing pays**: under concurrency, larger admission batches
+//!   amortize the fixed launch overhead and the makespan drops below
+//!   the singleton-launch (batch_max = 1) makespan.
+//! - **faults compose**: a zero accel fault rate is structurally inert;
+//!   a seeded launch-fault plan retries whole batches deterministically
+//!   and degrades every member together once past the retry budget.
+
+use fatrq::config::{
+    AccelRerank, DatasetConfig, FaultConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig,
+    RefineMode, SystemConfig,
+};
+use fatrq::coordinator::{build_system_with, QueryEngine, QueryParams};
+use fatrq::vecstore::synthesize;
+use std::sync::Arc;
+
+fn cfg(kind: IndexKind) -> SystemConfig {
+    let mut cfg = SystemConfig {
+        dataset: DatasetConfig {
+            dim: 32,
+            count: 1600,
+            clusters: 12,
+            noise: 0.3,
+            query_noise: 0.8,
+            queries: 10,
+            seed: 23,
+        },
+        quant: QuantConfig { pq_m: 8, pq_nbits: 5, kmeans_iters: 6, train_sample: 1200 },
+        index: IndexConfig { kind, nlist: 16, nprobe: 16, ..Default::default() },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 120,
+            k: 10,
+            filter_ratio: 0.3,
+            calib_sample: 0.02,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.sim.shared_timeline = true;
+    cfg
+}
+
+fn cfg_queries(kind: IndexKind, queries: usize) -> SystemConfig {
+    let mut cfg = cfg(kind);
+    cfg.dataset.queries = queries;
+    cfg
+}
+
+#[test]
+fn batch_one_is_bit_identical_regardless_of_window() {
+    for kind in [IndexKind::Flat, IndexKind::Ivf] {
+        let cfg = cfg(kind);
+        let dataset = synthesize(&cfg.dataset);
+        let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+        let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+        for (mode, early_exit) in [
+            (RefineMode::Baseline, false),
+            (RefineMode::FatrqSw, false),
+            (RefineMode::FatrqHw, false),
+            (RefineMode::FatrqHw, true),
+        ] {
+            let params =
+                QueryParams::from_config(&cfg).with_mode(mode).with_early_exit(early_exit);
+            let host = engine.profile_with(&params, &dataset.queries);
+            // Three configurations that must collapse to the same
+            // singleton-launch timeline: batch_max = 1 seals at the
+            // first joiner no matter the window, and a zero window
+            // seals at the first joiner no matter the cap.
+            let mut dev = [
+                engine.profile_with(&params, &dataset.queries),
+                engine.profile_with(&params, &dataset.queries),
+                engine.profile_with(&params, &dataset.queries),
+            ];
+            for p in dev.iter_mut() {
+                p.set_accel_rerank(AccelRerank::Batch);
+            }
+            dev[0].set_accel_batch_max(1);
+            dev[0].set_accel_batch_window_us(0.0);
+            dev[1].set_accel_batch_max(1);
+            dev[1].set_accel_batch_window_us(1e6);
+            dev[2].set_accel_batch_max(8);
+            dev[2].set_accel_batch_window_us(0.0);
+            for depth in [1usize, 4, 16] {
+                let tag = format!("{}/{mode:?}/ee={early_exit}/depth={depth}", kind.name());
+                let (h_outs, _) = host.schedule(depth, 0.0);
+                let (a, ra) = dev[0].schedule(depth, 0.0);
+                let (b, rb) = dev[1].schedule(depth, 0.0);
+                let (c, rc) = dev[2].schedule(depth, 0.0);
+                assert!(ra.accel.active, "{tag}: accel tier inactive");
+                for q in 0..a.len() {
+                    // Moving the rerank onto the device is a timing
+                    // change only: the returned top-k never moves.
+                    assert_eq!(h_outs[q].topk, a[q].topk, "{tag}: query {q} host vs device");
+                    assert_eq!(a[q].topk, b[q].topk, "{tag}: query {q}");
+                    assert_eq!(b[q].topk, c[q].topk, "{tag}: query {q}");
+                    assert_eq!(
+                        a[q].breakdown.queue_ns, b[q].breakdown.queue_ns,
+                        "{tag}: query {q} queue"
+                    );
+                    assert_eq!(
+                        b[q].breakdown.queue_ns, c[q].breakdown.queue_ns,
+                        "{tag}: query {q} queue"
+                    );
+                    for (x, y) in [(&ra, &rb), (&rb, &rc)] {
+                        assert_eq!(x.timings[q].admit_ns, y.timings[q].admit_ns, "{tag}: {q}");
+                        assert_eq!(x.timings[q].done_ns, y.timings[q].done_ns, "{tag}: {q}");
+                        assert_eq!(
+                            x.timings[q].service_ns, y.timings[q].service_ns,
+                            "{tag}: {q}"
+                        );
+                    }
+                }
+                assert_eq!(ra.makespan_ns, rb.makespan_ns, "{tag}: makespan");
+                assert_eq!(rb.makespan_ns, rc.makespan_ns, "{tag}: makespan");
+                assert_eq!(ra.p99_ns, rb.p99_ns, "{tag}: p99");
+                for r in [&ra, &rb, &rc] {
+                    assert!(r.accel.max_batch <= 1, "{tag}: coalesced under batch-1 rules");
+                    if r.accel.batches > 0 {
+                        assert_eq!(r.accel.mean_batch(), 1.0, "{tag}: singleton launches");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn depth_one_device_path_never_queues() {
+    let cfg = cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let mut profile = engine.profile_with(engine.params(), &dataset.queries);
+    profile.set_accel_rerank(AccelRerank::Batch);
+    profile.set_accel_batch_max(1);
+    profile.set_accel_batch_window_us(0.0);
+    let (outs, rep) = profile.schedule(1, 0.0);
+    assert!(rep.accel.active);
+    assert!(rep.accel.tasks > 0, "the rerank stage must reach the device");
+    // One query in flight: the transfer link and the device are always
+    // idle at admission, so the carved-out per-member accounting must
+    // report exactly zero wait — not an ulp-sized residue.
+    assert_eq!(rep.accel.xfer_queue_ns, 0.0, "idle link must not queue");
+    assert_eq!(rep.accel.accel_queue_ns, 0.0, "idle device must not queue");
+    for (q, out) in outs.iter().enumerate() {
+        assert_eq!(out.breakdown.queue_ns, 0.0, "query {q} queued at depth 1");
+        assert!(out.breakdown.accel_batch <= 1, "query {q} batch occupancy");
+        let t = rep.timings[q];
+        let lat = t.done_ns - t.admit_ns;
+        assert!(
+            (lat - t.service_ns).abs() <= 1e-9 * t.service_ns.max(1.0),
+            "query {q}: depth-1 latency {lat} != service {}",
+            t.service_ns
+        );
+    }
+}
+
+#[test]
+fn coalesced_timeline_is_deterministic_across_worker_counts() {
+    let mut cfg = cfg_queries(IndexKind::Ivf, 16);
+    // IOPS headroom keeps rerank-ready instants close enough together
+    // that the 50 us window reliably coalesces (the `max_batch >= 2`
+    // check below needs real multi-member batches to be meaningful).
+    cfg.sim.ssd_kiops = 4800.0;
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let e1 = QueryEngine::with_threads(Arc::clone(&sys), 1);
+    let e4 = QueryEngine::with_threads(Arc::clone(&sys), 4);
+    let mut p1 = e1.profile_with(e1.params(), &dataset.queries);
+    let mut p4 = e4.profile_with(e4.params(), &dataset.queries);
+    for p in [&mut p1, &mut p4] {
+        p.set_accel_rerank(AccelRerank::Batch);
+        p.set_accel_batch_max(4);
+        p.set_accel_batch_window_us(50.0);
+    }
+    let (a, ra) = p1.schedule(8, 0.0);
+    let (b, rb) = p4.schedule(8, 0.0);
+    // Warm scratches: a second run must not drift either.
+    let (c, rc) = p4.schedule(8, 0.0);
+    assert_eq!(a.len(), b.len());
+    for q in 0..a.len() {
+        assert_eq!(a[q].topk, b[q].topk, "query {q}: 1 vs 4 workers");
+        assert_eq!(b[q].topk, c[q].topk, "query {q}: fresh vs warm scratch");
+        assert_eq!(a[q].breakdown.queue_ns, b[q].breakdown.queue_ns, "query {q}");
+        assert_eq!(a[q].breakdown.accel_batch, b[q].breakdown.accel_batch, "query {q}");
+        for (x, y) in [(&ra, &rb), (&rb, &rc)] {
+            assert_eq!(x.timings[q].arrival_ns, y.timings[q].arrival_ns, "query {q}");
+            assert_eq!(x.timings[q].admit_ns, y.timings[q].admit_ns, "query {q}");
+            assert_eq!(x.timings[q].done_ns, y.timings[q].done_ns, "query {q}");
+            assert_eq!(x.timings[q].service_ns, y.timings[q].service_ns, "query {q}");
+        }
+    }
+    for (x, y) in [(&ra, &rb), (&rb, &rc)] {
+        assert_eq!(x.makespan_ns, y.makespan_ns);
+        assert_eq!(x.p99_ns, y.p99_ns);
+        assert_eq!(x.accel.batches, y.accel.batches, "launch count");
+        assert_eq!(x.accel.tasks, y.accel.tasks, "device task count");
+        assert_eq!(x.accel.max_batch, y.accel.max_batch, "peak occupancy");
+        assert_eq!(x.accel.xfer_queue_ns, y.accel.xfer_queue_ns, "link wait");
+        assert_eq!(x.accel.accel_queue_ns, y.accel.accel_queue_ns, "device wait");
+    }
+    assert!(ra.accel.max_batch >= 2, "depth 8 must actually coalesce");
+}
+
+#[test]
+fn coalescing_amortizes_the_launch_overhead_under_load() {
+    let mut cfg = cfg_queries(IndexKind::Ivf, 24);
+    // IOPS headroom so the fixed launch overhead — not the SSD fetch
+    // path — is the batch-1 bottleneck; otherwise coalescing has nothing
+    // to amortize against and the monotonicity below is vacuous.
+    cfg.sim.ssd_kiops = 4800.0;
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let mut profile = engine.profile_with(engine.params(), &dataset.queries);
+    profile.set_accel_rerank(AccelRerank::Batch);
+    // A window well below the fixed launch overhead: waiting for a
+    // batchmate can never cost more than the launch it saves.
+    profile.set_accel_batch_window_us(20.0);
+    let mut runs = Vec::new();
+    for max in [1usize, 2, 4, 8] {
+        profile.set_accel_batch_max(max);
+        let (_, rep) = profile.schedule(16, 0.0);
+        runs.push((max, rep));
+    }
+    let (_, single) = &runs[0];
+    assert_eq!(single.accel.max_batch, 1, "batch_max = 1 must stay singleton");
+    let tasks = single.accel.tasks;
+    for (max, rep) in &runs[1..] {
+        // Throughput is monotone in the admission cap: every coalescing
+        // cap beats singleton launches — the amortized launch overhead
+        // dwarfs any window wait at this depth.
+        assert!(
+            rep.makespan_ns < single.makespan_ns,
+            "batch_max {max}: coalesced makespan {} not below singleton {}",
+            rep.makespan_ns,
+            single.makespan_ns
+        );
+        assert!(rep.accel.max_batch <= *max, "batch_max {max}: cap violated");
+        assert!(rep.accel.max_batch >= 2, "batch_max {max}: never coalesced");
+        assert!(
+            rep.accel.batches < single.accel.batches,
+            "batch_max {max}: coalescing must reduce launches"
+        );
+        assert!(rep.accel.mean_batch() > 1.0, "batch_max {max}: mean occupancy");
+        assert_eq!(rep.accel.tasks, tasks, "batch_max {max}: device task count moved");
+    }
+    // Deeper caps never launch more often than shallower ones.
+    for w in runs.windows(2) {
+        assert!(
+            w[1].1.accel.batches <= w[0].1.accel.batches,
+            "batch_max {} launched more batches than {}",
+            w[1].0,
+            w[0].0
+        );
+    }
+}
+
+#[test]
+fn zero_accel_fault_rate_is_structurally_inert() {
+    let cfg = cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let mut clean = engine.profile_with(engine.params(), &dataset.queries);
+    let mut gated = engine.profile_with(engine.params(), &dataset.queries);
+    for p in [&mut clean, &mut gated] {
+        p.set_accel_rerank(AccelRerank::Batch);
+        p.set_accel_batch_max(4);
+        p.set_accel_batch_window_us(50.0);
+    }
+    // A plan with a nonzero seed but zero rates is disabled: the launch
+    // fault branch must be structurally inert, not merely improbable.
+    gated.set_fault(FaultConfig { seed: 0xACCE_17ED, ..Default::default() });
+    for depth in [1usize, 8] {
+        let (a, ra) = clean.schedule(depth, 0.0);
+        let (b, rb) = gated.schedule(depth, 0.0);
+        assert!(!rb.availability.active, "depth {depth}: zero plan flagged active");
+        assert_eq!(ra.makespan_ns, rb.makespan_ns, "depth {depth}: makespan");
+        assert_eq!(ra.accel.batches, rb.accel.batches, "depth {depth}: launches");
+        assert_eq!(ra.accel.accel_queue_ns, rb.accel.accel_queue_ns, "depth {depth}");
+        for q in 0..a.len() {
+            assert_eq!(a[q].topk, b[q].topk, "depth {depth}: query {q}");
+            assert_eq!(b[q].breakdown.retries, 0, "depth {depth}: query {q} retried");
+            assert_eq!(
+                ra.timings[q].done_ns, rb.timings[q].done_ns,
+                "depth {depth}: query {q} done"
+            );
+        }
+    }
+}
+
+#[test]
+fn seeded_launch_faults_retry_whole_batches_deterministically() {
+    let cfg = cfg_queries(IndexKind::Ivf, 16);
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let e1 = QueryEngine::with_threads(Arc::clone(&sys), 1);
+    let e4 = QueryEngine::with_threads(Arc::clone(&sys), 4);
+    let mut p1 = e1.profile_with(e1.params(), &dataset.queries);
+    let mut p4 = e4.profile_with(e4.params(), &dataset.queries);
+    let plan = FaultConfig {
+        seed: 41,
+        accel_fail_rate: 0.5,
+        retry_limit: 2,
+        retry_backoff_us: 25.0,
+        ..Default::default()
+    };
+    for p in [&mut p1, &mut p4] {
+        p.set_accel_rerank(AccelRerank::Batch);
+        p.set_accel_batch_max(4);
+        p.set_accel_batch_window_us(50.0);
+        p.set_fault(plan.clone());
+    }
+    let (a, ra) = p1.schedule(8, 0.0);
+    let (b, rb) = p4.schedule(8, 0.0);
+    let (_, rc) = p4.schedule(8, 0.0);
+    assert!(ra.availability.active);
+    assert!(
+        ra.availability.retries > 0 || ra.availability.degraded > 0,
+        "a 50% launch failure rate must trip the fault path"
+    );
+    for q in 0..a.len() {
+        assert_eq!(a[q].topk, b[q].topk, "query {q}: 1 vs 4 workers");
+        // One fault draw per launch attempt, shared by the whole batch:
+        // a retried launch charges every member the same retry count.
+        assert_eq!(a[q].breakdown.retries, b[q].breakdown.retries, "query {q}");
+        for (x, y) in [(&ra, &rb), (&rb, &rc)] {
+            assert_eq!(x.timings[q].done_ns, y.timings[q].done_ns, "query {q}");
+            assert_eq!(x.timings[q].retries, y.timings[q].retries, "query {q}");
+            assert_eq!(x.timings[q].degrade, y.timings[q].degrade, "query {q}");
+        }
+    }
+    assert_eq!(ra.makespan_ns, rb.makespan_ns);
+    assert_eq!(rb.makespan_ns, rc.makespan_ns);
+    assert_eq!(ra.availability.retries, rb.availability.retries);
+    assert_eq!(ra.availability.degraded, rb.availability.degraded);
+    assert_eq!(ra.accel.batches, rb.accel.batches);
+    assert_eq!(ra.accel.tasks, rb.accel.tasks);
+
+    // Past the retry budget the whole batch degrades together: with a
+    // certain failure and no retries, no launch ever succeeds, every
+    // query falls back to its unverified ranking, and the device serves
+    // nothing — while every query still returns k results.
+    let mut doomed = e4.profile_with(e4.params(), &dataset.queries);
+    doomed.set_accel_rerank(AccelRerank::Batch);
+    doomed.set_accel_batch_max(4);
+    doomed.set_accel_batch_window_us(50.0);
+    doomed.set_fault(FaultConfig {
+        seed: 41,
+        accel_fail_rate: 1.0,
+        retry_limit: 0,
+        ..Default::default()
+    });
+    let (outs, rep) = doomed.schedule(8, 0.0);
+    assert!(rep.availability.active);
+    assert_eq!(rep.availability.degraded, outs.len(), "every query must degrade");
+    assert_eq!(rep.availability.dropped, 0, "launch faults degrade, never drop");
+    assert_eq!(rep.accel.tasks, 0, "no device task may survive a dead device");
+    assert_eq!(rep.accel.batches, 0, "no launch may succeed at rate 1.0");
+    for (q, out) in outs.iter().enumerate() {
+        assert_eq!(out.topk.len(), a[q].topk.len(), "query {q}: degraded k");
+    }
+}

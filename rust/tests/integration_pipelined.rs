@@ -28,8 +28,8 @@
 //!   and work-conservation contracts.
 
 use fatrq::config::{
-    ArrivalDist, DatasetConfig, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode,
-    StreamInterleave, SystemConfig, TenantSpec,
+    ArrivalDist, DatasetConfig, IndexConfig, IndexKind, LanePolicy, QuantConfig, RefineConfig,
+    RefineMode, StreamInterleave, SystemConfig, TenantSpec,
 };
 use fatrq::coordinator::{build_system_with, Pipeline, QueryEngine, QueryParams, ShardedEngine};
 use fatrq::vecstore::synthesize;
@@ -721,4 +721,97 @@ fn record_interleave_keeps_depth1_identity_and_work_conservation() {
     );
     let queued: f64 = outs_r16.iter().map(|o| o.breakdown.queue_ns).sum();
     assert!(queued > 0.0, "overlapping record-mode streams must still contend");
+}
+
+#[test]
+fn fcfs_lane_policy_is_the_default_and_bit_identical() {
+    // FCFS is the shipped default; setting it explicitly — or enabling
+    // SSF with unbounded lanes, where reordering a queue that never
+    // forms is meaningless — must reproduce the untouched clock
+    // bit-for-bit at every depth.
+    let cfg = cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let params = QueryParams::from_config(&cfg).with_mode(RefineMode::FatrqSw);
+    let base = engine.profile_with(&params, &dataset.queries);
+    let mut explicit = engine.profile_with(&params, &dataset.queries);
+    explicit.set_lane_policy(LanePolicy::Fcfs);
+    let mut ssf_unbounded = engine.profile_with(&params, &dataset.queries);
+    ssf_unbounded.set_lane_policy(LanePolicy::Ssf);
+    ssf_unbounded.set_cpu_lanes(0);
+    for depth in [1usize, 8] {
+        let (a, ra) = base.schedule(depth, 0.0);
+        let (b, rb) = explicit.schedule(depth, 0.0);
+        let (c, rc) = ssf_unbounded.schedule(depth, 0.0);
+        assert_eq!(ra.makespan_ns, rb.makespan_ns, "depth {depth}: explicit fcfs");
+        assert_eq!(ra.makespan_ns, rc.makespan_ns, "depth {depth}: ssf w/o lanes");
+        for q in 0..a.len() {
+            assert_eq!(a[q].topk, b[q].topk, "depth {depth}: query {q}");
+            assert_eq!(a[q].topk, c[q].topk, "depth {depth}: query {q}");
+            assert_eq!(a[q].breakdown.queue_ns, b[q].breakdown.queue_ns, "{depth}/{q}");
+            assert_eq!(a[q].breakdown.queue_ns, c[q].breakdown.queue_ns, "{depth}/{q}");
+            assert_eq!(ra.timings[q].done_ns, rb.timings[q].done_ns, "{depth}/{q}");
+            assert_eq!(ra.timings[q].done_ns, rc.timings[q].done_ns, "{depth}/{q}");
+        }
+    }
+}
+
+#[test]
+fn ssf_lane_policy_is_deterministic_and_work_conserving() {
+    let cfg = cfg_queries(IndexKind::Ivf, 16);
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let e1 = QueryEngine::with_threads(Arc::clone(&sys), 1);
+    let e4 = QueryEngine::with_threads(Arc::clone(&sys), 4);
+    // SW refinement is the most lane-hungry mode: shortest-first has
+    // real choices to make when a single lane serializes it.
+    let params = QueryParams::from_config(&cfg).with_mode(RefineMode::FatrqSw);
+    let mut fcfs = e4.profile_with(&params, &dataset.queries);
+    fcfs.set_cpu_lanes(1);
+    let mut s1 = e1.profile_with(&params, &dataset.queries);
+    let mut s4 = e4.profile_with(&params, &dataset.queries);
+    for p in [&mut s1, &mut s4] {
+        p.set_cpu_lanes(1);
+        p.set_lane_policy(LanePolicy::Ssf);
+    }
+    let (f_outs, f_rep) = fcfs.schedule(8, 0.0);
+    let (a, ra) = s1.schedule(8, 0.0);
+    let (b, rb) = s4.schedule(8, 0.0);
+    for q in 0..a.len() {
+        // Admission order is a timing concern only.
+        assert_eq!(f_outs[q].topk, a[q].topk, "query {q}: fcfs vs ssf");
+        assert_eq!(a[q].topk, b[q].topk, "query {q}: 1 vs 4 workers");
+        assert_eq!(a[q].breakdown.queue_ns, b[q].breakdown.queue_ns, "query {q}");
+        assert_eq!(ra.timings[q].admit_ns, rb.timings[q].admit_ns, "query {q}");
+        assert_eq!(ra.timings[q].done_ns, rb.timings[q].done_ns, "query {q}");
+        assert_eq!(ra.timings[q].service_ns, rb.timings[q].service_ns, "query {q}");
+    }
+    assert_eq!(ra.makespan_ns, rb.makespan_ns, "ssf across worker counts");
+    assert_eq!(ra.p99_ns, rb.p99_ns);
+    // Work conservation survives the reorder: never worse than the
+    // fully serialized schedule, and shortest-first should not hurt the
+    // mean at a contended single lane (a loose guard, not a theorem —
+    // SSF trades tail for mean).
+    let m1 = s4.schedule(1, 0.0).1.makespan_ns;
+    assert!(
+        ra.makespan_ns <= m1 * (1.0 + 1e-9),
+        "ssf depth-8 makespan {} above serialized {m1}",
+        ra.makespan_ns
+    );
+    assert!(
+        ra.mean_latency_ns <= f_rep.mean_latency_ns * 1.10,
+        "ssf mean {} well above fcfs mean {}",
+        ra.mean_latency_ns,
+        f_rep.mean_latency_ns
+    );
+    // Depth 1 leaves one stage in flight at a time: nothing to reorder,
+    // so SSF must reproduce FCFS bit-for-bit.
+    let (fd1, frd1) = fcfs.schedule(1, 0.0);
+    let (sd1, srd1) = s4.schedule(1, 0.0);
+    assert_eq!(frd1.makespan_ns, srd1.makespan_ns, "depth-1 ssf == fcfs");
+    for q in 0..fd1.len() {
+        assert_eq!(fd1[q].breakdown.queue_ns, sd1[q].breakdown.queue_ns, "query {q}");
+        assert_eq!(frd1.timings[q].done_ns, srd1.timings[q].done_ns, "query {q}");
+    }
 }
