@@ -195,6 +195,8 @@ impl Pipelined<'_> {
             availability: Default::default(),
             cache: Default::default(),
             mean_pagein_queue_ns: 0.0,
+            accel: Default::default(),
+            farpool: Default::default(),
             breakdown: agg,
             mode: mode.name(),
         }
@@ -322,6 +324,34 @@ pub fn gen_arrival_trace(kind: &str, n: usize, qps: f64, seed: u64) -> crate::Re
     Ok(out)
 }
 
+/// Seeded Zipfian query-id sampler for skewed-load sweeps (the fig8 far
+/// pool section): `n` draws over ranks `0..n` with
+/// `P(rank r) ∝ 1 / (r + 1)^s` — `s = 0` is uniform, larger exponents
+/// concentrate probes on the low ranks. Inverse-CDF over the precomputed
+/// normalized weights, so the sample is a pure function of
+/// `(seed, n, s)`: bit-reproducible across hosts and worker counts.
+pub fn gen_zipf_queries(seed: u64, n: usize, s: f64) -> crate::Result<Vec<usize>> {
+    anyhow::ensure!(n > 0, "zipf sampler needs at least one rank");
+    anyhow::ensure!(
+        s.is_finite() && s >= 0.0,
+        "zipf sampler needs a finite non-negative exponent (got {s})"
+    );
+    let mut cdf = Vec::with_capacity(n);
+    let mut total = 0.0f64;
+    for r in 0..n {
+        total += 1.0 / ((r + 1) as f64).powf(s);
+        cdf.push(total);
+    }
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0x21BF_5EED);
+    let out = (0..n)
+        .map(|_| {
+            let u = rng.f64() * total;
+            cdf.partition_point(|&c| c < u).min(n - 1)
+        })
+        .collect();
+    Ok(out)
+}
+
 /// Print a markdown-style table row.
 pub fn row(cells: &[String]) {
     println!("| {} |", cells.join(" | "));
@@ -372,6 +402,34 @@ mod tests {
                 "{kind}: span {span:.0} ns vs nominal {nominal:.0} ns"
             );
         }
+    }
+
+    #[test]
+    fn zipf_queries_are_deterministic_and_monotone_in_exponent() {
+        let a = gen_zipf_queries(11, 2000, 1.2).unwrap();
+        let b = gen_zipf_queries(11, 2000, 1.2).unwrap();
+        assert_eq!(a.len(), 2000);
+        assert_eq!(a, b, "sample must be a pure function of (seed, n, s)");
+        assert!(a.iter().all(|&r| r < 2000), "ranks stay in 0..n");
+        // Higher exponents concentrate more probes on the low ranks:
+        // the head share must grow strictly with s.
+        let head = |s: f64| {
+            gen_zipf_queries(11, 2000, s).unwrap().iter().filter(|&&r| r < 200).count()
+        };
+        let (h0, h1, h2) = (head(0.0), head(0.8), head(1.6));
+        assert!(
+            h0 < h1 && h1 < h2,
+            "head share must be monotone in the exponent: {h0} {h1} {h2}"
+        );
+        // s = 0 is uniform: about 10% of draws land in the first 10%.
+        assert!((150..=250).contains(&h0), "uniform head share off: {h0}");
+    }
+
+    #[test]
+    fn zipf_queries_reject_bad_inputs() {
+        assert!(gen_zipf_queries(1, 0, 1.0).is_err(), "zero ranks");
+        assert!(gen_zipf_queries(1, 10, -0.5).is_err(), "negative exponent");
+        assert!(gen_zipf_queries(1, 10, f64::NAN).is_err(), "NaN exponent");
     }
 
     #[test]

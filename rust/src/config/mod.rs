@@ -626,6 +626,99 @@ impl Default for AccelConfig {
     }
 }
 
+/// Placement policy for TRQ record ranges across the far-memory device
+/// pool (`far.placement`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FarPlacement {
+    /// Round-robin stripes: record range `r` lives on device
+    /// `r % devices`.
+    Interleave,
+    /// Today's layout: every record stream of shard `s` lives on device
+    /// `s % devices` (with one device this is exactly the single-timeline
+    /// model).
+    #[default]
+    ShardAffine,
+    /// Interleave base layout, plus the top-α hottest ranges (by probe
+    /// frequency over the batch's record streams) replicated on
+    /// `far.replicas` consecutive devices; replicated admissions pick the
+    /// least-loaded replica (weighted virtual work, deterministic
+    /// lowest-device tie-break).
+    ReplicateHot,
+}
+
+impl FarPlacement {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "interleave" => FarPlacement::Interleave,
+            "shard-affine" => FarPlacement::ShardAffine,
+            "replicate-hot" => FarPlacement::ReplicateHot,
+            other => bail!(
+                "unknown far placement `{other}` (interleave|shard-affine|replicate-hot)"
+            ),
+        })
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            FarPlacement::Interleave => "interleave",
+            FarPlacement::ShardAffine => "shard-affine",
+            FarPlacement::ReplicateHot => "replicate-hot",
+        }
+    }
+}
+
+/// Far-memory CXL device pool (`[far]`): the far tier as `devices`
+/// independent deterministic device timelines with a placement policy
+/// for TRQ record ranges and per-query device selection for replicated
+/// ranges. `devices = 1` (the default) reproduces the single-timeline
+/// clock bit-for-bit under every placement policy — runtime-asserted by
+/// the fig8 smoke and `tests/integration_farpool.rs`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FarConfig {
+    /// CXL devices in the pool (>= 1; > 1 requires `sim.shared_timeline`).
+    pub devices: usize,
+    /// Record-range placement policy across the pool.
+    pub placement: FarPlacement,
+    /// Replicas per hot range under `replicate-hot` (1..=devices).
+    pub replicas: usize,
+    /// Fraction of distinct record ranges treated as hot under
+    /// `replicate-hot`, by descending probe frequency (in [0,1]).
+    pub hot_alpha: f64,
+    /// Record-range granularity in KiB (must be positive): range id =
+    /// record address / (range_kb * 1024).
+    pub range_kb: usize,
+    /// Carry tenant QoS weights past admission into the record-interleave
+    /// rotation: a tenant with weight w serves up to
+    /// `round(w / min_weight)` consecutive records per round. Off by
+    /// default so unequal tenant weights never perturb the 1-device
+    /// bit-identity contract; requires `sim.shared_timeline`.
+    pub qos_shares: bool,
+    /// Optional per-device CXL bandwidth scale factors (TOML only; empty
+    /// = every device at `sim.cxl_bandwidth_gbps`). Entry `d` scales
+    /// device `d`; missing trailing entries default to 1.0.
+    pub bandwidth_scale: Vec<f64>,
+}
+
+impl Default for FarConfig {
+    fn default() -> Self {
+        FarConfig {
+            devices: 1,
+            placement: FarPlacement::ShardAffine,
+            replicas: 2,
+            hot_alpha: 0.1,
+            range_kb: 64,
+            qos_shares: false,
+            bandwidth_scale: Vec::new(),
+        }
+    }
+}
+
+impl FarConfig {
+    /// Record-range granularity in bytes.
+    pub fn range_bytes(&self) -> u64 {
+        (self.range_kb as u64) * 1024
+    }
+}
+
 /// Serving-scheduler parameters (the pipelined batch path).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServeConfig {
@@ -736,6 +829,7 @@ pub struct SystemConfig {
     pub serve: ServeConfig,
     pub cache: CacheConfig,
     pub accel: AccelConfig,
+    pub far: FarConfig,
 }
 
 impl SystemConfig {
@@ -758,6 +852,7 @@ impl SystemConfig {
                 "serve" => apply_serve(&mut cfg.serve, sub)?,
                 "cache" => apply_cache(&mut cfg.cache, sub)?,
                 "accel" => apply_accel(&mut cfg.accel, sub)?,
+                "far" => apply_far(&mut cfg.far, sub)?,
                 other => bail!("unknown config section [{other}]"),
             }
         }
@@ -901,6 +996,52 @@ impl SystemConfig {
                  lanes never queue, so an admission-order policy would be silently \
                  ignored)"
             );
+        }
+        let far = &self.far;
+        if far.devices == 0 {
+            bail!("far.devices must be at least 1 (the pool needs a device)");
+        }
+        if far.devices > 1 && !self.sim.shared_timeline {
+            bail!(
+                "far.devices > 1 requires sim.shared_timeline (the pool places record \
+                 streams on admission-time device timelines; without the shared \
+                 timeline every stream runs on a private idle device and the pool \
+                 would be silently ignored)"
+            );
+        }
+        if far.qos_shares && !self.sim.shared_timeline {
+            bail!(
+                "far.qos_shares requires sim.shared_timeline (tenant shares weight the \
+                 shared record-interleave rotation; without the shared timeline the \
+                 knob would be silently ignored)"
+            );
+        }
+        if far.placement == FarPlacement::ReplicateHot
+            && !(1..=far.devices).contains(&far.replicas)
+        {
+            bail!(
+                "far.replicas ({}) must be in 1..=far.devices ({}) under replicate-hot",
+                far.replicas,
+                far.devices
+            );
+        }
+        if !(0.0..=1.0).contains(&far.hot_alpha) {
+            bail!("far.hot_alpha must be in [0,1]");
+        }
+        if far.range_kb == 0 {
+            bail!("far.range_kb must be positive");
+        }
+        if far.bandwidth_scale.len() > far.devices {
+            bail!(
+                "far.bandwidth_scale has {} entries for {} devices",
+                far.bandwidth_scale.len(),
+                far.devices
+            );
+        }
+        for (d, &s) in far.bandwidth_scale.iter().enumerate() {
+            if !s.is_finite() || s <= 0.0 {
+                bail!("far.bandwidth_scale[{d}] must be a positive finite scale (got {s})");
+            }
         }
         Ok(())
     }
@@ -1108,6 +1249,35 @@ fn apply_accel(c: &mut AccelConfig, t: &Table) -> Result<()> {
             "batch_max" => c.batch_max = need_usize(v, k)?,
             "batch_window_us" => c.batch_window_us = need_f64(v, k)?,
             other => bail!("unknown key accel.{other}"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_far(c: &mut FarConfig, t: &Table) -> Result<()> {
+    for (k, v) in t {
+        match k.as_str() {
+            "devices" => c.devices = need_usize(v, k)?,
+            "placement" => {
+                c.placement =
+                    FarPlacement::parse(v.as_str().context("far.placement must be a string")?)?
+            }
+            "replicas" => c.replicas = need_usize(v, k)?,
+            "hot_alpha" => c.hot_alpha = need_f64(v, k)?,
+            "range_kb" => c.range_kb = need_usize(v, k)?,
+            "qos_shares" => {
+                c.qos_shares = v.as_bool().context("far.qos_shares must be a bool")?
+            }
+            "bandwidth_scale" => {
+                let arr = v.as_array().context("far.bandwidth_scale must be an array")?;
+                c.bandwidth_scale = arr
+                    .iter()
+                    .map(|x| {
+                        x.as_float().context("far.bandwidth_scale entries must be numbers")
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            other => bail!("unknown key far.{other}"),
         }
     }
     Ok(())
@@ -1366,6 +1536,65 @@ mod tests {
         let cfg = SystemConfig::from_toml(ok).unwrap();
         assert_eq!(cfg.sim.fault.accel_fail_rate, 0.1);
         assert!(cfg.sim.fault.enabled());
+    }
+
+    #[test]
+    fn far_config_roundtrip_and_validation() {
+        let doc = r#"
+            [sim]
+            shared_timeline = true
+
+            [far]
+            devices = 4
+            placement = "replicate-hot"
+            replicas = 2
+            hot_alpha = 0.2
+            range_kb = 32
+            qos_shares = true
+            bandwidth_scale = [1.0, 0.5, 2.0]
+        "#;
+        let cfg = SystemConfig::from_toml(doc).unwrap();
+        assert_eq!(cfg.far.devices, 4);
+        assert_eq!(cfg.far.placement, FarPlacement::ReplicateHot);
+        assert_eq!(cfg.far.replicas, 2);
+        assert_eq!(cfg.far.hot_alpha, 0.2);
+        assert_eq!(cfg.far.range_kb, 32);
+        assert_eq!(cfg.far.range_bytes(), 32 * 1024);
+        assert!(cfg.far.qos_shares);
+        assert_eq!(cfg.far.bandwidth_scale, vec![1.0, 0.5, 2.0]);
+        // Defaults are the single-device identity configuration.
+        let d = FarConfig::default();
+        assert_eq!((d.devices, d.replicas, d.range_kb), (1, 2, 64));
+        assert_eq!(d.placement, FarPlacement::ShardAffine);
+        assert!(!d.qos_shares);
+        assert!(d.bandwidth_scale.is_empty());
+        SystemConfig::default().validate().unwrap();
+        assert_eq!(FarPlacement::parse("interleave").unwrap(), FarPlacement::Interleave);
+        assert!(FarPlacement::parse("hot").is_err());
+        assert_eq!(FarPlacement::ReplicateHot.name(), "replicate-hot");
+        // Rejection paths: zero devices, pool without the shared
+        // timeline, replica count out of range, bad alpha / range /
+        // scale vectors, unknown keys.
+        for bad in [
+            "[far]\ndevices = 0",
+            "[far]\ndevices = 2",
+            "[far]\nqos_shares = true",
+            "[sim]\nshared_timeline = true\n[far]\ndevices = 2\nplacement = \"replicate-hot\"\nreplicas = 3",
+            "[sim]\nshared_timeline = true\n[far]\ndevices = 2\nplacement = \"replicate-hot\"\nreplicas = 0",
+            "[far]\nhot_alpha = 1.5",
+            "[far]\nrange_kb = 0",
+            "[sim]\nshared_timeline = true\n[far]\ndevices = 2\nbandwidth_scale = [1.0, 2.0, 3.0]",
+            "[far]\nbandwidth_scale = [-1.0]",
+            "[far]\nbogus = 1",
+        ] {
+            assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
+        }
+        // A 1-device pool accepts every placement without the shared
+        // timeline — it is exactly the single-timeline model.
+        for p in ["interleave", "shard-affine", "replicate-hot"] {
+            let ok = format!("[far]\nplacement = \"{p}\"\nreplicas = 1");
+            assert!(SystemConfig::from_toml(&ok).is_ok(), "rejected: {ok}");
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::coordinator::pipeline::Breakdown;
 use crate::coordinator::pipelined::{ServeReport, TenantLat};
 use crate::coordinator::stage::QueryScratch;
 use crate::index::FlatIndex;
-use crate::metrics::{recall_at_k, AccelStats, Availability, CacheStats, LatencyStats};
+use crate::metrics::{recall_at_k, AccelStats, Availability, CacheStats, FarPoolStats, LatencyStats};
 use crate::util::threadpool::ThreadPool;
 use crate::util::topk::Scored;
 use std::sync::Mutex;
@@ -64,6 +64,9 @@ pub struct BatchReport {
     /// Batch-accelerator occupancy + transfer-queue columns of the
     /// serving timeline (inactive with the CPU rerank).
     pub accel: AccelStats,
+    /// Far-memory device-pool columns of the serving timeline (inactive
+    /// with a single device).
+    pub farpool: FarPoolStats,
     /// Mean per-stage breakdown.
     pub breakdown: Breakdown,
     pub mode: &'static str,
@@ -187,6 +190,10 @@ pub fn report_with_serve(
         Some(s) => s.accel,
         None => AccelStats::default(),
     };
+    let farpool = match serve {
+        Some(s) => s.farpool.clone(),
+        None => FarPoolStats::default(),
+    };
     BatchReport {
         queries: nq,
         mean_recall: recall_sum / n,
@@ -209,6 +216,7 @@ pub fn report_with_serve(
         cache,
         mean_pagein_queue_ns,
         accel,
+        farpool,
         breakdown: agg,
         mode,
     }

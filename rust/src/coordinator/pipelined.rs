@@ -26,8 +26,10 @@
 //!    in flight (depth 0 = unbounded, the closed batch); every contended
 //!    resource is a deterministic **resource server**
 //!    ([`crate::simulator::resource`]) behind the same FCFS
-//!    idle-reduction policy: each query's far-memory stream reserves the
-//!    shared [`TimelineSched`] at the instant its front stage completes,
+//!    idle-reduction policy: each query's far-memory stream reserves a
+//!    device of the far pool ([`FarPool`], `far.devices` independent
+//!    [`crate::simulator::TimelineSched`] timelines behind placement /
+//!    replica routing) at the instant its front stage completes,
 //!    its survivor fetch reserves the shared per-shard [`SsdQueue`] when
 //!    refinement completes, and — new with `serve.cpu_lanes` — its
 //!    front / SW-refine / rerank / merge compute stages occupy a bounded
@@ -98,18 +100,17 @@
 //! duration ties), cutting head-of-line blocking at small lane counts.
 
 use crate::config::{
-    AccelConfig, AccelRerank, FaultConfig, LanePolicy, RefineMode, SimConfig, StreamInterleave,
-    TenantSpec,
+    AccelConfig, AccelRerank, FarConfig, FarPlacement, FaultConfig, LanePolicy, RefineMode,
+    SimConfig, StreamInterleave, TenantSpec,
 };
 use crate::coordinator::builder::BuiltSystem;
 use crate::coordinator::engine::QueryParams;
 use crate::coordinator::pipeline::QueryOutcome;
 use crate::coordinator::stage::{run_stage, FallbackTopk, QueryScratch, Stage, StageState};
-use crate::metrics::{AccelStats, Availability, CacheStats, LatencyStats};
+use crate::metrics::{AccelStats, Availability, CacheStats, FarPoolStats, LatencyStats};
 use crate::simulator::{
-    accel_item_ns, AccelBatch, AccelServer, CachePlan, DegradeLevel, FarStream, FaultPlan,
-    LaneServer, PageCache, SsdQueue, StreamTiming, TimelineSched, XferQueue,
-    ACCEL_LAUNCH_OVERHEAD_NS,
+    accel_item_ns, AccelBatch, AccelServer, CachePlan, DegradeLevel, FarPool, FarStream, FaultPlan,
+    LaneServer, PageCache, SsdQueue, StreamTiming, XferQueue, ACCEL_LAUNCH_OVERHEAD_NS,
 };
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
@@ -354,6 +355,9 @@ pub struct ServeReport {
     /// Batch-accelerator occupancy + transfer-queue accounting (inactive
     /// when the rerank runs on CPU lanes).
     pub accel: AccelStats,
+    /// Far-memory device-pool accounting (per-device admissions / queue
+    /// wait / virtual work, failover count; inactive with one device).
+    pub farpool: FarPoolStats,
 }
 
 impl ServeReport {
@@ -540,6 +544,10 @@ pub(crate) struct SimInput<'a> {
     /// CPU-lane admission policy (`Fcfs` reproduces the original clock
     /// bit-for-bit; `Ssf` admits shortest-expected-service first).
     pub lane_policy: LanePolicy,
+    /// Far-memory device pool (placement, replication, QoS shares).
+    /// `devices = 1` reproduces the single-timeline clock bit-for-bit
+    /// under every placement.
+    pub far: &'a FarConfig,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -667,6 +675,9 @@ struct SimState<'a> {
     /// first try; bumped on each retry).
     far_attempt: Vec<u32>,
     ssd_attempt: Vec<u32>,
+    /// Pool device each task's far stream was routed to (0 with one
+    /// device) — the fault channel and failover rotation key off it.
+    far_dev: Vec<usize>,
     // -- Batch-accelerator rerank tier (`accel.rerank = batch`) --
     /// Whether the rerank runs on the batch accelerator. Off = the CPU
     /// rerank path, bit-for-bit.
@@ -854,7 +865,7 @@ impl SimState<'_> {
         if self.faults_on {
             let pr = &self.profiles[t];
             if pr.far_solo_ns > 0.0 || !pr.stream.addrs.is_empty() {
-                let spike = self.fault.far_spike_ns(t, self.far_attempt[t]);
+                let spike = self.fault.far_spike_ns_dev(self.far_dev[t], t, self.far_attempt[t]);
                 if spike > 0.0 {
                     self.task_timing[t].fault_delay_ns += spike;
                     far_done += spike;
@@ -1090,7 +1101,24 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         "cache plans need one cache per shard and one page list per task"
     );
 
-    let mut far = TimelineSched::new(input.sim);
+    // The far tier is a pool of `far.devices` independent device
+    // timelines behind placement / replica routing; `devices = 1` (the
+    // default) routes every stream to device 0 through the identical
+    // single-timeline entry points — today's clock bit-for-bit. The
+    // `replicate-hot` hot-set pre-pass runs over the batch's captured
+    // streams, a pure function of the inputs, never of event order.
+    let mut far = FarPool::new(input.sim, input.far, profiles.iter().map(|p| &p.stream));
+    // Per-tenant far QoS record shares (integerized weight ratios; all 1
+    // unless `far.qos_shares` — share 1 is the unweighted rotation
+    // bit-for-bit).
+    let far_share: Vec<u32> = if input.far.qos_shares && !tenants.is_empty() {
+        let min_w = tenants.iter().map(|t| t.weight).fold(f64::INFINITY, f64::min).max(1e-12);
+        tenants.iter().map(|t| ((t.weight / min_w).round() as u32).max(1)).collect()
+    } else {
+        vec![1; ntenants]
+    };
+    let tenant_weight =
+        |tn: usize| -> f64 { if tenants.is_empty() { 1.0 } else { tenants[tn].weight } };
     let mut ssd: Vec<SsdQueue> = (0..shards).map(|_| SsdQueue::new(input.sim)).collect();
     let accel_on = input.accel.rerank == AccelRerank::Batch;
     let mut st = SimState {
@@ -1111,6 +1139,7 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         deadline_ns,
         far_attempt: vec![0u32; nq_shards],
         ssd_attempt: vec![0u32; nq_shards],
+        far_dev: vec![0usize; nq_shards],
         accel_on,
         batch_max: input.accel.batch_max.max(1),
         window_ns: input.accel.batch_window_us * 1e3,
@@ -1164,14 +1193,28 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
             }
             EvKind::FarReady(t) => {
                 let pr = &profiles[t];
+                let has_far = pr.far_solo_ns > 0.0 || !pr.stream.addrs.is_empty();
+                // Route the stream onto its pool device up front: the
+                // fault draw is per-device, and a retry of a replicated
+                // range rotates to the next replica in the ring (`prev`
+                // = the device the failed attempt ran on). With one
+                // device everything routes to device 0 — the legacy
+                // timeline and the legacy fault channel, bit-for-bit.
+                if has_far {
+                    let prev =
+                        if st.far_attempt[t] > 0 { Some(st.far_dev[t]) } else { None };
+                    st.far_dev[t] = far.route(&pr.stream, t % shards, prev);
+                }
                 // Fault policies at the far-stage boundary (consulted
                 // only when a fault plan or deadline is active; a
                 // fault-free run never enters this block). An outage
                 // drops the shard task; deadline pressure or a read
                 // failure past the retry budget degrades to the coarse
-                // ranking; a failure within budget re-admits after a
-                // deterministic backoff. Admission order stays FCFS:
-                // retries re-enter through the time-ordered heap.
+                // ranking; a failure within budget re-admits — on the
+                // next replica immediately while the stream's range has
+                // unvisited replicas, after a deterministic backoff
+                // otherwise. Admission order stays FCFS: retries
+                // re-enter through the time-ordered heap.
                 let faulted = (st.faults_on || st.deadline_ns > 0.0) && {
                     if st.faults_on && fault.shard_out(t % shards, now) {
                         st.degrade_task(t, DegradeLevel::Dropped, now);
@@ -1179,14 +1222,21 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
                     } else if st.past_deadline(t, now) {
                         st.degrade_task(t, DegradeLevel::CoarseOnly, now);
                         true
-                    } else if (pr.far_solo_ns > 0.0 || !pr.stream.addrs.is_empty())
-                        && fault.far_read_fails(t, st.far_attempt[t])
+                    } else if has_far
+                        && fault.far_read_fails_dev(st.far_dev[t], t, st.far_attempt[t])
                     {
                         let a = st.far_attempt[t];
                         if a < fault.retry_limit() {
                             st.far_attempt[t] = a + 1;
                             st.task_timing[t].retries += 1;
-                            st.push(now + fault.backoff_ns(a), EvKind::FarReady(t));
+                            if (a as usize) + 1 < far.replica_count(&pr.stream) {
+                                // Replica failover: another replica holds
+                                // the range — re-admit immediately, the
+                                // re-entry rotates the ring via `prev`.
+                                st.push(now, EvKind::FarReady(t));
+                            } else {
+                                st.push(now + fault.backoff_ns(a), EvKind::FarReady(t));
+                            }
                         } else {
                             st.degrade_task(t, DegradeLevel::CoarseOnly, now);
                         }
@@ -1195,13 +1245,23 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
                         false
                     }
                 };
+                let tn = tenant(t / shards);
                 if !faulted && record_mode && !pr.stream.addrs.is_empty() {
-                    // Register on the round-robin arbiter and re-issue
-                    // tentative completions for every live stream the
-                    // re-arbitration may have shifted (never earlier than
-                    // `now` — fairness only delays). Finalized streams no
-                    // longer appear in the result.
-                    let all = far.admit_interleaved(&pr.stream, now);
+                    // Register on the routed device's round-robin arbiter
+                    // and re-issue tentative completions for every live
+                    // stream the re-arbitration may have shifted (never
+                    // earlier than `now` — fairness only delays).
+                    // Finalized streams no longer appear in the result;
+                    // the pool translates device registrations into the
+                    // pool-wide space, which advances in lockstep with
+                    // `reg_task`.
+                    let all = far.admit_interleaved(
+                        st.far_dev[t],
+                        &pr.stream,
+                        now,
+                        far_share[tn],
+                        tenant_weight(tn),
+                    );
                     far_reg[t] = reg_task.len();
                     reg_task.push(t);
                     for &(reg, timing) in &all {
@@ -1214,7 +1274,7 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
                         st.push(timing.shared_ns.max(now), EvKind::FarDone(rt, far_ver[rt]));
                     }
                 } else if !faulted && shared {
-                    let s = far.admit(&pr.stream, now);
+                    let s = far.admit(st.far_dev[t], &pr.stream, now, tenant_weight(tn));
                     st.task_timing[t].far_solo_ns = s.solo_ns;
                     st.task_timing[t].far_queue_ns = s.queue_ns;
                     st.after_far_faulted(t, s.shared_ns);
@@ -1230,9 +1290,10 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
                 far_finalized[t] = true;
                 // Tell the arbiter this completion is pinned: it drops
                 // the stream from re-arbitration and, once its records
-                // are committed, checkpoints it out of the rotation.
-                far.finalize(far_reg[t]);
+                // are committed, checkpoints it out of the rotation. The
+                // final queue wait lands on the serving device's column.
                 let s = far_latest[t];
+                far.finalize(far_reg[t], s.queue_ns);
                 st.task_timing[t].far_solo_ns = s.solo_ns;
                 st.task_timing[t].far_queue_ns = s.queue_ns;
                 st.after_far_faulted(t, now);
@@ -1470,6 +1531,7 @@ pub(crate) fn simulate(input: &SimInput) -> (Vec<TaskTiming>, ServeReport) {
         cache: cache_stats,
         mean_pagein_queue_ns,
         accel: accel_stats,
+        farpool: far.stats(),
         timings,
     };
     (st.task_timing, report)
@@ -1522,6 +1584,9 @@ pub struct BatchProfile {
     accel: AccelConfig,
     /// CPU-lane admission policy for subsequent schedules.
     lane_policy: LanePolicy,
+    /// Far-memory device pool for subsequent schedules (`devices = 1`
+    /// by default — the single-timeline clock, bit-for-bit).
+    far: FarConfig,
     /// Dispatch rounds the functional pass took (1 for any nonempty
     /// batch since the run-to-completion executor; tests pin the drop
     /// from the old per-stage re-dispatch scheme).
@@ -1571,6 +1636,7 @@ impl BatchProfile {
             tenant_traces: Vec::new(),
             accel: cfg.accel.clone(),
             lane_policy: cfg.serve.lane_policy,
+            far: cfg.far.clone(),
             waves,
         }
     }
@@ -1723,6 +1789,46 @@ impl BatchProfile {
         self.lane_policy = policy;
     }
 
+    /// Override the far-memory device-pool size (>= 1; 1 = the
+    /// single-timeline clock, the bit-identity contract) for subsequent
+    /// schedules. A multi-device pool schedules shared device queues, so
+    /// it needs a stream-capturing profile.
+    pub fn set_far_devices(&mut self, devices: usize) {
+        assert!(devices >= 1, "far.devices must be at least 1");
+        assert!(
+            devices == 1 || self.shared,
+            "a multi-device far pool needs the shared timeline (far streams queue \
+             on pool devices); this profile schedules private idle devices"
+        );
+        self.far.devices = devices;
+    }
+
+    /// Override the far-pool placement policy for subsequent schedules.
+    pub fn set_far_placement(&mut self, placement: FarPlacement) {
+        self.far.placement = placement;
+    }
+
+    /// Override the `replicate-hot` replica count (>= 1) for subsequent
+    /// schedules.
+    pub fn set_far_replicas(&mut self, replicas: usize) {
+        assert!(replicas >= 1, "far.replicas must be at least 1");
+        self.far.replicas = replicas;
+    }
+
+    /// Override the `replicate-hot` hot-range fraction (0..=1) for
+    /// subsequent schedules.
+    pub fn set_far_hot_alpha(&mut self, alpha: f64) {
+        assert!((0.0..=1.0).contains(&alpha), "far.hot_alpha must be in [0, 1]");
+        self.far.hot_alpha = alpha;
+    }
+
+    /// Toggle tenant-weighted far QoS record shares for subsequent
+    /// schedules (off = every stream rotates one record per round, the
+    /// unweighted discipline bit-for-bit).
+    pub fn set_far_qos_shares(&mut self, on: bool) {
+        self.far.qos_shares = on;
+    }
+
     fn run_sim(&self, depth: usize, arrival_qps: f64) -> (Vec<TaskTiming>, ServeReport) {
         simulate(&SimInput {
             sim: &self.sim,
@@ -1743,6 +1849,7 @@ impl BatchProfile {
             tenant_traces: &self.tenant_traces,
             accel: &self.accel,
             lane_policy: self.lane_policy,
+            far: &self.far,
         })
     }
 

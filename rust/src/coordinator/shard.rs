@@ -240,6 +240,37 @@ impl ShardedEngine {
         self.cfg.serve.lane_policy = policy;
     }
 
+    /// Set the far-memory device-pool size (>= 1; 1 = the single-timeline
+    /// clock, the bit-identity contract) without rebuilding shards. A
+    /// multi-device pool schedules shared device queues, so it requires
+    /// the shared timeline.
+    pub fn set_far_devices(&mut self, devices: usize) {
+        assert!(devices >= 1, "far.devices must be at least 1");
+        assert!(
+            devices == 1 || self.cfg.sim.shared_timeline,
+            "a multi-device far pool requires sim.shared_timeline"
+        );
+        self.cfg.far.devices = devices;
+    }
+
+    /// Set the far-pool placement policy without rebuilding shards.
+    pub fn set_far_placement(&mut self, placement: crate::config::FarPlacement) {
+        self.cfg.far.placement = placement;
+    }
+
+    /// Set the `replicate-hot` replica count (>= 1) without rebuilding
+    /// shards.
+    pub fn set_far_replicas(&mut self, replicas: usize) {
+        assert!(replicas >= 1, "far.replicas must be at least 1");
+        self.cfg.far.replicas = replicas;
+    }
+
+    /// Toggle tenant-weighted far QoS record shares without rebuilding
+    /// shards (off = the unweighted record rotation, bit-for-bit).
+    pub fn set_far_qos_shares(&mut self, on: bool) {
+        self.cfg.far.qos_shares = on;
+    }
+
     pub fn params(&self) -> &QueryParams {
         &self.params
     }
@@ -402,6 +433,7 @@ impl ShardedEngine {
             tenant_traces: &tenant_traces,
             accel: &self.cfg.accel,
             lane_policy: self.cfg.serve.lane_policy,
+            far: &self.cfg.far,
         });
 
         // ---- gather: remap to global ids, merge, aggregate breakdowns.

@@ -33,6 +33,8 @@ COMMANDS:
           [--stream-interleave burst|record] [--tenants SPECS]
           [--lane-policy fcfs|ssf] [--accel-rerank cpu|batch]
           [--accel-batch-max N] [--accel-batch-window-us U]
+          [--far-devices N] [--far-placement P] [--far-replicas R]
+          [--far-qos-shares]
           [--out-of-core] [--cache-mb M]
           [--deadline-us D] [--fault-seed S] [--fault-far-rate R]
           [--fault-far-spike-rate R] [--fault-far-spike-us U]
@@ -46,6 +48,8 @@ COMMANDS:
           [--stream-interleave burst|record] [--tenants SPECS]
           [--lane-policy fcfs|ssf] [--accel-rerank cpu|batch]
           [--accel-batch-max N] [--accel-batch-window-us U]
+          [--far-devices N] [--far-placement P] [--far-replicas R]
+          [--far-qos-shares]
           [--out-of-core] [--cache-mb M]
           [--deadline-us D] [--fault-seed S] [--fault-far-rate R]
           [--fault-far-spike-rate R] [--fault-far-spike-us U]
@@ -97,6 +101,20 @@ FLAGS:
   --accel-batch-window-us U  seal an open batch U us after its first joiner
                         even if below --accel-batch-max (default 50; 0 =
                         launch on every join)
+  --far-devices N       model the far tier as a pool of N CXL devices, each
+                        its own deterministic timeline (default 1 = the
+                        single shared timeline, bit-identical; N > 1
+                        requires --shared-timeline)
+  --far-placement P     record-range placement over the pool: interleave
+                        (range round-robin), shard-affine (shard % devices,
+                        default) or replicate-hot (interleave + the top-α
+                        hottest ranges replicated; per-query least-loaded
+                        replica selection, failover rotation on far faults)
+  --far-replicas R      replicas per hot range under replicate-hot
+                        (default 2; must be <= --far-devices)
+  --far-qos-shares      weight the far record rotation by tenant QoS
+                        weights (integerized shares; needs --tenants and
+                        --stream-interleave record to have an effect)
   --tenants SPECS       multi-tenant QoS: comma-separated
                         name:weight[:quota][:trace=SRC]
                         (e.g. latency:4,batch:1:8:trace=bursty); queries
@@ -205,6 +223,15 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
     cfg.accel.batch_max = args.get_usize("accel-batch-max", cfg.accel.batch_max)?;
     cfg.accel.batch_window_us =
         args.get_f64("accel-batch-window-us", cfg.accel.batch_window_us)?;
+    // Far-memory device pool (the [far] config section).
+    cfg.far.devices = args.get_usize("far-devices", cfg.far.devices)?;
+    if let Some(p) = args.get("far-placement") {
+        cfg.far.placement = fatrq::config::FarPlacement::parse(p)?;
+    }
+    cfg.far.replicas = args.get_usize("far-replicas", cfg.far.replicas)?;
+    if args.has("far-qos-shares") {
+        cfg.far.qos_shares = true;
+    }
     // Out-of-core paging knobs (the [cache] config section).
     if args.has("out-of-core") {
         cfg.cache.out_of_core = true;
@@ -321,6 +348,21 @@ fn print_report(rep: &BatchReport, k: usize, threads: usize, shards: usize) {
             a.mean_accel_queue_ns() / 1e3
         );
     }
+    let fp = &rep.farpool;
+    if fp.active {
+        let adm: Vec<String> = fp.admissions.iter().map(|a| a.to_string()).collect();
+        let qus: Vec<String> =
+            fp.queue_ns.iter().map(|q| format!("{:.1}", q / 1e3)).collect();
+        println!(
+            "far pool: {} devices  admissions [{}]  queue(us) [{}]  balance {:.2}  failovers {}  hot ranges {}",
+            fp.admissions.len(),
+            adm.join(", "),
+            qus.join(", "),
+            fp.balance(),
+            fp.failovers,
+            fp.hot_ranges
+        );
+    }
     let c = &rep.cache;
     if c.active {
         println!(
@@ -411,6 +453,10 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         "accel-rerank",
         "accel-batch-max",
         "accel-batch-window-us",
+        "far-devices",
+        "far-placement",
+        "far-replicas",
+        "far-qos-shares",
         "arrival-gen",
         "out-of-core",
         "cache-mb",
@@ -457,6 +503,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "accel-rerank",
         "accel-batch-max",
         "accel-batch-window-us",
+        "far-devices",
+        "far-placement",
+        "far-replicas",
+        "far-qos-shares",
         "arrival-gen",
         "out-of-core",
         "cache-mb",

@@ -204,6 +204,49 @@ impl AccelStats {
     }
 }
 
+/// Far-memory CXL device-pool accounting of one serving run
+/// (`far.devices` / `--far-devices`). All vectors are indexed by pool
+/// device; `active` distinguishes "single-device pool" (the legacy
+/// timeline, where the pool layer is a pass-through) from a genuine
+/// multi-device run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FarPoolStats {
+    /// Whether a multi-device pool served this run.
+    pub active: bool,
+    /// Record streams admitted per device.
+    pub admissions: Vec<usize>,
+    /// Total far-memory queue wait accumulated per device, ns.
+    pub queue_ns: Vec<f64>,
+    /// Weighted virtual work placed per device (solo stream ns divided by
+    /// the admitting tenant's weight) — the quantity replica selection
+    /// balances.
+    pub vwork: Vec<f64>,
+    /// Replica-failover re-admissions (a far-read fault on a replicated
+    /// range retried on the next replica device).
+    pub failovers: usize,
+    /// Distinct record ranges replicated under `replicate-hot`.
+    pub hot_ranges: usize,
+}
+
+impl FarPoolStats {
+    /// Total far-memory queue wait across the pool, ns.
+    pub fn total_queue_ns(&self) -> f64 {
+        self.queue_ns.iter().sum()
+    }
+
+    /// Pool occupancy balance: min device virtual work over max (1.0 =
+    /// perfectly balanced, 0.0 = at least one idle device while another
+    /// worked; 1.0 for an idle or single-device pool).
+    pub fn balance(&self) -> f64 {
+        let max = self.vwork.iter().cloned().fold(0.0f64, f64::max);
+        if max <= 0.0 {
+            return 1.0;
+        }
+        let min = self.vwork.iter().cloned().fold(f64::INFINITY, f64::min);
+        min / max
+    }
+}
+
 /// Streaming latency statistics (nanoseconds).
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {

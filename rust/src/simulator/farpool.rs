@@ -1,0 +1,495 @@
+//! Far-memory CXL device pool: placement, hot-range replication and
+//! per-query device selection.
+//!
+//! The single shared far-memory timeline ([`TimelineSched`]) models one
+//! CXL device — honest for a one-expander node, but COSMOS-class far
+//! memory is a *pool* of expanders, and at pipeline depth ≥ 4 under
+//! skewed load the lone device timeline is the dominant queueing
+//! bottleneck. [`FarPool`] models the pool as `far.devices` independent
+//! deterministic device timelines (each its own bank/channel/link
+//! occupancy — per-device bandwidth via `far.bandwidth_scale`), with a
+//! **placement policy** mapping TRQ record ranges to devices:
+//!
+//! - `interleave` — round-robin stripes: range `r` lives on device
+//!   `r % devices` (range id = record address / `far.range_kb` KiB).
+//! - `shard-affine` — today's layout: shard `s`'s streams live on device
+//!   `s % devices`, so shards never share a device when
+//!   `devices >= shards`.
+//! - `replicate-hot` — the interleave base layout plus the top-α hottest
+//!   ranges (by probe frequency over the batch's captured record
+//!   streams, a pure pre-pass over the inputs — never of event order)
+//!   replicated on `far.replicas` consecutive devices. A replicated
+//!   admission picks the replica with the least **weighted virtual
+//!   work** (Σ solo ns / tenant weight placed so far), deterministic
+//!   lowest-device tie-break; a far-read fault on a replicated range
+//!   fails over to the next replica in the ring (deterministic
+//!   rotation) before the scheduler falls back to backoff.
+//!
+//! A stream is placed whole by its *leading* record's range — TRQ record
+//! streams are short bursts against one survivor region, and splitting a
+//! stream across devices would break the intrinsic-profile phase-A
+//! contract (row-buffer classification is per-stream).
+//!
+//! **Bit-identity contract:** with `far.devices = 1` every placement
+//! routes every stream to device 0 through the *same* [`TimelineSched`]
+//! entry points the single-timeline scheduler calls, with share 1 and
+//! pool registrations equal to device registrations — so the 1-device
+//! pool reproduces today's clock bit-for-bit by construction under every
+//! placement policy (runtime-asserted by the fig8 `--quick` smoke and
+//! `tests/integration_farpool.rs`).
+
+use crate::config::{FarConfig, FarPlacement, SimConfig};
+use crate::metrics::FarPoolStats;
+use crate::simulator::timeline::{FarStream, StreamTiming, TimelineSched};
+use crate::simulator::SimNs;
+use std::collections::{HashMap, HashSet};
+
+/// The far-memory device pool (see module docs). Wraps one
+/// [`TimelineSched`] per device and owns routing, replica selection,
+/// failover rotation and the pool-wide registration space for record
+/// mode.
+pub struct FarPool {
+    far: FarConfig,
+    devs: Vec<TimelineSched>,
+    /// Ranges replicated under `replicate-hot` (empty otherwise).
+    hot: HashSet<u64>,
+    /// Weighted virtual work placed per device — the replica-selection
+    /// balance quantity.
+    vwork: Vec<f64>,
+    /// Record-mode pool registration space: pool reg → (device, device
+    /// reg). With one device pool regs == device regs by construction.
+    regs: Vec<(usize, usize)>,
+    /// Per-device map from device registration back to pool registration.
+    local2pool: Vec<Vec<usize>>,
+    admissions: Vec<usize>,
+    queue_ns: Vec<f64>,
+    failovers: usize,
+}
+
+impl FarPool {
+    /// Build the pool. `streams` is the batch's captured record streams
+    /// (all tasks, admission-independent order) — the `replicate-hot`
+    /// hot-set pre-pass counts range probe frequencies over them, so the
+    /// placement is a pure function of the inputs, never of event
+    /// interleaving or worker count.
+    pub fn new<'a, I>(cfg: &SimConfig, far: &FarConfig, streams: I) -> Self
+    where
+        I: IntoIterator<Item = &'a FarStream>,
+    {
+        let n = far.devices.max(1);
+        let devs = (0..n)
+            .map(|d| {
+                let scale = far.bandwidth_scale.get(d).copied().unwrap_or(1.0);
+                if scale == 1.0 {
+                    TimelineSched::new(cfg)
+                } else {
+                    let mut c = cfg.clone();
+                    c.cxl_bandwidth_gbps *= scale;
+                    TimelineSched::new(&c)
+                }
+            })
+            .collect();
+        let hot = if far.placement == FarPlacement::ReplicateHot && n > 1 && far.replicas > 1 {
+            hot_ranges(far, streams)
+        } else {
+            HashSet::new()
+        };
+        FarPool {
+            far: far.clone(),
+            devs,
+            hot,
+            vwork: vec![0.0; n],
+            regs: Vec::new(),
+            local2pool: vec![Vec::new(); n],
+            admissions: vec![0; n],
+            queue_ns: vec![0.0; n],
+            failovers: 0,
+        }
+    }
+
+    /// Devices in the pool.
+    pub fn devices(&self) -> usize {
+        self.devs.len()
+    }
+
+    /// Record-range id of a stream's leading record (0 for an empty
+    /// stream — any device serves an empty admission identically).
+    fn lead_range(&self, stream: &FarStream) -> u64 {
+        stream.addrs.first().map_or(0, |&a| a / self.far.range_bytes())
+    }
+
+    /// Replica device ring of a hot range: `far.replicas` consecutive
+    /// devices starting at the range's interleave home.
+    fn replica_ring(&self, range: u64) -> Vec<usize> {
+        let n = self.devs.len();
+        let home = (range % n as u64) as usize;
+        (0..self.far.replicas.min(n)).map(|i| (home + i) % n).collect()
+    }
+
+    /// Is `stream`'s leading range replicated (so a far-read fault can
+    /// fail over to another replica)?
+    pub fn replicated(&self, stream: &FarStream) -> bool {
+        self.devs.len() > 1 && self.hot.contains(&self.lead_range(stream))
+    }
+
+    /// Replicas holding `stream`'s leading range (1 when not replicated).
+    pub fn replica_count(&self, stream: &FarStream) -> usize {
+        if self.replicated(stream) {
+            self.far.replicas.min(self.devs.len())
+        } else {
+            1
+        }
+    }
+
+    /// Pick the device an admission of `stream` (from `shard`) goes to.
+    ///
+    /// `prev` is the device of the stream's previous (faulted) attempt:
+    /// `None` for first admissions — replicated ranges then select the
+    /// least-loaded replica (weighted virtual work, lowest-device
+    /// tie-break) — and `Some(d)` for retries, which rotate a replicated
+    /// range to the next replica after `d` in the ring (counted as a
+    /// failover) and stay on the placement device otherwise
+    /// (backoff-on-same-device). Deterministic: a pure function of the
+    /// placement, the hot set and the admission history.
+    pub fn route(&mut self, stream: &FarStream, shard: usize, prev: Option<usize>) -> usize {
+        let n = self.devs.len();
+        if n == 1 {
+            return 0;
+        }
+        let range = self.lead_range(stream);
+        if self.hot.contains(&range) {
+            let ring = self.replica_ring(range);
+            return match prev {
+                Some(p) => {
+                    // Deterministic rotation: the attempt after a fault
+                    // on ring position i re-admits on position i+1.
+                    self.failovers += 1;
+                    let i = ring.iter().position(|&d| d == p).unwrap_or(0);
+                    ring[(i + 1) % ring.len()]
+                }
+                None => {
+                    // Least weighted virtual work; ring order breaks
+                    // ties at the lowest device index deterministically.
+                    let mut best = ring[0];
+                    for &d in &ring[1..] {
+                        if self.vwork[d] < self.vwork[best]
+                            || (self.vwork[d] == self.vwork[best] && d < best)
+                        {
+                            best = d;
+                        }
+                    }
+                    best
+                }
+            };
+        }
+        match self.far.placement {
+            FarPlacement::ShardAffine => shard % n,
+            FarPlacement::Interleave | FarPlacement::ReplicateHot => (range % n as u64) as usize,
+        }
+    }
+
+    /// Burst admission on device `dev` (the device [`FarPool::route`]
+    /// picked): FCFS burst on that device's timeline. `weight` is the
+    /// admitting tenant's QoS weight (1.0 untenanted) — it scales the
+    /// virtual work replica selection balances, never the service time.
+    pub fn admit(&mut self, dev: usize, stream: &FarStream, at: SimNs, weight: f64) -> StreamTiming {
+        let t = self.devs[dev].admit(stream, at);
+        self.account(dev, t.solo_ns, weight);
+        self.queue_ns[dev] += t.queue_ns;
+        t
+    }
+
+    /// Record-interleave admission on device `dev` with QoS `share`
+    /// records per rotation round (1 unless `far.qos_shares`). Returns
+    /// `(pool registration, timing)` pairs for every live stream on that
+    /// device — device registrations are translated into the pool-wide
+    /// registration space, so the event loop's versioned-completion
+    /// bookkeeping is unchanged. The newly admitted stream is the last
+    /// pair.
+    pub fn admit_interleaved(
+        &mut self,
+        dev: usize,
+        stream: &FarStream,
+        at: SimNs,
+        share: u32,
+        weight: f64,
+    ) -> Vec<(usize, StreamTiming)> {
+        let pool_reg = self.regs.len();
+        // Device regs allocate sequentially per admission, so the new
+        // stream's device reg is the count of admissions so far.
+        self.regs.push((dev, self.local2pool[dev].len()));
+        self.local2pool[dev].push(pool_reg);
+        let out = self.devs[dev].admit_interleaved_weighted(stream, at, share);
+        let solo = out.last().map_or(0.0, |(_, t)| t.solo_ns);
+        self.account(dev, solo, weight);
+        out.into_iter().map(|(local, t)| (self.local2pool[dev][local], t)).collect()
+    }
+
+    /// Finalize pool registration `reg` (record mode): the completion was
+    /// reported downstream with `final_queue_ns` of pool queueing, which
+    /// is charged to the serving device.
+    pub fn finalize(&mut self, reg: usize, final_queue_ns: SimNs) {
+        let (dev, local) = self.regs[reg];
+        self.devs[dev].finalize(local);
+        self.queue_ns[dev] += final_queue_ns;
+    }
+
+    fn account(&mut self, dev: usize, solo_ns: f64, weight: f64) {
+        self.admissions[dev] += 1;
+        self.vwork[dev] += solo_ns / weight.max(1e-12);
+    }
+
+    /// Pool accounting snapshot for the serve report.
+    pub fn stats(&self) -> FarPoolStats {
+        FarPoolStats {
+            active: self.devs.len() > 1,
+            admissions: self.admissions.clone(),
+            queue_ns: self.queue_ns.clone(),
+            vwork: self.vwork.clone(),
+            failovers: self.failovers,
+            hot_ranges: self.hot.len(),
+        }
+    }
+}
+
+/// The `replicate-hot` hot-set pre-pass: count every record address's
+/// range over the batch's streams, sort by (probe count desc, range id
+/// asc) and take the top `ceil(hot_alpha × distinct)` ranges. Pure
+/// function of the inputs.
+fn hot_ranges<'a, I>(far: &FarConfig, streams: I) -> HashSet<u64>
+where
+    I: IntoIterator<Item = &'a FarStream>,
+{
+    let mut counts: HashMap<u64, u64> = HashMap::new();
+    for s in streams {
+        for &a in &s.addrs {
+            *counts.entry(a / far.range_bytes()).or_insert(0) += 1;
+        }
+    }
+    if counts.is_empty() || far.hot_alpha <= 0.0 {
+        return HashSet::new();
+    }
+    let take = ((far.hot_alpha * counts.len() as f64).ceil() as usize).clamp(1, counts.len());
+    let mut ranked: Vec<(u64, u64)> = counts.into_iter().collect();
+    ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    ranked.into_iter().take(take).map(|(r, _)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn stream(rng: &mut Rng, n: usize, local: bool) -> FarStream {
+        FarStream {
+            local,
+            rec_bytes: 162,
+            addrs: (0..n).map(|_| (rng.next_u64() % (1 << 28)) * 162).collect(),
+        }
+    }
+
+    fn far(devices: usize, placement: FarPlacement) -> FarConfig {
+        FarConfig { devices, placement, ..Default::default() }
+    }
+
+    #[test]
+    fn one_device_pool_is_bit_identical_to_timeline_sched_burst() {
+        // The tentpole contract at the unit level: a 1-device pool routes
+        // everything to device 0 through the identical TimelineSched
+        // path, so admissions agree bit-for-bit — under every placement.
+        let cfg = SimConfig::default();
+        for placement in
+            [FarPlacement::Interleave, FarPlacement::ShardAffine, FarPlacement::ReplicateHot]
+        {
+            let mut rng = Rng::new(5);
+            let streams: Vec<FarStream> =
+                (0..6).map(|i| stream(&mut rng, 120, i % 2 == 0)).collect();
+            let mut single = TimelineSched::new(&cfg);
+            let mut pool = FarPool::new(&cfg, &far(1, placement), streams.iter());
+            for (i, s) in streams.iter().enumerate() {
+                let at = i as f64 * 4_000.0;
+                let dev = pool.route(s, i % 3, None);
+                assert_eq!(dev, 0, "1-device pool must route to device 0");
+                let a = single.admit(s, at);
+                let b = pool.admit(dev, s, at, 1.0);
+                assert_eq!(a.solo_ns, b.solo_ns, "{placement:?} stream {i}");
+                assert_eq!(a.shared_ns, b.shared_ns, "{placement:?} stream {i}");
+                assert_eq!(a.queue_ns, b.queue_ns, "{placement:?} stream {i}");
+            }
+            assert!(!pool.stats().active, "1-device pool is the legacy timeline");
+        }
+    }
+
+    #[test]
+    fn one_device_pool_is_bit_identical_to_timeline_sched_record() {
+        let cfg = SimConfig::default();
+        let mut rng = Rng::new(9);
+        let streams: Vec<FarStream> = (0..5).map(|i| stream(&mut rng, 80, i % 2 == 0)).collect();
+        let mut single = TimelineSched::new(&cfg);
+        let mut pool = FarPool::new(&cfg, &far(1, FarPlacement::Interleave), streams.iter());
+        for (i, s) in streams.iter().enumerate() {
+            let at = i as f64 * 2_500.0;
+            let a = single.admit_interleaved(s, at);
+            let b = pool.admit_interleaved(0, s, at, 1, 1.0);
+            assert_eq!(a.len(), b.len(), "stream {i}");
+            for ((ra, ta), (rb, tb)) in a.iter().zip(&b) {
+                assert_eq!(ra, rb, "pool regs must equal device regs with one device");
+                assert_eq!(ta.shared_ns, tb.shared_ns);
+                assert_eq!(ta.queue_ns, tb.queue_ns);
+            }
+            // Finalize in lockstep, like the event loop.
+            let (reg, t) = *a.last().unwrap();
+            single.finalize(reg);
+            pool.finalize(reg, t.queue_ns);
+        }
+    }
+
+    #[test]
+    fn placement_routes_deterministically() {
+        let cfg = SimConfig::default();
+        let mut rng = Rng::new(13);
+        let streams: Vec<FarStream> = (0..8).map(|_| stream(&mut rng, 10, false)).collect();
+        // Shard-affine: device = shard % n regardless of addresses.
+        let mut pool = FarPool::new(&cfg, &far(3, FarPlacement::ShardAffine), streams.iter());
+        for (i, s) in streams.iter().enumerate() {
+            assert_eq!(pool.route(s, i, None), i % 3);
+        }
+        // Interleave: device = leading range % n.
+        let fc = far(3, FarPlacement::Interleave);
+        let mut pool = FarPool::new(&cfg, &fc, streams.iter());
+        for s in &streams {
+            let range = s.addrs[0] / fc.range_bytes();
+            assert_eq!(pool.route(s, 0, None), (range % 3) as usize);
+        }
+        // Retries without replication stay on the placement device.
+        let s = &streams[0];
+        let d = pool.route(s, 0, None);
+        assert_eq!(pool.route(s, 0, Some(d)), d);
+        assert_eq!(pool.stats().failovers, 0);
+    }
+
+    #[test]
+    fn replicate_hot_selects_least_loaded_and_rotates_on_failover() {
+        let cfg = SimConfig::default();
+        // One scorching range probed by every stream + a cold tail, so
+        // the hot set is exactly the shared range.
+        let fc = FarConfig {
+            devices: 4,
+            placement: FarPlacement::ReplicateHot,
+            replicas: 2,
+            hot_alpha: 0.01,
+            ..Default::default()
+        };
+        let hot_addr = 7 * fc.range_bytes(); // range 7 → home 7 % 4 = 3
+        let mut rng = Rng::new(17);
+        let streams: Vec<FarStream> = (0..10)
+            .map(|_| {
+                let mut s = stream(&mut rng, 6, false);
+                s.addrs[0] = hot_addr;
+                s
+            })
+            .collect();
+        let mut pool = FarPool::new(&cfg, &fc, streams.iter());
+        assert!(pool.stats().hot_ranges >= 1, "the shared range must be hot");
+        assert!(pool.replicated(&streams[0]));
+        assert_eq!(pool.replica_count(&streams[0]), 2);
+        // First admission: both replicas idle (ring [3, 0]) → lowest
+        // device index wins the tie. Load it, and the next admission
+        // must prefer the idle replica.
+        let d0 = pool.route(&streams[0], 0, None);
+        assert_eq!(d0, 0, "tie at zero work breaks to the lowest device index");
+        pool.admit(d0, &streams[0], 0.0, 1.0);
+        let d1 = pool.route(&streams[1], 0, None);
+        assert_eq!(d1, 3, "selection must move to the idle replica");
+        // Failover rotation: a fault on device 3 re-admits on 0, a fault
+        // on 0 wraps back to 3 — deterministic ring order.
+        assert_eq!(pool.route(&streams[2], 0, Some(3)), 0);
+        assert_eq!(pool.route(&streams[2], 0, Some(0)), 3);
+        assert_eq!(pool.stats().failovers, 2);
+        // Cold streams fall back to the interleave rule.
+        let cold = stream(&mut rng, 4, false);
+        if !pool.replicated(&cold) {
+            let range = cold.addrs[0] / fc.range_bytes();
+            assert_eq!(pool.route(&cold, 0, None), (range % 4) as usize);
+        }
+    }
+
+    #[test]
+    fn weighted_vwork_steers_selection_and_balance() {
+        let cfg = SimConfig::default();
+        let fc = FarConfig {
+            devices: 2,
+            placement: FarPlacement::ReplicateHot,
+            replicas: 2,
+            hot_alpha: 1.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(23);
+        let a_addr = 2 * fc.range_bytes(); // home 0
+        let mut s1 = stream(&mut rng, 40, false);
+        s1.addrs[0] = a_addr;
+        let mut s2 = stream(&mut rng, 40, false);
+        s2.addrs[0] = a_addr;
+        let streams = [s1, s2];
+        let mut pool = FarPool::new(&cfg, &fc, streams.iter());
+        // A heavy-weight tenant's work counts for less virtual work, so
+        // after its admission the same device can still be least-loaded.
+        let d0 = pool.route(&streams[0], 0, None);
+        pool.admit(d0, &streams[0], 0.0, 1000.0);
+        let tiny = pool.stats().vwork[d0];
+        assert!(tiny > 0.0 && tiny < 1e7, "weight must scale virtual work: {tiny}");
+        let st = pool.stats();
+        assert!(st.active);
+        assert_eq!(st.admissions.iter().sum::<usize>(), 1);
+        assert!(st.balance() >= 0.0 && st.balance() <= 1.0);
+        assert_eq!(st.total_queue_ns(), 0.0, "an idle admission never queues");
+    }
+
+    #[test]
+    fn bandwidth_scale_slows_or_speeds_a_device() {
+        let cfg = SimConfig::default();
+        let mut fc = far(2, FarPlacement::Interleave);
+        fc.bandwidth_scale = vec![1.0, 0.25];
+        let mut rng = Rng::new(31);
+        let s = stream(&mut rng, 100, false);
+        let mut pool = FarPool::new(&cfg, &fc, std::iter::once(&s));
+        let fast = pool.admit(0, &s, 0.0, 1.0);
+        let slow = pool.admit(1, &s, 0.0, 1.0);
+        assert!(
+            slow.solo_ns > fast.solo_ns,
+            "quarter bandwidth must serve a SW stream slower ({} vs {})",
+            slow.solo_ns,
+            fast.solo_ns
+        );
+        // Unscaled device 0 matches the plain timeline bit-for-bit.
+        let mut single = TimelineSched::new(&cfg);
+        assert_eq!(single.admit(&s, 0.0).solo_ns, fast.solo_ns);
+    }
+
+    #[test]
+    fn hot_range_prepass_is_pure_and_ranked() {
+        let fc = FarConfig { hot_alpha: 0.5, ..far(4, FarPlacement::ReplicateHot) };
+        let mk = |addrs: Vec<u64>| FarStream { local: false, rec_bytes: 64, addrs };
+        let rb = fc.range_bytes();
+        // Range 3 probed 3x, range 1 probed 2x, range 9 probed once →
+        // alpha 0.5 of 3 distinct ranges keeps ceil(1.5) = 2: {3, 1}.
+        let streams = [
+            mk(vec![3 * rb, 3 * rb + 64, rb]),
+            mk(vec![3 * rb + 128, rb + 64]),
+            mk(vec![9 * rb]),
+        ];
+        let h1 = hot_ranges(&fc, streams.iter());
+        let h2 = hot_ranges(&fc, streams.iter());
+        assert_eq!(h1, h2, "hot set must be a pure function of the streams");
+        assert_eq!(h1.len(), 2);
+        assert!(h1.contains(&3) && h1.contains(&1), "hottest ranges win: {h1:?}");
+        // Tie on count falls to the lower range id.
+        let tied = [mk(vec![5 * rb]), mk(vec![2 * rb])];
+        let ht = hot_ranges(&FarConfig { hot_alpha: 0.5, ..fc.clone() }, tied.iter());
+        assert_eq!(ht.len(), 1);
+        assert!(ht.contains(&2), "count ties break to the lower range id: {ht:?}");
+        // Alpha 0 disables replication outright.
+        let none = hot_ranges(&FarConfig { hot_alpha: 0.0, ..fc }, streams.iter());
+        assert!(none.is_empty());
+    }
+}

@@ -76,6 +76,14 @@ const DEV_SSD_FAIL_BASE: u64 = 2;
 // SSD channels occupy `DEV_SSD_FAIL_BASE + shard` (unbounded above), so
 // the accelerator launch channel sits at the top of the id space.
 const DEV_ACCEL_LAUNCH: u64 = u64::MAX;
+// Far-memory pool devices beyond device 0: device `d >= 1` draws on
+// `DEV_FAR_POOL_BASE + 2*(d-1)` (fail) / `+ 2*(d-1) + 1` (spike), high
+// above any realistic `DEV_SSD_FAIL_BASE + shard` channel and below the
+// accel channel. Device 0 keeps the legacy `DEV_FAR_FAIL`/`DEV_FAR_SPIKE`
+// channels, so a 1-device pool draws the exact fault timeline the
+// single-device scheduler always drew — part of the pool's bit-identity
+// contract.
+const DEV_FAR_POOL_BASE: u64 = 1 << 62;
 
 /// One splitmix64 scramble round (same finalizer as `util::rng`'s
 /// seeder; reimplemented here because the fault plan needs a *stateless*
@@ -151,6 +159,43 @@ impl FaultPlan {
         if self.cfg.far_spike_rate > 0.0
             && unit(mix(self.cfg.seed, DEV_FAR_SPIKE, task as u64, u64::from(attempt)))
                 < self.cfg.far_spike_rate
+        {
+            self.cfg.far_spike_us * 1e3
+        } else {
+            0.0
+        }
+    }
+
+    /// [`FaultPlan::far_read_fails`] on pool device `dev`: device 0 is
+    /// the legacy far-fail channel bit-for-bit; devices ≥ 1 draw on their
+    /// own independent channels (`DEV_FAR_POOL_BASE`).
+    pub fn far_read_fails_dev(&self, dev: usize, task: usize, attempt: u32) -> bool {
+        if dev == 0 {
+            return self.far_read_fails(task, attempt);
+        }
+        self.cfg.far_fail_rate > 0.0
+            && unit(mix(
+                self.cfg.seed,
+                DEV_FAR_POOL_BASE + 2 * (dev as u64 - 1),
+                task as u64,
+                u64::from(attempt),
+            )) < self.cfg.far_fail_rate
+    }
+
+    /// [`FaultPlan::far_spike_ns`] on pool device `dev`: device 0 is the
+    /// legacy spike channel bit-for-bit; devices ≥ 1 draw on their own
+    /// independent channels.
+    pub fn far_spike_ns_dev(&self, dev: usize, task: usize, attempt: u32) -> f64 {
+        if dev == 0 {
+            return self.far_spike_ns(task, attempt);
+        }
+        if self.cfg.far_spike_rate > 0.0
+            && unit(mix(
+                self.cfg.seed,
+                DEV_FAR_POOL_BASE + 2 * (dev as u64 - 1) + 1,
+                task as u64,
+                u64::from(attempt),
+            )) < self.cfg.far_spike_rate
         {
             self.cfg.far_spike_us * 1e3
         } else {
@@ -312,6 +357,52 @@ mod tests {
             .filter(|&t| both.far_read_fails(t, 0) == both.accel_launch_fails(t, 0))
             .count();
         assert!(same > 100 && same < 400, "accel channel correlated with far: {same}/500");
+    }
+
+    #[test]
+    fn pool_device_zero_matches_legacy_far_channels() {
+        // The 1-device pool bit-identity contract: device 0's per-device
+        // draws ARE the legacy draws, not merely equal in distribution.
+        let p = plan(0.5, 0.5, 0.0);
+        for t in 0..500 {
+            for a in 0..3 {
+                assert_eq!(p.far_read_fails_dev(0, t, a), p.far_read_fails(t, a));
+                assert_eq!(p.far_spike_ns_dev(0, t, a), p.far_spike_ns(t, a));
+            }
+        }
+    }
+
+    #[test]
+    fn pool_device_channels_are_independent() {
+        let p = plan(0.5, 0.5, 0.5);
+        // Devices 0..4 must not mirror each other's fail draws.
+        for d in 1..4usize {
+            let same = (0..500)
+                .filter(|&t| p.far_read_fails_dev(0, t, 0) == p.far_read_fails_dev(d, t, 0))
+                .count();
+            assert!(same > 100 && same < 400, "device {d} fail channel correlated: {same}/500");
+            // Fail and spike channels of the same device stay independent.
+            let fs = (0..500)
+                .filter(|&t| {
+                    p.far_read_fails_dev(d, t, 0) == (p.far_spike_ns_dev(d, t, 0) > 0.0)
+                })
+                .count();
+            assert!(fs > 100 && fs < 400, "device {d} fail/spike correlated: {fs}/500");
+        }
+        // Pool channels don't alias the SSD shard channels either.
+        let alias = (0..500)
+            .filter(|&t| p.far_read_fails_dev(1, t, 0) == p.ssd_read_fails(0, t, 0))
+            .count();
+        assert!(alias > 100 && alias < 400, "pool channel aliases SSD shard 0: {alias}/500");
+        // Purity + rate extremes on the per-device channels.
+        let fwd: Vec<bool> = (0..200).map(|t| p.far_read_fails_dev(2, t, 1)).collect();
+        let again: Vec<bool> = (0..200).map(|t| p.far_read_fails_dev(2, t, 1)).collect();
+        assert_eq!(fwd, again);
+        let never = plan(0.0, 0.0, 0.0);
+        for t in 0..100 {
+            assert!(!never.far_read_fails_dev(3, t, 0));
+            assert_eq!(never.far_spike_ns_dev(3, t, 0), 0.0);
+        }
     }
 
     #[test]

@@ -47,6 +47,13 @@
 //!   staging queue reusing the [`cxl`] profile machinery; the pipelined
 //!   scheduler coalesces concurrent rerank stages into device batches at
 //!   admission time.
+//! - [`farpool`] — the far-memory CXL device pool ([`FarPool`],
+//!   `far.devices`): the far tier as N independent deterministic device
+//!   timelines with record-range placement policies (interleave /
+//!   shard-affine / replicate-hot), least-loaded replica selection for
+//!   replicated hot ranges and deterministic failover rotation on
+//!   far-read faults; a 1-device pool is the legacy [`TimelineSched`]
+//!   clock bit-for-bit under every placement.
 //! - [`fault`] — seeded deterministic fault injection ([`FaultPlan`]):
 //!   far-memory read failures and tail spikes, SSD read errors, and
 //!   whole-shard outage windows, each drawn by a stateless hash of
@@ -62,6 +69,7 @@ pub mod accel_batch;
 pub mod cxl;
 pub mod device;
 pub mod dram;
+pub mod farpool;
 pub mod fault;
 pub mod pagecache;
 pub mod resource;
@@ -72,6 +80,7 @@ pub use accel_batch::{accel_item_ns, AccelBatch, AccelServer, XferQueue, ACCEL_L
 pub use cxl::{CxlLink, LinkAccess};
 pub use device::FarMemoryDevice;
 pub use dram::{DramAccess, DramSim};
+pub use farpool::FarPool;
 pub use fault::{DegradeLevel, FaultPlan};
 pub use pagecache::{CachePlan, PageCache, PagedLayout};
 pub use resource::{Grant, LaneServer, ResourceServer, ServiceModel};

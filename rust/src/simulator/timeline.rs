@@ -130,6 +130,12 @@ struct ProfiledStream {
     recs: Vec<DramAccess>,
     link: LinkAccess,
     local: bool,
+    /// Records served per round-robin round (QoS weight share). 1 for
+    /// every stream unless `far.qos_shares` maps tenant weights onto the
+    /// rotation — with `share == 1` the arbiter loop is the identical
+    /// computation, which is what keeps the weighted path inert by
+    /// construction when shares are off or all-equal.
+    share: u32,
 }
 
 /// Phase A: classify `stream` on a private row-state machine and emit its
@@ -142,7 +148,7 @@ fn profile_stream(cfg: &SimConfig, stream: &FarStream) -> ProfiledStream {
         .iter()
         .map(|&addr| dram.profile(addr, stream.rec_bytes).0)
         .collect();
-    ProfiledStream { recs, link, local: stream.local }
+    ProfiledStream { recs, link, local: stream.local, share: 1 }
 }
 
 /// The far-memory [`ServiceModel`]: replay = FCFS burst over the
@@ -244,23 +250,31 @@ fn round_robin_run(
             if next[q] >= p.recs.len() || *at > *vt {
                 continue;
             }
-            let r = &p.recs[next[q]];
-            next[q] += 1;
-            remaining -= 1;
-            work += 1;
-            progressed = true;
-            let dram_done = r.schedule(
-                &mut occ.bank_ready[r.bank],
-                &mut occ.channel_free[r.channel],
-                *at,
-            );
-            let d = if p.local {
-                dram_done
-            } else {
-                p.link.schedule(&mut occ.link_free, dram_done)
-            };
-            done[q] = done[q].max(d);
-            vt_round = vt_round.max(d);
+            // A stream's QoS share is the number of consecutive records it
+            // serves per round; `share == 1` runs this body exactly once —
+            // bit-identical to the unweighted rotation.
+            for _ in 0..p.share.max(1) {
+                if next[q] >= p.recs.len() {
+                    break;
+                }
+                let r = &p.recs[next[q]];
+                next[q] += 1;
+                remaining -= 1;
+                work += 1;
+                progressed = true;
+                let dram_done = r.schedule(
+                    &mut occ.bank_ready[r.bank],
+                    &mut occ.channel_free[r.channel],
+                    *at,
+                );
+                let d = if p.local {
+                    dram_done
+                } else {
+                    p.link.schedule(&mut occ.link_free, dram_done)
+                };
+                done[q] = done[q].max(d);
+                vt_round = vt_round.max(d);
+            }
         }
         if progressed {
             *vt = vt_round;
@@ -456,12 +470,27 @@ impl TimelineSched {
         stream: &FarStream,
         at: SimNs,
     ) -> Vec<(usize, StreamTiming)> {
+        self.admit_interleaved_weighted(stream, at, 1)
+    }
+
+    /// [`TimelineSched::admit_interleaved`] with a QoS share: the stream
+    /// serves up to `share` consecutive records per rotation round
+    /// (tenant-weighted record interleave, `far.qos_shares`). `share = 1`
+    /// is bit-identical to the unweighted admission — the arbiter body is
+    /// the same computation.
+    pub fn admit_interleaved_weighted(
+        &mut self,
+        stream: &FarStream,
+        at: SimNs,
+        share: u32,
+    ) -> Vec<(usize, StreamTiming)> {
         // Commit every round this arrival provably cannot perturb, then
         // shed streams that no longer matter to anyone.
         self.advance_until(at);
         self.compact();
 
-        let p = profile_stream(&self.cfg, stream);
+        let mut p = profile_stream(&self.cfg, stream);
+        p.share = share.max(1);
         // The server's solo rule is the one source of intrinsic durations
         // (an empty stream replays to 0 — no special case needed).
         let solo = self.server.solo(&p);
@@ -536,22 +565,29 @@ impl TimelineSched {
                 if e.next >= e.req.recs.len() || e.at > vt {
                     continue;
                 }
-                let r = &e.req.recs[e.next];
-                e.next += 1;
-                self.rr_work += 1;
-                progressed = true;
-                let dram_done = r.schedule(
-                    &mut self.rr_occ.bank_ready[r.bank],
-                    &mut self.rr_occ.channel_free[r.channel],
-                    e.at,
-                );
-                let d = if e.req.local {
-                    dram_done
-                } else {
-                    e.req.link.schedule(&mut self.rr_occ.link_free, dram_done)
-                };
-                e.done = e.done.max(d);
-                vt_round = vt_round.max(d);
+                // Same per-round share rule as `round_robin_run` — the
+                // committed rounds and the tail replay must agree.
+                for _ in 0..e.req.share.max(1) {
+                    if e.next >= e.req.recs.len() {
+                        break;
+                    }
+                    let r = &e.req.recs[e.next];
+                    e.next += 1;
+                    self.rr_work += 1;
+                    progressed = true;
+                    let dram_done = r.schedule(
+                        &mut self.rr_occ.bank_ready[r.bank],
+                        &mut self.rr_occ.channel_free[r.channel],
+                        e.at,
+                    );
+                    let d = if e.req.local {
+                        dram_done
+                    } else {
+                        e.req.link.schedule(&mut self.rr_occ.link_free, dram_done)
+                    };
+                    e.done = e.done.max(d);
+                    vt_round = vt_round.max(d);
+                }
             }
             if progressed {
                 self.rr_vt = vt_round;
@@ -997,5 +1033,93 @@ mod tests {
             "rotation kept {} entries after finalization — compaction broken",
             sched.rr.len()
         );
+    }
+
+    // ---- tenant-weighted record shares (`far.qos_shares`) ----
+
+    #[test]
+    fn weighted_share_one_is_bit_identical_to_unweighted() {
+        // The inertness contract behind `far.qos_shares = false` (and
+        // all-equal tenant weights): share = 1 must be the identical
+        // computation, not merely a close one.
+        let cfg = SimConfig::default();
+        let mut rng = Rng::new(101);
+        let streams: Vec<FarStream> =
+            (0..5).map(|i| random_stream(&mut rng, 70, i % 2 == 0)).collect();
+        let ats: Vec<f64> = (0..streams.len()).map(|i| i as f64 * 3_000.0).collect();
+        let mut plain = TimelineSched::new(&cfg);
+        let mut weighted = TimelineSched::new(&cfg);
+        for (s, &at) in streams.iter().zip(&ats) {
+            let a = plain.admit_interleaved(s, at);
+            let b = weighted.admit_interleaved_weighted(s, at, 1);
+            assert_eq!(a.len(), b.len());
+            for ((ra, ta), (rb, tb)) in a.iter().zip(&b) {
+                assert_eq!(ra, rb);
+                assert_eq!(ta.solo_ns, tb.solo_ns);
+                assert_eq!(ta.shared_ns, tb.shared_ns);
+                assert_eq!(ta.queue_ns, tb.queue_ns);
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_share_favors_the_heavy_stream_without_starving_the_light() {
+        // Two equal co-admitted streams; give one a 4x share. The heavy
+        // stream must finish no later than under equal shares, the light
+        // one must still complete within the work-conserving bound (no
+        // starvation — every round still serves it).
+        let cfg = SimConfig::default();
+        let mut rng = Rng::new(103);
+        let a = random_stream(&mut rng, 160, false);
+        let b = random_stream(&mut rng, 160, false);
+        let run = |share_a: u32| {
+            let mut sched = TimelineSched::new(&cfg);
+            sched.admit_interleaved_weighted(&a, 0.0, share_a);
+            let t = sched.admit_interleaved_weighted(&b, 0.0, 1);
+            let ta = t.iter().find(|(r, _)| *r == 0).unwrap().1;
+            let tb = t.iter().find(|(r, _)| *r == 1).unwrap().1;
+            (ta, tb)
+        };
+        let (eq_a, eq_b) = run(1);
+        let (hv_a, hv_b) = run(4);
+        assert!(
+            hv_a.shared_ns < eq_a.shared_ns,
+            "4x share must finish the heavy stream earlier ({} vs {})",
+            hv_a.shared_ns,
+            eq_a.shared_ns
+        );
+        // Non-starvation: the light stream still completes, no later than
+        // the fully serialized bound.
+        let serialized = hv_a.solo_ns + hv_b.solo_ns;
+        assert!(
+            hv_b.shared_ns <= serialized * (1.0 + 1e-9) + 1.0,
+            "light stream starved: {} > serialized {}",
+            hv_b.shared_ns,
+            serialized
+        );
+        assert!(hv_b.shared_ns >= eq_b.shared_ns - 1e-9, "light stream cannot speed up");
+    }
+
+    #[test]
+    fn weighted_share_determinism_across_instances() {
+        let cfg = SimConfig::default();
+        let mut rng = Rng::new(107);
+        let streams: Vec<FarStream> =
+            (0..4).map(|i| random_stream(&mut rng, 60, i % 2 == 0)).collect();
+        let run = || {
+            let mut sched = TimelineSched::new(&cfg);
+            let mut last = Vec::new();
+            for (i, s) in streams.iter().enumerate() {
+                last = sched.admit_interleaved_weighted(s, i as f64 * 2_500.0, 1 + i as u32);
+            }
+            last
+        };
+        let x = run();
+        let y = run();
+        for ((ra, ta), (rb, tb)) in x.iter().zip(&y) {
+            assert_eq!(ra, rb);
+            assert_eq!(ta.shared_ns, tb.shared_ns);
+            assert_eq!(ta.queue_ns, tb.queue_ns);
+        }
     }
 }

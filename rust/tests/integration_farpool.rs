@@ -1,0 +1,358 @@
+//! Far-memory CXL device pool — end-to-end invariants.
+//!
+//! - **1-device bit-identity**: with `far.devices = 1` every placement
+//!   policy (and the QoS-share knob left off) reproduces the untouched
+//!   single-timeline clock bit-for-bit — top-k, queue_ns, per-query done
+//!   times and makespan — across flat/IVF front stages × all refine
+//!   modes (+ early-exit) × depths {1, 4, 16} × burst/record
+//!   interleaving. The unit suite (`simulator::farpool`) additionally
+//!   pins the pool against a bare `TimelineSched` admission for
+//!   admission; this file pins the full serving clock.
+//! - **placement never changes results**: any device count × placement
+//!   returns the captured top-k — placement is a timing concern only.
+//! - **worker-count determinism**: the pooled timeline is identical
+//!   across 1 vs 4 pool workers and repeated runs.
+//! - **pool contention relief**: total far-pool queueing is monotone
+//!   non-increasing in the device count (same admission instants, work
+//!   split over more independent timelines).
+//! - **replica failover**: seeded far-read faults on replicated ranges
+//!   fail over deterministically, recovered queries keep exact results,
+//!   and a zero-rate fault plan is inert with the pool on.
+//! - **tenant QoS far shares**: weighted record rotation keeps every
+//!   tenant's queries completing (non-starvation) and stays
+//!   work-conserving.
+
+use fatrq::config::{
+    DatasetConfig, FarPlacement, IndexConfig, IndexKind, QuantConfig, RefineConfig, RefineMode,
+    StreamInterleave, SystemConfig, TenantSpec,
+};
+use fatrq::coordinator::{build_system_with, QueryEngine, QueryParams};
+use fatrq::vecstore::synthesize;
+use std::sync::Arc;
+
+fn cfg(kind: IndexKind) -> SystemConfig {
+    let mut cfg = SystemConfig {
+        dataset: DatasetConfig {
+            dim: 32,
+            count: 1600,
+            clusters: 12,
+            noise: 0.3,
+            query_noise: 0.8,
+            queries: 10,
+            seed: 23,
+        },
+        quant: QuantConfig { pq_m: 8, pq_nbits: 5, kmeans_iters: 6, train_sample: 1200 },
+        index: IndexConfig { kind, nlist: 16, nprobe: 16, ..Default::default() },
+        refine: RefineConfig {
+            mode: RefineMode::FatrqHw,
+            candidates: 120,
+            k: 10,
+            filter_ratio: 0.3,
+            calib_sample: 0.02,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.sim.shared_timeline = true;
+    cfg
+}
+
+const PLACEMENTS: [FarPlacement; 3] =
+    [FarPlacement::Interleave, FarPlacement::ShardAffine, FarPlacement::ReplicateHot];
+
+#[test]
+fn one_device_pool_is_bit_identical_under_every_placement() {
+    // The tentpole contract, runtime-asserted end to end: a 1-device
+    // pool is the legacy single-timeline clock bit-for-bit no matter
+    // the placement policy.
+    for kind in [IndexKind::Flat, IndexKind::Ivf] {
+        let cfg = cfg(kind);
+        let dataset = synthesize(&cfg.dataset);
+        let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+        let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+        for (mode, early_exit) in [
+            (RefineMode::Baseline, false),
+            (RefineMode::FatrqSw, false),
+            (RefineMode::FatrqHw, false),
+            (RefineMode::FatrqHw, true),
+        ] {
+            let params =
+                QueryParams::from_config(&cfg).with_mode(mode).with_early_exit(early_exit);
+            let base = engine.profile_with(&params, &dataset.queries);
+            let mut pooled = engine.profile_with(&params, &dataset.queries);
+            pooled.set_far_devices(1);
+            for placement in PLACEMENTS {
+                pooled.set_far_placement(placement);
+                for depth in [1usize, 4, 16] {
+                    let (a, ra) = base.schedule(depth, 0.0);
+                    let (b, rb) = pooled.schedule(depth, 0.0);
+                    let tag = format!(
+                        "{}/{mode:?}/ee={early_exit}/{placement:?}/depth={depth}",
+                        kind.name()
+                    );
+                    assert_eq!(ra.makespan_ns, rb.makespan_ns, "{tag}: makespan");
+                    assert!(!rb.farpool.active, "{tag}: 1-device pool reported active");
+                    for q in 0..a.len() {
+                        assert_eq!(a[q].topk, b[q].topk, "{tag}: query {q} top-k");
+                        assert_eq!(
+                            a[q].breakdown.queue_ns, b[q].breakdown.queue_ns,
+                            "{tag}: query {q} queue"
+                        );
+                        assert_eq!(
+                            ra.timings[q].done_ns, rb.timings[q].done_ns,
+                            "{tag}: query {q} done"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn one_device_record_mode_is_bit_identical_under_every_placement() {
+    // Record-level interleaving rides the pool's registration space —
+    // with one device pool regs equal device regs, so the re-arbitrated
+    // clock must be untouched too.
+    let mut cfg = cfg(IndexKind::Ivf);
+    cfg.sim.stream_interleave = StreamInterleave::Record;
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let base = engine.profile_with(engine.params(), &dataset.queries);
+    let mut pooled = engine.profile_with(engine.params(), &dataset.queries);
+    pooled.set_far_devices(1);
+    for placement in PLACEMENTS {
+        pooled.set_far_placement(placement);
+        for depth in [1usize, 8] {
+            let (a, ra) = base.schedule(depth, 0.0);
+            let (b, rb) = pooled.schedule(depth, 0.0);
+            assert_eq!(ra.makespan_ns, rb.makespan_ns, "{placement:?}/depth={depth}");
+            for q in 0..a.len() {
+                assert_eq!(a[q].topk, b[q].topk, "{placement:?}/{depth}: query {q}");
+                assert_eq!(
+                    a[q].breakdown.queue_ns, b[q].breakdown.queue_ns,
+                    "{placement:?}/{depth}: query {q} queue"
+                );
+                assert_eq!(
+                    ra.timings[q].done_ns, rb.timings[q].done_ns,
+                    "{placement:?}/{depth}: query {q} done"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn placement_and_device_count_never_change_topk() {
+    let cfg = cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let base = engine.profile_with(engine.params(), &dataset.queries);
+    let (want, _) = base.schedule(8, 0.0);
+    let mut pooled = engine.profile_with(engine.params(), &dataset.queries);
+    for devices in [2usize, 4] {
+        pooled.set_far_devices(devices);
+        for placement in PLACEMENTS {
+            pooled.set_far_placement(placement);
+            let (outs, rep) = pooled.schedule(8, 0.0);
+            assert!(rep.farpool.active, "{devices}/{placement:?}: pool inactive");
+            assert_eq!(rep.farpool.queue_ns.len(), devices);
+            assert_eq!(rep.farpool.admissions.len(), devices);
+            for q in 0..want.len() {
+                assert_eq!(
+                    outs[q].topk, want[q].topk,
+                    "{devices} devices/{placement:?}: query {q} top-k moved"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_timeline_is_deterministic_across_worker_counts() {
+    let cfg = cfg(IndexKind::Ivf);
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let e1 = QueryEngine::with_threads(Arc::clone(&sys), 1);
+    let e4 = QueryEngine::with_threads(Arc::clone(&sys), 4);
+    let mut p1 = e1.profile_with(e1.params(), &dataset.queries);
+    let mut p4 = e4.profile_with(e4.params(), &dataset.queries);
+    for p in [&mut p1, &mut p4] {
+        p.set_far_devices(4);
+        p.set_far_placement(FarPlacement::ReplicateHot);
+        p.set_far_replicas(2);
+        p.set_far_hot_alpha(0.5);
+    }
+    let (a, ra) = p1.schedule(8, 0.0);
+    let (b, rb) = p4.schedule(8, 0.0);
+    // Repeated schedule off the same profile must not drift either.
+    let (_, rc) = p4.schedule(8, 0.0);
+    assert_eq!(ra.makespan_ns, rb.makespan_ns, "1 vs 4 workers");
+    assert_eq!(rb.makespan_ns, rc.makespan_ns, "repeated schedule");
+    assert_eq!(ra.farpool, rb.farpool, "pool accounting must be worker-independent");
+    assert_eq!(rb.farpool, rc.farpool);
+    for q in 0..a.len() {
+        assert_eq!(a[q].topk, b[q].topk, "query {q}");
+        assert_eq!(a[q].breakdown.queue_ns, b[q].breakdown.queue_ns, "query {q}");
+        assert_eq!(ra.timings[q].done_ns, rb.timings[q].done_ns, "query {q}");
+    }
+}
+
+#[test]
+fn more_devices_never_increase_pool_queueing() {
+    // Depth 0 admits the whole batch at t = 0, so every far admission
+    // instant is fixed by the front-stage profiles alone — adding
+    // devices only splits the same admissions over more independent
+    // timelines, and total pool queueing must not grow.
+    let mut cfg = cfg(IndexKind::Ivf);
+    cfg.dataset.queries = 16;
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let mut profile = engine.profile_with(engine.params(), &dataset.queries);
+    profile.set_far_placement(FarPlacement::Interleave);
+    let mut prev = f64::INFINITY;
+    for devices in [1usize, 2, 4] {
+        profile.set_far_devices(devices);
+        let (_, rep) = profile.schedule(0, 0.0);
+        let total = rep.farpool.total_queue_ns();
+        assert!(
+            total <= prev * (1.0 + 1e-9) || prev == f64::INFINITY,
+            "pool queueing grew with devices: {devices} devices {total} ns > {prev} ns"
+        );
+        assert!(total >= 0.0);
+        if devices == 1 {
+            assert!(total > 0.0, "16 co-admitted streams must contend on one device");
+        }
+        prev = total;
+    }
+}
+
+#[test]
+fn replica_failover_recovers_exact_results_and_zero_rate_plans_are_inert() {
+    let mut cfg = cfg(IndexKind::Ivf);
+    cfg.dataset.queries = 12;
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let e1 = QueryEngine::with_threads(Arc::clone(&sys), 1);
+    let e4 = QueryEngine::with_threads(Arc::clone(&sys), 4);
+    let pool_on = |p: &mut fatrq::coordinator::BatchProfile| {
+        p.set_far_devices(4);
+        p.set_far_placement(FarPlacement::ReplicateHot);
+        p.set_far_replicas(2);
+        // Every range hot: every stream is replicated, so every far
+        // fault exercises the failover rotation before any backoff.
+        p.set_far_hot_alpha(1.0);
+    };
+
+    // Zero-fault baseline + inertness: a pool schedule with a zero-rate
+    // fault plan is bit-identical to one without the fault layer.
+    let mut base = e4.profile_with(e4.params(), &dataset.queries);
+    pool_on(&mut base);
+    let (want, rep_nofault) = base.schedule(8, 0.0);
+    let mut inert = e4.profile_with(e4.params(), &dataset.queries);
+    pool_on(&mut inert);
+    inert.set_fault(fatrq::config::FaultConfig { seed: 77, ..Default::default() });
+    let (outs_inert, rep_inert) = inert.schedule(8, 0.0);
+    assert_eq!(rep_nofault.makespan_ns, rep_inert.makespan_ns, "zero-rate plan moved the clock");
+    assert_eq!(rep_nofault.farpool, rep_inert.farpool);
+    for q in 0..want.len() {
+        assert_eq!(want[q].topk, outs_inert[q].topk, "query {q}: inertness");
+    }
+
+    // Seeded far-read faults: failovers fire, recovered queries keep the
+    // exact top-k, and the whole faulted timeline is worker-independent.
+    let fault =
+        fatrq::config::FaultConfig { seed: 77, far_fail_rate: 0.6, ..Default::default() };
+    let mut fa = e1.profile_with(e1.params(), &dataset.queries);
+    let mut fb = e4.profile_with(e4.params(), &dataset.queries);
+    for p in [&mut fa, &mut fb] {
+        pool_on(p);
+        p.set_fault(fault.clone());
+    }
+    let (oa, ra) = fa.schedule(8, 0.0);
+    let (ob, rb) = fb.schedule(8, 0.0);
+    assert!(ra.availability.active);
+    assert!(ra.availability.retries > 0, "a 0.6 fail rate over 12 tasks must retry");
+    assert!(
+        ra.farpool.failovers > 0,
+        "replicated ranges must absorb retries by failover rotation"
+    );
+    assert_eq!(ra.makespan_ns, rb.makespan_ns, "faulted pool clock across workers");
+    assert_eq!(ra.farpool, rb.farpool);
+    let mut recovered = 0usize;
+    for q in 0..oa.len() {
+        assert_eq!(oa[q].topk, ob[q].topk, "query {q}: 1 vs 4 workers under faults");
+        assert_eq!(ra.timings[q].done_ns, rb.timings[q].done_ns, "query {q}");
+        if !ra.timings[q].degrade.is_degraded() {
+            recovered += 1;
+            assert_eq!(
+                oa[q].topk, want[q].topk,
+                "query {q} recovered from far faults but lost exactness"
+            );
+        }
+    }
+    assert!(recovered > 0, "some queries must recover to full results");
+}
+
+#[test]
+fn qos_far_shares_keep_every_tenant_completing_and_work_conserving() {
+    // The carried-over QoS satellite: tenant weights reach past
+    // admission into the far record rotation. The weighted rotation must
+    // never starve the light tenant (all queries complete inside the
+    // work-conservation bound) and never change results.
+    let mut cfg = cfg(IndexKind::Ivf);
+    cfg.dataset.queries = 16;
+    cfg.sim.stream_interleave = StreamInterleave::Record;
+    let dataset = synthesize(&cfg.dataset);
+    let sys = Arc::new(build_system_with(&cfg, dataset.clone()).unwrap());
+    let engine = QueryEngine::with_threads(Arc::clone(&sys), 2);
+    let nq = dataset.num_queries();
+    let tags: Vec<usize> = (0..nq).map(|q| q % 2).collect();
+    let tenants = vec![
+        TenantSpec { name: "heavy".into(), weight: 4.0, quota: 0, trace: None },
+        TenantSpec { name: "light".into(), weight: 1.0, quota: 0, trace: None },
+    ];
+
+    let mut profile = engine.profile_with(engine.params(), &dataset.queries);
+    profile.set_tenants(tenants.clone(), tags.clone());
+    let m1 = profile.schedule(1, 0.0).1.makespan_ns;
+    let (plain_outs, _) = profile.schedule(8, 0.0);
+    profile.set_far_qos_shares(true);
+    let (outs, rep) = profile.schedule(8, 0.0);
+
+    // Results are a timing concern only; shares never move the top-k.
+    for q in 0..nq {
+        assert_eq!(outs[q].topk, plain_outs[q].topk, "query {q}: shares moved top-k");
+    }
+    // Non-starvation: every query (both tenants) completes, and the
+    // weighted rotation stays work-conserving against the serialized
+    // schedule.
+    for (q, t) in rep.timings.iter().enumerate() {
+        assert!(t.done_ns > t.admit_ns, "query {q} never completed under QoS shares");
+    }
+    assert!(
+        rep.makespan_ns <= m1 * (1.0 + 1e-9),
+        "QoS far shares broke work conservation: {} > {m1}",
+        rep.makespan_ns
+    );
+    assert_eq!(rep.tenants.len(), 2);
+    assert_eq!(rep.tenants[0].queries + rep.tenants[1].queries, nq);
+
+    // Determinism across worker counts with shares on.
+    let e1 = QueryEngine::with_threads(Arc::clone(&sys), 1);
+    let mut p1 = e1.profile_with(e1.params(), &dataset.queries);
+    p1.set_tenants(tenants, tags);
+    p1.set_far_qos_shares(true);
+    let (outs1, rep1) = p1.schedule(8, 0.0);
+    assert_eq!(rep.makespan_ns, rep1.makespan_ns, "QoS shares across worker counts");
+    for q in 0..nq {
+        assert_eq!(outs[q].topk, outs1[q].topk, "query {q}");
+        assert_eq!(
+            rep.timings[q].done_ns, rep1.timings[q].done_ns,
+            "query {q} done (QoS shares)"
+        );
+    }
+}
